@@ -1,0 +1,133 @@
+//! End-to-end driver (DESIGN.md §5): the LHC L1-trigger scenario.
+//!
+//! generate jets → train model A through the AOT HLO train step (loss curve
+//! logged) → evaluate AUC-ROC per class → fold BN + export → truth tables →
+//! functional verification → Verilog emission → logic synthesis (resources
+//! + timing) → serve the netlist through the batching router and report
+//! throughput/latency.  Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example jet_trigger_e2e`
+
+use logicnets::luts::ModelTables;
+use logicnets::metrics;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::{artifacts_dir, Artifact, Runtime};
+use logicnets::serve::{LutEngine, Server, ServerConfig};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, SynthOpts};
+use logicnets::train::{evaluate, train, ModelState, TrainOpts};
+use logicnets::verilog::{generate, VerilogOpts};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let model_name =
+        std::env::args().nth(1).unwrap_or_else(|| "hep_e".to_string());
+    println!("=== LogicNets jet-trigger end-to-end ({model_name}) ===\n");
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&rt, &artifacts_dir(), &model_name)?;
+    let man = art.manifest.clone();
+
+    // -- 1. Workload ------------------------------------------------------
+    let mut rng = logicnets::util::rng::Rng::new(1);
+    let (train_set, test_set) = logicnets::hep::jets(24_000, 42).split(0.2, &mut rng);
+    println!("dataset: {} train / {} test jets, {} features", train_set.n, test_set.n, train_set.d);
+
+    // -- 2. Training (L3 driver over the L2/L1 AOT artifact) --------------
+    let mut state = ModelState::init(&man, 7, PruneMethod::APriori);
+    let opts = TrainOpts { verbose: true, ..TrainOpts::from_manifest(&man) };
+    let log = train(&art, &mut state, &train_set, &opts)?;
+    println!("\nloss curve (step, loss):");
+    for (s, l) in &log.losses {
+        println!("  {s:5}  {l:.4}");
+    }
+    println!("trained {} steps in {:.1}s\n", log.steps, log.seconds);
+
+    // -- 3. Evaluation ------------------------------------------------------
+    let logits = evaluate(&art, &state, &test_set)?;
+    let acc = metrics::accuracy(&logits, &test_set.y, man.classes);
+    let probs = metrics::softmax_rows(&logits, man.classes);
+    let aucs = metrics::auc_ovr(&probs, &test_set.y, man.classes);
+    println!("accuracy: {acc:.3}");
+    for (name, auc) in logicnets::hep::CLASS_NAMES.iter().zip(&aucs) {
+        println!("  AUC-ROC {name}: {:.3}", auc);
+    }
+    let avg_auc = aucs.iter().sum::<f64>() / aucs.len() as f64;
+    println!("  avg AUC: {avg_auc:.3}\n");
+
+    // -- 4. Export + truth tables + verification --------------------------
+    let model = ExportedModel::from_state(&man, &state);
+    let tables = ModelTables::generate(&model)?;
+    let mismatches = tables.verify(&model, &test_set.x[..200 * test_set.d]);
+    println!(
+        "truth tables: {} neurons, {} KiB, functional verification mismatches: {mismatches}",
+        tables.num_tables(),
+        tables.size_bytes() / 1024
+    );
+    assert_eq!(mismatches, 0);
+
+    // -- 5. Verilog --------------------------------------------------------
+    let proj = generate(&model, &tables, VerilogOpts { registers: true })?;
+    let vdir = std::path::Path::new("reports/verilog_e2e").join(&model_name);
+    proj.write_to(&vdir)?;
+    println!("verilog: {} files, {} bytes -> {}", proj.files.len(), proj.total_bytes, vdir.display());
+
+    // -- 6. Synthesis -------------------------------------------------------
+    let (_, rep) = synthesize(&model, &tables, SynthOpts::default())?;
+    println!(
+        "synthesis: {} LUTs (analytical {}, {:.2}x), {} FF, {} BRAM, depth {}, WNS {:+.2} ns @5ns",
+        rep.luts, rep.analytical_luts, rep.reduction, rep.ffs, rep.brams, rep.depth, rep.wns_ns
+    );
+
+    // -- 7. Serving ---------------------------------------------------------
+    let engine = Arc::new(LutEngine::build(&model, &tables)?);
+    // Accuracy through the engine must match the arithmetic path.
+    let engine_pred = engine.infer_batch(&test_set.x);
+    let engine_acc = engine_pred
+        .iter()
+        .zip(&test_set.y)
+        .filter(|(p, y)| **p == **y as usize)
+        .count() as f64
+        / test_set.n as f64;
+    println!("engine accuracy: {engine_acc:.3} (arithmetic path {acc:.3})");
+
+    let requests = 200_000usize;
+    let t0 = std::time::Instant::now();
+    let mut done = 0;
+    while done < requests {
+        let n = (requests - done).min(test_set.n);
+        let _ = engine.infer_batch(&test_set.x[..n * test_set.d]);
+        done += n;
+    }
+    println!(
+        "raw engine throughput: {:.2e} inferences/s (single core)",
+        requests as f64 / t0.elapsed().as_secs_f64()
+    );
+
+    let server = Server::start(engine, ServerConfig::default());
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..8usize {
+            let server = &server;
+            let ds = &test_set;
+            s.spawn(move || {
+                let mut rng = logicnets::util::rng::Rng::new(t as u64);
+                for _ in 0..10_000 {
+                    let i = rng.below(ds.n);
+                    server.infer(ds.row(i).to_vec());
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let st = server.stats();
+    println!(
+        "router: {:.2e} inf/s, latency p50 {:.0}us p99 {:.0}us, mean batch {:.1}",
+        st.completed as f64 / elapsed,
+        st.p50_us,
+        st.p99_us,
+        st.mean_batch
+    );
+    server.shutdown();
+    println!("\n=== end-to-end complete ===");
+    Ok(())
+}

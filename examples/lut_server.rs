@@ -1,0 +1,77 @@
+//! Serving demo: load (or quickly train) a LogicNet, compile it into the
+//! truth-table inference engine, and stress the batching router with
+//! concurrent clients — the software analogue of the FPGA trigger's
+//! initiation-interval-1 datapath.
+//!
+//! Run: `make artifacts && cargo run --release --example lut_server`
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::{artifacts_dir, Artifact, Runtime};
+use logicnets::serve::{LutEngine, Server, ServerConfig};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::train::{train, ModelState, TrainOpts};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "hep_e".to_string());
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&rt, &artifacts_dir(), &name)?;
+    let man = art.manifest.clone();
+    let mut rng = logicnets::util::rng::Rng::new(1);
+    let (train_set, test_set) = logicnets::hep::jets(12_000, 42).split(0.2, &mut rng);
+
+    let mut state = ModelState::init(&man, 7, PruneMethod::APriori);
+    let mut opts = TrainOpts::from_manifest(&man);
+    opts.steps = opts.steps.min(200);
+    train(&art, &mut state, &train_set, &opts)?;
+
+    let model = ExportedModel::from_state(&man, &state);
+    let tables = ModelTables::generate(&model)?;
+    let engine = Arc::new(LutEngine::build(&model, &tables)?);
+    println!(
+        "engine ready: {} table neurons, {} KiB of tables",
+        tables.num_tables(),
+        tables.size_bytes() / 1024
+    );
+
+    for (workers, max_batch) in [(1usize, 1usize), (2, 16), (4, 64), (8, 64)] {
+        let server = Server::start(
+            engine.clone(),
+            ServerConfig {
+                workers,
+                max_batch,
+                batch_timeout: Duration::from_micros(100),
+                queue_depth: 8192,
+            },
+        );
+        let clients = 8usize;
+        let per = 5_000usize;
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..clients {
+                let server = &server;
+                let ds = &test_set;
+                s.spawn(move || {
+                    let mut rng = logicnets::util::rng::Rng::new(50 + t as u64);
+                    for _ in 0..per {
+                        let i = rng.below(ds.n);
+                        server.infer(ds.row(i).to_vec());
+                    }
+                });
+            }
+        });
+        let elapsed = t0.elapsed().as_secs_f64();
+        let st = server.stats();
+        println!(
+            "workers={workers:<2} max_batch={max_batch:<3} -> {:>10.0} inf/s  p50 {:>6.0}us  p99 {:>7.0}us  fill {:>5.1}",
+            st.completed as f64 / elapsed,
+            st.p50_us,
+            st.p99_us,
+            st.mean_batch
+        );
+        server.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! MNIST MLP scenario (paper ch. 7): train a 3-layer sparse quantized MLP,
+//! compare the three pruning strategies, and report the analytical LUT
+//! breakdown of Table 7.1.
+//!
+//! Run: `make artifacts && cargo run --release --example mnist_mlp [model]`
+
+use logicnets::cost;
+use logicnets::metrics;
+use logicnets::runtime::{artifacts_dir, Artifact, Runtime};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::train::{evaluate, train, ModelState, TrainOpts};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "mnist_w512_d3".to_string());
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&rt, &artifacts_dir(), &name)?;
+    let man = art.manifest.clone();
+    let (train_set, test_set) = logicnets::mnist::load_or_synth(9_000, 1_800, 42);
+    println!("MNIST ({}) — {} train / {} test", name, train_set.n, test_set.n);
+
+    let costs = cost::manifest_cost(&man);
+    println!("analytical LUT breakdown:");
+    for c in &costs {
+        println!("  {:<4} {:>10}", c.name, c.luts);
+    }
+    println!("  total {:>8}\n", cost::total_luts(&costs));
+
+    for method in [
+        PruneMethod::APriori,
+        PruneMethod::Momentum { every: 8, prune_rate: 0.3 },
+        PruneMethod::Iterative { every: 8 },
+    ] {
+        let mut state = ModelState::init(&man, 7, method);
+        let mut opts = TrainOpts::from_manifest(&man);
+        opts.method = method;
+        opts.steps = opts.steps.min(250);
+        let log = train(&art, &mut state, &train_set, &opts)?;
+        let logits = evaluate(&art, &state, &test_set)?;
+        let acc = metrics::accuracy(&logits, &test_set.y, man.classes);
+        println!(
+            "{:<10} accuracy {:.3}  (final loss {:.3}, {} mask updates, {:.1}s)",
+            method.name(),
+            acc,
+            log.final_loss,
+            log.mask_updates,
+            log.seconds
+        );
+    }
+    Ok(())
+}

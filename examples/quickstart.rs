@@ -1,0 +1,53 @@
+//! Quickstart: train a tiny LogicNet on synthetic jets, export it to truth
+//! tables, verify, and synthesize — the whole flow in ~30 lines of API.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use logicnets::luts::ModelTables;
+use logicnets::metrics;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::{artifacts_dir, Artifact, Runtime};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, SynthOpts};
+use logicnets::train::{evaluate, train, ModelState, TrainOpts};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&rt, &artifacts_dir(), "spike_tiny")?;
+    let man = &art.manifest;
+
+    // 1. Data + training through the AOT-compiled train_step.
+    let mut rng = logicnets::util::rng::Rng::new(1);
+    let (train_set, test_set) = logicnets::hep::jets(16_000, 42).split(0.2, &mut rng);
+    let mut state = ModelState::init(man, 7, PruneMethod::APriori);
+    let opts = TrainOpts { verbose: true, ..TrainOpts::from_manifest(man) };
+    let log = train(&art, &mut state, &train_set, &opts)?;
+    println!("trained {} steps in {:.1}s", log.steps, log.seconds);
+
+    // 2. Evaluate via the forward artifact.
+    let logits = evaluate(&art, &state, &test_set)?;
+    let acc = metrics::accuracy(&logits, &test_set.y, man.classes);
+    println!("test accuracy: {acc:.3}");
+
+    // 3. Export neurons as boolean functions and generate truth tables.
+    let model = ExportedModel::from_state(man, &state);
+    let tables = ModelTables::generate(&model)?;
+    println!(
+        "{} truth tables, {} KiB",
+        tables.num_tables(),
+        tables.size_bytes() / 1024
+    );
+
+    // 4. Functional verification: tables vs the arithmetic mirror.
+    let mismatches = tables.verify(&model, &test_set.x[..100 * test_set.d]);
+    assert_eq!(mismatches, 0, "tables must match the folded model exactly");
+    println!("functional verification: OK");
+
+    // 5. Logic synthesis: analytical bound vs mapped netlist.
+    let (_, report) = synthesize(&model, &tables, SynthOpts::default())?;
+    println!(
+        "synthesis: {} LUTs (analytical {}), {} FF, WNS {:+.2} ns @5ns",
+        report.luts, report.analytical_luts, report.ffs, report.wns_ns
+    );
+    Ok(())
+}

@@ -1,0 +1,152 @@
+"""AOT compiler: lower every named model config to HLO **text** artifacts.
+
+For each model in configs/models.json this emits
+
+    artifacts/<name>/train_step.hlo.txt
+    artifacts/<name>/forward.hlo.txt
+    artifacts/<name>/manifest.json
+
+The Rust coordinator (rust/src/runtime/) loads the text with
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+HLO *text* is the interchange format — jax >= 0.5 serializes protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` (a no-op when inputs are unchanged).  Python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import BN_EPS, MOMENTUM, ModelCfg, build_forward_flat, build_train_step_flat
+
+# CNN builders are imported lazily (convmodel.py) to keep MLP-only runs fast.
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def manifest_for(cfg: ModelCfg) -> dict:
+    if cfg.kind == "cnn":
+        from .convmodel import conv_manifest_extra
+
+        extra = conv_manifest_extra(cfg)
+    else:
+        extra = {
+            "layers": [
+                {
+                    "in": cfg.layer_inputs()[i],
+                    "out": cfg.layer_sizes()[i],
+                    "fanin": cfg.layer_fanin(i),
+                    "bw_in": cfg.layer_bw_in(i),
+                    "maxv_in": cfg.layer_maxv_in(i),
+                }
+                for i in range(cfg.num_layers())
+            ]
+        }
+    m = {
+        "name": cfg.name,
+        "kind": cfg.kind,
+        "in_features": cfg.in_features,
+        "classes": cfg.classes,
+        "hidden": cfg.hidden,
+        "bw": cfg.bw,
+        "bw_in": cfg.bw_in,
+        "bw_out": cfg.bw_out,
+        "fanin": cfg.fanin,
+        "fanin_fc": cfg.fanin_fc,
+        "skips": cfg.skips,
+        "batch": cfg.batch,
+        "eval_batch": cfg.eval_batch,
+        "maxv_in": cfg.maxv_in,
+        "maxv_hidden": cfg.maxv_hidden,
+        "maxv_out": cfg.maxv_out,
+        "momentum": MOMENTUM,
+        "bn_eps": BN_EPS,
+        "dataset": cfg.dataset,
+        "train_softmax": cfg.train_softmax,
+        "steps": cfg.steps,
+        "lr": cfg.lr,
+        "conv_mode": cfg.conv_mode,
+        "image_hw": cfg.image_hw,
+        "channels": cfg.channels,
+        "kernel_size": cfg.kernel_size,
+        "fanin_dw": cfg.fanin_dw,
+        "fanin_pw": cfg.fanin_pw,
+    }
+    m.update(extra)
+    return m
+
+
+def emit_model(cfg: ModelCfg, outdir: str, verbose: bool = True) -> None:
+    mdir = os.path.join(outdir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+    if cfg.kind == "cnn":
+        from .convmodel import build_conv_forward_flat, build_conv_train_step_flat
+
+        builders = [
+            ("train_step", build_conv_train_step_flat),
+            ("forward", build_conv_forward_flat),
+        ]
+    else:
+        builders = [
+            ("train_step", build_train_step_flat),
+            ("forward", build_forward_flat),
+        ]
+    for tag, build in builders:
+        fn, ex = build(cfg)
+        lowered = jax.jit(fn).lower(*ex)
+        text = to_hlo_text(lowered)
+        path = os.path.join(mdir, f"{tag}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"  {cfg.name}/{tag}: {len(text)} chars", flush=True)
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest_for(cfg), f, indent=1)
+
+
+def load_configs(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="../configs/models.json")
+    ap.add_argument(
+        "--models",
+        default="",
+        help="comma-separated model names; default = all in the config file",
+    )
+    args = ap.parse_args()
+
+    configs = load_configs(args.configs)
+    names = [n for n in args.models.split(",") if n] or list(configs.keys())
+    os.makedirs(args.out, exist_ok=True)
+    for name in names:
+        if name not in configs:
+            print(f"unknown model {name!r}", file=sys.stderr)
+            sys.exit(1)
+        cfg = ModelCfg.from_dict(name, configs[name])
+        print(f"lowering {name} ({cfg.kind}) ...", flush=True)
+        emit_model(cfg, args.out)
+    print(f"artifacts written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

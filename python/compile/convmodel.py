@@ -1,0 +1,307 @@
+"""L2: LogicNets convolutional models — Sparse Depthwise-Separable
+Convolutions with input/intermediate quantizers (paper §4.4, ch. 7).
+
+Four variants (Table 7.4):
+  fp          vanilla convolutions, full precision (baseline)
+  fp_dw       depthwise-separable, full precision
+  fp_x_dw     + per-kernel / per-neuron sparsity masks
+  quant_x_dw  + activation quantization (the LogicNets-mappable variant)
+
+All variants share the flat train_step/forward signature of model.py, so the
+Rust driver is architecture-agnostic: every stage is a "layer" with a 2-D
+weight `[out, in]`:
+
+  quant_x_dw / fp_dw / fp_x_dw (5 layers):
+    L0 dw1  [C1, k*k]     depthwise on the 1-channel input (first_layer
+                          trick: one kernel per *output* channel, §4.4)
+    L1 pw1  [F1, C1]      pointwise
+    L2 dw2  [F1, k*k]     depthwise per channel
+    L3 pw2  [F2, F1]      pointwise
+    L4 head [classes, P2*F2]   dense classifier
+  fp (3 layers):
+    L0 conv1 [F1, k*k], L1 conv2 [F2, F1*k*k], L2 head
+
+Spatial plan: 28 -> (stride 2, SAME) 14 -> (stride 2, SAME) 7; P1 = 196,
+P2 = 49.
+
+Skip connections (Table 7.6): with `skips >= 1`, pw2's input concatenates a
+stride-2 subsample of pw1's output (wiring is free in hardware, so the
+per-neuron fan-in — and hence LUT cost — is unchanged); with `skips >= 2`
+the head additionally sees that subsampled map.  Masks are sized for the
+concatenated widths.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.masked_linear import masked_linear
+from .kernels.quantize import quantize
+from .model import BN_EPS, ModelCfg, train_step as _shared_sgd  # noqa: F401
+
+HW = 28
+K = 3
+
+
+def spatial_sizes(cfg: ModelCfg) -> Tuple[int, int]:
+    h1 = (cfg.image_hw + 1) // 2
+    h2 = (h1 + 1) // 2
+    return h1, h2
+
+
+def conv_layer_dims(cfg: ModelCfg) -> List[Tuple[int, int]]:
+    """(out, in) dims of each 2-D weight, mirroring the docstring tables."""
+    c1, f1, f2 = cfg.channels
+    k2 = cfg.kernel_size * cfg.kernel_size
+    _, h2 = spatial_sizes(cfg)
+    p2 = h2 * h2
+    if cfg.conv_mode == "fp":
+        return [(f1, k2), (f2, f1 * k2), (cfg.classes, p2 * f2)]
+    dims = [(c1, k2), (f1, c1), (f1, k2)]
+    pw2_in = f1 * 2 if cfg.skips >= 1 else f1
+    dims.append((f2, pw2_in))
+    head_in = p2 * f2 + (p2 * f1 if cfg.skips >= 2 else 0)
+    dims.append((cfg.classes, head_in))
+    return dims
+
+
+def conv_layer_fanins(cfg: ModelCfg) -> List[int | None]:
+    sparse = cfg.conv_mode in ("fp_x_dw", "quant_x_dw")
+    if cfg.conv_mode == "fp":
+        return [None, None, None]
+    if not sparse:
+        return [None] * 5
+    return [cfg.fanin_dw, cfg.fanin_pw, cfg.fanin_dw, cfg.fanin_pw, None]
+
+
+def conv_layer_bws(cfg: ModelCfg) -> List[Tuple[int, float]]:
+    """(bw_in, maxv_in) of the quantizer at each layer input."""
+    q = cfg.conv_mode == "quant_x_dw"
+    if cfg.conv_mode == "fp":
+        return [(cfg.bw_in if q else 32, 1.0)] * 3
+    bws = [(cfg.bw_in, cfg.maxv_in)]
+    bws += [(cfg.bw, cfg.maxv_hidden)] * 4
+    if not q:
+        bws = [(32, m) for (_, m) in bws]
+    return bws
+
+
+def _q(x, bw: int, maxv: float):
+    """Quantize unless bw is the FP sentinel (32)."""
+    if bw >= 32:
+        return x
+    return quantize(x, bw, maxv)
+
+
+def _patches(x, k: int, stride: int):
+    """x [B, H, W, C] -> [B, Ho*Wo, C, k*k] with SAME padding."""
+    b, h, w, c = x.shape
+    ho = (h + stride - 1) // stride
+    wo = (w + stride - 1) // stride
+    pad_h = max((ho - 1) * stride + k - h, 0)
+    pad_w = max((wo - 1) * stride + k - w, 0)
+    xp = jnp.pad(
+        x,
+        ((0, 0), (pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+    )
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(xp[:, dy : dy + ho * stride : stride, dx : dx + wo * stride : stride, :])
+    # [k*k] x [B, Ho, Wo, C] -> [B, Ho*Wo, C, k*k]
+    st = jnp.stack(cols, axis=-1)
+    return st.reshape(b, ho * wo, c, k * k)
+
+
+def _bn(z, gamma, beta):
+    """Batch norm over all axes but the last; returns (y, mu, var)."""
+    axes = tuple(range(z.ndim - 1))
+    mu = jnp.mean(z, axis=axes)
+    var = jnp.mean((z - mu) ** 2, axis=axes)
+    y = gamma * (z - mu) / jnp.sqrt(var + BN_EPS) + beta
+    return y, mu, var
+
+
+def _bn_eval(z, gamma, beta, rm, rv):
+    return gamma * (z - rm) / jnp.sqrt(rv + BN_EPS) + beta
+
+
+def conv_forward(cfg: ModelCfg, params, masks, x, rstats=None):
+    """Shared train/eval forward.  `rstats=(rmeans, rvars)` switches to
+    running statistics; otherwise batch stats are used and returned."""
+    b = x.shape[0]
+    bws = conv_layer_bws(cfg)
+    h1, h2 = spatial_sizes(cfg)
+    img = x.reshape(b, cfg.image_hw, cfg.image_hw, 1)
+    mus, vars_ = [], []
+
+    def bn_at(i, z):
+        w_, b_, g_, be_ = params[i]
+        if rstats is None:
+            y, mu, var = _bn(z, g_, be_)
+            mus.append(mu)
+            vars_.append(var)
+            return y
+        return _bn_eval(z, g_, be_, rstats[0][i], rstats[1][i])
+
+    a0 = _q(img, bws[0][0], bws[0][1])
+
+    if cfg.conv_mode == "fp":
+        k2 = cfg.kernel_size**2
+        p1 = _patches(a0, cfg.kernel_size, 2).reshape(b * h1 * h1, k2)
+        z1 = masked_linear(p1, params[0][0], masks[0], params[0][1])
+        a1 = _q(bn_at(0, z1.reshape(b, h1 * h1, -1)), *bws[1])
+        f1 = a1.shape[-1]
+        p2 = _patches(a1.reshape(b, h1, h1, f1), cfg.kernel_size, 2)
+        p2 = p2.reshape(b * h2 * h2, f1 * k2)
+        z2 = masked_linear(p2, params[1][0], masks[1], params[1][1])
+        a2 = _q(bn_at(1, z2.reshape(b, h2 * h2, -1)), *bws[2])
+        flat = a2.reshape(b, -1)
+        z3 = masked_linear(flat, params[2][0], masks[2], params[2][1])
+        logits = _q(bn_at(2, z3), cfg.bw_out if cfg.conv_mode == "quant_x_dw" else 32, cfg.maxv_out)
+        return logits, mus, vars_
+
+    c1, f1n, f2n = cfg.channels
+    k2 = cfg.kernel_size**2
+    # dw1 (first_layer trick): matmul of 1-channel patches against C1 kernels
+    p1 = _patches(a0, cfg.kernel_size, 2)[:, :, 0, :]  # [B, P1, k2]
+    z = masked_linear(p1.reshape(b * h1 * h1, k2), params[0][0], masks[0], params[0][1])
+    a = _q(bn_at(0, z.reshape(b, h1 * h1, c1)), *bws[1])
+    # pw1
+    z = masked_linear(a.reshape(b * h1 * h1, c1), params[1][0], masks[1], params[1][1])
+    pw1 = _q(bn_at(1, z.reshape(b, h1 * h1, f1n)), *bws[2])
+    # dw2: per-channel over patches of pw1
+    p2 = _patches(pw1.reshape(b, h1, h1, f1n), cfg.kernel_size, 2)  # [B,P2,F1,k2]
+    wm2 = params[2][0] * masks[2]
+    z = jnp.einsum("bpct,ct->bpc", p2, wm2) + params[2][1]
+    dw2 = _q(bn_at(2, z), *bws[3])  # [B, P2, F1]
+    # optional skip: stride-2 subsample of pw1 concatenated channel-wise
+    if cfg.skips >= 1:
+        sub = pw1.reshape(b, h1, h1, f1n)[:, ::2, ::2, :][:, :h2, :h2, :]
+        sub = sub.reshape(b, h2 * h2, f1n)
+        pw2_in = jnp.concatenate([dw2, sub], axis=-1)
+    else:
+        pw2_in = dw2
+    z = masked_linear(
+        pw2_in.reshape(b * h2 * h2, pw2_in.shape[-1]), params[3][0], masks[3], params[3][1]
+    )
+    pw2 = _q(bn_at(3, z.reshape(b, h2 * h2, f2n)), *bws[4])
+    flat = pw2.reshape(b, -1)
+    if cfg.skips >= 2:
+        sub = pw1.reshape(b, h1, h1, f1n)[:, ::2, ::2, :][:, :h2, :h2, :]
+        flat = jnp.concatenate([flat, sub.reshape(b, -1)], axis=1)
+    z = masked_linear(flat, params[4][0], masks[4], params[4][1])
+    out_bw = cfg.bw_out if cfg.conv_mode == "quant_x_dw" else 32
+    logits = _q(bn_at(4, z), out_bw, cfg.maxv_out)
+    return logits, mus, vars_
+
+
+def conv_loss(cfg: ModelCfg, params, masks, x, y):
+    logits, mus, vars_ = conv_forward(cfg, params, masks, x)
+    onehot = jax.nn.one_hot(y, cfg.classes, dtype=logits.dtype)
+    if cfg.conv_mode == "quant_x_dw":
+        logits = logits * (8.0 / cfg.maxv_out)
+    logp = jax.nn.log_softmax(logits, axis=1)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=1))
+    return loss, (mus, vars_)
+
+
+def conv_manifest_extra(cfg: ModelCfg) -> dict:
+    dims = conv_layer_dims(cfg)
+    fanins = conv_layer_fanins(cfg)
+    bws = conv_layer_bws(cfg)
+    return {
+        "layers": [
+            {
+                "in": din,
+                "out": dout,
+                "fanin": fanins[i],
+                "bw_in": bws[i][0],
+                "maxv_in": bws[i][1],
+            }
+            for i, (dout, din) in enumerate(dims)
+        ]
+    }
+
+
+def _group(flat, counts):
+    out, i = [], 0
+    for c in counts:
+        out.append(list(flat[i : i + c]))
+        i += c
+    assert i == len(flat)
+    return out
+
+
+def build_conv_train_step_flat(cfg: ModelCfg):
+    from .model import MOMENTUM
+
+    dims = conv_layer_dims(cfg)
+    n = len(dims)
+
+    def step(*flat):
+        grouped = _group(flat[: 9 * n], [n] * 9)
+        ws, bs, gs, bes, vws, vbs, vgs, vbes, masks = grouped
+        x, y, lr = flat[9 * n], flat[9 * n + 1], flat[9 * n + 2]
+        params = [(ws[i], bs[i], gs[i], bes[i]) for i in range(n)]
+        vel = [(vws[i], vbs[i], vgs[i], vbes[i]) for i in range(n)]
+        (loss, (mus, vars_)), grads = jax.value_and_grad(
+            lambda p: conv_loss(cfg, p, masks, x, y), has_aux=True
+        )(params)
+        new_params, new_vel = [], []
+        for p, v, g in zip(params, vel, grads):
+            nv = tuple(MOMENTUM * vi + gi for vi, gi in zip(v, g))
+            np_ = tuple(pi - lr * nvi for pi, nvi in zip(p, nv))
+            new_params.append(np_)
+            new_vel.append(nv)
+        out = []
+        for k in range(4):
+            out.extend(p[k] for p in new_params)
+        for k in range(4):
+            out.extend(v[k] for v in new_vel)
+        out.append(loss)
+        out.extend(g[0] for g in grads)
+        out.extend(mus)
+        out.extend(vars_)
+        return tuple(out)
+
+    f32 = jnp.float32
+    ex = []
+    ex += [jax.ShapeDtypeStruct(d, f32) for d in dims]  # w
+    for _ in range(3):
+        ex += [jax.ShapeDtypeStruct((d[0],), f32) for d in dims]
+    ex += [jax.ShapeDtypeStruct(d, f32) for d in dims]  # vw
+    for _ in range(3):
+        ex += [jax.ShapeDtypeStruct((d[0],), f32) for d in dims]
+    ex += [jax.ShapeDtypeStruct(d, f32) for d in dims]  # masks
+    ex.append(jax.ShapeDtypeStruct((cfg.batch, cfg.image_hw * cfg.image_hw), f32))
+    ex.append(jax.ShapeDtypeStruct((cfg.batch,), jnp.int32))
+    ex.append(jax.ShapeDtypeStruct((), f32))
+    return step, ex
+
+
+def build_conv_forward_flat(cfg: ModelCfg):
+    dims = conv_layer_dims(cfg)
+    n = len(dims)
+
+    def fwd(*flat):
+        grouped = _group(flat[: 7 * n], [n] * 7)
+        ws, bs, gs, bes, masks, rms, rvs = grouped
+        x = flat[7 * n]
+        params = [(ws[i], bs[i], gs[i], bes[i]) for i in range(n)]
+        logits, _, _ = conv_forward(cfg, params, masks, x, rstats=(rms, rvs))
+        return (logits,)
+
+    f32 = jnp.float32
+    ex = []
+    ex += [jax.ShapeDtypeStruct(d, f32) for d in dims]
+    for _ in range(3):
+        ex += [jax.ShapeDtypeStruct((d[0],), f32) for d in dims]
+    ex += [jax.ShapeDtypeStruct(d, f32) for d in dims]
+    for _ in range(2):
+        ex += [jax.ShapeDtypeStruct((d[0],), f32) for d in dims]
+    ex.append(jax.ShapeDtypeStruct((cfg.eval_batch, cfg.image_hw * cfg.image_hw), f32))
+    return fwd, ex

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: truth-table (LUT) neuron evaluation.
+
+After training, every LogicNets neuron *is* a truth table: its fan-in
+activation codes are packed into an integer index and the output value is a
+single gather.  This kernel is the software model of the FPGA inference path
+(one LUT read per neuron per cycle, initiation interval 1) and is used to
+cross-check the Rust serving engine (`rust/src/serve/`) against the JAX graph.
+
+``codes``  [B, F] int32 — quantizer codes of the fan-in activations
+``table``  [2^(F*bw)] f32 — dequantized neuron output per input pattern
+returns    [B] f32
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lut_lookup"]
+
+
+def _lut_kernel(codes_ref, table_ref, o_ref, *, bw: int, fanin: int):
+    codes = codes_ref[...]               # [B, F]
+    table = table_ref[...]               # [2^(F*bw)]
+    idx = jnp.zeros(codes.shape[:1], dtype=jnp.int32)
+    # Bit-pack: input j occupies bits [j*bw, (j+1)*bw).  Matches
+    # rust/src/luts/table.rs::pack_index exactly.
+    for j in range(fanin):
+        idx = idx | (codes[:, j] << (bw * j))
+    o_ref[...] = jnp.take(table, idx, axis=0)
+
+
+def lut_lookup(codes, table, bw: int):
+    bsz, fanin = codes.shape
+    assert table.shape[0] == 1 << (fanin * bw), (table.shape, fanin, bw)
+    full = lambda *shape: pl.BlockSpec(shape, lambda: (0,) * len(shape))
+    return pl.pallas_call(
+        functools.partial(_lut_kernel, bw=bw, fanin=fanin),
+        grid=(),
+        in_specs=[full(bsz, fanin), full(table.shape[0])],
+        out_specs=full(bsz),
+        out_shape=jax.ShapeDtypeStruct((bsz,), table.dtype),
+        interpret=True,
+    )(codes, table)

@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: the LogicNets hot-spot — sparse-masked linear layer.
+
+``z = x @ (w * mask)^T + b`` where ``mask`` encodes the per-neuron fan-in
+(exactly ``F`` ones per output row).  The mask is applied *inside* the kernel
+so the masked weight product never round-trips through HBM, and the matmul
+feeds the MXU-shaped ``dot`` directly — this is the TPU re-think of what the
+paper's PyTorch stack does with a dense cuDNN GEMM plus an elementwise mask.
+
+Backward is implemented as two more Pallas kernels (dx and dw) wired up with
+``jax.custom_vjp`` because ``pallas_call`` has no automatic transpose rule.
+
+All kernels use ``interpret=True`` (see kernels/quantize.py for why).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["masked_linear"]
+
+# Row-block size for the batch dimension.  8 is the TPU sublane count; on CPU
+# interpret mode it just bounds the working set of a block.
+_BM = 8
+
+
+def _fwd_kernel(x_ref, w_ref, m_ref, b_ref, o_ref):
+    x = x_ref[...]                       # [bm, I]
+    wm = w_ref[...] * m_ref[...]         # [O, I] masked in-register
+    o_ref[...] = x @ wm.T + b_ref[...][None, :]
+
+
+def _dx_kernel(g_ref, w_ref, m_ref, o_ref):
+    g = g_ref[...]                       # [bm, O]
+    wm = w_ref[...] * m_ref[...]         # [O, I]
+    o_ref[...] = g @ wm
+
+
+def _dw_kernel(g_ref, x_ref, m_ref, o_ref):
+    g = g_ref[...]                       # [B, O]
+    x = x_ref[...]                       # [B, I]
+    o_ref[...] = (g.T @ x) * m_ref[...]  # [O, I]
+
+
+def _batch_grid(b: int):
+    if b % _BM == 0 and b > _BM:
+        return (b // _BM,), _BM
+    return (), b
+
+
+def _fwd_impl(x, w, mask, b):
+    bsz, i = x.shape
+    o = w.shape[0]
+    grid, bm = _batch_grid(bsz)
+    if grid:
+        in_specs = [
+            pl.BlockSpec((bm, i), lambda n: (n, 0)),
+            pl.BlockSpec((o, i), lambda n: (0, 0)),
+            pl.BlockSpec((o, i), lambda n: (0, 0)),
+            pl.BlockSpec((o,), lambda n: (0,)),
+        ]
+        out_specs = pl.BlockSpec((bm, o), lambda n: (n, 0))
+    else:
+        in_specs = [
+            pl.BlockSpec((bm, i), lambda: (0, 0)),
+            pl.BlockSpec((o, i), lambda: (0, 0)),
+            pl.BlockSpec((o, i), lambda: (0, 0)),
+            pl.BlockSpec((o,), lambda: (0,)),
+        ]
+        out_specs = pl.BlockSpec((bm, o), lambda: (0, 0))
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct((bsz, o), x.dtype),
+        interpret=True,
+    )(x, w, mask, b)
+
+
+def _dx_impl(g, w, mask):
+    bsz, o = g.shape
+    i = w.shape[1]
+    grid, bm = _batch_grid(bsz)
+    if grid:
+        in_specs = [
+            pl.BlockSpec((bm, o), lambda n: (n, 0)),
+            pl.BlockSpec((o, i), lambda n: (0, 0)),
+            pl.BlockSpec((o, i), lambda n: (0, 0)),
+        ]
+        out_specs = pl.BlockSpec((bm, i), lambda n: (n, 0))
+    else:
+        in_specs = [
+            pl.BlockSpec((bm, o), lambda: (0, 0)),
+            pl.BlockSpec((o, i), lambda: (0, 0)),
+            pl.BlockSpec((o, i), lambda: (0, 0)),
+        ]
+        out_specs = pl.BlockSpec((bm, i), lambda: (0, 0))
+    return pl.pallas_call(
+        _dx_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct((bsz, i), g.dtype),
+        interpret=True,
+    )(g, w, mask)
+
+
+def _dw_impl(g, x, mask):
+    bsz, o = g.shape
+    i = x.shape[1]
+    full = lambda *shape: pl.BlockSpec(shape, lambda: (0,) * len(shape))
+    return pl.pallas_call(
+        _dw_kernel,
+        grid=(),
+        in_specs=[full(bsz, o), full(bsz, i), full(o, i)],
+        out_specs=full(o, i),
+        out_shape=jax.ShapeDtypeStruct((o, i), g.dtype),
+        interpret=True,
+    )(g, x, mask)
+
+
+@jax.custom_vjp
+def masked_linear(x, w, mask, b):
+    """``x @ (w*mask)^T + b`` with per-neuron fan-in mask fused in-kernel."""
+    return _fwd_impl(x, w, mask, b)
+
+
+def _ml_fwd(x, w, mask, b):
+    return _fwd_impl(x, w, mask, b), (x, w, mask)
+
+
+def _ml_bwd(res, g):
+    x, w, mask = res
+    dx = _dx_impl(g, w, mask)
+    dw = _dw_impl(g, x, mask)
+    db = jnp.sum(g, axis=0)
+    # The mask is a structural constant; its cotangent is never used.
+    return dx, dw, jnp.zeros_like(mask), db
+
+
+masked_linear.defvjp(_ml_fwd, _ml_bwd)

@@ -1,0 +1,120 @@
+"""L1 Pallas kernels: activation quantizers (QuantReLU / QuantHardTanh).
+
+LogicNets quantizes the *activations* entering every layer; the weights stay
+full-precision.  The quantizer is the contract between the JAX training graph
+and the Rust export path (truth-table generation), so the math here must match
+``rust/src/nn/quant.rs`` bit-for-bit:
+
+* bit-width 1 (QuantHardTanh):  value = sign(x) * max_val, code c in {0,1},
+  value = (2c - 1) * max_val.
+* bit-width b > 1 (QuantReLU):  step s = max_val / (2^b - 1),
+  code c = clamp(round_ties_even(x / s), 0, 2^b - 1), value = c * s.
+
+``jnp.round`` rounds half-to-even, as does Rust's ``f32::round_ties_even`` —
+this is why the two sides agree exactly.
+
+Kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec tiling below is still the schedule a real TPU
+lowering would use (rows of the activation matrix stream HBM->VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quantize", "quant_codes", "dequant_codes"]
+
+
+def _levels(bw: int) -> float:
+    return float(2**bw - 1)
+
+
+def _quant_relu_kernel(x_ref, o_ref, *, step: float, levels: float):
+    x = x_ref[...]
+    c = jnp.clip(jnp.round(x / step), 0.0, levels)
+    o_ref[...] = c * step
+
+
+def _quant_ht_kernel(x_ref, o_ref, *, maxv: float):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x >= 0.0, maxv, -maxv)
+
+
+def _row_grid(x):
+    """Tile the leading (batch) dimension when it divides evenly.
+
+    On TPU this is the HBM->VMEM schedule: one block of rows at a time; the
+    quantizer is purely elementwise so no halo is needed.
+    """
+    if x.ndim >= 2 and x.shape[0] % 8 == 0 and x.shape[0] > 8:
+        bm = 8
+        grid = (x.shape[0] // bm,)
+        block = (bm,) + x.shape[1:]
+        nidx = len(x.shape) - 1
+        index_map = lambda i: (i,) + (0,) * nidx
+        spec = pl.BlockSpec(block, index_map)
+        return grid, spec
+    spec = pl.BlockSpec(x.shape, lambda: (0,) * x.ndim)
+    return (), spec
+
+
+def _quant_impl(x, bw: int, maxv: float):
+    grid, spec = _row_grid(x)
+    if bw == 1:
+        kern = functools.partial(_quant_ht_kernel, maxv=maxv)
+    else:
+        kern = functools.partial(
+            _quant_relu_kernel, step=maxv / _levels(bw), levels=_levels(bw)
+        )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def quantize(x, bw: int, maxv: float):
+    """Quantize activations to ``bw`` bits; straight-through gradient."""
+    return _quant_impl(x, bw, maxv)
+
+
+def _quantize_fwd(x, bw, maxv):
+    return _quant_impl(x, bw, maxv), x
+
+
+def _quantize_bwd(bw, maxv, x, g):
+    # Clipped straight-through estimator.  QuantHardTanh passes gradient in
+    # [-maxv, maxv]; QuantReLU passes it where the input lands inside the
+    # representable range (ReLU-like dead zone below 0).
+    if bw == 1:
+        mask = jnp.abs(x) <= maxv
+    else:
+        mask = (x >= 0.0) & (x <= maxv)
+    return (g * mask.astype(g.dtype),)
+
+
+quantize.defvjp(_quantize_fwd, _quantize_bwd)
+
+
+def quant_codes(x, bw: int, maxv: float):
+    """Integer codes of the quantizer (the truth-table input/output bits)."""
+    if bw == 1:
+        return (x >= 0.0).astype(jnp.int32)
+    step = maxv / _levels(bw)
+    return jnp.clip(jnp.round(x / step), 0.0, _levels(bw)).astype(jnp.int32)
+
+
+def dequant_codes(c, bw: int, maxv: float):
+    """Inverse of :func:`quant_codes` (codes -> representable float values)."""
+    if bw == 1:
+        return (2.0 * c.astype(jnp.float32) - 1.0) * maxv
+    step = maxv / _levels(bw)
+    return c.astype(jnp.float32) * step

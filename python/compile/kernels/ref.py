@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+pytest (python/tests/) sweeps shapes/dtypes with hypothesis and asserts
+``assert_allclose(kernel(...), ref(...))``.  Nothing in here may import
+pallas.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_ref",
+    "quant_codes_ref",
+    "masked_linear_ref",
+    "lut_lookup_ref",
+    "batchnorm_ref",
+]
+
+
+def quantize_ref(x, bw: int, maxv: float):
+    if bw == 1:
+        return jnp.where(x >= 0.0, maxv, -maxv)
+    levels = float(2**bw - 1)
+    step = maxv / levels
+    return jnp.clip(jnp.round(x / step), 0.0, levels) * step
+
+
+def quant_codes_ref(x, bw: int, maxv: float):
+    if bw == 1:
+        return (x >= 0.0).astype(jnp.int32)
+    levels = float(2**bw - 1)
+    step = maxv / levels
+    return jnp.clip(jnp.round(x / step), 0.0, levels).astype(jnp.int32)
+
+
+def masked_linear_ref(x, w, mask, b):
+    return x @ (w * mask).T + b[None, :]
+
+
+def lut_lookup_ref(codes, table, bw: int):
+    fanin = codes.shape[1]
+    idx = jnp.zeros(codes.shape[0], dtype=jnp.int32)
+    for j in range(fanin):
+        idx = idx | (codes[:, j] << (bw * j))
+    return table[idx]
+
+
+def batchnorm_ref(z, gamma, beta, eps: float = 1e-5):
+    mu = jnp.mean(z, axis=0)
+    var = jnp.mean((z - mu) ** 2, axis=0)
+    return gamma * (z - mu) / jnp.sqrt(var + eps) + beta, mu, var

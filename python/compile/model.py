@@ -1,0 +1,279 @@
+"""L2: the LogicNets model in JAX — sparse-masked, activation-quantized MLP.
+
+This is the training-time twin of the hardware view: every layer applies an
+*input quantizer* (the paper's implicit quantizer, §4), a masked linear layer
+with per-neuron fan-in (kernels/masked_linear.py), and batch normalization.
+After training, each neuron collapses to a truth table over its fan-in codes;
+the Rust side (rust/src/luts/) performs that export.
+
+Everything here is lowered ONCE by aot.py to HLO text and driven from Rust —
+python never runs on the request path.
+
+Parameter/IO flattening contract (mirrored by rust/src/runtime/manifest.rs):
+
+  train_step inputs :  w[0..L) , b[0..L) , gamma[0..L) , beta[0..L) ,
+                       vw[0..L), vb[0..L), vgamma[0..L), vbeta[0..L),
+                       mask[0..L), x[B,in], y[B] (i32), lr (f32 scalar)
+  train_step outputs:  w', b', gamma', beta', vw', vb', vgamma', vbeta',
+                       loss (f32 scalar),
+                       gw[0..L)  (raw weight grads, for momentum pruning),
+                       mu[0..L), var[0..L)  (batch stats, for EMA in Rust)
+
+  forward inputs    :  w, b, gamma, beta, mask, rmean[0..L), rvar[0..L),
+                       x[Be,in]
+  forward outputs   :  logits [Be, classes]  (post output-quantizer)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.masked_linear import masked_linear
+from .kernels.quantize import quantize
+
+BN_EPS = 1e-5
+MOMENTUM = 0.9
+
+
+@dataclasses.dataclass
+class ModelCfg:
+    """Topology + quantization config.  Single source: configs/models.json."""
+
+    name: str
+    kind: str  # "mlp" | "cnn"
+    in_features: int
+    classes: int
+    hidden: List[int]
+    bw: int            # hidden activation bit-width
+    bw_in: int         # input quantizer bit-width
+    bw_out: int        # final-layer output quantizer bit-width (BW_fc)
+    fanin: int         # synapses per hidden neuron (X)
+    fanin_fc: Optional[int]  # final layer fan-in; None = dense
+    skips: int = 0     # number of extra earlier activations concatenated
+    batch: int = 128
+    eval_batch: int = 256
+    maxv_in: float = 1.0
+    maxv_hidden: float = 2.0
+    maxv_out: float = 4.0
+    train_softmax: bool = True
+    dataset: str = "jets"
+    steps: int = 300
+    lr: float = 0.02
+    # CNN-only knobs (ignored for MLPs)
+    channels: Optional[List[int]] = None
+    kernel_size: int = 3
+    fanin_dw: Optional[int] = None
+    fanin_pw: Optional[int] = None
+    conv_mode: str = "quant_x_dw"  # fp | fp_dw | fp_x_dw | quant_x_dw
+    image_hw: int = 28
+
+    @staticmethod
+    def from_dict(name: str, d: dict) -> "ModelCfg":
+        fields = {f.name for f in dataclasses.fields(ModelCfg)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        kw["name"] = name
+        return ModelCfg(**kw)
+
+    # ---- derived topology ----------------------------------------------
+
+    def layer_sizes(self) -> List[int]:
+        """Output width of each layer (hidden layers + final classifier)."""
+        return list(self.hidden) + [self.classes]
+
+    def layer_inputs(self) -> List[int]:
+        """Input width of each layer, accounting for skip concatenation.
+
+        With ``skips=s`` the input of layer i (i>=1) is the concatenation of
+        the last min(s,i)+1 activations (paper §7, Skip Connections).  The
+        per-neuron fan-in is unchanged, so the LUT cost is unchanged.
+        """
+        widths = [self.in_features] + list(self.hidden)  # activation widths
+        ins = []
+        for i in range(len(widths)):
+            lo = max(0, i - self.skips) if i > 0 else i
+            ins.append(sum(widths[lo : i + 1]))
+        return ins
+
+    def layer_fanin(self, i: int) -> Optional[int]:
+        last = len(self.hidden)
+        if i == last:
+            return self.fanin_fc
+        return self.fanin
+
+    def layer_bw_in(self, i: int) -> int:
+        return self.bw_in if i == 0 else self.bw
+
+    def layer_maxv_in(self, i: int) -> float:
+        return self.maxv_in if i == 0 else self.maxv_hidden
+
+    def num_layers(self) -> int:
+        return len(self.hidden) + 1
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _skip_input(cfg: ModelCfg, acts: List[jnp.ndarray], i: int) -> jnp.ndarray:
+    if i == 0 or cfg.skips == 0:
+        return acts[-1]
+    lo = max(0, i - cfg.skips)
+    # acts holds [a_0 .. a_i]; concatenate a_i, a_{i-1}, ..., a_lo in order
+    # newest-first (matches rust/src/nn/mlp.rs::skip_input).
+    parts = [acts[j] for j in range(len(acts) - 1, lo - 1, -1)]
+    return jnp.concatenate(parts, axis=1)
+
+
+def forward_train(cfg: ModelCfg, params, masks, x):
+    """Training-mode forward: batch-stat BN.  Returns (logits, mus, vars)."""
+    a = quantize(x, cfg.bw_in, cfg.maxv_in)
+    acts = [a]
+    mus, vars_ = [], []
+    n = cfg.num_layers()
+    for i in range(n):
+        w, b, gamma, beta = params[i]
+        inp = _skip_input(cfg, acts, i)
+        z = masked_linear(inp, w, masks[i], b)
+        mu = jnp.mean(z, axis=0)
+        var = jnp.mean((z - mu) ** 2, axis=0)
+        zh = (z - mu) / jnp.sqrt(var + BN_EPS)
+        y = gamma * zh + beta
+        mus.append(mu)
+        vars_.append(var)
+        if i == n - 1:
+            a = quantize(y, cfg.bw_out, cfg.maxv_out)
+        else:
+            a = quantize(y, cfg.bw, cfg.maxv_hidden)
+            acts.append(a)
+    return a, mus, vars_
+
+
+def forward_eval(cfg: ModelCfg, params, masks, rmeans, rvars, x):
+    """Inference-mode forward: running-stat BN (the exportable function)."""
+    a = quantize(x, cfg.bw_in, cfg.maxv_in)
+    acts = [a]
+    n = cfg.num_layers()
+    for i in range(n):
+        w, b, gamma, beta = params[i]
+        inp = _skip_input(cfg, acts, i)
+        z = masked_linear(inp, w, masks[i], b)
+        zh = (z - rmeans[i]) / jnp.sqrt(rvars[i] + BN_EPS)
+        y = gamma * zh + beta
+        if i == n - 1:
+            a = quantize(y, cfg.bw_out, cfg.maxv_out)
+        else:
+            a = quantize(y, cfg.bw, cfg.maxv_hidden)
+            acts.append(a)
+    return a
+
+
+def loss_fn(cfg: ModelCfg, params, masks, x, y):
+    logits, mus, vars_ = forward_train(cfg, params, masks, x)
+    onehot = jax.nn.one_hot(y, cfg.classes, dtype=logits.dtype)
+    if cfg.train_softmax:
+        # Softmax CE.  The quantized logit range is narrow (paper §6); the
+        # 1/maxv_out temperature keeps gradients healthy without changing
+        # the argmax (it is a fixed positive scale).
+        logp = jax.nn.log_softmax(logits * (8.0 / cfg.maxv_out), axis=1)
+        loss = -jnp.mean(jnp.sum(onehot * logp, axis=1))
+    else:
+        target = onehot * cfg.maxv_out
+        loss = jnp.mean(jnp.sum((logits - target) ** 2, axis=1))
+    return loss, (mus, vars_)
+
+
+# ---------------------------------------------------------------------------
+# Train step (SGD + momentum), flat-signature builders for AOT
+# ---------------------------------------------------------------------------
+
+
+def train_step(cfg: ModelCfg, params, vel, masks, x, y, lr):
+    (loss, (mus, vars_)), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, masks, x, y), has_aux=True
+    )(params)
+    new_params, new_vel = [], []
+    for p, v, g in zip(params, vel, grads):
+        nv = tuple(MOMENTUM * vi + gi for vi, gi in zip(v, g))
+        np_ = tuple(pi - lr * nvi for pi, nvi in zip(p, nv))
+        new_params.append(np_)
+        new_vel.append(nv)
+    gws = [g[0] for g in grads]
+    return new_params, new_vel, loss, gws, mus, vars_
+
+
+def _group(flat, counts):
+    out, i = [], 0
+    for c in counts:
+        out.append(list(flat[i : i + c]))
+        i += c
+    assert i == len(flat)
+    return out
+
+
+def build_train_step_flat(cfg: ModelCfg):
+    """Flat-arg train step + example ShapeDtypeStructs for jax.jit().lower."""
+    n = cfg.num_layers()
+    ins = cfg.layer_inputs()
+    outs = cfg.layer_sizes()
+
+    def step(*flat):
+        grouped = _group(flat[: 9 * n], [n] * 9)
+        ws, bs, gs, bes, vws, vbs, vgs, vbes, masks = grouped
+        x, y, lr = flat[9 * n], flat[9 * n + 1], flat[9 * n + 2]
+        params = [(ws[i], bs[i], gs[i], bes[i]) for i in range(n)]
+        vel = [(vws[i], vbs[i], vgs[i], vbes[i]) for i in range(n)]
+        new_params, new_vel, loss, gws, mus, vars_ = train_step(
+            cfg, params, vel, masks, x, y, lr
+        )
+        out = []
+        for k in range(4):
+            out.extend(p[k] for p in new_params)
+        for k in range(4):
+            out.extend(v[k] for v in new_vel)
+        out.append(loss)
+        out.extend(gws)
+        out.extend(mus)
+        out.extend(vars_)
+        return tuple(out)
+
+    f32 = jnp.float32
+    ex = []
+    ex += [jax.ShapeDtypeStruct((outs[i], ins[i]), f32) for i in range(n)]  # w
+    ex += [jax.ShapeDtypeStruct((outs[i],), f32) for i in range(n)]          # b
+    ex += [jax.ShapeDtypeStruct((outs[i],), f32) for i in range(n)]          # gamma
+    ex += [jax.ShapeDtypeStruct((outs[i],), f32) for i in range(n)]          # beta
+    ex = ex + list(ex)  # velocities mirror parameters
+    ex += [jax.ShapeDtypeStruct((outs[i], ins[i]), f32) for i in range(n)]  # mask
+    ex.append(jax.ShapeDtypeStruct((cfg.batch, cfg.in_features), f32))      # x
+    ex.append(jax.ShapeDtypeStruct((cfg.batch,), jnp.int32))                # y
+    ex.append(jax.ShapeDtypeStruct((), f32))                                # lr
+    return step, ex
+
+
+def build_forward_flat(cfg: ModelCfg):
+    n = cfg.num_layers()
+    ins = cfg.layer_inputs()
+    outs = cfg.layer_sizes()
+
+    def fwd(*flat):
+        grouped = _group(flat[: 7 * n], [n] * 7)
+        ws, bs, gs, bes, masks, rms, rvs = grouped
+        x = flat[7 * n]
+        params = [(ws[i], bs[i], gs[i], bes[i]) for i in range(n)]
+        return (forward_eval(cfg, params, masks, rms, rvs, x),)
+
+    f32 = jnp.float32
+    ex = []
+    ex += [jax.ShapeDtypeStruct((outs[i], ins[i]), f32) for i in range(n)]
+    for _ in range(3):
+        ex += [jax.ShapeDtypeStruct((outs[i],), f32) for i in range(n)]
+    ex += [jax.ShapeDtypeStruct((outs[i], ins[i]), f32) for i in range(n)]
+    for _ in range(2):
+        ex += [jax.ShapeDtypeStruct((outs[i],), f32) for i in range(n)]
+    ex.append(jax.ShapeDtypeStruct((cfg.eval_batch, cfg.in_features), f32))
+    return fwd, ex

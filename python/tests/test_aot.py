@@ -1,0 +1,103 @@
+# pytest: the AOT path — lowering to HLO text and manifest consistency.
+
+import json
+import os
+
+import pytest
+
+from compile.aot import load_configs, manifest_for, to_hlo_text
+from compile.model import ModelCfg, build_forward_flat, build_train_step_flat
+
+import jax
+
+
+def small_cfg():
+    return ModelCfg(
+        name="aot_t",
+        kind="mlp",
+        in_features=8,
+        classes=3,
+        hidden=[12],
+        bw=2,
+        bw_in=2,
+        bw_out=2,
+        fanin=3,
+        fanin_fc=None,
+        batch=16,
+        eval_batch=16,
+    )
+
+
+def test_hlo_text_emission():
+    cfg = small_cfg()
+    for build in (build_train_step_flat, build_forward_flat):
+        fn, ex = build(cfg)
+        lowered = jax.jit(fn).lower(*ex)
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule"), text[:60]
+        # return_tuple=True: the root computation returns a tuple
+        assert "ROOT" in text
+
+
+def test_manifest_matches_cfg():
+    cfg = small_cfg()
+    man = manifest_for(cfg)
+    assert man["name"] == "aot_t"
+    assert [l["in"] for l in man["layers"]] == [8, 12]
+    assert [l["out"] for l in man["layers"]] == [12, 3]
+    assert man["layers"][0]["fanin"] == 3
+    assert man["layers"][1]["fanin"] is None
+    assert man["layers"][0]["bw_in"] == 2
+    # json-serializable
+    json.dumps(man)
+
+
+def test_config_registry_is_consistent():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "configs", "models.json")
+    configs = load_configs(path)
+    assert len(configs) > 50, "full registry expected"
+    for name, d in configs.items():
+        cfg = ModelCfg.from_dict(name, d)
+        assert cfg.kind in ("mlp", "cnn"), name
+        if cfg.kind == "mlp":
+            ins = cfg.layer_inputs()
+            outs = cfg.layer_sizes()
+            assert len(ins) == len(outs) == cfg.num_layers()
+            # every sparse layer's truth table must be generable (<=24 bits)
+            for i in range(cfg.num_layers()):
+                f = cfg.layer_fanin(i)
+                if f is not None:
+                    assert f * cfg.layer_bw_in(i) <= 24, (name, i)
+        else:
+            from compile.convmodel import conv_layer_dims
+
+            dims = conv_layer_dims(cfg)
+            assert dims[-1][0] == cfg.classes
+
+
+def test_manifest_for_cnn_has_stage_layers():
+    from compile.convmodel import conv_layer_dims
+
+    cfg = ModelCfg(
+        name="c",
+        kind="cnn",
+        in_features=784,
+        classes=10,
+        hidden=[],
+        bw=2,
+        bw_in=2,
+        bw_out=4,
+        fanin=0,
+        fanin_fc=None,
+        batch=8,
+        eval_batch=8,
+        channels=[6, 8, 10],
+        fanin_dw=5,
+        fanin_pw=4,
+        conv_mode="quant_x_dw",
+    )
+    man = manifest_for(cfg)
+    dims = conv_layer_dims(cfg)
+    assert len(man["layers"]) == len(dims)
+    assert man["layers"][0]["out"] == 6
+    assert man["layers"][-1]["out"] == 10

@@ -1,0 +1,173 @@
+# pytest: Pallas kernels vs the pure-jnp oracle (ref.py) — the CORE
+# correctness signal of L1.  hypothesis sweeps shapes, bit-widths and value
+# ranges; assert_allclose against ref for values, exact equality for codes.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.lut_lookup import lut_lookup
+from compile.kernels.masked_linear import masked_linear
+from compile.kernels.quantize import dequant_codes, quant_codes, quantize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, scale=2.0):
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    bw=st.integers(1, 6),
+    rows=st.integers(1, 33),
+    cols=st.integers(1, 17),
+    maxv=st.sampled_from([1.0, 2.0, 4.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(bw, rows, cols, maxv, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, rows, cols)
+    got = quantize(x, bw, maxv)
+    want = ref.quantize_ref(x, bw, maxv)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@settings(**SETTINGS)
+@given(bw=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_quant_codes_roundtrip(bw, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 16, 8)
+    codes = quant_codes(x, bw, 2.0)
+    assert np.asarray(codes).min() >= 0
+    assert np.asarray(codes).max() < 2**bw
+    # dequant(code) must be a fixed point of the quantizer
+    vals = dequant_codes(codes, bw, 2.0)
+    again = quant_codes(vals, bw, 2.0)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(again))
+
+
+def test_quantize_ste_gradient():
+    # Gradient must pass inside the representable range, be zero outside.
+    x = jnp.array([-1.0, 0.5, 1.5, 3.0])
+    g = jax.grad(lambda v: jnp.sum(quantize(v, 2, 2.0)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 0.0])
+    g1 = jax.grad(lambda v: jnp.sum(quantize(v, 1, 1.0)))(x)
+    np.testing.assert_array_equal(np.asarray(g1), [1.0, 1.0, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# masked_linear
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 3, 8, 24, 64]),
+    i=st.integers(1, 40),
+    o=st.integers(1, 24),
+    fanin=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_linear_matches_ref(b, i, o, fanin, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, i)
+    w = rand(rng, o, i, scale=1.0)
+    bias = rand(rng, o, scale=0.2)
+    mask = np.zeros((o, i), np.float32)
+    for r in range(o):
+        mask[r, rng.choice(i, min(fanin, i), replace=False)] = 1.0
+    mask = jnp.asarray(mask)
+    got = masked_linear(x, w, mask, bias)
+    want = ref.masked_linear_ref(x, w, mask, bias)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_masked_linear_grads_match_ref(seed):
+    rng = np.random.default_rng(seed)
+    b, i, o = 16, 12, 7
+    x = rand(rng, b, i)
+    w = rand(rng, o, i, scale=1.0)
+    bias = rand(rng, o, scale=0.2)
+    mask = jnp.asarray((rng.random((o, i)) < 0.3).astype(np.float32))
+
+    def loss_kernel(x, w, bias):
+        return jnp.sum(masked_linear(x, w, mask, bias) ** 2)
+
+    def loss_ref(x, w, bias):
+        return jnp.sum(ref.masked_linear_ref(x, w, mask, bias) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, bias)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-4)
+    # weight gradient must respect the mask (no gradient off-mask)
+    assert np.all(np.asarray(gk[1])[np.asarray(mask) == 0] == 0)
+
+
+def test_masked_linear_under_jit():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 8, 10)
+    w = rand(rng, 4, 10)
+    bias = rand(rng, 4)
+    mask = jnp.ones((4, 10), jnp.float32)
+    f = jax.jit(lambda a: masked_linear(a, w, mask, bias))
+    assert_allclose(
+        np.asarray(f(x)),
+        np.asarray(ref.masked_linear_ref(x, w, mask, bias)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# lut_lookup
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    bw=st.integers(1, 3),
+    fanin=st.integers(1, 4),
+    b=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lut_lookup_matches_ref(bw, fanin, b, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**bw, (b, fanin)).astype(np.int32))
+    table = jnp.asarray(rng.normal(0, 1, (2 ** (bw * fanin),)).astype(np.float32))
+    got = lut_lookup(codes, table, bw)
+    want = ref.lut_lookup_ref(codes, table, bw)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_lut_lookup_rejects_bad_table():
+    codes = jnp.zeros((4, 2), jnp.int32)
+    table = jnp.zeros((7,), jnp.float32)  # wrong size
+    with pytest.raises(AssertionError):
+        lut_lookup(codes, table, 2)
+
+
+# ---------------------------------------------------------------------------
+# batchnorm oracle self-check (used by model tests)
+# ---------------------------------------------------------------------------
+
+
+def test_batchnorm_ref_normalizes():
+    rng = np.random.default_rng(1)
+    z = rand(rng, 256, 8, scale=3.0) + 2.0
+    y, mu, var = ref.batchnorm_ref(z, jnp.ones(8), jnp.zeros(8))
+    assert_allclose(np.asarray(jnp.mean(y, 0)), np.zeros(8), atol=1e-4)
+    assert_allclose(np.asarray(jnp.std(y, 0)), np.ones(8), atol=1e-2)
+    assert_allclose(np.asarray(mu), np.asarray(jnp.mean(z, 0)), rtol=1e-5)

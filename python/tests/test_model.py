@@ -1,0 +1,221 @@
+# pytest: L2 model semantics — forward shapes, quantizer-grid outputs,
+# trainability of the flat train step, skip wiring, and the conv variants.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.convmodel import (
+    build_conv_forward_flat,
+    build_conv_train_step_flat,
+    conv_layer_dims,
+    conv_layer_fanins,
+)
+from compile.model import (
+    ModelCfg,
+    build_forward_flat,
+    build_train_step_flat,
+)
+
+
+def mlp_cfg(**kw):
+    base = dict(
+        name="t",
+        kind="mlp",
+        in_features=16,
+        classes=5,
+        hidden=[24, 16],
+        bw=2,
+        bw_in=2,
+        bw_out=2,
+        fanin=3,
+        fanin_fc=None,
+        batch=32,
+        eval_batch=32,
+    )
+    base.update(kw)
+    return ModelCfg(**base)
+
+
+def init_flat(cfg, rng):
+    n = cfg.num_layers()
+    ins, outs = cfg.layer_inputs(), cfg.layer_sizes()
+    ws, masks = [], []
+    for i in range(n):
+        f = cfg.layer_fanin(i)
+        m = np.zeros((outs[i], ins[i]), np.float32)
+        if f is None:
+            m[:] = 1.0
+        else:
+            for o in range(outs[i]):
+                m[o, rng.choice(ins[i], min(f, ins[i]), replace=False)] = 1.0
+        masks.append(jnp.asarray(m))
+        std = np.sqrt(2.0 / max(1, f or ins[i]))
+        ws.append(jnp.asarray((rng.normal(0, std, (outs[i], ins[i])) * m).astype(np.float32)))
+    bs = [jnp.zeros(o) for o in outs]
+    gs = [jnp.ones(o) for o in outs]
+    bes = [jnp.zeros(o) for o in outs]
+    zeros = lambda: [jnp.zeros_like(w) for w in ws]
+    z1 = lambda: [jnp.zeros(o) for o in outs]
+    return ws, bs, gs, bes, zeros(), z1(), z1(), z1(), masks
+
+
+def test_layer_inputs_with_skips():
+    cfg = mlp_cfg(hidden=[10, 20, 30], skips=0)
+    assert cfg.layer_inputs() == [16, 10, 20, 30]
+    cfg1 = mlp_cfg(hidden=[10, 20, 30], skips=1)
+    assert cfg1.layer_inputs() == [16, 10 + 16, 20 + 10, 30 + 20]
+    cfg2 = mlp_cfg(hidden=[10, 20, 30], skips=2)
+    assert cfg2.layer_inputs() == [16, 26, 46, 60]
+
+
+@pytest.mark.parametrize("skips", [0, 1, 2])
+def test_train_step_shapes_and_loss(skips):
+    cfg = mlp_cfg(skips=skips)
+    rng = np.random.default_rng(0)
+    step, ex = build_train_step_flat(cfg)
+    n = cfg.num_layers()
+    assert len(ex) == 9 * n + 3
+    ws, bs, gs, bes, vws, vbs, vgs, vbes, masks = init_flat(cfg, rng)
+    x = jnp.asarray(rng.random((cfg.batch, 16), np.float32))
+    y = jnp.asarray(rng.integers(0, 5, cfg.batch).astype(np.int32))
+    out = jax.jit(step)(*ws, *bs, *gs, *bes, *vws, *vbs, *vgs, *vbes, *masks, x, y, jnp.float32(0.05))
+    assert len(out) == 11 * n + 1
+    loss = float(out[8 * n])
+    assert np.isfinite(loss) and loss > 0
+    # shapes preserved
+    for i in range(n):
+        assert out[i].shape == ws[i].shape
+        assert out[9 * n + 1 + i].shape == bs[i].shape  # mu
+
+
+def test_training_reduces_loss_quickly():
+    cfg = mlp_cfg(hidden=[32, 32], steps=0)
+    rng = np.random.default_rng(1)
+    step = jax.jit(build_train_step_flat(cfg)[0])
+    ws, bs, gs, bes, vws, vbs, vgs, vbes, masks = init_flat(cfg, rng)
+    protos = rng.normal(0, 1.5, (5, 16)).astype(np.float32)
+    losses = []
+    state = [ws, bs, gs, bes, vws, vbs, vgs, vbes]
+    n = cfg.num_layers()
+    for t in range(60):
+        y = rng.integers(0, 5, cfg.batch)
+        x = (protos[y] + rng.normal(0, 0.6, (cfg.batch, 16))).astype(np.float32)
+        x = (x - x.min()) / (x.max() - x.min())
+        flat = [a for g in state for a in g]
+        out = step(*flat, *masks, jnp.asarray(x), jnp.asarray(y.astype(np.int32)), jnp.float32(0.05))
+        state = [list(out[k * n:(k + 1) * n]) for k in range(8)]
+        losses.append(float(out[8 * n]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:5]) * 0.85, losses[:5] + losses[-5:]
+
+
+def test_forward_logits_on_quantizer_grid():
+    cfg = mlp_cfg()
+    rng = np.random.default_rng(2)
+    fwd = jax.jit(build_forward_flat(cfg)[0])
+    ws, bs, gs, bes, _, _, _, _, masks = init_flat(cfg, rng)
+    rms = [jnp.zeros(o) for o in cfg.layer_sizes()]
+    rvs = [jnp.ones(o) for o in cfg.layer_sizes()]
+    x = jnp.asarray(rng.random((cfg.eval_batch, 16), np.float32))
+    (logits,) = fwd(*ws, *bs, *gs, *bes, *masks, *rms, *rvs, x)
+    step = cfg.maxv_out / (2**cfg.bw_out - 1)
+    arr = np.asarray(logits)
+    assert arr.shape == (cfg.eval_batch, 5)
+    frac = arr / step
+    np.testing.assert_allclose(frac, np.round(frac), atol=1e-4)
+    assert arr.min() >= 0 and arr.max() <= cfg.maxv_out + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# conv variants
+# ---------------------------------------------------------------------------
+
+
+def cnn_cfg(mode, skips=0):
+    return ModelCfg(
+        name="c",
+        kind="cnn",
+        in_features=784,
+        classes=10,
+        hidden=[],
+        bw=2,
+        bw_in=2,
+        bw_out=4,
+        fanin=0,
+        fanin_fc=None,
+        skips=skips,
+        batch=8,
+        eval_batch=8,
+        channels=[6, 8, 10],
+        kernel_size=3,
+        fanin_dw=5,
+        fanin_pw=4,
+        conv_mode=mode,
+        image_hw=28,
+    )
+
+
+@pytest.mark.parametrize("mode", ["fp", "fp_dw", "fp_x_dw", "quant_x_dw"])
+def test_conv_dims_and_forward(mode):
+    cfg = cnn_cfg(mode)
+    dims = conv_layer_dims(cfg)
+    fanins = conv_layer_fanins(cfg)
+    assert len(dims) == len(fanins)
+    n = len(dims)
+    rng = np.random.default_rng(3)
+    step, ex = build_conv_train_step_flat(cfg)
+    assert len(ex) == 9 * n + 3
+    # init from example shapes
+    flat = []
+    for k, e in enumerate(ex[:-3]):
+        if k < n:  # weights
+            flat.append(jnp.asarray(rng.normal(0, 0.3, e.shape).astype(np.float32)))
+        elif 2 * n <= k < 3 * n:  # gammas
+            flat.append(jnp.ones(e.shape, jnp.float32))
+        elif 8 * n <= k < 9 * n:  # masks
+            m = np.zeros(e.shape, np.float32)
+            f = fanins[k - 8 * n]
+            if f is None:
+                m[:] = 1.0
+            else:
+                for o in range(e.shape[0]):
+                    m[o, rng.choice(e.shape[1], min(f, e.shape[1]), replace=False)] = 1.0
+            flat.append(jnp.asarray(m))
+        else:
+            flat.append(jnp.zeros(e.shape, jnp.float32))
+    x = jnp.asarray(rng.random((cfg.batch, 784), np.float32))
+    y = jnp.asarray(rng.integers(0, 10, cfg.batch).astype(np.int32))
+    out = jax.jit(step)(*flat, x, y, jnp.float32(0.02))
+    assert len(out) == 11 * n + 1
+    assert np.isfinite(float(out[8 * n]))
+
+
+@pytest.mark.parametrize("skips", [0, 1, 2])
+def test_conv_skip_dims(skips):
+    cfg = cnn_cfg("quant_x_dw", skips=skips)
+    dims = conv_layer_dims(cfg)
+    c1, f1, f2 = cfg.channels
+    assert dims[3] == (f2, f1 * 2 if skips >= 1 else f1)
+    head_in = 49 * f2 + (49 * f1 if skips >= 2 else 0)
+    assert dims[4] == (10, head_in)
+
+
+def test_conv_eval_forward_shapes():
+    cfg = cnn_cfg("quant_x_dw")
+    rng = np.random.default_rng(4)
+    fwd, ex = build_conv_forward_flat(cfg)
+    n = len(conv_layer_dims(cfg))
+    flat = []
+    for k, e in enumerate(ex[:-1]):
+        if 2 * n <= k < 3 * n or 6 * n <= k < 7 * n:  # gammas / rvars
+            flat.append(jnp.ones(e.shape, jnp.float32))
+        elif 4 * n <= k < 5 * n:  # masks
+            flat.append(jnp.ones(e.shape, jnp.float32))
+        elif k < n:
+            flat.append(jnp.asarray(rng.normal(0, 0.3, e.shape).astype(np.float32)))
+        else:
+            flat.append(jnp.zeros(e.shape, jnp.float32))
+    x = jnp.asarray(rng.random((cfg.eval_batch, 784), np.float32))
+    (logits,) = jax.jit(fwd)(*flat, x)
+    assert logits.shape == (cfg.eval_batch, 10)

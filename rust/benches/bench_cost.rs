@@ -1,0 +1,36 @@
+//! Bench: analytical LUT-cost model (Table 2.1 / 6.1 regime).
+
+use logicnets::cost;
+use logicnets::util::bench::bench;
+use std::time::Duration;
+
+fn main() {
+    bench("lut_cost closed-form (N=6..20, M=1..4)", Duration::from_millis(300), || {
+        let mut acc = 0u64;
+        for n in 6..=20 {
+            for m in 1..=4 {
+                acc = acc.wrapping_add(cost::lut_cost(n, m));
+            }
+        }
+        std::hint::black_box(acc);
+    })
+    .report();
+
+    bench("static_map_row table (fan-in 6..11)", Duration::from_millis(300), || {
+        for f in 6..=11 {
+            std::hint::black_box(cost::static_map_row(f));
+        }
+    })
+    .report();
+
+    bench("model cost: HEP model A layer breakdown", Duration::from_millis(300), || {
+        let layers = [
+            (64usize, Some(3usize), 3usize, 3usize, 16usize),
+            (64, Some(3), 3, 3, 64),
+            (64, Some(3), 3, 3, 64),
+            (5, None, 3, 3, 64),
+        ];
+        std::hint::black_box(cost::mlp_cost(&layers));
+    })
+    .report();
+}

@@ -1,0 +1,113 @@
+//! Bench: the LUT inference engine + batching router — the paper's
+//! extreme-throughput claim scaled to this testbed (POLYBiNN reports 100M
+//! MNIST FPS on FPGA; our CPU software model targets >=1M inf/s on
+//! HEP-sized nets, single core).
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::serve::engine::InferScratch;
+use logicnets::serve::{LutEngine, Server, ServerConfig};
+use logicnets::util::bench::bench;
+use logicnets::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn hep_like_model(seed: u64) -> ExportedModel {
+    let mut rng = Rng::new(seed);
+    let widths = [64usize, 64, 64];
+    let mut layers = Vec::new();
+    let mut prev = 16usize;
+    for (k, &w) in widths.iter().enumerate() {
+        let qi = QuantSpec::new(2, if k == 0 { 1.0 } else { 2.0 });
+        let neurons = (0..w)
+            .map(|_| {
+                let inputs = rng.choose_k(prev, 4);
+                Neuron {
+                    inputs: inputs.clone(),
+                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect(),
+                    bias: 0.0,
+                    g: 1.0,
+                    h: 0.0,
+                }
+            })
+            .collect();
+        layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(2, 2.0), true));
+        prev = w;
+    }
+    // dense head
+    let neurons = (0..5)
+        .map(|_| {
+            let inputs: Vec<usize> = (0..prev).collect();
+            Neuron {
+                inputs: inputs.clone(),
+                weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+                bias: 0.0,
+                g: 1.0,
+                h: 0.0,
+            }
+        })
+        .collect();
+    layers.push(ExportedLayer::uniform(neurons, prev, QuantSpec::new(2, 2.0), QuantSpec::new(4, 4.0), false));
+    ExportedModel {
+        layers,
+        in_features: 16,
+        classes: 5,
+        skips: 0,
+        act_widths: vec![16, 64, 64, 64],
+    }
+}
+
+fn main() {
+    let model = hep_like_model(1);
+    let tables = ModelTables::generate(&model).unwrap();
+    let engine = Arc::new(LutEngine::build(&model, &tables).unwrap());
+    let mut rng = Rng::new(9);
+    let batch = 1024usize;
+    let xs: Vec<f32> = (0..batch * 16).map(|_| rng.f32()).collect();
+
+    let mut scratch = InferScratch::default();
+    let one: Vec<f32> = xs[..16].to_vec();
+    bench("engine single inference (hep_e-like)", Duration::from_millis(500), || {
+        std::hint::black_box(engine.infer(&one, &mut scratch));
+    })
+    .report_throughput(1.0, "inf");
+
+    bench("engine batch 1024 (single core)", Duration::from_millis(800), || {
+        std::hint::black_box(engine.infer_batch(&xs));
+    })
+    .report_throughput(batch as f64, "inf");
+
+    bench("engine batch 1024 (all cores)", Duration::from_millis(800), || {
+        std::hint::black_box(engine.infer_batch_par(&xs));
+    })
+    .report_throughput(batch as f64, "inf");
+
+    // Router path with 8 concurrent clients.
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig { workers: 4, max_batch: 64, ..Default::default() },
+    );
+    let per = 4000usize;
+    let r = bench("router 8 clients x 4000 req", Duration::from_millis(1200), || {
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let server = &server;
+                let xs = &xs;
+                s.spawn(move || {
+                    let mut rng = Rng::new(t as u64);
+                    for _ in 0..per / 8 {
+                        let i = rng.below(batch);
+                        server.infer(xs[i * 16..(i + 1) * 16].to_vec());
+                    }
+                });
+            }
+        });
+    });
+    r.report_throughput(per as f64, "inf");
+    let st = server.stats();
+    println!(
+        "{:<44} p50 {:.0}us p95 {:.0}us p99 {:.0}us fill {:.1}",
+        "", st.p50_us, st.p95_us, st.p99_us, st.mean_batch
+    );
+    server.shutdown();
+}

@@ -1,0 +1,93 @@
+//! Bench: the logic-synthesis simulator (Table 5.2/5.3 regime) —
+//! minimization + mapping cost for HEP-sized models.
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::synth::{synthesize, SynthOpts};
+use logicnets::util::bench::bench_n;
+use logicnets::util::rng::Rng;
+
+fn model(widths: &[usize], in_f: usize, fanin: usize, bw: usize, seed: u64) -> ExportedModel {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut prev = in_f;
+    for (k, &w) in widths.iter().enumerate() {
+        let qi = QuantSpec::new(bw, if k == 0 { 1.0 } else { 2.0 });
+        let neurons = (0..w)
+            .map(|_| {
+                let inputs = rng.choose_k(prev, fanin);
+                Neuron {
+                    inputs: inputs.clone(),
+                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect(),
+                    bias: rng.normal_f32(0.0, 0.1),
+                    g: 1.0,
+                    h: 0.0,
+                }
+            })
+            .collect();
+        layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(bw, 2.0), true));
+        prev = w;
+    }
+    ExportedModel {
+        layers,
+        in_features: in_f,
+        classes: *widths.last().unwrap(),
+        skips: 0,
+        act_widths: std::iter::once(in_f).chain(widths.iter().copied()).collect(),
+    }
+}
+
+fn ablation(widths: &[usize], fanin: usize, bw: usize) {
+    use logicnets::synth::mapper::{MapStrategy, Mapper};
+    use logicnets::synth::BoolFn;
+    use logicnets::synth::Net;
+    // Ablation (DESIGN.md design-choice study): hybrid cover+Shannon vs
+    // Shannon-only mapping on the same trained-like model.
+    let m = model(widths, 16, fanin, bw, 11);
+    let tables = ModelTables::generate(&m).unwrap();
+    for strategy in [MapStrategy::Hybrid, MapStrategy::ShannonOnly] {
+        let lt = tables.layers[0].as_ref().unwrap();
+        let bw_in = lt.quant_in.bw;
+        let mut mapper = Mapper::with_strategy(m.layers[0].in_f * bw_in, strategy);
+        for (nj, t) in lt.tables.iter().enumerate() {
+            let nr = &m.layers[0].neurons[nj];
+            let nets: Vec<Net> = nr
+                .inputs
+                .iter()
+                .flat_map(|&j| (0..bw_in).map(move |b| Net::Input((j * bw_in + b) as u32)))
+                .collect();
+            for bit in 0..t.out_bits {
+                let f = BoolFn::new(t.in_bits, t.output_bit_fn(bit));
+                mapper.map_fn(&f, &nets);
+            }
+        }
+        println!(
+            "ablation {strategy:?}: layer0 of X{fanin} BW{bw} -> {} LUTs",
+            mapper.netlist.num_luts()
+        );
+    }
+}
+
+fn main() {
+    ablation(&[64, 32, 32], 5, 2);
+
+    for (label, widths, fanin, bw, iters) in [
+        ("hep_c-like (64,32,32) X3 BW2", vec![64usize, 32, 32], 3usize, 2usize, 10),
+        ("hep_e-like (64,64,64) X4 BW2", vec![64, 64, 64], 4, 2, 5),
+        ("t53_b-like (64,32,32) X5 BW2", vec![64, 32, 32], 5, 2, 3),
+    ] {
+        let m = model(&widths, 16, fanin, bw, 7);
+        let tables = ModelTables::generate(&m).unwrap();
+        let mut report = None;
+        let r = bench_n(&format!("synthesize {label}"), iters, || {
+            let (_, rep) = synthesize(&m, &tables, SynthOpts::default()).unwrap();
+            report = Some(rep);
+        });
+        r.report();
+        let rep = report.unwrap();
+        println!(
+            "{:<44} {} LUTs (analytical {}, {:.2}x), depth {}",
+            "", rep.luts, rep.analytical_luts, rep.reduction, rep.depth
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench: one PJRT train-step roundtrip (the L3 training driver hot loop).
+//! Skips when artifacts are missing (`make artifacts`).
+
+use logicnets::hep;
+use logicnets::runtime::{artifacts_dir, Artifact, Runtime};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::train::{train, ModelState, TrainOpts};
+use logicnets::util::bench::bench_n;
+
+fn main() {
+    let dir = artifacts_dir();
+    for name in ["spike_tiny", "hep_e"] {
+        if !Artifact::exists(&dir, name) {
+            println!("SKIP bench_train: artifact {name} missing (run `make artifacts`)");
+            continue;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let art = Artifact::load(&rt, &dir, name).unwrap();
+        let man = art.manifest.clone();
+        let ds = hep::jets(4 * man.batch, 3);
+        let r = bench_n(&format!("train 10 steps ({name})"), 5, || {
+            let mut state = ModelState::init(&man, 1, PruneMethod::APriori);
+            let opts = TrainOpts {
+                steps: 10,
+                log_every: 100,
+                ..TrainOpts::from_manifest(&man)
+            };
+            std::hint::black_box(train(&art, &mut state, &ds, &opts).unwrap());
+        });
+        r.report();
+        println!("{:<44} {:.2} ms/step", "", r.median_ns / 1e6 / 10.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Bench: truth-table generation (paper §5.1, Table 5.1 regime) —
+//! single-neuron cost growth with fan-in bits and whole-layer parallel
+//! scaling.
+
+use logicnets::luts::{neuron_table, ModelTables};
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::util::bench::{bench, bench_n};
+use logicnets::util::rng::Rng;
+use std::time::Duration;
+
+fn neuron(bits: usize, rng: &mut Rng) -> Neuron {
+    Neuron {
+        inputs: (0..bits).collect(),
+        weights: (0..bits).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+        bias: 0.05,
+        g: 1.0,
+        h: 0.0,
+    }
+}
+
+fn model(widths: &[usize], in_f: usize, fanin: usize, bw: usize, rng: &mut Rng) -> ExportedModel {
+    let mut layers = Vec::new();
+    let mut prev = in_f;
+    for (k, &w) in widths.iter().enumerate() {
+        let qi = QuantSpec::new(bw, if k == 0 { 1.0 } else { 2.0 });
+        let neurons = (0..w)
+            .map(|_| {
+                let inputs = rng.choose_k(prev, fanin);
+                Neuron {
+                    inputs: inputs.clone(),
+                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect(),
+                    bias: 0.0,
+                    g: 1.0,
+                    h: 0.0,
+                }
+            })
+            .collect();
+        layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(bw, 2.0), true));
+        prev = w;
+    }
+    ExportedModel {
+        layers,
+        in_features: in_f,
+        classes: *widths.last().unwrap(),
+        skips: 0,
+        act_widths: std::iter::once(in_f).chain(widths.iter().copied()).collect(),
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    for bits in [8usize, 12, 16, 18] {
+        let nr = neuron(bits, &mut rng);
+        let qi = QuantSpec::new(1, 1.0);
+        let qo = QuantSpec::new(1, 1.0);
+        bench_n(&format!("neuron_table {bits} input bits"), 5, || {
+            std::hint::black_box(neuron_table(&nr, qi, qo).unwrap());
+        })
+        .report();
+    }
+
+    // Whole-model generation (paper model E shape), parallel over neurons.
+    let m = model(&[64, 64, 64], 16, 4, 2, &mut rng);
+    bench("ModelTables::generate (64,64,64) X4 BW2", Duration::from_secs(1), || {
+        std::hint::black_box(ModelTables::generate(&m).unwrap());
+    })
+    .report_throughput(192.0, "tables");
+}

@@ -1,0 +1,31 @@
+//! Bench: Verilog emission (regenerates the shape of Table 5.1 — file size
+//! and generation time exploding exponentially with fan-in bits).
+
+use logicnets::luts::neuron_table;
+use logicnets::nn::{Neuron, QuantSpec};
+use logicnets::util::bench::bench_n;
+use logicnets::util::rng::Rng;
+use logicnets::verilog::neuron_module;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    println!("Table 5.1 regime — single-neuron .v emission:");
+    for bits in [12usize, 15, 16, 18] {
+        let nr = Neuron {
+            inputs: (0..bits).collect(),
+            weights: (0..bits).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+            bias: 0.05,
+            g: 1.0,
+            h: 0.0,
+        };
+        let table = neuron_table(&nr, QuantSpec::new(1, 1.0), QuantSpec::new(1, 1.0)).unwrap();
+        let mut size = 0usize;
+        let r = bench_n(&format!("neuron_module {bits} bits"), 3, || {
+            let text = neuron_module("LUT_B", &table);
+            size = text.len();
+            std::hint::black_box(&text);
+        });
+        r.report();
+        println!("{:<44} file size {:.2} MB", "", size as f64 / 1e6);
+    }
+}

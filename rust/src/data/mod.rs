@@ -1,0 +1,138 @@
+//! Dataset container shared by all workloads (jets, MNIST, synthetic).
+
+use crate::util::rng::Rng;
+
+/// Flat row-major dataset: `x` is `[n, d]`, `y` holds class labels.
+#[derive(Debug, Clone)]
+pub struct DataSet {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+}
+
+impl DataSet {
+    pub fn new(x: Vec<f32>, y: Vec<i32>, d: usize, classes: usize) -> DataSet {
+        assert_eq!(x.len() % d, 0);
+        let n = x.len() / d;
+        assert_eq!(y.len(), n);
+        DataSet { x, y, n, d, classes }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Gather rows by index into contiguous buffers (a training batch).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut bx = Vec::with_capacity(idx.len() * self.d);
+        let mut by = Vec::with_capacity(idx.len());
+        for &i in idx {
+            bx.extend_from_slice(self.row(i));
+            by.push(self.y[i]);
+        }
+        (bx, by)
+    }
+
+    /// Sample a batch of `bsz` rows with replacement.
+    pub fn sample_batch(&self, bsz: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        let idx: Vec<usize> = (0..bsz).map(|_| rng.below(self.n)).collect();
+        self.gather(&idx)
+    }
+
+    /// Contiguous chunk `[start, start+len)`, padded by repeating row 0 so
+    /// fixed-batch HLO executables can consume the tail of a test set.
+    pub fn chunk_padded(&self, start: usize, len: usize) -> (Vec<f32>, Vec<i32>, usize) {
+        let real = len.min(self.n.saturating_sub(start));
+        let mut bx = Vec::with_capacity(len * self.d);
+        let mut by = Vec::with_capacity(len);
+        for i in 0..len {
+            let src = if i < real { start + i } else { 0 };
+            bx.extend_from_slice(self.row(src));
+            by.push(self.y[src]);
+        }
+        (bx, by, real)
+    }
+
+    /// Split into (train, test) with `test_frac` of rows held out.
+    pub fn split(mut self, test_frac: f64, rng: &mut Rng) -> (DataSet, DataSet) {
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut idx);
+        let n_test = ((self.n as f64) * test_frac).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        let (tx, ty) = self.gather(test_idx);
+        let (rx, ry) = self.gather(train_idx);
+        let (d, c) = (self.d, self.classes);
+        self.x.clear();
+        (DataSet::new(rx, ry, d, c), DataSet::new(tx, ty, d, c))
+    }
+
+    /// Min-max normalize each feature column to [0, 1] (the input quantizer
+    /// contract: maxv_in = 1.0).
+    pub fn normalize_unit(&mut self) {
+        for j in 0..self.d {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for i in 0..self.n {
+                let v = self.x[i * self.d + j];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let span = (hi - lo).max(1e-9);
+            for i in 0..self.n {
+                let v = &mut self.x[i * self.d + j];
+                *v = (*v - lo) / span;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> DataSet {
+        DataSet::new(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], vec![0, 1, 0], 2, 2)
+    }
+
+    #[test]
+    fn gather_and_row() {
+        let d = tiny();
+        assert_eq!(d.row(1), &[2.0, 3.0]);
+        let (bx, by) = d.gather(&[2, 0]);
+        assert_eq!(bx, vec![4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(by, vec![0, 0]);
+    }
+
+    #[test]
+    fn chunk_padding() {
+        let d = tiny();
+        let (bx, by, real) = d.chunk_padded(2, 4);
+        assert_eq!(real, 1);
+        assert_eq!(bx.len(), 8);
+        assert_eq!(&bx[0..2], &[4.0, 5.0]);
+        assert_eq!(&bx[2..4], &[0.0, 1.0]); // padded with row 0
+        assert_eq!(by[0], 0);
+    }
+
+    #[test]
+    fn normalize_unit_bounds() {
+        let mut d = tiny();
+        d.normalize_unit();
+        for v in &d.x {
+            assert!((0.0..=1.0).contains(v));
+        }
+        assert_eq!(d.x[0], 0.0);
+        assert_eq!(d.x[4], 1.0);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let d = DataSet::new((0..200).map(|i| i as f32).collect(), vec![0; 100], 2, 2);
+        let (tr, te) = d.split(0.25, &mut rng);
+        assert_eq!(te.n, 25);
+        assert_eq!(tr.n, 75);
+    }
+}

@@ -1,0 +1,172 @@
+//! Design-space exploration (paper §6 "axes of exploration" and §3.3).
+//!
+//! Operates on (cost, quality) points produced by the experiment sweeps:
+//! Pareto-frontier extraction, dominated-point analysis and the
+//! Erdős–Rényi "ensembling" arithmetic of §3.3.2 (how many sparse small
+//! layers can be afforded for the LUT budget of one larger layer).
+
+use crate::cost;
+
+/// One evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    pub name: String,
+    pub luts: u64,
+    /// Higher is better (accuracy or avg AUC, in percent).
+    pub quality: f64,
+}
+
+/// Pareto-optimal subset (minimal LUTs, maximal quality), sorted by cost.
+/// Ties on cost keep the best quality.
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    let mut sorted: Vec<&DesignPoint> = points.iter().collect();
+    sorted.sort_by(|a, b| a.luts.cmp(&b.luts).then(b.quality.partial_cmp(&a.quality).unwrap()));
+    let mut out: Vec<DesignPoint> = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.quality > best {
+            out.push(p.clone());
+            best = p.quality;
+        }
+    }
+    out
+}
+
+/// Points strictly dominated by some other point (≥ cost and ≤ quality,
+/// with at least one strict) — the paper's "million-LUT models that barely
+/// beat 2.5k-LUT models" (Fig. 6.7 discussion).
+pub fn dominated<'a>(points: &'a [DesignPoint]) -> Vec<&'a DesignPoint> {
+    points
+        .iter()
+        .filter(|p| {
+            points.iter().any(|q| {
+                (q.luts <= p.luts && q.quality > p.quality)
+                    || (q.luts < p.luts && q.quality >= p.quality)
+            })
+        })
+        .collect()
+}
+
+/// For each frontier point, LUTs spent per extra quality point relative to
+/// the previous frontier point (the "knee" detector).
+pub fn marginal_cost(frontier: &[DesignPoint]) -> Vec<(String, f64)> {
+    frontier
+        .windows(2)
+        .map(|w| {
+            let dl = (w[1].luts - w[0].luts) as f64;
+            let dq = (w[1].quality - w[0].quality).max(1e-9);
+            (w[1].name.clone(), dl / dq)
+        })
+        .collect()
+}
+
+/// §3.3.2: how many layers of (n2 neurons, b2 fan-in bits, m out bits) can
+/// be "ensembled" within the LUT budget of one (n1, b1, m) layer.
+pub fn ensemble_count(
+    n1: usize,
+    b1_bits: usize,
+    n2: usize,
+    b2_bits: usize,
+    m_bits: usize,
+) -> f64 {
+    let c1 = cost::lut_cost(b1_bits, m_bits) as f64 * n1 as f64;
+    let c2 = cost::lut_cost(b2_bits, m_bits) as f64 * n2 as f64;
+    if c2 <= 0.0 {
+        return f64::INFINITY;
+    }
+    c1 / c2
+}
+
+/// Load design points from an experiment CSV with columns containing
+/// "LUTs"-like and quality-like headers (figure_6_7 / figure_7_1 outputs).
+pub fn points_from_csv(csv: &str, name_col: usize, lut_col: usize, q_col: usize) -> Vec<DesignPoint> {
+    let mut out = Vec::new();
+    for (i, line) in csv.lines().enumerate() {
+        if i == 0 {
+            continue; // header
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        if cells.len() <= q_col.max(lut_col).max(name_col) {
+            continue;
+        }
+        let (Ok(luts), Ok(q)) = (
+            cells[lut_col].trim().parse::<f64>(),
+            cells[q_col].trim().parse::<f64>(),
+        ) else {
+            continue;
+        };
+        out.push(DesignPoint {
+            name: cells[name_col].trim().to_string(),
+            luts: luts as u64,
+            quality: q,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Vec<DesignPoint> {
+        [
+            ("a", 100u64, 80.0),
+            ("b", 200, 85.0),
+            ("c", 150, 70.0),  // dominated by a (cheaper, better)... no: a cheaper AND better? a=100/80 vs c=150/70: dominated.
+            ("d", 1000, 86.0),
+            ("e", 1000, 84.0), // dominated by d
+            ("f", 50, 60.0),
+        ]
+        .into_iter()
+        .map(|(n, l, q)| DesignPoint { name: n.into(), luts: l, quality: q })
+        .collect()
+    }
+
+    #[test]
+    fn frontier_is_monotone_and_minimal() {
+        let f = pareto_frontier(&pts());
+        let names: Vec<&str> = f.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["f", "a", "b", "d"]);
+        assert!(f.windows(2).all(|w| w[0].luts <= w[1].luts && w[0].quality < w[1].quality));
+    }
+
+    #[test]
+    fn dominated_points_found() {
+        let pts = pts();
+        let d = dominated(&pts);
+        let names: Vec<&str> = d.iter().map(|p| p.name.as_str()).collect();
+        assert!(names.contains(&"c"));
+        assert!(names.contains(&"e"));
+        assert!(!names.contains(&"a"));
+    }
+
+    #[test]
+    fn marginal_cost_grows_at_the_tail() {
+        let f = pareto_frontier(&pts());
+        let mc = marginal_cost(&f);
+        // d costs far more per quality point than b
+        let b = mc.iter().find(|(n, _)| n == "b").unwrap().1;
+        let d = mc.iter().find(|(n, _)| n == "d").unwrap().1;
+        assert!(d > b);
+    }
+
+    #[test]
+    fn ensemble_arithmetic() {
+        // One 64-neuron 12-bit layer buys ~4 x 64-neuron 10-bit layers
+        // (lut_cost(12,2)=170 vs lut_cost(10,2)=42).
+        let k = ensemble_count(64, 12, 64, 10, 2);
+        assert!(k > 3.9 && k < 4.2, "{k}");
+    }
+
+    #[test]
+    fn csv_parsing() {
+        let csv = "model,bw,fanin,hidden,LUTs,avg AUC,accuracy\n\
+                   m1,2,3,[32],100,85.2,60.0\n\
+                   bad,row\n\
+                   m2,2,4,[64],200,88.0,63.0\n";
+        let pts = points_from_csv(csv, 0, 4, 5);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].name, "m2");
+        assert_eq!(pts[1].luts, 200);
+    }
+}

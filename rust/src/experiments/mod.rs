@@ -1,0 +1,654 @@
+//! Experiment drivers: one generator per table and figure in the paper's
+//! evaluation (see DESIGN.md §4 for the index).  Each prints the same rows
+//! the paper reports and writes a CSV under `reports/`.
+//!
+//! Trained models are cached as checkpoints in `reports/ckpt/`, so tables
+//! that share a model train it once; `--retrain` forces fresh training.
+
+use crate::cost;
+use crate::data::DataSet;
+use crate::hep;
+use crate::luts::ModelTables;
+use crate::metrics;
+use crate::mnist;
+use crate::nn::ExportedModel;
+use crate::runtime::{artifacts_dir, Artifact, Manifest, Runtime};
+use crate::sparsity::prune::PruneMethod;
+use crate::synth::{synthesize, SynthOpts};
+use crate::train::{self, checkpoint, evaluate, ModelState, TrainOpts};
+use crate::util::table::{f2, kfmt, TextTable};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+pub struct ExpCtx {
+    pub rt: Runtime,
+    pub artifacts: PathBuf,
+    /// Cap on training steps (fast mode); `None` = use manifest steps.
+    pub step_cap: Option<usize>,
+    pub retrain: bool,
+    pub seed: u64,
+    datasets: HashMap<String, (DataSet, DataSet)>,
+    artifacts_cache: HashMap<String, Artifact>,
+}
+
+impl ExpCtx {
+    pub fn new(fast: bool, retrain: bool) -> Result<ExpCtx> {
+        Ok(ExpCtx {
+            rt: Runtime::cpu()?,
+            artifacts: artifacts_dir(),
+            step_cap: if fast { Some(300) } else { None },
+            retrain,
+            seed: 0xEC0,
+            datasets: HashMap::new(),
+            artifacts_cache: HashMap::new(),
+        })
+    }
+
+    pub fn artifact(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.artifacts_cache.contains_key(name) {
+            let art = Artifact::load(&self.rt, &self.artifacts, name)
+                .with_context(|| format!("artifact {name} (run `make artifacts`)"))?;
+            self.artifacts_cache.insert(name.to_string(), art);
+        }
+        Ok(&self.artifacts_cache[name])
+    }
+
+    /// (train, test) split for the manifest's dataset.
+    pub fn dataset(&mut self, kind: &str) -> &(DataSet, DataSet) {
+        let seed = self.seed;
+        self.datasets.entry(kind.to_string()).or_insert_with(|| match kind {
+            "jets" => {
+                let mut rng = crate::util::rng::Rng::new(seed ^ 1);
+                hep::jets(24_000, 42).split(0.2, &mut rng)
+            }
+            "mnist" => mnist::load_or_synth(9_000, 1_800, 42),
+            other => panic!("unknown dataset {other}"),
+        })
+    }
+
+    fn ckpt_path(&self, name: &str, method: PruneMethod) -> PathBuf {
+        PathBuf::from("reports/ckpt").join(format!("{name}_{}.bin", method.name()))
+    }
+
+    /// Train (or load cached) model; returns the state and test metrics.
+    pub fn trained(&mut self, name: &str, method: PruneMethod) -> Result<Trained> {
+        let path = self.ckpt_path(name, method);
+        let man = self.artifact(name)?.manifest.clone();
+        let mut state = if !self.retrain && path.exists() {
+            checkpoint::load(&path)?
+        } else {
+            let mut opts = TrainOpts::from_manifest(&man);
+            opts.method = method;
+            opts.seed = self.seed ^ name.len() as u64;
+            if let Some(cap) = self.step_cap {
+                // Synthetic digits converge much faster than the jet task;
+                // spend the fast-mode budget where it matters.
+                let cap = if man.dataset == "mnist" { cap.min(120) } else { cap.min(300) };
+                opts.steps = opts.steps.min(cap.max(1));
+            }
+            let (train_set, _) = self.dataset(&man.dataset).clone();
+            let mut st = ModelState::init(&man, self.seed, method);
+            let art = self.artifact(name)?;
+            let log = train::train(art, &mut st, &train_set, &opts)?;
+            eprintln!(
+                "[train] {name} ({}) {} steps, loss {:.3} -> {:.3}, {:.1}s",
+                method.name(),
+                log.steps,
+                log.losses.first().map(|l| l.1).unwrap_or(0.0),
+                log.final_loss,
+                log.seconds
+            );
+            checkpoint::save(&st, &path)?;
+            st
+        };
+        // Iterative pruning may leave masks above target on short runs;
+        // enforce the target so export/LUT costs are honest.
+        if let PruneMethod::Iterative { .. } = method {
+            for (i, l) in man.layers.iter().enumerate() {
+                if let Some(f) = l.fanin {
+                    crate::sparsity::prune::magnitude_prune(&state.ws[i].clone(), &mut state.masks[i], f);
+                    state.apply_mask(i);
+                }
+            }
+        }
+        let (_, test_set) = self.dataset(&man.dataset).clone();
+        let art = self.artifact(name)?;
+        let logits = evaluate(art, &state, &test_set)?;
+        let accuracy = metrics::accuracy(&logits, &test_set.y, man.classes);
+        Ok(Trained { man, state, logits, test_y: test_set.y.clone(), accuracy })
+    }
+}
+
+pub struct Trained {
+    pub man: Manifest,
+    pub state: ModelState,
+    pub logits: Vec<f32>,
+    pub test_y: Vec<i32>,
+    pub accuracy: f64,
+}
+
+impl Trained {
+    pub fn auc_per_class(&self) -> Vec<f64> {
+        let probs = metrics::softmax_rows(&self.logits, self.man.classes);
+        metrics::auc_ovr(&probs, &self.test_y, self.man.classes)
+    }
+
+    pub fn avg_auc(&self) -> f64 {
+        let a = self.auc_per_class();
+        a.iter().sum::<f64>() / a.len() as f64
+    }
+
+    pub fn export(&self) -> ExportedModel {
+        ExportedModel::from_state(&self.man, &self.state)
+    }
+}
+
+fn save_table(t: &TextTable, name: &str) -> Result<()> {
+    t.print();
+    t.save_csv(&format!("reports/{name}.csv"))?;
+    println!("[saved reports/{name}.csv]");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Chapter 1/2 tables (static)
+// ---------------------------------------------------------------------------
+
+pub fn table_1_1() -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 1.1 — Xilinx UltraScale resources",
+        &["Device", "CLB LUTs", "BRAMs (18Kb)", "DSP Slices"],
+    );
+    for (d, l, b, s) in [
+        ("KU025", 145_440u64, 720u64, 1_152u64),
+        ("KU060", 331_680, 2_160, 2_760),
+        ("XCVU065", 358_080, 2_520, 600),
+        ("KU115", 663_360, 4_320, 5_520),
+        ("XCVU440", 2_532_960, 5_040, 2_880),
+    ] {
+        t.row(vec![d.into(), l.to_string(), b.to_string(), s.to_string()]);
+    }
+    save_table(&t, "table_1_1")
+}
+
+pub fn table_2_1() -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 2.1 — static mapping cost to 6:1 LUTs",
+        &["Fan-In", "Number of 6-LUTs", "Truth table bits", "LUT config bits", "% utilized"],
+    );
+    for fan_in in 6..=11 {
+        let r = cost::static_map_row(fan_in);
+        t.row(vec![
+            fan_in.to_string(),
+            r.num_6luts.to_string(),
+            r.truth_table_bits.to_string(),
+            r.lut_config_bits.to_string(),
+            format!("{:.2}%", r.pct_utilized),
+        ]);
+    }
+    save_table(&t, "table_2_1")
+}
+
+// ---------------------------------------------------------------------------
+// Chapter 5 (design automation)
+// ---------------------------------------------------------------------------
+
+pub fn table_5_1() -> Result<()> {
+    use crate::luts::neuron_table;
+    use crate::nn::{Neuron, QuantSpec};
+    let mut t = TextTable::new(
+        "Table 5.1 — truth-table Verilog size/time per neuron",
+        &["Bits", "File Size (MB)", "Time (seconds)"],
+    );
+    let mut rng = crate::util::rng::Rng::new(51);
+    for bits in [15usize, 16, 18, 20] {
+        let nr = Neuron {
+            inputs: (0..bits).collect(),
+            weights: (0..bits).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+            bias: 0.05,
+            g: 1.0,
+            h: 0.0,
+        };
+        let t0 = std::time::Instant::now();
+        let table = neuron_table(&nr, QuantSpec::new(1, 1.0), QuantSpec::new(1, 1.0))?;
+        let text = crate::verilog::neuron_module("LUT_T51", &table);
+        let secs = t0.elapsed().as_secs_f64();
+        t.row(vec![
+            bits.to_string(),
+            format!("{:.2}", text.len() as f64 / 1e6),
+            format!("{secs:.2}"),
+        ]);
+    }
+    save_table(&t, "table_5_1")
+}
+
+pub fn table_5_2(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 5.2 — analytical vs synthesized LUT cost (combinational)",
+        &["Model", "Analytical LUT cost", "LUTs After Synthesis", "Reduction"],
+    );
+    for name in ["hep_c", "t53_b", "t52_big"] {
+        let tr = ctx.trained(name, PruneMethod::APriori)?;
+        let ex = tr.export();
+        let tables = ModelTables::generate(&ex)?;
+        let (_, rep) = synthesize(
+            &ex,
+            &tables,
+            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        )?;
+        t.row(vec![
+            name.into(),
+            rep.analytical_luts.to_string(),
+            rep.luts.to_string(),
+            format!("{:.2}x", rep.reduction),
+        ]);
+    }
+    save_table(&t, "table_5_2")
+}
+
+pub fn table_5_3(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 5.3 — resources with inter-layer registers (5 ns clock)",
+        &["X", "BW", "HL", "Analytical LUTs", "LUT", "FF", "DSP", "BRAM", "WNS"],
+    );
+    for name in ["hep_c", "t53_b", "t53_c", "t53_d", "t53_e"] {
+        let tr = ctx.trained(name, PruneMethod::APriori)?;
+        let ex = tr.export();
+        let tables = ModelTables::generate(&ex)?;
+        let (_, rep) = synthesize(&ex, &tables, SynthOpts::default())?;
+        let man = &tr.man;
+        let hl = man.hidden.iter().map(|h| h.to_string()).collect::<Vec<_>>().join(", ");
+        let analytical = cost::total_luts(&cost::manifest_cost(man));
+        t.row(vec![
+            man.fanin.to_string(),
+            man.bw.to_string(),
+            hl,
+            analytical.to_string(),
+            rep.luts.to_string(),
+            rep.ffs.to_string(),
+            rep.dsps.to_string(),
+            rep.brams.to_string(),
+            format!("{:.2}", rep.wns_ns),
+        ]);
+    }
+    save_table(&t, "table_5_3")
+}
+
+// ---------------------------------------------------------------------------
+// Chapter 6 (FPGA4HEP)
+// ---------------------------------------------------------------------------
+
+const HEP_MODELS: [&str; 5] = ["hep_a", "hep_b", "hep_c", "hep_d", "hep_e"];
+
+pub fn table_6_1(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 6.1 — FPGA4HEP model descriptions",
+        &["Model", "HL", "BW", "X", "Xfc", "BWfc", "LUTL1", "LUTL2", "LUTL3", "LUTL4"],
+    );
+    for (label, name) in ["A", "B", "C", "D", "E"].iter().zip(HEP_MODELS) {
+        let man = ctx.artifact(name)?.manifest.clone();
+        let costs = cost::manifest_cost(&man);
+        let hl = format!("({})", man.hidden.iter().map(|h| h.to_string()).collect::<Vec<_>>().join(", "));
+        let mut row = vec![
+            label.to_string(),
+            hl,
+            man.bw.to_string(),
+            man.fanin.to_string(),
+            man.fanin_fc.map(|f| f.to_string()).unwrap_or("-".into()),
+            man.bw_out.to_string(),
+        ];
+        for i in 0..4 {
+            row.push(costs.get(i).map(|c| c.luts.to_string()).unwrap_or("-".into()));
+        }
+        t.row(row);
+    }
+    save_table(&t, "table_6_1")
+}
+
+pub fn table_6_2(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 6.2 — FPGA4HEP AUC-ROC and LUT cost",
+        &["Model", "g", "q", "W", "Z", "t", "Avg AUC-ROC", "Acc", "LUTs", "% FC"],
+    );
+    for (label, name) in ["A", "B", "C", "D", "E"].iter().zip(HEP_MODELS) {
+        let tr = ctx.trained(name, PruneMethod::APriori)?;
+        let aucs = tr.auc_per_class();
+        let costs = cost::manifest_cost(&tr.man);
+        let total = cost::total_luts(&costs);
+        let fc_pct = if tr.man.fanin_fc.is_none() {
+            100.0 * costs.last().unwrap().luts as f64 / total as f64
+        } else {
+            100.0 * costs.last().unwrap().luts as f64 / total as f64
+        };
+        let mut row = vec![label.to_string()];
+        row.extend(aucs.iter().map(|a| f2(100.0 * a)));
+        row.push(f2(100.0 * tr.avg_auc()));
+        row.push(f2(100.0 * tr.accuracy));
+        row.push(total.to_string());
+        row.push(f2(fc_pct));
+        t.row(row);
+    }
+    save_table(&t, "table_6_2")
+}
+
+pub fn table_6_3(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 6.3 — a-priori fixed sparsity vs iterative pruning (avg AUC)",
+        &["Model", "LUTs", "A-Priori Fixed Sparsity", "Iterative Pruning"],
+    );
+    for name in ["hep_c", "hep_d", "hep_e"] {
+        let ap = ctx.trained(name, PruneMethod::APriori)?;
+        let it = ctx.trained(name, PruneMethod::Iterative { every: 10 })?;
+        let luts = cost::total_luts(&cost::manifest_cost(&ap.man));
+        t.row(vec![
+            name.into(),
+            luts.to_string(),
+            f2(100.0 * ap.avg_auc()),
+            f2(100.0 * it.avg_auc()),
+        ]);
+    }
+    save_table(&t, "table_6_3")
+}
+
+pub fn figure_6_5(ctx: &mut ExpCtx) -> Result<()> {
+    let tr = ctx.trained("hep_a", PruneMethod::APriori)?;
+    let probs = metrics::softmax_rows(&tr.logits, tr.man.classes);
+    let mut t = TextTable::new(
+        "Figure 6.5 — ROC points (model A, one-vs-rest)",
+        &["class", "fpr", "tpr"],
+    );
+    for (k, cname) in hep::CLASS_NAMES.iter().enumerate() {
+        for (fpr, tpr) in metrics::roc_curve(&probs, &tr.test_y, tr.man.classes, k, 40) {
+            t.row(vec![cname.to_string(), format!("{fpr:.4}"), format!("{tpr:.4}")]);
+        }
+    }
+    t.save_csv("reports/figure_6_5_roc.csv")?;
+    println!("[saved reports/figure_6_5_roc.csv — {} points]", t.to_csv().lines().count() - 1);
+    // Confusion matrix.
+    let cm = metrics::confusion(&tr.logits, &tr.test_y, tr.man.classes, true);
+    let mut ct = TextTable::new(
+        "Figure 6.5 — normalized confusion matrix (model A)",
+        &["true\\pred", "g", "q", "W", "Z", "t"],
+    );
+    for (k, row) in cm.iter().enumerate() {
+        let mut cells = vec![hep::CLASS_NAMES[k].to_string()];
+        cells.extend(row.iter().map(|v| f2(*v)));
+        ct.row(cells);
+    }
+    save_table(&ct, "figure_6_5_confusion")
+}
+
+pub fn figure_6_6(ctx: &mut ExpCtx) -> Result<()> {
+    let tr = ctx.trained("hep_a", PruneMethod::APriori)?;
+    let probs = metrics::softmax_rows(&tr.logits, tr.man.classes);
+    let raw_auc = metrics::auc_ovr(&tr.logits, &tr.test_y, tr.man.classes);
+    let sm_auc = metrics::auc_ovr(&probs, &tr.test_y, tr.man.classes);
+    let mut t = TextTable::new(
+        "Figure 6.6 — AUC with and without final SoftMax (model A)",
+        &["class", "AUC no softmax", "AUC with softmax"],
+    );
+    for (k, cname) in hep::CLASS_NAMES.iter().enumerate() {
+        t.row(vec![cname.to_string(), f2(100.0 * raw_auc[k]), f2(100.0 * sm_auc[k])]);
+    }
+    save_table(&t, "figure_6_6")
+}
+
+pub fn figure_6_7(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Figure 6.7 — accuracy vs analytical LUT cost (HEP grid)",
+        &["model", "bw", "fanin", "hidden", "LUTs", "avg AUC", "accuracy"],
+    );
+    for bw in 1..=3usize {
+        for x in 3..=5usize {
+            for h in 0..=1usize {
+                let name = format!("hep_s_b{bw}_x{x}_h{h}");
+                let tr = ctx.trained(&name, PruneMethod::APriori)?;
+                let luts = cost::total_luts(&cost::manifest_cost(&tr.man));
+                t.row(vec![
+                    name.clone(),
+                    bw.to_string(),
+                    x.to_string(),
+                    format!("{:?}", tr.man.hidden),
+                    luts.to_string(),
+                    f2(100.0 * tr.avg_auc()),
+                    f2(100.0 * tr.accuracy),
+                ]);
+            }
+        }
+    }
+    save_table(&t, "figure_6_7")
+}
+
+pub fn figure_6_8(ctx: &mut ExpCtx) -> Result<()> {
+    // Aggregates figure_6_7's sweep by bit-width.
+    let mut t = TextTable::new(
+        "Figure 6.8 — accuracy vs activation bit-width (HEP grid)",
+        &["bw", "mean avg-AUC", "max avg-AUC"],
+    );
+    for bw in 1..=3usize {
+        let mut aucs = Vec::new();
+        for x in 3..=5usize {
+            for h in 0..=1usize {
+                let name = format!("hep_s_b{bw}_x{x}_h{h}");
+                aucs.push(ctx.trained(&name, PruneMethod::APriori)?.avg_auc());
+            }
+        }
+        let mean = aucs.iter().sum::<f64>() / aucs.len() as f64;
+        let max = aucs.iter().cloned().fold(0.0, f64::max);
+        t.row(vec![bw.to_string(), f2(100.0 * mean), f2(100.0 * max)]);
+    }
+    save_table(&t, "figure_6_8")
+}
+
+// ---------------------------------------------------------------------------
+// Chapter 7 (MNIST)
+// ---------------------------------------------------------------------------
+
+pub fn table_7_1(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 7.1 — MNIST MLPs: analytical LUT breakdown and accuracy",
+        &["HL", "BW", "X", "LUTL1", "LUTL2", "LUTL3", "LUTL4", "LUTs", "Accuracy"],
+    );
+    for w in [512usize, 1024, 2048] {
+        for d in [1usize, 2, 3] {
+            let name = format!("mnist_w{w}_d{d}");
+            let tr = ctx.trained(&name, PruneMethod::APriori)?;
+            let costs = cost::manifest_cost(&tr.man);
+            let total = cost::total_luts(&costs);
+            let mut row = vec![
+                format!("({w})x{d}"),
+                tr.man.bw.to_string(),
+                tr.man.fanin.to_string(),
+            ];
+            for i in 0..4 {
+                row.push(costs.get(i).map(|c| kfmt(c.luts as f64)).unwrap_or("-".into()));
+            }
+            row.push(kfmt(total as f64));
+            row.push(f2(100.0 * tr.accuracy));
+            t.row(row);
+        }
+    }
+    save_table(&t, "table_7_1")
+}
+
+pub fn figure_7_1(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Figure 7.1 — analytical LUT cost vs accuracy (MNIST MLPs)",
+        &["model", "LUTs", "accuracy"],
+    );
+    let mut names: Vec<String> = Vec::new();
+    for w in [512usize, 1024, 2048] {
+        for d in [1usize, 2, 3] {
+            names.push(format!("mnist_w{w}_d{d}"));
+        }
+    }
+    names.extend(["mnist_x4", "mnist_x6", "mnist_bw1", "mnist_bw3"].map(String::from));
+    for name in names {
+        let tr = ctx.trained(&name, PruneMethod::APriori)?;
+        let luts = cost::total_luts(&cost::manifest_cost(&tr.man));
+        t.row(vec![name, luts.to_string(), f2(100.0 * tr.accuracy)]);
+    }
+    save_table(&t, "figure_7_1")
+}
+
+pub fn figure_7_2(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Figure 7.2 — accuracy vs bit-width (3-layer 1024 MLP)",
+        &["bw", "accuracy"],
+    );
+    for (bw, name) in [(1usize, "mnist_bw1"), (2, "mnist_w1024_d3"), (3, "mnist_bw3")] {
+        let tr = ctx.trained(name, PruneMethod::APriori)?;
+        t.row(vec![bw.to_string(), f2(100.0 * tr.accuracy)]);
+    }
+    save_table(&t, "figure_7_2")
+}
+
+pub fn table_7_2(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 7.2 — pruning techniques on MNIST (accuracy)",
+        &["Model", "A-Priori Fixed Sparsity", "Momentum Sparsity", "Iterative Pruning"],
+    );
+    for (label, name) in [
+        ("A", "mnist_w512_d3"),
+        ("B", "mnist_w1024_d2"),
+        ("C", "mnist_w512_d1"),
+    ] {
+        let ap = ctx.trained(name, PruneMethod::APriori)?;
+        let mo = ctx.trained(name, PruneMethod::Momentum { every: 8, prune_rate: 0.3 })?;
+        let it = ctx.trained(name, PruneMethod::Iterative { every: 8 })?;
+        t.row(vec![
+            format!("{label} ({name})"),
+            f2(100.0 * ap.accuracy),
+            f2(100.0 * mo.accuracy),
+            f2(100.0 * it.accuracy),
+        ]);
+    }
+    save_table(&t, "table_7_2")
+}
+
+pub fn table_7_3(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 7.3 — skip connections on 3-layer MLPs (accuracy)",
+        &["Model", "No Skip", "1 Skip", "2 Skips"],
+    );
+    for tag in ["a", "b", "c", "d"] {
+        let mut row = vec![format!("mnist_skip{tag}")];
+        for s in 0..3 {
+            let tr = ctx.trained(&format!("mnist_skip{tag}_s{s}"), PruneMethod::APriori)?;
+            row.push(f2(100.0 * tr.accuracy));
+        }
+        t.row(row);
+    }
+    save_table(&t, "table_7_3")
+}
+
+pub fn table_7_4(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 7.4 — convolution variants (accuracy)",
+        &["Variant", "A", "B", "C"],
+    );
+    for (label, mtag) in [
+        ("FP", "fp"),
+        ("FP_DW", "fpdw"),
+        ("FP_X_DW", "fpxdw"),
+        ("QUANT_X_DW", "qxdw"),
+    ] {
+        let mut row = vec![label.to_string()];
+        for m in ["a", "b", "c"] {
+            let tr = ctx.trained(&format!("cnn_{m}_{mtag}"), PruneMethod::APriori)?;
+            row.push(f2(100.0 * tr.accuracy));
+        }
+        t.row(row);
+    }
+    save_table(&t, "table_7_4")
+}
+
+pub fn table_7_5(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 7.5 — CNN LUT cost and accuracy",
+        &["Model", "BW", "X (Xk,Xs)", "LUTs", "Accuracy"],
+    );
+    for (label, name) in [("A", "cnn_t75_a"), ("B", "cnn_t75_b"), ("C", "cnn_t75_c"), ("D", "cnn_t75_d")] {
+        let tr = ctx.trained(name, PruneMethod::APriori)?;
+        let man = &tr.man;
+        let h1 = (man.image_hw + 1) / 2;
+        let h2 = (h1 + 1) / 2;
+        let (c1o, f1o, f2o) = (man.channels[0], man.channels[1], man.channels[2]);
+        let xk = man.fanin_dw.unwrap_or(0);
+        let xs = man.fanin_pw.unwrap_or(0);
+        let luts = cost::conv_dw_cost(h1 * h1, man.bw, c1o, xk, man.bw_in)
+            + cost::conv_pw_cost(h1 * h1, man.bw, f1o, xs, man.bw)
+            + cost::conv_dw_cost(h2 * h2, man.bw, f1o, xk, man.bw)
+            + cost::conv_pw_cost(h2 * h2, man.bw, f2o, xs, man.bw)
+            + cost::dense_layer_cost(man.classes, h2 * h2 * f2o, man.bw, cost::DENSE_BW_WT);
+        t.row(vec![
+            label.into(),
+            man.bw.to_string(),
+            format!("({xk},{xs})"),
+            kfmt(luts as f64),
+            f2(100.0 * tr.accuracy),
+        ]);
+    }
+    save_table(&t, "table_7_5")
+}
+
+pub fn table_7_6(ctx: &mut ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(
+        "Table 7.6 — skip connections on LogicNet CNNs (accuracy)",
+        &["Model", "No Skip", "1 Skip", "2 Skips"],
+    );
+    for m in ["a", "b", "c"] {
+        let mut row = vec![format!("cnn_{m}")];
+        let s0 = ctx.trained(&format!("cnn_{m}_qxdw"), PruneMethod::APriori)?;
+        row.push(f2(100.0 * s0.accuracy));
+        for s in 1..=2 {
+            let tr = ctx.trained(&format!("cnn_{m}_qxdw_s{s}"), PruneMethod::APriori)?;
+            row.push(f2(100.0 * tr.accuracy));
+        }
+        t.row(row);
+    }
+    save_table(&t, "table_7_6")
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+pub fn run_table(ctx: &mut ExpCtx, id: &str) -> Result<()> {
+    match id {
+        "1.1" => table_1_1(),
+        "2.1" => table_2_1(),
+        "5.1" => table_5_1(),
+        "5.2" => table_5_2(ctx),
+        "5.3" => table_5_3(ctx),
+        "6.1" => table_6_1(ctx),
+        "6.2" => table_6_2(ctx),
+        "6.3" => table_6_3(ctx),
+        "7.1" => table_7_1(ctx),
+        "7.2" => table_7_2(ctx),
+        "7.3" => table_7_3(ctx),
+        "7.4" => table_7_4(ctx),
+        "7.5" => table_7_5(ctx),
+        "7.6" => table_7_6(ctx),
+        other => bail!("unknown table {other}"),
+    }
+}
+
+pub fn run_figure(ctx: &mut ExpCtx, id: &str) -> Result<()> {
+    match id {
+        "6.5" => figure_6_5(ctx),
+        "6.6" => figure_6_6(ctx),
+        "6.7" => figure_6_7(ctx),
+        "6.8" => figure_6_8(ctx),
+        "7.1" => figure_7_1(ctx),
+        "7.2" => figure_7_2(ctx),
+        other => bail!("unknown figure {other}"),
+    }
+}
+
+pub const ALL_TABLES: [&str; 14] = [
+    "1.1", "2.1", "5.1", "5.2", "5.3", "6.1", "6.2", "6.3", "7.1", "7.2", "7.3", "7.4",
+    "7.5", "7.6",
+];
+pub const ALL_FIGURES: [&str; 6] = ["6.5", "6.6", "6.7", "6.8", "7.1", "7.2"];

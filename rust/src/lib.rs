@@ -1,0 +1,31 @@
+//! # LogicNets-RS
+//!
+//! Reproduction of *"Exposing Hardware Building Blocks to Machine Learning
+//! Frameworks"* (Akhauri, 2019/2020 — the LogicNets thesis): extremely
+//! sparse, activation-quantized neural networks whose neurons are exported
+//! as truth tables and mapped onto FPGA-style 6-input LUTs.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L1** Pallas kernels + **L2** JAX model live under `python/` and are
+//!   AOT-lowered once to HLO text artifacts (`make artifacts`).
+//! * **L3** (this crate) is the coordinator: it drives training through the
+//!   PJRT runtime, owns sparsity/pruning, exports neurons to truth tables,
+//!   emits Verilog, synthesizes it with the in-tree logic-synthesis
+//!   simulator, and serves the resulting LUT netlists at high throughput.
+
+pub mod cost;
+pub mod data;
+pub mod dse;
+pub mod experiments;
+pub mod hep;
+pub mod luts;
+pub mod metrics;
+pub mod mnist;
+pub mod nn;
+pub mod runtime;
+pub mod serve;
+pub mod sparsity;
+pub mod synth;
+pub mod train;
+pub mod util;
+pub mod verilog;

@@ -1,0 +1,344 @@
+//! Truth-table generation (paper ch. 5) and functional verification.
+//!
+//! After training, every sparse neuron is enumerated into its truth table:
+//! for all `2^(fanin*bw_in)` input code patterns, dequantize, run the folded
+//! neuron, and quantize the response into the output code.  Dense layers
+//! (the classifier head) stay arithmetic — the paper costs them with
+//! eq. 4.1 and does not tabulate them.
+//!
+//! `forward_codes` executes the model *through the tables* (the paper's
+//! `use_table=True` functional-verification path) and must agree exactly
+//! with `ExportedModel::forward`, because both evaluate the identical
+//! folded-neuron math.
+
+use crate::nn::{ExportedModel, QuantSpec};
+use crate::util::bits::{pack_index, unpack_index, PackedCodes};
+use crate::util::pool::par_map;
+use anyhow::{ensure, Result};
+
+/// Hard cap on a single neuron's truth-table input bits (2^24 entries).
+pub const MAX_IN_BITS: usize = 24;
+
+/// One neuron's truth table: output codes indexed by packed input codes.
+#[derive(Debug, Clone)]
+pub struct NeuronTable {
+    pub in_bits: usize,
+    pub out_bits: usize,
+    pub fanin: usize,
+    pub bw_in: usize,
+    pub codes: PackedCodes,
+}
+
+impl NeuronTable {
+    #[inline]
+    pub fn lookup(&self, idx: usize) -> u32 {
+        self.codes.get(idx)
+    }
+
+    pub fn num_entries(&self) -> usize {
+        1usize << self.in_bits
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.codes.size_bytes()
+    }
+
+    /// Extract one output bit as a packed boolean function (for synthesis).
+    pub fn output_bit_fn(&self, bit: usize) -> Vec<u64> {
+        assert!(bit < self.out_bits);
+        let n = self.num_entries();
+        let mut words = vec![0u64; n.div_ceil(64)];
+        for idx in 0..n {
+            if (self.codes.get(idx) >> bit) & 1 == 1 {
+                words[idx / 64] |= 1u64 << (idx % 64);
+            }
+        }
+        words
+    }
+}
+
+/// Generate the truth table of one exported neuron whose whole input comes
+/// from one quantizer.
+pub fn neuron_table(
+    nr: &crate::nn::Neuron,
+    quant_in: QuantSpec,
+    quant_out: QuantSpec,
+) -> Result<NeuronTable> {
+    let specs = vec![quant_in; nr.fanin()];
+    neuron_table_specs(nr, &specs, quant_out)
+}
+
+/// Generate the truth table with a per-fan-in-position input quantizer
+/// (skip connections concatenate segments with different scales; all specs
+/// must share one bit-width so packing stays uniform).
+pub fn neuron_table_specs(
+    nr: &crate::nn::Neuron,
+    specs: &[QuantSpec],
+    quant_out: QuantSpec,
+) -> Result<NeuronTable> {
+    let fanin = nr.fanin();
+    ensure!(specs.len() == fanin, "one quant spec per fan-in position");
+    let bw_in = specs.first().map(|s| s.bw).unwrap_or(1);
+    ensure!(specs.iter().all(|s| s.bw == bw_in), "mixed input bit-widths");
+    let in_bits = fanin * bw_in;
+    ensure!(
+        in_bits <= MAX_IN_BITS,
+        "neuron truth table too large: {in_bits} input bits (fanin {fanin} x bw {bw_in})"
+    );
+    let entries = 1usize << in_bits;
+    let mut codes = PackedCodes::new(entries, quant_out.bw);
+    // Dequantized value per (position, code), precomputed once.
+    let ncodes = 1usize << bw_in;
+    let mut dequant = vec![0f32; fanin * ncodes];
+    for (j, s) in specs.iter().enumerate() {
+        for c in 0..ncodes as u32 {
+            dequant[j * ncodes + c as usize] = s.dequant(c);
+        }
+    }
+    let mut in_codes = vec![0u32; fanin];
+    let mut vals = vec![0f32; fanin];
+    for idx in 0..entries {
+        unpack_index(idx, bw_in, fanin, &mut in_codes);
+        for (j, (v, &c)) in vals.iter_mut().zip(&in_codes).enumerate() {
+            *v = dequant[j * ncodes + c as usize];
+        }
+        let y = nr.respond(&vals);
+        codes.set(idx, quant_out.code(y));
+    }
+    Ok(NeuronTable { in_bits, out_bits: quant_out.bw, fanin, bw_in, codes })
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerTables {
+    pub tables: Vec<NeuronTable>,
+    pub quant_in: QuantSpec,
+    pub quant_out: QuantSpec,
+}
+
+impl LayerTables {
+    pub fn size_bytes(&self) -> usize {
+        self.tables.iter().map(|t| t.size_bytes()).sum()
+    }
+}
+
+/// All table-mapped layers of a model (`None` = dense layer, kept
+/// arithmetic).
+#[derive(Debug, Clone)]
+pub struct ModelTables {
+    pub layers: Vec<Option<LayerTables>>,
+}
+
+impl ModelTables {
+    /// Generate tables for every sparse layer, neurons in parallel.
+    pub fn generate(model: &ExportedModel) -> Result<ModelTables> {
+        let which: Vec<usize> = model
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.sparse)
+            .map(|(i, _)| i)
+            .collect();
+        Self::generate_layers(model, &which)
+    }
+
+    /// Generate for specific layers only (paper: per-layer generation for
+    /// inspection of large models).
+    pub fn generate_layers(model: &ExportedModel, which: &[usize]) -> Result<ModelTables> {
+        let mut layers: Vec<Option<LayerTables>> =
+            (0..model.num_layers()).map(|_| None).collect();
+        for &i in which {
+            let layer = &model.layers[i];
+            ensure!(layer.sparse, "layer {i} is dense; tables not applicable");
+            let results = par_map(&layer.neurons, |_, nr| {
+                let specs: Vec<QuantSpec> =
+                    nr.inputs.iter().map(|&j| layer.input_specs[j]).collect();
+                neuron_table_specs(nr, &specs, layer.quant_out)
+            });
+            let mut tables = Vec::with_capacity(results.len());
+            for r in results {
+                tables.push(r?);
+            }
+            layers[i] = Some(LayerTables {
+                tables,
+                quant_in: layer.quant_in,
+                quant_out: layer.quant_out,
+            });
+        }
+        Ok(ModelTables { layers })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.layers.iter().flatten().map(|l| l.size_bytes()).sum()
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.layers.iter().flatten().map(|l| l.tables.len()).sum()
+    }
+
+    /// Forward pass *through the truth tables* on one sample.  Sparse layers
+    /// are evaluated by table lookup on codes; dense layers arithmetically.
+    /// Returns final quantized logit values.
+    pub fn forward_codes(&self, model: &ExportedModel, x: &[f32]) -> Vec<f32> {
+        let n = model.num_layers();
+        let q0 = model.layers[0].quant_in;
+        // Track activations as codes per layer (the code domain mirrors the
+        // value domain exactly: value = dequant(code)).
+        let mut acts_codes: Vec<Vec<u32>> = vec![x.iter().map(|&v| q0.code(v)).collect()];
+        let mut out_values: Vec<f32> = Vec::new();
+        for i in 0..n {
+            let layer = &model.layers[i];
+            let inp_codes: Vec<u32> = if i == 0 || model.skips == 0 {
+                acts_codes.last().unwrap().clone()
+            } else {
+                let lo = i.saturating_sub(model.skips);
+                let mut v = Vec::new();
+                for j in (lo..acts_codes.len()).rev() {
+                    v.extend_from_slice(&acts_codes[j]);
+                }
+                v
+            };
+            debug_assert_eq!(inp_codes.len(), layer.in_f);
+            let mut out_codes = Vec::with_capacity(layer.neurons.len());
+            match &self.layers[i] {
+                Some(lt) => {
+                    let mut gathered = Vec::new();
+                    for (nr, tbl) in layer.neurons.iter().zip(&lt.tables) {
+                        gathered.clear();
+                        gathered.extend(nr.inputs.iter().map(|&j| inp_codes[j]));
+                        let idx = pack_index(&gathered, lt.quant_in.bw);
+                        out_codes.push(tbl.lookup(idx));
+                    }
+                }
+                None => {
+                    // Dense (or un-tabulated) layer: arithmetic on values,
+                    // dequantizing each element with its own source spec.
+                    let vals: Vec<f32> = inp_codes
+                        .iter()
+                        .enumerate()
+                        .map(|(e, &c)| layer.input_specs[e].dequant(c))
+                        .collect();
+                    for nr in &layer.neurons {
+                        let y = nr.respond_gather(&vals);
+                        out_codes.push(layer.quant_out.code(y));
+                    }
+                }
+            }
+            if i + 1 == n {
+                out_values = out_codes.iter().map(|&c| layer.quant_out.dequant(c)).collect();
+            } else {
+                acts_codes.push(out_codes);
+            }
+        }
+        out_values
+    }
+
+    /// Functional verification (paper §4.2): run `xs` through both the
+    /// tables and the arithmetic mirror; returns the number of samples whose
+    /// outputs differ anywhere.
+    pub fn verify(&self, model: &ExportedModel, xs: &[f32]) -> usize {
+        let d = model.in_features;
+        xs.chunks(d)
+            .filter(|row| {
+                let a = self.forward_codes(model, row);
+                let b = model.forward(row);
+                a != b
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Neuron;
+
+    fn neuron() -> Neuron {
+        Neuron {
+            inputs: vec![0, 1, 2],
+            weights: vec![1.0, -0.5, 0.25],
+            bias: 0.1,
+            g: 1.2,
+            h: -0.3,
+        }
+    }
+
+    #[test]
+    fn table_matches_direct_eval() {
+        let qi = QuantSpec::new(2, 1.0);
+        let qo = QuantSpec::new(2, 2.0);
+        let nr = neuron();
+        let t = neuron_table(&nr, qi, qo).unwrap();
+        assert_eq!(t.in_bits, 6);
+        assert_eq!(t.num_entries(), 64);
+        let mut codes = [0u32; 3];
+        for idx in 0..64 {
+            unpack_index(idx, 2, 3, &mut codes);
+            let vals: Vec<f32> = codes.iter().map(|&c| qi.dequant(c)).collect();
+            let expect = qo.code(nr.respond(&vals));
+            assert_eq!(t.lookup(idx), expect, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn output_bit_fn_consistent() {
+        let qi = QuantSpec::new(2, 1.0);
+        let qo = QuantSpec::new(2, 2.0);
+        let t = neuron_table(&neuron(), qi, qo).unwrap();
+        let bit0 = t.output_bit_fn(0);
+        let bit1 = t.output_bit_fn(1);
+        for idx in 0..t.num_entries() {
+            let c = t.lookup(idx);
+            assert_eq!((bit0[idx / 64] >> (idx % 64)) & 1, (c & 1) as u64);
+            assert_eq!((bit1[idx / 64] >> (idx % 64)) & 1, ((c >> 1) & 1) as u64);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_tables() {
+        let nr = Neuron {
+            inputs: (0..13).collect(),
+            weights: vec![0.1; 13],
+            bias: 0.0,
+            g: 1.0,
+            h: 0.0,
+        };
+        let qi = QuantSpec::new(2, 1.0); // 26 bits > 24
+        assert!(neuron_table(&nr, qi, QuantSpec::new(2, 2.0)).is_err());
+    }
+
+    #[test]
+    fn mixed_input_specs_table() {
+        // Regression: skip wiring mixes quantizer scales (maxv 1.0 input
+        // segment vs 2.0 hidden segment); the table must dequantize each
+        // position with its own spec.
+        let qo = QuantSpec::new(2, 2.0);
+        let nr = Neuron {
+            inputs: vec![0, 1],
+            weights: vec![1.0, 1.0],
+            bias: 0.0,
+            g: 1.0,
+            h: 0.0,
+        };
+        let specs = [QuantSpec::new(2, 2.0), QuantSpec::new(2, 1.0)];
+        let t = neuron_table_specs(&nr, &specs, qo).unwrap();
+        let uniform = neuron_table(&nr, QuantSpec::new(2, 2.0), qo).unwrap();
+        // Some entry must differ because position 1 has half the scale.
+        let differs = (0..t.num_entries()).any(|i| t.lookup(i) != uniform.lookup(i));
+        assert!(differs);
+        // Spot-check: codes (3, 3) -> values (2.0, 1.0) -> y = 3.0 -> code 3
+        let idx = crate::util::bits::pack_index(&[3, 3], 2);
+        assert_eq!(t.lookup(idx), qo.code(3.0));
+    }
+
+    #[test]
+    fn bit1_hardtanh_table() {
+        let qi = QuantSpec::new(1, 1.0);
+        let qo = QuantSpec::new(1, 1.0);
+        // y = x0 (identity on the single input's sign)
+        let nr = Neuron { inputs: vec![0], weights: vec![1.0], bias: 0.0, g: 1.0, h: 0.0 };
+        let t = neuron_table(&nr, qi, qo).unwrap();
+        assert_eq!(t.num_entries(), 2);
+        assert_eq!(t.lookup(0), 0); // input -1 -> negative -> code 0
+        assert_eq!(t.lookup(1), 1);
+    }
+}

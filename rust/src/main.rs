@@ -1,0 +1,320 @@
+//! `logicnets` CLI — the L3 coordinator entry point.
+//!
+//! ```text
+//! logicnets list                               available model configs
+//! logicnets train   --model NAME [--method M] [--steps N] [--retrain]
+//! logicnets table   <id>|all   [--full] [--retrain]     regenerate a paper table
+//! logicnets figure  <id>|all   [--full] [--retrain]     regenerate a paper figure
+//! logicnets synth   --model NAME [--no-registers] [--clock NS]
+//! logicnets verilog --model NAME --out DIR
+//! logicnets verify  --model NAME [--samples N]   tables vs arithmetic mirror
+//! logicnets serve   --model NAME [--requests N] [--workers W]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use logicnets::experiments::{self, ExpCtx};
+use logicnets::luts::ModelTables;
+use logicnets::serve::{LutEngine, Server, ServerConfig};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, SynthOpts};
+use logicnets::util::cli::Args;
+use logicnets::verilog::{generate, VerilogOpts};
+
+fn parse_method(s: &str) -> Result<PruneMethod> {
+    Ok(match s {
+        "a-priori" | "apriori" => PruneMethod::APriori,
+        "iterative" => PruneMethod::Iterative { every: 10 },
+        "momentum" => PruneMethod::Momentum { every: 8, prune_rate: 0.3 },
+        other => bail!("unknown pruning method {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "train" => cmd_train(&args),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "synth" => cmd_synth(&args),
+        "verilog" => cmd_verilog(&args),
+        "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
+        "complexity" => cmd_complexity(&args),
+        "pareto" => cmd_pareto(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other} (try `logicnets help`)"),
+    }
+}
+
+fn print_help() {
+    println!("logicnets — LogicNets reproduction CLI");
+    println!("  list                                   available model configs");
+    println!("  train   --model NAME [--method a-priori|iterative|momentum] [--steps N]");
+    println!("  table   <id>|all  [--full] [--retrain] regenerate a paper table");
+    println!("  figure  <id>|all  [--full] [--retrain] regenerate a paper figure");
+    println!("  synth   --model NAME [--no-registers] [--clock NS] [--bram-min-bits B]");
+    println!("  verilog --model NAME [--out DIR] [--no-registers]");
+    println!("  verify  --model NAME [--samples N]");
+    println!("  serve   --model NAME [--requests N] [--workers W]");
+    println!("  complexity --model NAME            minimized-logic heuristic (paper 5.5.1)");
+    println!("  pareto  --csv reports/figure_6_7.csv   Pareto frontier of a sweep");
+    println!("tables : {}", experiments::ALL_TABLES.join(" "));
+    println!("figures: {}", experiments::ALL_FIGURES.join(" "));
+}
+
+fn ctx_from(args: &Args) -> Result<ExpCtx> {
+    ExpCtx::new(!args.has_flag("full"), args.has_flag("retrain"))
+}
+
+fn cmd_list() -> Result<()> {
+    let text = std::fs::read_to_string("configs/models.json").context("configs/models.json")?;
+    let j = logicnets::util::json::Json::parse(&text)?;
+    if let logicnets::util::json::Json::Obj(m) = j {
+        println!("{} model configs:", m.len());
+        for (name, v) in m {
+            let kind = v.get("kind").and_then(|k| k.as_str()).unwrap_or("?");
+            let ds = v.get("dataset").and_then(|k| k.as_str()).unwrap_or("?");
+            println!("  {name:<22} {kind:<4} {ds}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?.to_string();
+    let method = parse_method(args.get_or("method", "a-priori"))?;
+    let mut ctx = ctx_from(args)?;
+    if let Some(steps) = args.get("steps").and_then(|s| s.parse().ok()) {
+        ctx.step_cap = Some(steps);
+    }
+    let tr = ctx.trained(&name, method)?;
+    println!(
+        "model {name} ({}): accuracy {:.3}, avg AUC {:.3}",
+        method.name(),
+        tr.accuracy,
+        tr.avg_auc()
+    );
+    let costs = logicnets::cost::manifest_cost(&tr.man);
+    for c in &costs {
+        println!("  {:<4} {:>10} LUTs (analytical)", c.name, c.luts);
+    }
+    println!("  total {:>9} LUTs", logicnets::cost::total_luts(&costs));
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args.positional.first().context("table id required (e.g. 6.2 or all)")?;
+    let mut ctx = ctx_from(args)?;
+    if id == "all" {
+        for t in experiments::ALL_TABLES {
+            println!();
+            experiments::run_table(&mut ctx, t)?;
+        }
+        Ok(())
+    } else {
+        experiments::run_table(&mut ctx, id)
+    }
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args.positional.first().context("figure id required (e.g. 6.7 or all)")?;
+    let mut ctx = ctx_from(args)?;
+    if id == "all" {
+        for f in experiments::ALL_FIGURES {
+            println!();
+            experiments::run_figure(&mut ctx, f)?;
+        }
+        Ok(())
+    } else {
+        experiments::run_figure(&mut ctx, id)
+    }
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?.to_string();
+    let mut ctx = ctx_from(args)?;
+    let tr = ctx.trained(&name, parse_method(args.get_or("method", "a-priori"))?)?;
+    let ex = tr.export();
+    let tables = ModelTables::generate(&ex)?;
+    let opts = SynthOpts {
+        registers: !args.has_flag("no-registers"),
+        clock_ns: args.get_f64("clock", 5.0),
+        bram_min_bits: args.get_usize("bram-min-bits", 13),
+    };
+    let (netlist, rep) = synthesize(&ex, &tables, opts)?;
+    println!(
+        "synthesis report for {name} (registers={}, clock {} ns):",
+        opts.registers, opts.clock_ns
+    );
+    println!("  analytical LUTs : {}", rep.analytical_luts);
+    println!("  synthesized LUTs: {}  ({:.2}x reduction)", rep.luts, rep.reduction);
+    println!("  FF {}  BRAM {}  DSP {}", rep.ffs, rep.brams, rep.dsps);
+    println!(
+        "  depth {}  min period {:.3} ns  WNS {:+.3} ns",
+        rep.depth, rep.min_period_ns, rep.wns_ns
+    );
+    println!("  netlist: {} nodes over {} inputs", netlist.num_luts(), netlist.num_inputs);
+    Ok(())
+}
+
+fn cmd_verilog(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?.to_string();
+    let out = args.get_or("out", "reports/verilog").to_string();
+    let mut ctx = ctx_from(args)?;
+    let tr = ctx.trained(&name, parse_method(args.get_or("method", "a-priori"))?)?;
+    let ex = tr.export();
+    let tables = ModelTables::generate(&ex)?;
+    let proj = generate(&ex, &tables, VerilogOpts { registers: !args.has_flag("no-registers") })?;
+    let dir = std::path::Path::new(&out).join(&name);
+    proj.write_to(&dir)?;
+    println!(
+        "wrote {} files ({} bytes) to {}",
+        proj.files.len(),
+        proj.total_bytes,
+        dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?.to_string();
+    let samples = args.get_usize("samples", 512);
+    let mut ctx = ctx_from(args)?;
+    let tr = ctx.trained(&name, parse_method(args.get_or("method", "a-priori"))?)?;
+    let ex = tr.export();
+    let tables = ModelTables::generate(&ex)?;
+    let ds = match tr.man.dataset.as_str() {
+        "jets" => logicnets::hep::jets(samples, 99),
+        _ => logicnets::mnist::synth_digits(samples, 99),
+    };
+    let mism = tables.verify(&ex, &ds.x);
+    println!(
+        "functional verification ({samples} samples): {mism} mismatches between truth \
+         tables and arithmetic mirror"
+    );
+    anyhow::ensure!(mism == 0, "verification failed");
+    // HLO forward cross-check (tolerant: XLA may reorder f32 sums, moving
+    // values that sit exactly on a quantizer boundary).
+    let rust_logits = ex.forward_batch(&ds.x);
+    let art = ctx.artifact(&name)?;
+    let hlo_logits = logicnets::train::evaluate(art, &tr.state, &ds)?;
+    let n_codes = hlo_logits.len();
+    let mismatched = hlo_logits
+        .iter()
+        .zip(&rust_logits)
+        .filter(|(a, b)| (*a - *b).abs() > 1e-4)
+        .count();
+    let pct = 100.0 * mismatched as f64 / n_codes as f64;
+    println!("HLO vs Rust mirror: {mismatched}/{n_codes} logit mismatches ({pct:.3}%)");
+    anyhow::ensure!(pct < 1.0, "HLO/Rust divergence too high");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?.to_string();
+    let requests = args.get_usize("requests", 50_000);
+    let workers = args.get_usize("workers", logicnets::util::pool::num_threads().min(8));
+    let mut ctx = ctx_from(args)?;
+    let tr = ctx.trained(&name, parse_method(args.get_or("method", "a-priori"))?)?;
+    let ex = tr.export();
+    let tables = ModelTables::generate(&ex)?;
+    let engine = std::sync::Arc::new(LutEngine::build(&ex, &tables)?);
+    // Raw engine throughput (the FPGA initiation-interval-1 analogue).
+    let ds = match tr.man.dataset.as_str() {
+        "jets" => logicnets::hep::jets(4096, 7),
+        _ => logicnets::mnist::synth_digits(1024, 7),
+    };
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    while done < requests {
+        let n = (requests - done).min(ds.n);
+        let _ = engine.infer_batch(&ds.x[..n * ds.d]);
+        done += n;
+    }
+    let raw = requests as f64 / t0.elapsed().as_secs_f64();
+    println!("raw engine throughput : {raw:.0} inferences/s (single thread)");
+
+    let server = Server::start(
+        engine,
+        ServerConfig { workers, max_batch: 64, ..Default::default() },
+    );
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let per = requests / 8;
+        for t in 0..8usize {
+            let server = &server;
+            let ds = &ds;
+            s.spawn(move || {
+                let mut rng = logicnets::util::rng::Rng::new(t as u64);
+                for _ in 0..per {
+                    let i = rng.below(ds.n);
+                    let _ = server.infer(ds.row(i).to_vec());
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "router throughput     : {:.0} inferences/s ({} workers)",
+        stats.completed as f64 / elapsed,
+        workers
+    );
+    println!(
+        "latency us            : p50 {:.1}  p95 {:.1}  p99 {:.1}",
+        stats.p50_us, stats.p95_us, stats.p99_us
+    );
+    println!("mean batch fill       : {:.1}", stats.mean_batch);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_complexity(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?.to_string();
+    let mut ctx = ctx_from(args)?;
+    let tr = ctx.trained(&name, parse_method(args.get_or("method", "a-priori"))?)?;
+    let ex = tr.export();
+    let tables = ModelTables::generate(&ex)?;
+    let layers = logicnets::synth::complexity::model_complexity(&tables);
+    println!("logic-complexity heuristic for {name} (paper 5.5.1):");
+    println!(
+        "{:<6} {:>8} {:>12} {:>14} {:>11} {:>12} {:>12}",
+        "layer", "neurons", "mean cubes", "mean literals", "const bits", "max support", "est density"
+    );
+    for l in &layers {
+        println!(
+            "{:<6} {:>8} {:>12.1} {:>14.1} {:>11} {:>12} {:>12.3}",
+            l.layer, l.neurons, l.mean_cubes, l.mean_literals, l.const_bits, l.max_support, l.est_density
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let path = args.get_or("csv", "reports/figure_6_7.csv").to_string();
+    let csv = std::fs::read_to_string(&path).with_context(|| path.clone())?;
+    let name_col = args.get_usize("name-col", 0);
+    let lut_col = args.get_usize("lut-col", 4);
+    let q_col = args.get_usize("q-col", 5);
+    let pts = logicnets::dse::points_from_csv(&csv, name_col, lut_col, q_col);
+    anyhow::ensure!(!pts.is_empty(), "no points parsed from {path}");
+    let frontier = logicnets::dse::pareto_frontier(&pts);
+    let dominated = logicnets::dse::dominated(&pts).len();
+    println!("{} design points, {} dominated; Pareto frontier:", pts.len(), dominated);
+    for p in &frontier {
+        println!("  {:<22} {:>10} LUTs   quality {:.2}", p.name, p.luts, p.quality);
+    }
+    for (name, mc) in logicnets::dse::marginal_cost(&frontier) {
+        println!("  marginal cost at {name}: {mc:.0} LUTs per quality point");
+    }
+    Ok(())
+}

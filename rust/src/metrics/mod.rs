@@ -1,0 +1,177 @@
+//! Classification metrics: accuracy, softmax, confusion matrix, ROC / AUC.
+//!
+//! AUC is computed with the rank statistic (Mann-Whitney U), which is exact
+//! and O(n log n); ROC curves are produced by threshold sweep over the
+//! predicted score of the signal class vs an equal admixture of the others
+//! (the paper's convention, Fig. 6.5).
+
+/// Row-major logits `[n, c]` -> predicted class per row.
+pub fn argmax_rows(logits: &[f32], c: usize) -> Vec<usize> {
+    logits
+        .chunks(c)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+pub fn accuracy(logits: &[f32], y: &[i32], c: usize) -> f64 {
+    let pred = argmax_rows(logits, c);
+    let correct = pred.iter().zip(y).filter(|(p, y)| **p == **y as usize).count();
+    correct as f64 / y.len().max(1) as f64
+}
+
+/// In-place softmax over each row of `[n, c]`.
+pub fn softmax_rows(logits: &[f32], c: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(logits.len());
+    for row in logits.chunks(c) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|v| (v - m).exp()).collect();
+        let s: f32 = exps.iter().sum();
+        out.extend(exps.iter().map(|e| e / s));
+    }
+    out
+}
+
+/// Confusion matrix `[true][pred]`, row-normalized if `normalize`.
+pub fn confusion(logits: &[f32], y: &[i32], c: usize, normalize: bool) -> Vec<Vec<f64>> {
+    let pred = argmax_rows(logits, c);
+    let mut m = vec![vec![0f64; c]; c];
+    for (p, t) in pred.iter().zip(y) {
+        m[*t as usize][*p] += 1.0;
+    }
+    if normalize {
+        for row in m.iter_mut() {
+            let s: f64 = row.iter().sum();
+            if s > 0.0 {
+                for v in row.iter_mut() {
+                    *v /= s;
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Exact binary AUC via the rank statistic.  `scores[i]` is the predicted
+/// probability/score of the positive class, `pos[i]` marks positives.
+pub fn auc_binary(scores: &[f32], pos: &[bool]) -> f64 {
+    assert_eq!(scores.len(), pos.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // midranks for ties
+    let mut ranks = vec![0f64; scores.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let n_pos = pos.iter().filter(|&&p| p).count();
+    let n_neg = pos.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = ranks.iter().zip(pos).filter(|(_, &p)| p).map(|(r, _)| r).sum();
+    (rank_sum - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+/// One-vs-rest AUC per class from `[n, c]` scores.
+pub fn auc_ovr(scores: &[f32], y: &[i32], c: usize) -> Vec<f64> {
+    (0..c)
+        .map(|k| {
+            let s: Vec<f32> = scores.chunks(c).map(|row| row[k]).collect();
+            let p: Vec<bool> = y.iter().map(|&t| t as usize == k).collect();
+            auc_binary(&s, &p)
+        })
+        .collect()
+}
+
+/// ROC curve points (fpr, tpr) for class `k` one-vs-rest, sorted by fpr.
+pub fn roc_curve(scores: &[f32], y: &[i32], c: usize, k: usize, points: usize) -> Vec<(f64, f64)> {
+    let s: Vec<f32> = scores.chunks(c).map(|row| row[k]).collect();
+    let pos: Vec<bool> = y.iter().map(|&t| t as usize == k).collect();
+    let n_pos = pos.iter().filter(|&&p| p).count().max(1) as f64;
+    let n_neg = (pos.len() - pos.iter().filter(|&&p| p).count()).max(1) as f64;
+    let mut order: Vec<usize> = (0..s.len()).collect();
+    order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    let mut out = vec![(0.0, 0.0)];
+    let (mut tp, mut fp) = (0usize, 0usize);
+    let stride = (order.len() / points.max(1)).max(1);
+    for (i, &j) in order.iter().enumerate() {
+        if pos[j] {
+            tp += 1;
+        } else {
+            fp += 1;
+        }
+        if i % stride == 0 || i + 1 == order.len() {
+            out.push((fp as f64 / n_neg, tp as f64 / n_pos));
+        }
+    }
+    out.push((1.0, 1.0));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        let logits = vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0];
+        let y = vec![0, 1, 1];
+        assert!((accuracy(&logits, &y, 2) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let p = softmax_rows(&[1.0, 2.0, 3.0, -1.0, 0.0, 1.0], 3);
+        for row in p.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let s = vec![0.9, 0.8, 0.2, 0.1];
+        let p = vec![true, true, false, false];
+        assert!((auc_binary(&s, &p) - 1.0).abs() < 1e-12);
+        let p_inv = vec![false, false, true, true];
+        assert!((auc_binary(&s, &p_inv) - 0.0).abs() < 1e-12);
+        // all-tied scores -> 0.5
+        let s_tied = vec![0.5; 4];
+        assert!((auc_binary(&s_tied, &p) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn confusion_rows_normalize() {
+        let logits = vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0];
+        let y = vec![0, 0, 1];
+        let m = confusion(&logits, &y, 2, true);
+        assert!((m[0][0] - 0.5).abs() < 1e-12);
+        assert!((m[0][1] - 0.5).abs() < 1e-12);
+        assert!((m[1][1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roc_monotone() {
+        let s = vec![0.9, 0.7, 0.6, 0.4, 0.3, 0.1];
+        let y = vec![1, 1, 0, 1, 0, 0];
+        let roc = roc_curve(&s.iter().flat_map(|&v| [1.0 - v, v]).collect::<Vec<_>>(), &y, 2, 1, 10);
+        for w in roc.windows(2) {
+            assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1);
+        }
+    }
+}

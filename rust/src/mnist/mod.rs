@@ -1,0 +1,267 @@
+//! MNIST workload: a procedural stroke-rendered digit generator (offline
+//! substitute, DESIGN.md §Substitutions) plus an idx-format loader that
+//! transparently uses the real MNIST files when present under
+//! `data/mnist/` (train-images-idx3-ubyte etc.).
+//!
+//! The synthetic digits preserve what matters for the paper's MNIST
+//! chapters: flattened images have strong spatial structure, so a-priori
+//! *random* sparsity underperforms learned sparsity (Table 7.2), and
+//! accuracy scales with width/depth/bit-width (Table 7.1, Figs. 7.1/7.2).
+
+use crate::data::DataSet;
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 28;
+pub const NUM_PIXELS: usize = IMG * IMG;
+pub const NUM_CLASSES: usize = 10;
+
+type Pt = (f32, f32);
+
+/// Stroke polylines per digit in unit coordinates (x right, y down).
+fn strokes(digit: usize) -> Vec<Vec<Pt>> {
+    fn circle(cx: f32, cy: f32, rx: f32, ry: f32) -> Vec<Pt> {
+        (0..=14)
+            .map(|i| {
+                let t = i as f32 / 14.0 * std::f32::consts::TAU;
+                (cx + rx * t.cos(), cy + ry * t.sin())
+            })
+            .collect()
+    }
+    match digit {
+        0 => vec![circle(0.5, 0.5, 0.18, 0.3)],
+        1 => vec![vec![(0.5, 0.15), (0.5, 0.85)], vec![(0.36, 0.3), (0.5, 0.15)]],
+        2 => vec![vec![
+            (0.3, 0.3),
+            (0.38, 0.18),
+            (0.6, 0.18),
+            (0.7, 0.3),
+            (0.64, 0.45),
+            (0.3, 0.82),
+            (0.72, 0.82),
+        ]],
+        3 => vec![vec![
+            (0.3, 0.2),
+            (0.6, 0.18),
+            (0.68, 0.32),
+            (0.5, 0.48),
+            (0.68, 0.64),
+            (0.6, 0.8),
+            (0.3, 0.8),
+        ]],
+        4 => vec![vec![(0.62, 0.85), (0.62, 0.15), (0.3, 0.6), (0.74, 0.6)]],
+        5 => vec![vec![
+            (0.68, 0.18),
+            (0.35, 0.18),
+            (0.33, 0.46),
+            (0.56, 0.45),
+            (0.68, 0.6),
+            (0.6, 0.8),
+            (0.32, 0.8),
+        ]],
+        6 => vec![
+            vec![(0.62, 0.15), (0.42, 0.35), (0.34, 0.6), (0.42, 0.8)],
+            circle(0.5, 0.65, 0.16, 0.16),
+        ],
+        7 => vec![vec![(0.3, 0.18), (0.7, 0.18), (0.45, 0.85)]],
+        8 => vec![circle(0.5, 0.33, 0.15, 0.14), circle(0.5, 0.66, 0.18, 0.17)],
+        9 => vec![circle(0.52, 0.33, 0.16, 0.15), vec![(0.68, 0.35), (0.6, 0.85)]],
+        _ => unreachable!(),
+    }
+}
+
+fn dist_to_segment(p: Pt, a: Pt, b: Pt) -> f32 {
+    let (vx, vy) = (b.0 - a.0, b.1 - a.1);
+    let (wx, wy) = (p.0 - a.0, p.1 - a.1);
+    let len2 = vx * vx + vy * vy;
+    let t = if len2 <= 1e-12 { 0.0 } else { ((wx * vx + wy * vy) / len2).clamp(0.0, 1.0) };
+    let (dx, dy) = (p.0 - (a.0 + t * vx), p.1 - (a.1 + t * vy));
+    (dx * dx + dy * dy).sqrt()
+}
+
+/// Render one jittered digit into a 28x28 grayscale image in [0,1].
+pub fn render_digit(digit: usize, rng: &mut Rng) -> Vec<f32> {
+    let theta = rng.range_f64(-0.18, 0.18) as f32;
+    let scale = rng.range_f64(0.85, 1.12) as f32;
+    let (dx, dy) = (rng.range_f64(-0.07, 0.07) as f32, rng.range_f64(-0.07, 0.07) as f32);
+    let shear = rng.range_f64(-0.12, 0.12) as f32;
+    let thickness = rng.range_f64(0.035, 0.06) as f32;
+    let (sin, cos) = (theta.sin(), theta.cos());
+    let tf = |p: Pt| -> Pt {
+        // center, shear, rotate, scale, translate
+        let (x, y) = (p.0 - 0.5, p.1 - 0.5);
+        let x = x + shear * y;
+        let (xr, yr) = (cos * x - sin * y, sin * x + cos * y);
+        (xr * scale + 0.5 + dx, yr * scale + 0.5 + dy)
+    };
+    let segs: Vec<(Pt, Pt)> = strokes(digit)
+        .iter()
+        .flat_map(|poly| {
+            poly.windows(2)
+                .map(|w| (tf(w[0]), tf(w[1])))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let mut img = vec![0f32; NUM_PIXELS];
+    for py in 0..IMG {
+        for px in 0..IMG {
+            let p = ((px as f32 + 0.5) / IMG as f32, (py as f32 + 0.5) / IMG as f32);
+            let mut d = f32::INFINITY;
+            for &(a, b) in &segs {
+                d = d.min(dist_to_segment(p, a, b));
+            }
+            let v = 1.0 - ((d - thickness) / 0.02).clamp(0.0, 1.0);
+            let noise = rng.normal_f32(0.0, 0.04);
+            img[py * IMG + px] = (v + noise).clamp(0.0, 1.0);
+        }
+    }
+    img
+}
+
+/// Generate `n` synthetic digits with balanced classes.
+pub fn synth_digits(n: usize, seed: u64) -> DataSet {
+    let mut rng = Rng::new(seed ^ 0x4d4e_4953); // "MNIS"
+    let mut x = Vec::with_capacity(n * NUM_PIXELS);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % NUM_CLASSES;
+        x.extend(render_digit(c, &mut rng));
+        y.push(c as i32);
+    }
+    DataSet::new(x, y, NUM_PIXELS, NUM_CLASSES)
+}
+
+/// Load real MNIST idx files when available; fall back to synthetic.
+pub fn load_or_synth(n_train: usize, n_test: usize, seed: u64) -> (DataSet, DataSet) {
+    let base = std::path::Path::new("data/mnist");
+    if let (Ok(tr), Ok(te)) = (
+        load_idx_pair(
+            &base.join("train-images-idx3-ubyte"),
+            &base.join("train-labels-idx1-ubyte"),
+            n_train,
+        ),
+        load_idx_pair(
+            &base.join("t10k-images-idx3-ubyte"),
+            &base.join("t10k-labels-idx1-ubyte"),
+            n_test,
+        ),
+    ) {
+        return (tr, te);
+    }
+    let all = synth_digits(n_train + n_test, seed);
+    let mut rng = Rng::new(seed ^ 1);
+    let (tr, te) = all.split(n_test as f64 / (n_train + n_test) as f64, &mut rng);
+    (tr, te)
+}
+
+fn read_be_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse the MNIST idx image+label file pair, limited to `limit` samples.
+pub fn load_idx_pair(
+    images: &std::path::Path,
+    labels: &std::path::Path,
+    limit: usize,
+) -> std::io::Result<DataSet> {
+    let ib = std::fs::read(images)?;
+    let lb = std::fs::read(labels)?;
+    let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    if ib.len() < 16 || read_be_u32(&ib, 0) != 0x0803 {
+        return Err(err("bad image magic"));
+    }
+    if lb.len() < 8 || read_be_u32(&lb, 0) != 0x0801 {
+        return Err(err("bad label magic"));
+    }
+    let n = (read_be_u32(&ib, 4) as usize).min(read_be_u32(&lb, 4) as usize).min(limit);
+    let rows = read_be_u32(&ib, 8) as usize;
+    let cols = read_be_u32(&ib, 12) as usize;
+    if rows != IMG || cols != IMG {
+        return Err(err("unexpected image size"));
+    }
+    if ib.len() < 16 + n * NUM_PIXELS || lb.len() < 8 + n {
+        return Err(err("truncated idx file"));
+    }
+    let mut x = Vec::with_capacity(n * NUM_PIXELS);
+    for i in 0..n * NUM_PIXELS {
+        x.push(ib[16 + i] as f32 / 255.0);
+    }
+    let y: Vec<i32> = (0..n).map(|i| lb[8 + i] as i32).collect();
+    Ok(DataSet::new(x, y, NUM_PIXELS, NUM_CLASSES))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_render_distinctly() {
+        let mut rng = Rng::new(1);
+        // Mean image of each class must differ substantially from others.
+        let mut means = Vec::new();
+        for d in 0..NUM_CLASSES {
+            let mut acc = vec![0f32; NUM_PIXELS];
+            for _ in 0..8 {
+                for (a, v) in acc.iter_mut().zip(render_digit(d, &mut rng)) {
+                    *a += v / 8.0;
+                }
+            }
+            means.push(acc);
+        }
+        for a in 0..NUM_CLASSES {
+            for b in (a + 1)..NUM_CLASSES {
+                let dist: f32 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(dist > 1.0, "classes {a}/{b} too similar: {dist}");
+            }
+        }
+    }
+
+    #[test]
+    fn synth_balanced_and_bounded() {
+        let ds = synth_digits(200, 3);
+        assert_eq!(ds.n, 200);
+        assert_eq!(ds.d, NUM_PIXELS);
+        assert!(ds.x.iter().all(|v| (0.0..=1.0).contains(v)));
+        let c0 = ds.y.iter().filter(|&&c| c == 0).count();
+        assert_eq!(c0, 20);
+    }
+
+    #[test]
+    fn idx_loader_rejects_garbage() {
+        let dir = std::env::temp_dir().join("logicnets_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let img = dir.join("img");
+        let lab = dir.join("lab");
+        std::fs::write(&img, [0u8; 20]).unwrap();
+        std::fs::write(&lab, [0u8; 10]).unwrap();
+        assert!(load_idx_pair(&img, &lab, 10).is_err());
+    }
+
+    #[test]
+    fn idx_loader_roundtrip() {
+        // Hand-build a 2-sample idx pair and parse it back.
+        let dir = std::env::temp_dir().join("logicnets_idx_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut ib = Vec::new();
+        ib.extend(0x0803u32.to_be_bytes());
+        ib.extend(2u32.to_be_bytes());
+        ib.extend(28u32.to_be_bytes());
+        ib.extend(28u32.to_be_bytes());
+        ib.extend(std::iter::repeat(128u8).take(2 * NUM_PIXELS));
+        let mut lb = Vec::new();
+        lb.extend(0x0801u32.to_be_bytes());
+        lb.extend(2u32.to_be_bytes());
+        lb.extend([7u8, 3u8]);
+        let img = dir.join("img");
+        let lab = dir.join("lab");
+        std::fs::write(&img, &ib).unwrap();
+        std::fs::write(&lab, &lb).unwrap();
+        let ds = load_idx_pair(&img, &lab, 10).unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.y, vec![7, 3]);
+        assert!((ds.x[0] - 128.0 / 255.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,316 @@
+//! Export path: collapse a trained `ModelState` into the hardware view.
+//!
+//! Batch-norm is folded into a per-neuron affine using the EMA running
+//! statistics (`g = gamma / sqrt(var + eps)`, `h = beta - g * mean`), each
+//! neuron keeps only its fan-in weights, and every layer carries its input
+//! and output quantizer specs.  From here a neuron *is* the boolean function
+//!
+//! ```text
+//! codes_in -> quant_out( g * (w . dequant(codes_in) + b) + h )
+//! ```
+//!
+//! which `crate::luts` enumerates into truth tables.
+
+use super::quant::QuantSpec;
+use crate::runtime::Manifest;
+use crate::train::ModelState;
+
+/// One neuron: fan-in indices into the layer input vector plus folded
+/// affine parameters.
+#[derive(Debug, Clone)]
+pub struct Neuron {
+    pub inputs: Vec<usize>,
+    pub weights: Vec<f32>,
+    /// bias + folded BN shift, pre-multiplied: y = g*(w.x + b) + h
+    pub bias: f32,
+    pub g: f32,
+    pub h: f32,
+}
+
+impl Neuron {
+    /// Pre-activation response for the given (already dequantized) input
+    /// values gathered at `self.inputs`.
+    #[inline]
+    pub fn respond(&self, vals: &[f32]) -> f32 {
+        debug_assert_eq!(vals.len(), self.weights.len());
+        let mut z = self.bias;
+        for (w, v) in self.weights.iter().zip(vals) {
+            z += w * v;
+        }
+        self.g * z + self.h
+    }
+
+    /// Response gathering inputs from the full layer input vector.
+    #[inline]
+    pub fn respond_gather(&self, input: &[f32]) -> f32 {
+        let mut z = self.bias;
+        for (w, &i) in self.weights.iter().zip(&self.inputs) {
+            z += w * input[i];
+        }
+        self.g * z + self.h
+    }
+
+    pub fn fanin(&self) -> usize {
+        self.inputs.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExportedLayer {
+    pub neurons: Vec<Neuron>,
+    pub in_f: usize,
+    pub quant_in: QuantSpec,
+    pub quant_out: QuantSpec,
+    /// Truth-table input bits per neuron (fanin * quant_in.bw); only
+    /// meaningful for sparse layers.
+    pub sparse: bool,
+    /// Quantizer spec of every *element* of the input vector.  With skip
+    /// connections the concatenated segments come from different
+    /// quantizers (the raw input uses maxv_in, hidden activations
+    /// maxv_hidden), so dequantization is per-element.  All specs share
+    /// `quant_in.bw` (asserted at export) so the bit packing stays uniform.
+    pub input_specs: Vec<QuantSpec>,
+}
+
+impl ExportedLayer {
+    /// Layer whose whole input comes from a single quantizer.
+    pub fn uniform(
+        neurons: Vec<Neuron>,
+        in_f: usize,
+        quant_in: QuantSpec,
+        quant_out: QuantSpec,
+        sparse: bool,
+    ) -> ExportedLayer {
+        ExportedLayer {
+            neurons,
+            in_f,
+            quant_in,
+            quant_out,
+            sparse,
+            input_specs: vec![quant_in; in_f],
+        }
+    }
+}
+
+impl ExportedLayer {
+    pub fn in_bits(&self) -> usize {
+        self.neurons.iter().map(|n| n.fanin()).max().unwrap_or(0) * self.quant_in.bw
+    }
+}
+
+/// The full exported model plus the skip wiring needed to mirror the JAX
+/// forward pass exactly.
+#[derive(Debug, Clone)]
+pub struct ExportedModel {
+    pub layers: Vec<ExportedLayer>,
+    pub in_features: usize,
+    pub classes: usize,
+    pub skips: usize,
+    /// Activation widths `[in_features, hidden...]` used for skip concat.
+    pub act_widths: Vec<usize>,
+}
+
+impl ExportedModel {
+    pub fn from_state(man: &Manifest, state: &ModelState) -> ExportedModel {
+        let n = man.num_layers();
+        let mut layers = Vec::with_capacity(n);
+        for i in 0..n {
+            let spec = &man.layers[i];
+            let bw_out = if i + 1 == n { man.bw_out } else { man.bw };
+            let maxv_out = if i + 1 == n { man.maxv_out } else { man.maxv_hidden };
+            let mut neurons = Vec::with_capacity(spec.out_f);
+            for o in 0..spec.out_f {
+                let row = &state.masks[i].rows[o];
+                let weights: Vec<f32> =
+                    row.iter().map(|&j| state.ws[i][o * spec.in_f + j]).collect();
+                let var = state.rvars[i][o];
+                let g = state.gammas[i][o] / (var + man.bn_eps).sqrt();
+                let h = state.betas[i][o] - g * state.rmeans[i][o];
+                neurons.push(Neuron {
+                    inputs: row.clone(),
+                    weights,
+                    bias: state.bs[i][o],
+                    g,
+                    h,
+                });
+            }
+            // Per-element input specs, honoring skip concatenation
+            // (newest-first segments; segment j==0 is the raw input).
+            let quant_in = QuantSpec::new(spec.bw_in, spec.maxv_in);
+            let in_spec = QuantSpec::new(man.bw_in, man.maxv_in);
+            let hid_spec = QuantSpec::new(man.bw, man.maxv_hidden);
+            let mut act_widths = vec![man.in_features];
+            act_widths.extend(man.hidden.iter().copied());
+            let mut input_specs: Vec<QuantSpec> = Vec::with_capacity(spec.in_f);
+            if i == 0 || man.skips == 0 {
+                input_specs.extend(std::iter::repeat(quant_in).take(spec.in_f));
+            } else {
+                let lo = i.saturating_sub(man.skips);
+                for j in (lo..=i).rev() {
+                    let s = if j == 0 { in_spec } else { hid_spec };
+                    input_specs.extend(std::iter::repeat(s).take(act_widths[j]));
+                }
+            }
+            assert_eq!(input_specs.len(), spec.in_f, "layer {i} input spec width");
+            if man.skips > 0 {
+                assert!(
+                    input_specs.iter().all(|s| s.bw == quant_in.bw),
+                    "skip wiring requires uniform input bit-width"
+                );
+            }
+            layers.push(ExportedLayer {
+                neurons,
+                in_f: spec.in_f,
+                quant_in,
+                quant_out: QuantSpec::new(bw_out, maxv_out),
+                sparse: spec.fanin.is_some(),
+                input_specs,
+            });
+        }
+        let mut act_widths = vec![man.in_features];
+        act_widths.extend(man.hidden.iter().copied());
+        ExportedModel {
+            layers,
+            in_features: man.in_features,
+            classes: man.classes,
+            skips: man.skips,
+            act_widths,
+        }
+    }
+
+    /// Mirror of python `_skip_input`: layer `i`'s input vector is the
+    /// concatenation of the newest `min(skips, i)+1` activations,
+    /// newest-first.
+    pub fn skip_input(&self, acts: &[Vec<f32>], i: usize) -> Vec<f32> {
+        if i == 0 || self.skips == 0 {
+            return acts[acts.len() - 1].clone();
+        }
+        let lo = i.saturating_sub(self.skips);
+        let mut out = Vec::new();
+        for j in (lo..acts.len()).rev() {
+            out.extend_from_slice(&acts[j]);
+        }
+        out
+    }
+
+    /// Pure-Rust forward pass on one sample (dequantized values all the way
+    /// through).  Returns the final-layer quantized logits.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_features);
+        let q0 = self.layers[0].quant_in;
+        let mut a: Vec<f32> = x.iter().map(|&v| q0.quantize(v)).collect();
+        let mut acts: Vec<Vec<f32>> = vec![a.clone()];
+        let n = self.layers.len();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let inp = self.skip_input(&acts, i);
+            debug_assert_eq!(inp.len(), layer.in_f, "layer {i} input width");
+            let mut out = Vec::with_capacity(layer.neurons.len());
+            for nr in &layer.neurons {
+                let y = nr.respond_gather(&inp);
+                out.push(layer.quant_out.quantize(y));
+            }
+            a = out;
+            if i + 1 < n {
+                acts.push(a.clone());
+            }
+        }
+        a
+    }
+
+    /// Batch forward returning row-major logits.
+    pub fn forward_batch(&self, xs: &[f32]) -> Vec<f32> {
+        let d = self.in_features;
+        assert_eq!(xs.len() % d, 0);
+        let mut out = Vec::with_capacity(xs.len() / d * self.classes);
+        for row in xs.chunks(d) {
+            out.extend(self.forward(row));
+        }
+        out
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total neurons in sparse (table-mapped) layers.
+    pub fn sparse_neurons(&self) -> usize {
+        self.layers.iter().filter(|l| l.sparse).map(|l| l.neurons.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::sparsity::prune::PruneMethod;
+
+    fn man() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "name":"t","kind":"mlp","in_features":4,"classes":3,"hidden":[6],
+          "bw":2,"bw_in":2,"bw_out":2,"fanin":2,"fanin_fc":null,"skips":0,
+          "batch":8,"eval_batch":8,"dataset":"jets",
+          "maxv_in":1.0,"maxv_hidden":2.0,"maxv_out":4.0,"bn_eps":1e-05,
+          "layers":[{"in":4,"out":6,"fanin":2,"bw_in":2,"maxv_in":1.0},
+                    {"in":6,"out":3,"fanin":null,"bw_in":2,"maxv_in":2.0}]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn export_shapes_and_fold() {
+        let m = man();
+        let st = ModelState::init(&m, 5, PruneMethod::APriori);
+        let ex = ExportedModel::from_state(&m, &st);
+        assert_eq!(ex.num_layers(), 2);
+        assert_eq!(ex.layers[0].neurons.len(), 6);
+        assert!(ex.layers[0].sparse);
+        assert!(!ex.layers[1].sparse);
+        assert!(ex.layers[0].neurons.iter().all(|n| n.fanin() == 2));
+        // Fresh state: gamma=1, beta=0, rmean=0, rvar=1 => g = 1/sqrt(1+eps)
+        let g = ex.layers[0].neurons[0].g;
+        assert!((g - 1.0 / (1.0f32 + 1e-5).sqrt()).abs() < 1e-6);
+        assert_eq!(ex.layers[0].neurons[0].h, 0.0);
+    }
+
+    #[test]
+    fn forward_outputs_on_quantizer_grid() {
+        let m = man();
+        let st = ModelState::init(&m, 6, PruneMethod::APriori);
+        let ex = ExportedModel::from_state(&m, &st);
+        let logits = ex.forward(&[0.2, 0.9, 0.0, 0.5]);
+        assert_eq!(logits.len(), 3);
+        let q = QuantSpec::new(m.bw_out, m.maxv_out);
+        for &v in &logits {
+            assert_eq!(q.quantize(v), v, "logit {v} must be a fixed point of the quantizer");
+        }
+    }
+
+    #[test]
+    fn respond_matches_gather() {
+        let nr = Neuron {
+            inputs: vec![1, 3],
+            weights: vec![0.5, -2.0],
+            bias: 0.25,
+            g: 2.0,
+            h: -0.1,
+        };
+        let input = [9.0, 1.0, 9.0, 0.5];
+        let gathered = [1.0, 0.5];
+        assert_eq!(nr.respond(&gathered), nr.respond_gather(&input));
+        let expect = 2.0 * (0.25 + 0.5 * 1.0 + (-2.0) * 0.5) + (-0.1);
+        assert!((nr.respond(&gathered) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn skip_input_order_newest_first() {
+        let m = man();
+        let st = ModelState::init(&m, 7, PruneMethod::APriori);
+        let mut ex = ExportedModel::from_state(&m, &st);
+        ex.skips = 1;
+        let acts = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let inp = ex.skip_input(&acts, 1);
+        assert_eq!(inp, vec![3.0, 4.0, 1.0, 2.0]);
+    }
+}

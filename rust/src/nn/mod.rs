@@ -1,0 +1,9 @@
+//! The hardware-facing view of a trained LogicNet: quantizers, folded
+//! batch-norm, sparse per-neuron rows, and a pure-Rust forward mirror used
+//! by truth-table export and functional verification.
+
+pub mod export;
+pub mod quant;
+
+pub use export::{ExportedLayer, ExportedModel, Neuron};
+pub use quant::QuantSpec;

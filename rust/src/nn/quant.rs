@@ -1,0 +1,132 @@
+//! Rust mirror of the activation quantizers — must match
+//! `python/compile/kernels/quantize.py` bit-for-bit.
+//!
+//! Both sides use round-half-to-even (`jnp.round` / `f32::round_ties_even`),
+//! so quantizer codes computed here during truth-table export agree exactly
+//! with what the JAX training graph produced.
+
+/// A uniform activation quantizer: QuantHardTanh for 1 bit, QuantReLU
+/// otherwise (paper §3.1.2 / §4.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantSpec {
+    pub bw: usize,
+    pub maxv: f32,
+}
+
+impl QuantSpec {
+    pub fn new(bw: usize, maxv: f32) -> QuantSpec {
+        assert!(bw >= 1 && bw <= 16, "bw {bw}");
+        QuantSpec { bw, maxv }
+    }
+
+    /// Number of representable codes.
+    pub fn num_codes(&self) -> usize {
+        1usize << self.bw
+    }
+
+    pub fn levels(&self) -> f32 {
+        (self.num_codes() - 1) as f32
+    }
+
+    pub fn step(&self) -> f32 {
+        self.maxv / self.levels()
+    }
+
+    /// Quantize to the representable value (dequantized representation).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        if self.bw == 1 {
+            if x >= 0.0 {
+                self.maxv
+            } else {
+                -self.maxv
+            }
+        } else {
+            let step = self.step();
+            let c = (x / step).round_ties_even().clamp(0.0, self.levels());
+            c * step
+        }
+    }
+
+    /// Integer code of the quantizer (truth-table input/output bits).
+    #[inline]
+    pub fn code(&self, x: f32) -> u32 {
+        if self.bw == 1 {
+            (x >= 0.0) as u32
+        } else {
+            let step = self.step();
+            (x / step).round_ties_even().clamp(0.0, self.levels()) as u32
+        }
+    }
+
+    /// Representable value of a code.
+    #[inline]
+    pub fn dequant(&self, c: u32) -> f32 {
+        if self.bw == 1 {
+            (2.0 * c as f32 - 1.0) * self.maxv
+        } else {
+            c as f32 * self.step()
+        }
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = self.quantize(*x);
+        }
+    }
+
+    pub fn codes_slice(&self, xs: &[f32], out: &mut [u32]) {
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.code(x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hardtanh_bit1() {
+        let q = QuantSpec::new(1, 1.61);
+        assert_eq!(q.quantize(0.3), 1.61);
+        assert_eq!(q.quantize(-0.3), -1.61);
+        assert_eq!(q.quantize(0.0), 1.61); // x >= 0 convention, as in JAX
+        assert_eq!(q.code(-5.0), 0);
+        assert_eq!(q.code(5.0), 1);
+        assert_eq!(q.dequant(0), -1.61);
+        assert_eq!(q.dequant(1), 1.61);
+    }
+
+    #[test]
+    fn quant_relu_grid() {
+        let q = QuantSpec::new(2, 3.0); // levels 3, step 1.0
+        assert_eq!(q.quantize(-1.0), 0.0);
+        assert_eq!(q.quantize(0.4), 0.0);
+        assert_eq!(q.quantize(0.6), 1.0);
+        assert_eq!(q.quantize(2.2), 2.0);
+        assert_eq!(q.quantize(9.0), 3.0);
+        assert_eq!(q.code(2.2), 2);
+    }
+
+    #[test]
+    fn round_ties_even_matches_jnp() {
+        let q = QuantSpec::new(3, 7.0); // step 1.0
+        // jnp.round(0.5) == 0.0, jnp.round(1.5) == 2.0, jnp.round(2.5) == 2.0
+        assert_eq!(q.quantize(0.5), 0.0);
+        assert_eq!(q.quantize(1.5), 2.0);
+        assert_eq!(q.quantize(2.5), 2.0);
+        assert_eq!(q.quantize(3.5), 4.0);
+    }
+
+    #[test]
+    fn code_dequant_roundtrip() {
+        for bw in 1..=8usize {
+            let q = QuantSpec::new(bw, 2.0);
+            for c in 0..q.num_codes() as u32 {
+                assert_eq!(q.code(q.dequant(c)), c, "bw={bw} c={c}");
+            }
+        }
+    }
+}

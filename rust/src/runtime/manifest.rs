@@ -1,0 +1,152 @@
+//! Model manifest: the contract between `python/compile/aot.py` and the Rust
+//! coordinator.  Parsed from `artifacts/<model>/manifest.json`.
+//!
+//! The manifest pins the *flattened* input/output ordering of the HLO
+//! entry points (see the module docstring of python/compile/model.py) plus
+//! every quantizer constant the export path (truth tables) must reproduce.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// One linear (or conv stage) layer as seen by the HLO artifact.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    /// Input width (already accounts for skip concatenation).
+    pub in_f: usize,
+    /// Output width (neuron count).
+    pub out_f: usize,
+    /// Per-neuron fan-in in synapses; `None` = dense.
+    pub fanin: Option<usize>,
+    /// Bit-width of the quantizer applied to this layer's *input*.
+    pub bw_in: usize,
+    /// max_val of that input quantizer.
+    pub maxv_in: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String,
+    pub in_features: usize,
+    pub classes: usize,
+    pub hidden: Vec<usize>,
+    pub bw: usize,
+    pub bw_in: usize,
+    pub bw_out: usize,
+    pub fanin: usize,
+    pub fanin_fc: Option<usize>,
+    pub skips: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub maxv_in: f32,
+    pub maxv_hidden: f32,
+    pub maxv_out: f32,
+    pub momentum: f32,
+    pub bn_eps: f32,
+    pub dataset: String,
+    pub train_softmax: bool,
+    pub steps: usize,
+    pub lr: f32,
+    pub layers: Vec<LayerSpec>,
+    // CNN extras (None for MLPs)
+    pub conv_mode: Option<String>,
+    pub image_hw: usize,
+    pub channels: Vec<usize>,
+    pub kernel_size: usize,
+    pub fanin_dw: Option<usize>,
+    pub fanin_pw: Option<usize>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        let layers = j
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layers not array"))?
+            .iter()
+            .map(|l| {
+                Ok(LayerSpec {
+                    in_f: l.req_usize("in")?,
+                    out_f: l.req_usize("out")?,
+                    fanin: l.get("fanin").and_then(|v| v.as_usize()),
+                    bw_in: l.req_usize("bw_in")?,
+                    maxv_in: l.req_f64("maxv_in")? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let usv = |key: &str| -> Vec<usize> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        };
+        Ok(Manifest {
+            name: j.req_str("name")?.to_string(),
+            kind: j.req_str("kind")?.to_string(),
+            in_features: j.req_usize("in_features")?,
+            classes: j.req_usize("classes")?,
+            hidden: usv("hidden"),
+            bw: j.req_usize("bw")?,
+            bw_in: j.req_usize("bw_in")?,
+            bw_out: j.req_usize("bw_out")?,
+            fanin: j.req_usize("fanin")?,
+            fanin_fc: j.get("fanin_fc").and_then(|v| v.as_usize()),
+            skips: j.opt_usize("skips").unwrap_or(0),
+            batch: j.req_usize("batch")?,
+            eval_batch: j.req_usize("eval_batch")?,
+            maxv_in: j.opt_f64("maxv_in", 1.0) as f32,
+            maxv_hidden: j.opt_f64("maxv_hidden", 2.0) as f32,
+            maxv_out: j.opt_f64("maxv_out", 4.0) as f32,
+            momentum: j.opt_f64("momentum", 0.9) as f32,
+            bn_eps: j.opt_f64("bn_eps", 1e-5) as f32,
+            dataset: j.req_str("dataset")?.to_string(),
+            train_softmax: j.opt_bool("train_softmax", true),
+            steps: j.opt_usize("steps").unwrap_or(300),
+            lr: j.opt_f64("lr", 0.02) as f32,
+            layers,
+            conv_mode: j.get("conv_mode").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            image_hw: j.opt_usize("image_hw").unwrap_or(28),
+            channels: usv("channels"),
+            kernel_size: j.opt_usize("kernel_size").unwrap_or(3),
+            fanin_dw: j.get("fanin_dw").and_then(|v| v.as_usize()),
+            fanin_pw: j.get("fanin_pw").and_then(|v| v.as_usize()),
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Manifest> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name":"t","kind":"mlp","in_features":16,"classes":5,"hidden":[32,32],
+      "bw":2,"bw_in":2,"bw_out":2,"fanin":3,"fanin_fc":null,"skips":0,
+      "batch":64,"eval_batch":128,"maxv_in":1.0,"maxv_hidden":2.0,"maxv_out":4.0,
+      "momentum":0.9,"bn_eps":1e-05,"dataset":"jets","train_softmax":true,
+      "steps":120,"lr":0.04,
+      "layers":[{"in":16,"out":32,"fanin":3,"bw_in":2,"maxv_in":1.0},
+                {"in":32,"out":32,"fanin":3,"bw_in":2,"maxv_in":2.0},
+                {"in":32,"out":5,"fanin":null,"bw_in":2,"maxv_in":2.0}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.num_layers(), 3);
+        assert_eq!(m.layers[2].fanin, None);
+        assert_eq!(m.layers[1].in_f, 32);
+        assert_eq!(m.fanin_fc, None);
+        assert!((m.bn_eps - 1e-5).abs() < 1e-12);
+    }
+}

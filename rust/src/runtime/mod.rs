@@ -1,0 +1,135 @@
+//! L3 runtime: load AOT-compiled HLO text artifacts and execute them on the
+//! PJRT CPU client (`xla` crate).
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! All entry points are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal which we decompose into the flat output list
+//! described by the model manifest.
+
+pub mod manifest;
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub use manifest::{LayerSpec, Manifest};
+
+/// A PJRT client wrapper; create once, share everywhere.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file into an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse hlo text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled HLO entry point.  `run` takes the flat input literals in
+/// manifest order and returns the flat output literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "lit_f32 shape/data mismatch");
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "lit_i32 shape/data mismatch");
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("scalar f32: {e:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Artifact bundle
+// ---------------------------------------------------------------------------
+
+/// A model's full AOT bundle on disk: manifest + compiled entry points.
+pub struct Artifact {
+    pub manifest: Manifest,
+    pub train_step: Executable,
+    pub forward: Executable,
+    pub dir: PathBuf,
+}
+
+impl Artifact {
+    /// Load `artifacts/<name>` relative to the repo root.
+    pub fn load(rt: &Runtime, artifacts_dir: &Path, name: &str) -> Result<Artifact> {
+        let dir = artifacts_dir.join(name);
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("artifact {name}"))?;
+        let train_step = rt.load_hlo_text(&dir.join("train_step.hlo.txt"))?;
+        let forward = rt.load_hlo_text(&dir.join("forward.hlo.txt"))?;
+        Ok(Artifact { manifest, train_step, forward, dir })
+    }
+
+    pub fn exists(artifacts_dir: &Path, name: &str) -> bool {
+        artifacts_dir.join(name).join("manifest.json").exists()
+    }
+}
+
+/// Default artifacts directory: `$LOGICNETS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("LOGICNETS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

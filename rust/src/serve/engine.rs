@@ -1,0 +1,390 @@
+//! Flattened, allocation-free inference over truth tables.
+//!
+//! Layout decisions (this is the measured hot path of `bench_serve`):
+//! * per layer, all neuron fan-in indices live in one contiguous `Vec<u32>`
+//!   with offsets, and all tables in one contiguous `Vec<u8>` (codes are at
+//!   most 8 bits in any paper configuration);
+//! * activations stay in the *code* domain end to end; only the dense head
+//!   dequantizes, through a per-layer precomputed code->value table;
+//! * scratch buffers are reused across samples via `InferScratch`.
+
+use crate::luts::ModelTables;
+use crate::nn::{ExportedModel, QuantSpec};
+use anyhow::{ensure, Result};
+
+enum Stage {
+    /// Table-mapped sparse layer.
+    Lut {
+        /// Neuron j's fan-in indices: idx[off[j]..off[j+1]].
+        idx: Vec<u32>,
+        off: Vec<u32>,
+        /// Neuron j's table: tab[tab_off[j] + packed_code].
+        tab: Vec<u8>,
+        tab_off: Vec<u32>,
+        bw_in: usize,
+        num_out: usize,
+    },
+    /// Arithmetic (dense classifier head) layer.
+    Dense {
+        /// Row-major [out, in] folded weights (g pre-multiplied).
+        w: Vec<f32>,
+        /// Folded bias per neuron: g*b + h.
+        b: Vec<f32>,
+        in_f: usize,
+        num_out: usize,
+        /// Dequant value per (element, code): dequant[e*ncodes + c].  Skip
+        /// wiring makes the scale per-element.
+        dequant: Vec<f32>,
+        ncodes: usize,
+        quant_out: QuantSpec,
+    },
+}
+
+pub struct LutEngine {
+    stages: Vec<Stage>,
+    in_quant: QuantSpec,
+    pub in_features: usize,
+    pub classes: usize,
+    skips: usize,
+}
+
+/// Reusable per-thread scratch to keep the hot loop allocation-free.
+/// `acts[i]` holds stage i's input activation codes (acts[0] = quantized
+/// model input); `out` holds the final stage's codes.
+#[derive(Default)]
+pub struct InferScratch {
+    acts: Vec<Vec<u8>>,
+    input: Vec<u8>,
+    out: Vec<u8>,
+    logits: Vec<f32>,
+}
+
+impl LutEngine {
+    pub fn build(model: &ExportedModel, tables: &ModelTables) -> Result<LutEngine> {
+        let mut stages = Vec::with_capacity(model.num_layers());
+        for (li, layer) in model.layers.iter().enumerate() {
+            match &tables.layers[li] {
+                Some(lt) => {
+                    ensure!(lt.quant_out.bw <= 8, "engine supports <=8-bit codes");
+                    let mut idx = Vec::new();
+                    let mut off = vec![0u32];
+                    let mut tab = Vec::new();
+                    let mut tab_off = vec![0u32];
+                    for (nj, t) in lt.tables.iter().enumerate() {
+                        let nr = &layer.neurons[nj];
+                        idx.extend(nr.inputs.iter().map(|&i| i as u32));
+                        off.push(idx.len() as u32);
+                        for e in 0..t.num_entries() {
+                            tab.push(t.lookup(e) as u8);
+                        }
+                        tab_off.push(tab.len() as u32);
+                    }
+                    stages.push(Stage::Lut {
+                        idx,
+                        off,
+                        tab,
+                        tab_off,
+                        bw_in: lt.quant_in.bw,
+                        num_out: lt.tables.len(),
+                    });
+                }
+                None => {
+                    let in_f = layer.in_f;
+                    let num_out = layer.neurons.len();
+                    let mut w = vec![0f32; num_out * in_f];
+                    let mut b = vec![0f32; num_out];
+                    for (o, nr) in layer.neurons.iter().enumerate() {
+                        for (wt, &j) in nr.weights.iter().zip(&nr.inputs) {
+                            w[o * in_f + j] = nr.g * wt;
+                        }
+                        b[o] = nr.g * nr.bias + nr.h;
+                    }
+                    let ncodes = layer.quant_in.num_codes();
+                    let mut dequant = vec![0f32; in_f * ncodes];
+                    for (e, spec) in layer.input_specs.iter().enumerate() {
+                        for c in 0..ncodes as u32 {
+                            dequant[e * ncodes + c as usize] = spec.dequant(c);
+                        }
+                    }
+                    stages.push(Stage::Dense {
+                        w,
+                        b,
+                        in_f,
+                        num_out,
+                        dequant,
+                        ncodes,
+                        quant_out: layer.quant_out,
+                    });
+                }
+            }
+        }
+        Ok(LutEngine {
+            stages,
+            in_quant: model.layers[0].quant_in,
+            in_features: model.in_features,
+            classes: model.classes,
+            skips: model.skips,
+        })
+    }
+
+    /// Classify one sample; returns the argmax class.  All buffers live in
+    /// `scratch` and are reused across calls — the loop is allocation-free
+    /// after the first inference (§Perf, EXPERIMENTS.md).
+    pub fn infer(&self, x: &[f32], scratch: &mut InferScratch) -> usize {
+        debug_assert_eq!(x.len(), self.in_features);
+        let n = self.stages.len();
+        if scratch.acts.len() < n {
+            scratch.acts.resize_with(n, Vec::new);
+        }
+        {
+            let a = &mut scratch.acts[0];
+            a.clear();
+            a.extend(x.iter().map(|&v| self.in_quant.code(v) as u8));
+        }
+        for i in 0..n {
+            let stage = &self.stages[i];
+            // Skip wiring: newest-first concat of the last skips+1 acts.
+            scratch.input.clear();
+            if i == 0 || self.skips == 0 {
+                scratch.input.extend_from_slice(&scratch.acts[i]);
+            } else {
+                let lo = i.saturating_sub(self.skips);
+                for j in (lo..=i).rev() {
+                    scratch.input.extend_from_slice(&scratch.acts[j]);
+                }
+            }
+            let input = &scratch.input;
+            // Output buffer: next stage's act slot, or the final `out`.
+            let mut out = if i + 1 == n {
+                std::mem::take(&mut scratch.out)
+            } else {
+                std::mem::take(&mut scratch.acts[i + 1])
+            };
+            out.clear();
+            match stage {
+                Stage::Lut { idx, off, tab, tab_off, bw_in, num_out } => {
+                    out.reserve(*num_out);
+                    for j in 0..*num_out {
+                        let (s, e) = (off[j] as usize, off[j + 1] as usize);
+                        let mut packed = 0usize;
+                        let mut shift = 0;
+                        for &inp in &idx[s..e] {
+                            packed |= (input[inp as usize] as usize) << shift;
+                            shift += bw_in;
+                        }
+                        out.push(tab[tab_off[j] as usize + packed]);
+                    }
+                }
+                Stage::Dense { w, b, in_f, num_out, dequant, ncodes, quant_out } => {
+                    scratch.logits.clear();
+                    for o in 0..*num_out {
+                        let row = &w[o * in_f..(o + 1) * in_f];
+                        let mut z = b[o];
+                        for (e, (wt, &c)) in row.iter().zip(input.iter()).enumerate() {
+                            z += wt * dequant[e * ncodes + c as usize];
+                        }
+                        scratch.logits.push(z);
+                        out.push(quant_out.code(z) as u8);
+                    }
+                }
+            }
+            if i + 1 == n {
+                scratch.out = out;
+            } else {
+                scratch.acts[i + 1] = out;
+            }
+        }
+        // argmax over final codes (monotone in logits).
+        scratch
+            .out
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &c)| c)
+            .map(|(k, _)| k)
+            .unwrap_or(0)
+    }
+
+    /// Batch classify; returns predicted classes.
+    pub fn infer_batch(&self, xs: &[f32]) -> Vec<usize> {
+        let d = self.in_features;
+        let mut scratch = InferScratch::default();
+        xs.chunks(d).map(|row| self.infer(row, &mut scratch)).collect()
+    }
+
+    /// Multi-core batch classify (one scratch per worker chunk).
+    pub fn infer_batch_par(&self, xs: &[f32]) -> Vec<usize> {
+        let d = self.in_features;
+        assert_eq!(xs.len() % d, 0);
+        let n = xs.len() / d;
+        let mut out = vec![0usize; n];
+        let out_ptr = std::sync::Mutex::new(&mut out);
+        crate::util::pool::par_chunks(n, |_, range| {
+            let mut scratch = InferScratch::default();
+            let mut local = Vec::with_capacity(range.len());
+            for i in range.clone() {
+                local.push(self.infer(&xs[i * d..(i + 1) * d], &mut scratch));
+            }
+            let mut guard = out_ptr.lock().unwrap();
+            guard[range.start..range.end].copy_from_slice(&local);
+        });
+        out
+    }
+
+    /// Final-layer quantized codes for one sample (verification hook).
+    pub fn infer_codes(&self, x: &[f32]) -> Vec<u8> {
+        let mut scratch = InferScratch::default();
+        self.infer(x, &mut scratch);
+        scratch.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::ModelTables;
+    use crate::nn::{ExportedLayer, ExportedModel, Neuron};
+    use crate::util::rng::Rng;
+
+    fn random_model(seed: u64) -> ExportedModel {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        let widths = [24usize, 16];
+        let mut prev = 12usize;
+        for (k, &w) in widths.iter().enumerate() {
+            let qi = if k == 0 { QuantSpec::new(2, 1.0) } else { QuantSpec::new(2, 2.0) };
+            let neurons = (0..w)
+                .map(|_| {
+                    let inputs = rng.choose_k(prev, 3);
+                    Neuron {
+                        inputs: inputs.clone(),
+                        weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect(),
+                        bias: rng.normal_f32(0.0, 0.1),
+                        g: 1.0,
+                        h: 0.0,
+                    }
+                })
+                .collect();
+            layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(2, 2.0), true));
+            prev = w;
+        }
+        // dense head
+        let neurons = (0..5)
+            .map(|_| {
+                let inputs: Vec<usize> = (0..prev).collect();
+                Neuron {
+                    inputs: inputs.clone(),
+                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+                    bias: 0.0,
+                    g: 1.0,
+                    h: 0.0,
+                }
+            })
+            .collect();
+        layers.push(ExportedLayer::uniform(neurons, prev, QuantSpec::new(2, 2.0), QuantSpec::new(2, 4.0), false));
+        ExportedModel {
+            layers,
+            in_features: 12,
+            classes: 5,
+            skips: 0,
+            act_widths: vec![12, 24, 16],
+        }
+    }
+
+    #[test]
+    fn engine_matches_arithmetic_mirror() {
+        let model = random_model(1);
+        let tables = ModelTables::generate(&model).unwrap();
+        let engine = LutEngine::build(&model, &tables).unwrap();
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..12).map(|_| rng.f32()).collect();
+            let logits = model.forward(&x);
+            let expect = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let mut scratch = InferScratch::default();
+            let got = engine.infer(&x, &mut scratch);
+            // argmax ties can differ in order; compare logit values instead.
+            assert_eq!(logits[got], logits[expect], "engine argmax must be maximal");
+            // codes must match the quantized logits exactly
+            let q = model.layers.last().unwrap().quant_out;
+            let codes = engine.infer_codes(&x);
+            let expect_codes: Vec<u8> = logits.iter().map(|&v| q.code(v) as u8).collect();
+            assert_eq!(codes, expect_codes);
+        }
+    }
+
+    #[test]
+    fn engine_handles_skip_wiring_with_mixed_scales() {
+        // Regression for the skip-connection quantizer-scale bug: build a
+        // 2-hidden-layer model with skips=1 whose layer-1 input concatenates
+        // maxv-2.0 hidden codes with maxv-1.0 input codes.
+        let mut rng = Rng::new(4);
+        let in_f = 6usize;
+        let w1 = 8usize;
+        let qi0 = QuantSpec::new(2, 1.0);
+        let qh = QuantSpec::new(2, 2.0);
+        let mk = |rng: &mut Rng, prev: usize, fanin: usize| Neuron {
+            inputs: rng.choose_k(prev, fanin),
+            weights: (0..fanin).map(|_| rng.normal_f32(0.0, 0.8)).collect(),
+            bias: 0.0,
+            g: 1.0,
+            h: 0.0,
+        };
+        let l0 = ExportedLayer::uniform(
+            (0..w1).map(|_| mk(&mut rng, in_f, 3)).collect(),
+            in_f,
+            qi0,
+            qh,
+            true,
+        );
+        // layer 1 input = [a_1 (w1, maxv 2.0), a_0 (in_f, maxv 1.0)]
+        let mut specs = vec![qh; w1];
+        specs.extend(vec![qi0; in_f]);
+        let l1 = ExportedLayer {
+            neurons: (0..4).map(|_| mk(&mut rng, w1 + in_f, 3)).collect(),
+            in_f: w1 + in_f,
+            quant_in: qh,
+            quant_out: QuantSpec::new(2, 4.0),
+            sparse: true,
+            input_specs: specs,
+        };
+        let model = ExportedModel {
+            layers: vec![l0, l1],
+            in_features: in_f,
+            classes: 4,
+            skips: 1,
+            act_widths: vec![in_f, w1],
+        };
+        let tables = ModelTables::generate(&model).unwrap();
+        // tables == mirror
+        let xs: Vec<f32> = (0..in_f * 50).map(|_| rng.f32()).collect();
+        assert_eq!(tables.verify(&model, &xs), 0);
+        // engine == mirror
+        let engine = LutEngine::build(&model, &tables).unwrap();
+        let q = model.layers.last().unwrap().quant_out;
+        for row in xs.chunks(in_f) {
+            let codes = engine.infer_codes(row);
+            let expect: Vec<u8> =
+                model.forward(row).iter().map(|&v| q.code(v) as u8).collect();
+            assert_eq!(codes, expect);
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let model = random_model(2);
+        let tables = ModelTables::generate(&model).unwrap();
+        let engine = LutEngine::build(&model, &tables).unwrap();
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> = (0..12 * 32).map(|_| rng.f32()).collect();
+        let batch = engine.infer_batch(&xs);
+        let mut scratch = InferScratch::default();
+        for (i, row) in xs.chunks(12).enumerate() {
+            assert_eq!(batch[i], engine.infer(row, &mut scratch));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 serving engine: the "extreme-throughput trigger" story.
+//!
+//! The FPGA runs a LogicNet at initiation interval 1 — one inference per
+//! clock.  This module is the software model of that datapath: a
+//! cache-friendly truth-table inference engine (`LutEngine`) behind a
+//! batching request router (`Server`) with worker threads, throughput
+//! counters and latency percentiles.  It is also the second functional
+//! verification surface: the engine must agree exactly with the arithmetic
+//! mirror (`ExportedModel::forward`).
+
+pub mod engine;
+pub mod router;
+
+pub use engine::LutEngine;
+pub use router::{Server, ServerConfig, ServerStats};

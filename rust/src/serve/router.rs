@@ -1,0 +1,281 @@
+//! Request router + dynamic batcher over the LUT engine.
+//!
+//! Architecture (vLLM-router-flavored, scaled to this workload): clients
+//! submit single samples through a channel; a batcher thread coalesces up
+//! to `max_batch` requests (or whatever arrived within `batch_timeout`) and
+//! hands the batch to a worker pool; each worker owns its scratch buffers,
+//! so the hot loop never allocates or locks.  Latency is tracked per
+//! request (enqueue -> response) in a fixed-size reservoir for percentile
+//! reporting.
+
+use super::engine::{InferScratch, LutEngine};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct ServerConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: crate::util::pool::num_threads().min(8),
+            max_batch: 64,
+            batch_timeout: Duration::from_micros(50),
+            queue_depth: 4096,
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f32>,
+    enqueued: Instant,
+    resp: SyncSender<usize>,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    latencies_us: Mutex<Vec<f64>>,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batch_fill: AtomicU64,
+    rejected: AtomicUsize,
+}
+
+/// Snapshot of server statistics.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub rejected: usize,
+}
+
+pub struct Server {
+    tx: SyncSender<Request>,
+    stats: Arc<StatsInner>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub in_features: usize,
+}
+
+impl Server {
+    pub fn start(engine: Arc<LutEngine>, cfg: ServerConfig) -> Server {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let stats = Arc::new(StatsInner::default());
+        // Batcher thread: coalesce, then fan batches to workers round-robin.
+        let mut worker_txs = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let (wtx, wrx) = sync_channel::<Vec<Request>>(8);
+            worker_txs.push(wtx);
+            let engine = engine.clone();
+            let stats = stats.clone();
+            handles.push(std::thread::spawn(move || worker_loop(engine, wrx, stats)));
+        }
+        let in_features = engine.in_features;
+        let stats2 = stats.clone();
+        let max_batch = cfg.max_batch.max(1);
+        let timeout = cfg.batch_timeout;
+        handles.push(std::thread::spawn(move || {
+            batcher_loop(rx, worker_txs, max_batch, timeout, stats2)
+        }));
+        Server { tx, stats, handles, in_features }
+    }
+
+    /// Blocking single inference through the full router path.
+    pub fn infer(&self, x: Vec<f32>) -> Option<usize> {
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request { x, enqueued: Instant::now(), resp: rtx };
+        if self.tx.try_send(req).is_err() {
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        rrx.recv().ok()
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let mut lats = self.stats.latencies_us.lock().unwrap().clone();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lats.is_empty() {
+                return 0.0;
+            }
+            lats[((lats.len() as f64 - 1.0) * p) as usize]
+        };
+        let batches = self.stats.batches.load(Ordering::Relaxed);
+        let fill = self.stats.batch_fill.load(Ordering::Relaxed);
+        ServerStats {
+            completed: self.stats.completed.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { fill as f64 / batches as f64 },
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            rejected: self.stats.rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Shut down: drop the ingress, join all threads.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Request>,
+    worker_txs: Vec<SyncSender<Vec<Request>>>,
+    max_batch: usize,
+    timeout: Duration,
+    stats: Arc<StatsInner>,
+) {
+    let mut next_worker = 0usize;
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + timeout;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batch_fill.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        // Round-robin dispatch; if a worker queue is full, rotate.
+        let mut sent = false;
+        for k in 0..worker_txs.len() {
+            let w = (next_worker + k) % worker_txs.len();
+            match worker_txs[w].try_send(batch) {
+                Ok(()) => {
+                    next_worker = (w + 1) % worker_txs.len();
+                    sent = true;
+                    batch = Vec::new();
+                    break;
+                }
+                Err(std::sync::mpsc::TrySendError::Full(b)) => batch = b,
+                Err(std::sync::mpsc::TrySendError::Disconnected(b)) => batch = b,
+            }
+        }
+        if !sent {
+            // All queues full: apply backpressure by blocking on one.
+            let _ = worker_txs[next_worker].send(batch);
+            next_worker = (next_worker + 1) % worker_txs.len();
+        }
+    }
+}
+
+fn worker_loop(engine: Arc<LutEngine>, rx: Receiver<Vec<Request>>, stats: Arc<StatsInner>) {
+    let mut scratch = InferScratch::default();
+    const RESERVOIR: usize = 100_000;
+    while let Ok(batch) = rx.recv() {
+        for req in batch {
+            let class = engine.infer(&req.x, &mut scratch);
+            let lat = req.enqueued.elapsed().as_secs_f64() * 1e6;
+            {
+                let mut l = stats.latencies_us.lock().unwrap();
+                if l.len() < RESERVOIR {
+                    l.push(lat);
+                }
+            }
+            stats.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = req.resp.send(class);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::ModelTables;
+    use crate::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+    use crate::util::rng::Rng;
+
+    fn engine() -> Arc<LutEngine> {
+        let mut rng = Rng::new(3);
+        let neurons = (0..8)
+            .map(|_| {
+                let inputs = rng.choose_k(6, 3);
+                Neuron {
+                    inputs: inputs.clone(),
+                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                    bias: 0.0,
+                    g: 1.0,
+                    h: 0.0,
+                }
+            })
+            .collect();
+        let model = ExportedModel {
+            layers: vec![ExportedLayer::uniform(neurons, 6, QuantSpec::new(2, 1.0), QuantSpec::new(2, 2.0), true)],
+            in_features: 6,
+            classes: 8,
+            skips: 0,
+            act_widths: vec![6],
+        };
+        let tables = ModelTables::generate(&model).unwrap();
+        Arc::new(LutEngine::build(&model, &tables).unwrap())
+    }
+
+    #[test]
+    fn server_roundtrip_and_stats() {
+        let eng = engine();
+        let server = Server::start(
+            eng.clone(),
+            ServerConfig { workers: 2, max_batch: 8, ..Default::default() },
+        );
+        let mut rng = Rng::new(11);
+        for _ in 0..100 {
+            let x: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+            let direct = eng.infer_batch(&x)[0];
+            let via_server = server.infer(x).expect("server response");
+            assert_eq!(direct, via_server);
+        }
+        let stats = server.stats();
+        assert_eq!(stats.completed, 100);
+        assert!(stats.batches >= 1);
+        assert!(stats.p50_us >= 0.0 && stats.p99_us >= stats.p50_us);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let eng = engine();
+        let server = Arc::new(Server::start(
+            eng,
+            ServerConfig { workers: 4, max_batch: 16, ..Default::default() },
+        ));
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let server = server.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(100 + t);
+                    for _ in 0..200 {
+                        let x: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+                        assert!(server.infer(x).is_some());
+                    }
+                });
+            }
+        });
+        let stats = server.stats();
+        assert_eq!(stats.completed, 1600);
+    }
+}

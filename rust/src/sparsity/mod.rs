@@ -1,0 +1,134 @@
+//! Sparsity: per-neuron fan-in masks and the three pruning strategies of the
+//! paper (§3.1): A-Priori Fixed Sparsity (random expander), Iterative
+//! Pruning (magnitude, per-neuron decay schedule), and modified Sparse
+//! Momentum learning (Alg. 1: per-neuron magnitude prune + momentum regrow).
+//!
+//! A mask is the structural object of LogicNets: each output neuron keeps
+//! exactly `fanin` incoming synapses, which bounds its truth-table input
+//! width to `fanin * bw_in` bits.
+
+pub mod prune;
+
+use crate::util::rng::Rng;
+
+/// A per-neuron connectivity mask for a linear layer `[out_f, in_f]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mask {
+    pub out_f: usize,
+    pub in_f: usize,
+    /// For each output neuron, the sorted input indices it connects to.
+    pub rows: Vec<Vec<usize>>,
+}
+
+impl Mask {
+    /// Fully dense mask (used for final classifier layers, `fanin_fc=None`).
+    pub fn dense(out_f: usize, in_f: usize) -> Mask {
+        Mask { out_f, in_f, rows: vec![(0..in_f).collect(); out_f] }
+    }
+
+    /// A-priori fixed random sparsity: every neuron draws `fanin` distinct
+    /// inputs uniformly (a random bipartite expander of degree `fanin`,
+    /// paper §3.1.1).
+    pub fn random(out_f: usize, in_f: usize, fanin: usize, rng: &mut Rng) -> Mask {
+        let fanin = fanin.min(in_f);
+        let rows = (0..out_f).map(|_| rng.choose_k(in_f, fanin)).collect();
+        Mask { out_f, in_f, rows }
+    }
+
+    /// Build from an explicit 0/1 dense matrix (row-major `[out_f, in_f]`).
+    pub fn from_dense(out_f: usize, in_f: usize, dense: &[f32]) -> Mask {
+        assert_eq!(dense.len(), out_f * in_f);
+        let rows = (0..out_f)
+            .map(|o| {
+                (0..in_f).filter(|&i| dense[o * in_f + i] != 0.0).collect::<Vec<_>>()
+            })
+            .collect();
+        Mask { out_f, in_f, rows }
+    }
+
+    /// Dense row-major 0/1 f32 matrix — the HLO artifact input form.
+    pub fn to_dense_f32(&self) -> Vec<f32> {
+        let mut m = vec![0f32; self.out_f * self.in_f];
+        for (o, row) in self.rows.iter().enumerate() {
+            for &i in row {
+                m[o * self.in_f + i] = 1.0;
+            }
+        }
+        m
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.rows.iter().all(|r| r.len() == self.in_f)
+    }
+
+    /// Fan-in (synapses) of neuron `o`.
+    pub fn fanin(&self, o: usize) -> usize {
+        self.rows[o].len()
+    }
+
+    pub fn max_fanin(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+
+    /// Number of non-zero connections.
+    pub fn nnz(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+}
+
+/// Erdős–Rényi layer-sparsity allocation (paper §3.3.1): layer l gets
+/// sparsity scaling with `1 - (n_{l-1} + n_l) / (n_{l-1} * n_l)`; larger
+/// layers are made sparser.  Returns a per-layer density multiplier that is
+/// normalized so the mean density equals `base_density`.
+pub fn erdos_renyi_densities(widths: &[usize], base_density: f64) -> Vec<f64> {
+    assert!(widths.len() >= 2);
+    let raw: Vec<f64> = widths
+        .windows(2)
+        .map(|w| {
+            let (a, b) = (w[0] as f64, w[1] as f64);
+            (a + b) / (a * b)
+        })
+        .collect();
+    let mean = raw.iter().sum::<f64>() / raw.len() as f64;
+    raw.iter().map(|r| (base_density * r / mean).min(1.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_mask_has_exact_fanin() {
+        let mut rng = Rng::new(1);
+        let m = Mask::random(64, 16, 3, &mut rng);
+        assert_eq!(m.rows.len(), 64);
+        assert!(m.rows.iter().all(|r| r.len() == 3));
+        assert!(m.rows.iter().all(|r| r.windows(2).all(|w| w[0] < w[1])));
+        assert_eq!(m.nnz(), 64 * 3);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(2);
+        let m = Mask::random(8, 10, 4, &mut rng);
+        let d = m.to_dense_f32();
+        assert_eq!(Mask::from_dense(8, 10, &d), m);
+    }
+
+    #[test]
+    fn fanin_clamped_to_input_width() {
+        let mut rng = Rng::new(3);
+        let m = Mask::random(4, 3, 7, &mut rng);
+        assert!(m.rows.iter().all(|r| r.len() == 3));
+        assert!(m.is_dense());
+    }
+
+    #[test]
+    fn er_densities_mean_preserved() {
+        let d = erdos_renyi_densities(&[784, 1024, 1024, 10], 0.01);
+        let mean = d.iter().sum::<f64>() / d.len() as f64;
+        assert!((mean - 0.01).abs() < 1e-3, "{d:?}");
+        // Larger layer pair (1024x1024) must be sparser than (1024x10).
+        assert!(d[1] < d[2]);
+    }
+}

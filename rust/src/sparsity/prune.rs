@@ -1,0 +1,237 @@
+//! Pruning strategies operating on (weights, momentum, mask) between train
+//! steps.  The trainer calls `Pruner::on_step` after every optimizer update;
+//! whenever the mask changes, the trainer re-uploads it (masks are runtime
+//! inputs of the HLO train step, so no recompilation is needed).
+//!
+//! * `APriori` — fixed random expander, never changes (paper §3.1.1).
+//! * `Iterative` — magnitude pruning with a per-neuron decay schedule: the
+//!   allowed fan-in shrinks geometrically from dense to the target during
+//!   the middle of training (paper §3.1.1, Training Pipeline fig. 3.2).
+//! * `Momentum` — modified sparse-momentum learning (Alg. 1): per neuron,
+//!   prune the smallest-magnitude weights and regrow the same number of
+//!   connections where the exponentially-smoothed gradient magnitude is
+//!   largest.  Fan-in stays exactly constant per neuron.
+
+use super::Mask;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PruneMethod {
+    APriori,
+    Iterative { every: usize },
+    Momentum { every: usize, prune_rate: f64 },
+}
+
+impl PruneMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneMethod::APriori => "a-priori",
+            PruneMethod::Iterative { .. } => "iterative",
+            PruneMethod::Momentum { .. } => "momentum",
+        }
+    }
+}
+
+/// Per-layer pruning state.
+pub struct Pruner {
+    pub method: PruneMethod,
+    /// Target per-neuron fan-in (None = layer stays dense).
+    pub target_fanin: Option<usize>,
+}
+
+/// Fraction of training during which iterative pruning is active.
+const PRUNE_START: f64 = 0.15;
+const PRUNE_END: f64 = 0.75;
+
+impl Pruner {
+    pub fn new(method: PruneMethod, target_fanin: Option<usize>) -> Pruner {
+        Pruner { method, target_fanin }
+    }
+
+    /// Allowed fan-in at `step` of `total` under the iterative schedule:
+    /// geometric interpolation from `in_f` down to `target`.
+    pub fn allowed_fanin(&self, step: usize, total: usize, in_f: usize) -> usize {
+        let target = match self.target_fanin {
+            Some(t) => t.min(in_f),
+            None => return in_f,
+        };
+        let p = step as f64 / total.max(1) as f64;
+        if p <= PRUNE_START {
+            return in_f;
+        }
+        if p >= PRUNE_END {
+            return target;
+        }
+        let t = (p - PRUNE_START) / (PRUNE_END - PRUNE_START);
+        let f = (in_f as f64) * ((target as f64) / (in_f as f64)).powf(t);
+        (f.round() as usize).clamp(target, in_f)
+    }
+
+    /// Returns true if the mask changed (trainer must re-upload + re-mask
+    /// weights/velocities).
+    pub fn on_step(
+        &self,
+        step: usize,
+        total: usize,
+        w: &[f32],
+        momentum: &[f32],
+        mask: &mut Mask,
+    ) -> bool {
+        let target = match self.target_fanin {
+            Some(t) => t,
+            None => return false,
+        };
+        match self.method {
+            PruneMethod::APriori => false,
+            PruneMethod::Iterative { every } => {
+                if step == 0 || step % every != 0 {
+                    return false;
+                }
+                let allowed = self.allowed_fanin(step, total, mask.in_f);
+                magnitude_prune(w, mask, allowed)
+            }
+            PruneMethod::Momentum { every, prune_rate } => {
+                if step == 0 || step % every != 0 {
+                    return false;
+                }
+                // Anneal the prune rate to zero over training (sparse
+                // momentum paper) so connectivity settles before the end.
+                let p = prune_rate * (1.0 - step as f64 / total.max(1) as f64);
+                momentum_prune_regrow(w, momentum, mask, target, p)
+            }
+        }
+    }
+}
+
+/// Keep the `allowed` largest-|w| connections of each neuron; drop the rest.
+pub fn magnitude_prune(w: &[f32], mask: &mut Mask, allowed: usize) -> bool {
+    let mut changed = false;
+    let in_f = mask.in_f;
+    for (o, row) in mask.rows.iter_mut().enumerate() {
+        if row.len() <= allowed {
+            continue;
+        }
+        let mut scored: Vec<(f32, usize)> =
+            row.iter().map(|&i| (w[o * in_f + i].abs(), i)).collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        scored.truncate(allowed);
+        let mut keep: Vec<usize> = scored.into_iter().map(|(_, i)| i).collect();
+        keep.sort_unstable();
+        *row = keep;
+        changed = true;
+    }
+    changed
+}
+
+/// Alg. 1: per neuron, prune `ceil(p * fanin)` smallest-|w| synapses and
+/// regrow the same number at the free positions with the largest |momentum|.
+pub fn momentum_prune_regrow(
+    w: &[f32],
+    momentum: &[f32],
+    mask: &mut Mask,
+    target_fanin: usize,
+    p: f64,
+) -> bool {
+    if p <= 0.0 {
+        return false;
+    }
+    let in_f = mask.in_f;
+    let mut changed = false;
+    for (o, row) in mask.rows.iter_mut().enumerate() {
+        let fanin = row.len().min(target_fanin.max(1));
+        let k = ((fanin as f64 * p).ceil() as usize).min(row.len().saturating_sub(1));
+        if k == 0 {
+            continue;
+        }
+        // Prune: k smallest |w| inside the mask.
+        let mut scored: Vec<(f32, usize)> =
+            row.iter().map(|&i| (w[o * in_f + i].abs(), i)).collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let pruned: Vec<usize> = scored.iter().take(k).map(|&(_, i)| i).collect();
+        let kept: Vec<usize> = scored.iter().skip(k).map(|&(_, i)| i).collect();
+        // Regrow: k largest |momentum| outside the mask (and not just pruned).
+        let in_mask: std::collections::BTreeSet<usize> = row.iter().copied().collect();
+        let mut free: Vec<(f32, usize)> = (0..in_f)
+            .filter(|i| !in_mask.contains(i))
+            .map(|i| (momentum[o * in_f + i].abs(), i))
+            .collect();
+        free.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut new_row = kept;
+        new_row.extend(free.iter().take(k).map(|&(_, i)| i));
+        // If there were not enough free positions, keep some pruned ones so
+        // the fan-in is preserved exactly.
+        let mut need = row.len().saturating_sub(new_row.len());
+        for i in pruned {
+            if need == 0 {
+                break;
+            }
+            if !new_row.contains(&i) {
+                new_row.push(i);
+                need -= 1;
+            }
+        }
+        new_row.sort_unstable();
+        new_row.dedup();
+        if new_row != *row {
+            *row = new_row;
+            changed = true;
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn iterative_schedule_monotone() {
+        let p = Pruner::new(PruneMethod::Iterative { every: 10 }, Some(4));
+        let total = 100;
+        let mut prev = usize::MAX;
+        for step in 0..=total {
+            let a = p.allowed_fanin(step, total, 64);
+            assert!(a <= prev, "schedule must be non-increasing");
+            assert!(a >= 4 && a <= 64);
+            prev = a;
+        }
+        assert_eq!(p.allowed_fanin(0, total, 64), 64);
+        assert_eq!(p.allowed_fanin(total, total, 64), 4);
+    }
+
+    #[test]
+    fn magnitude_prune_keeps_largest() {
+        let mut mask = Mask::dense(1, 6);
+        let w = vec![0.1, -0.9, 0.3, -0.05, 0.7, 0.2];
+        assert!(magnitude_prune(&w, &mut mask, 3));
+        assert_eq!(mask.rows[0], vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn momentum_regrow_preserves_fanin() {
+        let mut rng = Rng::new(9);
+        let (out_f, in_f, fanin) = (8, 32, 4);
+        let mut mask = Mask::random(out_f, in_f, fanin, &mut rng);
+        let w: Vec<f32> = (0..out_f * in_f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let m: Vec<f32> = (0..out_f * in_f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let before = mask.clone();
+        let changed = momentum_prune_regrow(&w, &m, &mut mask, fanin, 0.5);
+        assert!(changed);
+        assert!(mask.rows.iter().all(|r| r.len() == fanin), "fan-in preserved");
+        assert_ne!(before, mask);
+    }
+
+    #[test]
+    fn apriori_never_changes() {
+        let mut rng = Rng::new(1);
+        let mut mask = Mask::random(4, 16, 3, &mut rng);
+        let before = mask.clone();
+        let p = Pruner::new(PruneMethod::APriori, Some(3));
+        let w = vec![1.0; 64];
+        let m = vec![1.0; 64];
+        for step in 0..50 {
+            assert!(!p.on_step(step, 50, &w, &m, &mut mask));
+        }
+        assert_eq!(before, mask);
+    }
+}

@@ -1,0 +1,204 @@
+//! Single-output boolean functions as packed truth tables — the synthesis
+//! front-end representation.  A LogicNets neuron with `in_bits` inputs and
+//! `out_bits` outputs contributes `out_bits` BoolFns.
+
+/// Truth table of `f: B^nvars -> B`, bit `idx` of `words` = f(idx).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BoolFn {
+    pub nvars: usize,
+    pub words: Vec<u64>,
+}
+
+impl BoolFn {
+    pub fn new(nvars: usize, words: Vec<u64>) -> BoolFn {
+        let need = (1usize << nvars).div_ceil(64);
+        assert_eq!(words.len(), need, "nvars={nvars}");
+        let mut f = BoolFn { nvars, words };
+        f.mask_tail();
+        f
+    }
+
+    pub fn zeros(nvars: usize) -> BoolFn {
+        BoolFn { nvars, words: vec![0; (1usize << nvars).div_ceil(64)] }
+    }
+
+    fn mask_tail(&mut self) {
+        let bits = 1usize << self.nvars;
+        if bits < 64 {
+            self.words[0] &= (1u64 << bits) - 1;
+        }
+    }
+
+    pub fn num_entries(&self) -> usize {
+        1usize << self.nvars
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> bool {
+        (self.words[idx / 64] >> (idx % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: usize, v: bool) {
+        if v {
+            self.words[idx / 64] |= 1u64 << (idx % 64);
+        } else {
+            self.words[idx / 64] &= !(1u64 << (idx % 64));
+        }
+    }
+
+    pub fn is_const(&self) -> Option<bool> {
+        let bits = self.num_entries();
+        let ones = crate::util::bits::popcount_words(&self.words, bits);
+        if ones == 0 {
+            Some(false)
+        } else if ones == bits {
+            Some(true)
+        } else {
+            None
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        crate::util::bits::popcount_words(&self.words, self.num_entries())
+    }
+
+    /// Does the function actually depend on variable `v`?
+    pub fn depends_on(&self, v: usize) -> bool {
+        let stride = 1usize << v;
+        let n = self.num_entries();
+        let mut idx = 0;
+        while idx < n {
+            // Compare blocks where bit v = 0 against their v = 1 partners.
+            for i in idx..idx + stride {
+                if self.get(i) != self.get(i + stride) {
+                    return true;
+                }
+            }
+            idx += stride * 2;
+        }
+        false
+    }
+
+    /// Indices of variables in the true support.
+    pub fn support(&self) -> Vec<usize> {
+        (0..self.nvars).filter(|&v| self.depends_on(v)).collect()
+    }
+
+    /// Project onto the given (sorted) variable subset, which must contain
+    /// the true support: returns the function over `vars.len()` variables.
+    pub fn compact(&self, vars: &[usize]) -> BoolFn {
+        let k = vars.len();
+        let mut out = BoolFn::zeros(k);
+        for idx2 in 0..(1usize << k) {
+            let mut idx = 0usize;
+            for (j, &v) in vars.iter().enumerate() {
+                if (idx2 >> j) & 1 == 1 {
+                    idx |= 1 << v;
+                }
+            }
+            out.set(idx2, self.get(idx));
+        }
+        out
+    }
+
+    /// Cofactor with variable `v` fixed to `val`; result has `nvars-1` vars
+    /// (variables above `v` shift down by one).
+    pub fn cofactor(&self, v: usize, val: bool) -> BoolFn {
+        assert!(v < self.nvars);
+        let mut out = BoolFn::zeros(self.nvars - 1);
+        let lo_mask = (1usize << v) - 1;
+        for idx2 in 0..out.num_entries() {
+            let idx = (idx2 & lo_mask)
+                | ((idx2 & !lo_mask) << 1)
+                | ((val as usize) << v);
+            out.set(idx2, self.get(idx));
+        }
+        out
+    }
+
+    /// Truth table as a single u64 (requires nvars <= 6); bits above
+    /// 2^nvars are zero.
+    pub fn tt6(&self) -> u64 {
+        assert!(self.nvars <= 6);
+        self.words[0]
+    }
+
+    /// Build from a u64 truth table over `nvars <= 6` variables.
+    pub fn from_tt6(nvars: usize, tt: u64) -> BoolFn {
+        assert!(nvars <= 6);
+        BoolFn::new(nvars, vec![tt])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor3() -> BoolFn {
+        let mut f = BoolFn::zeros(3);
+        for idx in 0..8usize {
+            f.set(idx, (idx.count_ones() % 2) == 1);
+        }
+        f
+    }
+
+    #[test]
+    fn support_and_depends() {
+        let f = xor3();
+        assert_eq!(f.support(), vec![0, 1, 2]);
+        // g(x0,x1,x2) = x1 (ignores x0, x2)
+        let mut g = BoolFn::zeros(3);
+        for idx in 0..8usize {
+            g.set(idx, (idx >> 1) & 1 == 1);
+        }
+        assert_eq!(g.support(), vec![1]);
+        let c = g.compact(&[1]);
+        assert_eq!(c.nvars, 1);
+        assert!(!c.get(0));
+        assert!(c.get(1));
+    }
+
+    #[test]
+    fn cofactor_shannon_identity() {
+        let f = xor3();
+        let f0 = f.cofactor(1, false);
+        let f1 = f.cofactor(1, true);
+        for idx in 0..8usize {
+            let reduced = (idx & 1) | ((idx >> 2) & 1) << 1;
+            let expect = if (idx >> 1) & 1 == 1 { f1.get(reduced) } else { f0.get(reduced) };
+            assert_eq!(f.get(idx), expect, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn const_detection() {
+        assert_eq!(BoolFn::zeros(4).is_const(), Some(false));
+        let mut ones = BoolFn::zeros(4);
+        for i in 0..16 {
+            ones.set(i, true);
+        }
+        assert_eq!(ones.is_const(), Some(true));
+        assert_eq!(xor3().is_const(), None);
+    }
+
+    #[test]
+    fn tt6_roundtrip() {
+        let f = xor3();
+        let g = BoolFn::from_tt6(3, f.tt6());
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn large_fn_ops() {
+        // 10-var majority-ish function; support must be all 10 vars.
+        let mut f = BoolFn::zeros(10);
+        for idx in 0..1024usize {
+            f.set(idx, idx.count_ones() >= 5);
+        }
+        assert_eq!(f.support().len(), 10);
+        let c0 = f.cofactor(9, false);
+        assert_eq!(c0.nvars, 9);
+        assert!(c0.get(0b111110000) || !c0.get(0));
+    }
+}

@@ -1,0 +1,132 @@
+//! Logic-complexity heuristic (paper §5.5.1): the paper proposes using
+//! truth-table minimization (PyEDA) as a training-time cost signal to
+//! discover neurons that synthesize far below the analytical bound.  This
+//! module computes that signal from our own minimizer: the minimized cube
+//! count and literal count per neuron, aggregated per layer.
+
+use super::boolfn::BoolFn;
+use super::cover::minimize;
+use crate::luts::{ModelTables, NeuronTable};
+use crate::util::pool::par_map;
+
+/// Complexity of one neuron's boolean functions.
+#[derive(Debug, Clone, Default)]
+pub struct NeuronComplexity {
+    /// Minimized cube count summed over output bits.
+    pub cubes: usize,
+    /// Literal count summed over output bits.
+    pub literals: usize,
+    /// Output bits that reduced to constants (free in hardware).
+    pub const_bits: usize,
+    /// True support size (inputs the neuron actually depends on), max over
+    /// output bits.
+    pub support: usize,
+}
+
+pub fn neuron_complexity(table: &NeuronTable) -> NeuronComplexity {
+    let mut c = NeuronComplexity::default();
+    for bit in 0..table.out_bits {
+        let f = BoolFn::new(table.in_bits, table.output_bit_fn(bit));
+        if f.is_const().is_some() {
+            c.const_bits += 1;
+            continue;
+        }
+        c.support = c.support.max(f.support().len());
+        let cover = minimize(&f);
+        c.cubes += cover.cubes.len();
+        c.literals += cover.total_literals();
+    }
+    c
+}
+
+/// Per-layer aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct LayerComplexity {
+    pub layer: usize,
+    pub neurons: usize,
+    pub mean_cubes: f64,
+    pub mean_literals: f64,
+    pub const_bits: usize,
+    pub max_support: usize,
+    /// Fraction of the analytical per-layer bound that the cube counts
+    /// suggest is actually needed (a cheap pre-synthesis estimate).
+    pub est_density: f64,
+}
+
+pub fn model_complexity(tables: &ModelTables) -> Vec<LayerComplexity> {
+    let mut out = Vec::new();
+    for (li, lt) in tables.layers.iter().enumerate() {
+        let Some(lt) = lt else { continue };
+        let per: Vec<NeuronComplexity> = par_map(&lt.tables, |_, t| neuron_complexity(t));
+        let n = per.len().max(1);
+        let analytical: u64 = lt
+            .tables
+            .iter()
+            .map(|t| crate::cost::lut_cost(t.in_bits, t.out_bits))
+            .sum();
+        let est_luts: f64 = per.iter().map(|c| (c.cubes as f64 / 5.0).max(0.0)).sum();
+        out.push(LayerComplexity {
+            layer: li,
+            neurons: n,
+            mean_cubes: per.iter().map(|c| c.cubes as f64).sum::<f64>() / n as f64,
+            mean_literals: per.iter().map(|c| c.literals as f64).sum::<f64>() / n as f64,
+            const_bits: per.iter().map(|c| c.const_bits).sum(),
+            max_support: per.iter().map(|c| c.support).max().unwrap_or(0),
+            est_density: if analytical == 0 { 0.0 } else { est_luts / analytical as f64 },
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::neuron_table;
+    use crate::nn::{Neuron, QuantSpec};
+
+    #[test]
+    fn saturated_neuron_is_free() {
+        let nr = Neuron {
+            inputs: vec![0, 1, 2],
+            weights: vec![0.1, 0.1, 0.1],
+            bias: 0.0,
+            g: 1.0,
+            h: 100.0, // saturates the quantizer high
+        };
+        let t = neuron_table(&nr, QuantSpec::new(2, 1.0), QuantSpec::new(2, 2.0)).unwrap();
+        let c = neuron_complexity(&t);
+        assert_eq!(c.const_bits, 2);
+        assert_eq!(c.cubes, 0);
+    }
+
+    #[test]
+    fn strong_single_input_has_small_support() {
+        // Only input 1 matters.
+        let nr = Neuron {
+            inputs: vec![0, 1, 2],
+            weights: vec![0.0, 5.0, 0.0],
+            bias: -2.5,
+            g: 1.0,
+            h: 0.0,
+        };
+        let t = neuron_table(&nr, QuantSpec::new(1, 1.0), QuantSpec::new(1, 1.0)).unwrap();
+        let c = neuron_complexity(&t);
+        assert!(c.support <= 1, "support {}", c.support);
+        assert!(c.cubes <= 1);
+    }
+
+    #[test]
+    fn random_neuron_has_nontrivial_complexity() {
+        let nr = Neuron {
+            inputs: vec![0, 1, 2, 3],
+            weights: vec![1.0, -0.7, 0.9, -1.2],
+            bias: 0.1,
+            g: 1.3,
+            h: 0.05,
+        };
+        let t = neuron_table(&nr, QuantSpec::new(2, 1.0), QuantSpec::new(2, 2.0)).unwrap();
+        let c = neuron_complexity(&t);
+        assert!(c.cubes > 0 && c.literals >= c.cubes);
+        assert!(c.support >= 3);
+    }
+}

@@ -1,0 +1,226 @@
+//! Two-level logic minimization: an Espresso-style EXPAND/IRREDUNDANT pass
+//! over cube covers, plus exact verification against the source function.
+//!
+//! This is the piece that turns a raw 2^N-entry truth table into the small
+//! sum-of-products that Vivado-class synthesis finds (paper Table 5.2: true
+//! LUT cost is a fraction of the analytical bound).
+
+use super::boolfn::BoolFn;
+
+/// A product term: covers minterm m iff `(m & care) == val`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cube {
+    pub care: u64,
+    pub val: u64,
+}
+
+impl Cube {
+    pub fn from_minterm(m: u64, nvars: usize) -> Cube {
+        let care = if nvars >= 64 { u64::MAX } else { (1u64 << nvars) - 1 };
+        Cube { care, val: m & care }
+    }
+
+    #[inline]
+    pub fn covers(&self, m: u64) -> bool {
+        (m & self.care) == self.val
+    }
+
+    /// True if `self`'s cube (as a set of minterms) contains `other`'s.
+    pub fn contains(&self, other: &Cube) -> bool {
+        (self.care & !other.care) == 0 && (other.val & self.care) == self.val
+    }
+
+    /// Number of literals.
+    pub fn num_literals(&self) -> usize {
+        self.care.count_ones() as usize
+    }
+
+    /// Iterate the minterms of this cube within `nvars` variables.
+    pub fn minterms(&self, nvars: usize) -> impl Iterator<Item = u64> + '_ {
+        let free: Vec<u64> = (0..nvars as u64)
+            .filter(|b| (self.care >> b) & 1 == 0)
+            .collect();
+        let count = 1usize << free.len();
+        let base = self.val;
+        (0..count).map(move |k| {
+            let mut m = base;
+            for (j, &b) in free.iter().enumerate() {
+                if (k >> j) & 1 == 1 {
+                    m |= 1u64 << b;
+                }
+            }
+            m
+        })
+    }
+}
+
+/// A sum-of-products cover.
+#[derive(Debug, Clone, Default)]
+pub struct Cover {
+    pub nvars: usize,
+    pub cubes: Vec<Cube>,
+}
+
+impl Cover {
+    pub fn eval(&self, m: u64) -> bool {
+        self.cubes.iter().any(|c| c.covers(m))
+    }
+
+    /// Exact equivalence against the source function.
+    pub fn equals_fn(&self, f: &BoolFn) -> bool {
+        (0..f.num_entries() as u64).all(|m| self.eval(m) == f.get(m as usize))
+    }
+
+    pub fn total_literals(&self) -> usize {
+        self.cubes.iter().map(|c| c.num_literals()).sum()
+    }
+}
+
+/// Minimize `f` into an irredundant cover.  Heuristic (not exact), but the
+/// result is always verified exactly equivalent to `f` by construction:
+/// every expansion step is validated against the off-set.
+pub fn minimize(f: &BoolFn) -> Cover {
+    let nvars = f.nvars;
+    let onset: Vec<u64> =
+        (0..f.num_entries() as u64).filter(|&m| f.get(m as usize)).collect();
+    if onset.is_empty() {
+        return Cover { nvars, cubes: Vec::new() };
+    }
+    if onset.len() == f.num_entries() {
+        return Cover { nvars, cubes: vec![Cube { care: 0, val: 0 }] };
+    }
+
+    // EXPAND: grow each minterm cube by dropping literals while the cube
+    // stays inside the on-set.
+    let mut cubes: Vec<Cube> = Vec::new();
+    let mut covered = vec![false; f.num_entries()];
+    for &m in &onset {
+        if covered[m as usize] {
+            continue;
+        }
+        let mut cube = Cube::from_minterm(m, nvars);
+        // Greedy literal drop, LSB-first variable order.
+        for v in 0..nvars {
+            let bit = 1u64 << v;
+            if cube.care & bit == 0 {
+                continue;
+            }
+            let trial = Cube { care: cube.care & !bit, val: cube.val & !bit };
+            // Valid iff every minterm of the expanded cube is in the on-set.
+            if trial.minterms(nvars).all(|t| f.get(t as usize)) {
+                cube = trial;
+            }
+        }
+        for t in cube.minterms(nvars) {
+            covered[t as usize] = true;
+        }
+        cubes.push(cube);
+    }
+
+    // Drop contained cubes.
+    let mut keep: Vec<Cube> = Vec::new();
+    'outer: for (i, c) in cubes.iter().enumerate() {
+        for (j, d) in cubes.iter().enumerate() {
+            if i != j && d.contains(c) && (d.num_literals() < c.num_literals() || j < i) {
+                continue 'outer;
+            }
+        }
+        keep.push(*c);
+    }
+
+    // IRREDUNDANT: greedy removal of cubes whose minterms are all covered
+    // by the others (largest cubes kept first).
+    keep.sort_by_key(|c| c.num_literals());
+    let mut result: Vec<Cube> = Vec::new();
+    let mut cover_count = vec![0u32; f.num_entries()];
+    for c in &keep {
+        for t in c.minterms(nvars) {
+            cover_count[t as usize] += 1;
+        }
+    }
+    for c in &keep {
+        let redundant = c.minterms(nvars).all(|t| cover_count[t as usize] > 1);
+        if redundant {
+            for t in c.minterms(nvars) {
+                cover_count[t as usize] -= 1;
+            }
+        } else {
+            result.push(*c);
+        }
+    }
+    let cover = Cover { nvars, cubes: result };
+    debug_assert!(cover.equals_fn(f), "minimized cover must stay equivalent");
+    cover
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn fn_and(nvars: usize) -> BoolFn {
+        let mut f = BoolFn::zeros(nvars);
+        f.set((1usize << nvars) - 1, true);
+        f
+    }
+
+    #[test]
+    fn and_is_single_cube() {
+        let f = fn_and(5);
+        let c = minimize(&f);
+        assert_eq!(c.cubes.len(), 1);
+        assert_eq!(c.cubes[0].num_literals(), 5);
+        assert!(c.equals_fn(&f));
+    }
+
+    #[test]
+    fn threshold_function_compresses() {
+        // f = 1 iff sum of bits >= 3 of 5: minimized cover must be far
+        // smaller than its 16 minterms.
+        let mut f = BoolFn::zeros(5);
+        for m in 0..32usize {
+            f.set(m, m.count_ones() >= 3);
+        }
+        let c = minimize(&f);
+        assert!(c.equals_fn(&f));
+        assert!(c.cubes.len() <= 10, "{} cubes", c.cubes.len());
+    }
+
+    #[test]
+    fn const_covers() {
+        let zero = BoolFn::zeros(4);
+        assert!(minimize(&zero).cubes.is_empty());
+        let mut one = BoolFn::zeros(4);
+        for m in 0..16 {
+            one.set(m, true);
+        }
+        let c = minimize(&one);
+        assert_eq!(c.cubes.len(), 1);
+        assert_eq!(c.cubes[0].num_literals(), 0);
+    }
+
+    #[test]
+    fn prop_minimize_is_exact_on_random_functions() {
+        forall("minimize-exact", 0xC0FFEE, 60, |rng: &mut Rng| {
+            let nvars = 1 + rng.below(8);
+            let mut f = BoolFn::zeros(nvars);
+            for m in 0..f.num_entries() {
+                f.set(m, rng.f64() < 0.4);
+            }
+            let c = minimize(&f);
+            assert!(c.equals_fn(&f), "cover != fn for nvars={nvars}");
+        });
+    }
+
+    #[test]
+    fn cube_contains_and_minterms() {
+        let a = Cube { care: 0b011, val: 0b001 }; // x0=1, x1=0
+        let b = Cube { care: 0b111, val: 0b101 };
+        assert!(a.contains(&b));
+        assert!(!b.contains(&a));
+        let ms: Vec<u64> = a.minterms(3).collect();
+        assert_eq!(ms.len(), 2);
+        assert!(ms.contains(&0b001) && ms.contains(&0b101));
+    }
+}

@@ -1,0 +1,443 @@
+//! Technology mapper: boolean function -> network of 6-input LUTs.
+//!
+//! Strategy per function (after support reduction):
+//! * <= 6 support vars: one LUT, structurally hashed so identical functions
+//!   over identical nets are shared across neurons and layers.
+//! * otherwise: choose the cheaper of
+//!   - Shannon decomposition (1 select var if the support is odd-sized,
+//!     2 select vars packed as a 4:1 mux LUT otherwise — this worst-cases
+//!     to exactly the paper's closed form eq. 2.3), and
+//!   - a sum-of-products build from the Espresso-minimized cover (AND trees
+//!     per cube + OR tree), which wins when training produced simple logic.
+//!
+//! Structural hashing + support reduction + cover minimization are what
+//! reproduce the paper's Table 5.2 observation (synthesized LUTs << the
+//! analytical bound).
+
+use super::boolfn::BoolFn;
+use super::cover::{minimize, Cover};
+use super::netlist::{LutNode, Net, Netlist};
+use std::collections::HashMap;
+
+/// Decomposition strategy — `ShannonOnly` disables the cover-based SOP
+/// path (ablation for the DESIGN.md design-choice study; `bench_synth`
+/// compares both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MapStrategy {
+    #[default]
+    Hybrid,
+    ShannonOnly,
+}
+
+pub struct Mapper {
+    pub netlist: Netlist,
+    pub strategy: MapStrategy,
+    /// Structural hash: (tt, input nets) -> existing node.
+    cache: HashMap<(u64, Vec<Net>), Net>,
+    /// Function cache: (compact truth table, support nets) -> net.
+    fn_cache: HashMap<(Vec<u64>, Vec<Net>), Net>,
+}
+
+impl Mapper {
+    pub fn new(num_inputs: usize) -> Mapper {
+        Mapper {
+            netlist: Netlist { num_inputs, ..Default::default() },
+            strategy: MapStrategy::Hybrid,
+            cache: HashMap::new(),
+            fn_cache: HashMap::new(),
+        }
+    }
+
+    pub fn with_strategy(num_inputs: usize, strategy: MapStrategy) -> Mapper {
+        Mapper { strategy, ..Mapper::new(num_inputs) }
+    }
+
+    /// Map function `f` whose variable i is driven by `nets[i]`.
+    pub fn map_fn(&mut self, f: &BoolFn, nets: &[Net]) -> Net {
+        assert_eq!(f.nvars, nets.len());
+        if let Some(c) = f.is_const() {
+            return if c { Net::Const1 } else { Net::Const0 };
+        }
+        // Support reduction.
+        let supp = f.support();
+        let (g, gnets): (BoolFn, Vec<Net>) = if supp.len() == f.nvars {
+            (f.clone(), nets.to_vec())
+        } else {
+            (f.compact(&supp), supp.iter().map(|&v| nets[v]).collect())
+        };
+        // Single-variable passthrough / inverter-free wire.
+        if g.nvars == 1 && g.get(1) && !g.get(0) {
+            return gnets[0];
+        }
+        let key = (g.words.clone(), gnets.clone());
+        if let Some(&net) = self.fn_cache.get(&key) {
+            return net;
+        }
+        let net = if g.nvars <= 6 {
+            self.emit_lut(&g, &gnets)
+        } else {
+            // Try Shannon; compare with cover-based SOP when the cover is
+            // promising, picking whichever uses fewer new nodes.
+            let cover_cheap = if self.strategy == MapStrategy::ShannonOnly {
+                false
+            } else {
+                true
+            } && {
+                let cover = minimize(&g);
+                estimate_cover_cost(&cover) + 1 < super_shannon_cost(g.nvars)
+            };
+            if cover_cheap {
+                let cover = minimize(&g);
+                self.build_cover(&cover, &gnets)
+            } else {
+                self.shannon(&g, &gnets)
+            }
+        };
+        self.fn_cache.insert(key, net);
+        net
+    }
+
+    /// Shannon decomposition on the top variable(s).
+    fn shannon(&mut self, f: &BoolFn, nets: &[Net]) -> Net {
+        let n = f.nvars;
+        debug_assert!(n > 6);
+        if n % 2 == 1 {
+            // split one var (the highest)
+            let v = n - 1;
+            let f0 = f.cofactor(v, false);
+            let f1 = f.cofactor(v, true);
+            let sub: Vec<Net> = nets[..v].to_vec();
+            let n0 = self.map_fn(&f0, &sub);
+            let n1 = self.map_fn(&f1, &sub);
+            if n0 == n1 {
+                return n0;
+            }
+            // mux(sel, n0, n1): 3-input LUT, inputs [n0, n1, sel]
+            let mut mux = BoolFn::zeros(3);
+            for idx in 0..8usize {
+                let sel = (idx >> 2) & 1 == 1;
+                let d = if sel { (idx >> 1) & 1 == 1 } else { idx & 1 == 1 };
+                mux.set(idx, d);
+            }
+            self.emit_lut(&mux, &[n0, n1, nets[v]])
+        } else {
+            // split two vars -> 4 cofactors + 4:1 mux in one LUT6
+            let (va, vb) = (n - 2, n - 1);
+            let mut data = Vec::with_capacity(4);
+            let sub: Vec<Net> = nets[..va].to_vec();
+            for s in 0..4usize {
+                let fa = f.cofactor(vb, (s >> 1) & 1 == 1);
+                let f2 = fa.cofactor(va, s & 1 == 1);
+                data.push(self.map_fn(&f2, &sub));
+            }
+            if data.iter().all(|&d| d == data[0]) {
+                return data[0];
+            }
+            // LUT6: inputs [d0, d1, d2, d3, sa, sb]
+            let mut mux = BoolFn::zeros(6);
+            for idx in 0..64usize {
+                let sa = (idx >> 4) & 1;
+                let sb = (idx >> 5) & 1;
+                let sel = sa | (sb << 1);
+                mux.set(idx, (idx >> sel) & 1 == 1);
+            }
+            self.emit_lut(
+                &mux,
+                &[data[0], data[1], data[2], data[3], nets[va], nets[vb]],
+            )
+        }
+    }
+
+    /// Build an AND/OR tree for a minimized cover.
+    fn build_cover(&mut self, cover: &Cover, nets: &[Net]) -> Net {
+        let mut terms: Vec<Net> = Vec::with_capacity(cover.cubes.len());
+        for cube in &cover.cubes {
+            // Gather (net, polarity) literals.
+            let lits: Vec<(Net, bool)> = (0..cover.nvars)
+                .filter(|&v| (cube.care >> v) & 1 == 1)
+                .map(|v| (nets[v], (cube.val >> v) & 1 == 1))
+                .collect();
+            terms.push(self.and_tree(&lits));
+        }
+        self.or_tree(&terms)
+    }
+
+    fn and_tree(&mut self, lits: &[(Net, bool)]) -> Net {
+        if lits.is_empty() {
+            return Net::Const1;
+        }
+        if lits.len() == 1 && lits[0].1 {
+            return lits[0].0;
+        }
+        let mut current: Vec<(Net, bool)> = lits.to_vec();
+        loop {
+            if current.len() <= 6 {
+                let k = current.len();
+                let mut tt = BoolFn::zeros(k);
+                for idx in 0..(1usize << k) {
+                    let all = (0..k).all(|j| ((idx >> j) & 1 == 1) == current[j].1);
+                    tt.set(idx, all);
+                }
+                let nets: Vec<Net> = current.iter().map(|&(n, _)| n).collect();
+                return self.emit_lut(&tt, &nets);
+            }
+            // Reduce 6 at a time into positive-polarity intermediate nets.
+            let mut next: Vec<(Net, bool)> = Vec::new();
+            for chunk in current.chunks(6) {
+                if chunk.len() == 1 {
+                    next.push(chunk[0]);
+                    continue;
+                }
+                let k = chunk.len();
+                let mut tt = BoolFn::zeros(k);
+                for idx in 0..(1usize << k) {
+                    let all = (0..k).all(|j| ((idx >> j) & 1 == 1) == chunk[j].1);
+                    tt.set(idx, all);
+                }
+                let nets: Vec<Net> = chunk.iter().map(|&(n, _)| n).collect();
+                let out = self.emit_lut(&tt, &nets);
+                next.push((out, true));
+            }
+            current = next;
+        }
+    }
+
+    fn or_tree(&mut self, terms: &[Net]) -> Net {
+        if terms.is_empty() {
+            return Net::Const0;
+        }
+        let mut current: Vec<Net> = terms.to_vec();
+        while current.len() > 1 {
+            let mut next = Vec::new();
+            for chunk in current.chunks(6) {
+                if chunk.len() == 1 {
+                    next.push(chunk[0]);
+                    continue;
+                }
+                let k = chunk.len();
+                let mut tt = BoolFn::zeros(k);
+                for idx in 1..(1usize << k) {
+                    tt.set(idx, true);
+                }
+                next.push(self.emit_lut(&tt, chunk));
+            }
+            current = next;
+        }
+        current[0]
+    }
+
+    /// Emit (or reuse) a <=6-input LUT node.  Handles constant inputs,
+    /// duplicate input nets and support reduction of the small function.
+    pub fn emit_lut(&mut self, f: &BoolFn, nets: &[Net]) -> Net {
+        debug_assert!(f.nvars <= 6);
+        debug_assert_eq!(f.nvars, nets.len());
+        // Fold constant inputs.
+        if let Some(pos) = nets.iter().position(|n| matches!(n, Net::Const0 | Net::Const1)) {
+            let val = matches!(nets[pos], Net::Const1);
+            let g = f.cofactor(pos, val);
+            let mut sub = nets.to_vec();
+            sub.remove(pos);
+            return self.emit_small(&g, &sub);
+        }
+        // Merge duplicate nets.
+        for i in 0..nets.len() {
+            for j in (i + 1)..nets.len() {
+                if nets[i] == nets[j] {
+                    // Restrict to x_i == x_j by building the merged function.
+                    let k = f.nvars - 1;
+                    let mut g = BoolFn::zeros(k);
+                    for idx2 in 0..(1usize << k) {
+                        // reinsert bit j equal to bit i
+                        let low_mask = (1usize << j) - 1;
+                        let base = (idx2 & low_mask) | ((idx2 & !low_mask) << 1);
+                        let bi = if i < j { (idx2 >> i) & 1 } else { (idx2 >> (i - 1)) & 1 };
+                        let idx = base | (bi << j);
+                        g.set(idx2, f.get(idx));
+                    }
+                    let mut sub = nets.to_vec();
+                    sub.remove(j);
+                    return self.emit_small(&g, &sub);
+                }
+            }
+        }
+        self.emit_small(f, nets)
+    }
+
+    fn emit_small(&mut self, f: &BoolFn, nets: &[Net]) -> Net {
+        if let Some(c) = f.is_const() {
+            return if c { Net::Const1 } else { Net::Const0 };
+        }
+        let supp = f.support();
+        let (g, gnets): (BoolFn, Vec<Net>) = if supp.len() == f.nvars {
+            (f.clone(), nets.to_vec())
+        } else {
+            (f.compact(&supp), supp.iter().map(|&v| nets[v]).collect())
+        };
+        if g.nvars == 1 {
+            if g.get(1) && !g.get(0) {
+                return gnets[0];
+            }
+        }
+        // Canonical input order: sort nets, permute tt accordingly.
+        let (tt, sorted_nets) = canonical_order(&g, &gnets);
+        let key = (tt, sorted_nets.clone());
+        if let Some(&n) = self.cache.get(&key) {
+            return n;
+        }
+        let level = 1 + sorted_nets
+            .iter()
+            .map(|&n| self.netlist.level_of(n))
+            .max()
+            .unwrap_or(0);
+        let id = self.netlist.nodes.len() as u32;
+        self.netlist.nodes.push(LutNode { inputs: sorted_nets, tt, level });
+        let net = Net::Node(id);
+        self.cache.insert(key, net);
+        net
+    }
+}
+
+/// Permute a <=6-var function so its input nets are in ascending order;
+/// returns the permuted u64 truth table and sorted nets.
+fn canonical_order(f: &BoolFn, nets: &[Net]) -> (u64, Vec<Net>) {
+    let k = f.nvars;
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by_key(|&i| nets[i]);
+    let mut tt = 0u64;
+    for idx in 0..(1usize << k) {
+        // idx indexes the *sorted* inputs; map back to original variable
+        // positions.
+        let mut orig = 0usize;
+        for (newpos, &oldpos) in order.iter().enumerate() {
+            if (idx >> newpos) & 1 == 1 {
+                orig |= 1 << oldpos;
+            }
+        }
+        if f.get(orig) {
+            tt |= 1u64 << idx;
+        }
+    }
+    (tt, order.iter().map(|&i| nets[i]).collect())
+}
+
+/// Worst-case Shannon cost (the analytical closed form, eq. 2.3, M=1).
+fn super_shannon_cost(nvars: usize) -> usize {
+    crate::cost::lut_cost(nvars, 1) as usize
+}
+
+/// Optimistic node count of a cover build (used only to pick a strategy).
+fn estimate_cover_cost(cover: &Cover) -> usize {
+    let mut cost = 0usize;
+    for cube in &cover.cubes {
+        let k = cube.num_literals();
+        if k > 6 {
+            cost += k.div_ceil(6) + 1;
+        } else {
+            cost += 1;
+        }
+    }
+    if cover.cubes.len() > 1 {
+        cost += (cover.cubes.len() - 1).div_ceil(5);
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn nets(n: usize) -> Vec<Net> {
+        (0..n as u32).map(Net::Input).collect()
+    }
+
+    fn check_equiv(f: &BoolFn, mapper: &Mapper, out: Net, num_inputs: usize) {
+        for idx in 0..f.num_entries() {
+            let bits: Vec<bool> = (0..num_inputs).map(|v| (idx >> v) & 1 == 1).collect();
+            let got = match out {
+                Net::Const0 => false,
+                Net::Const1 => true,
+                Net::Input(i) => bits[i as usize],
+                Net::Node(_) => {
+                    let mut nl = mapper.netlist.clone();
+                    nl.outputs = vec![out];
+                    nl.eval(&bits)[0]
+                }
+            };
+            assert_eq!(got, f.get(idx), "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn small_fn_is_single_lut() {
+        let mut f = BoolFn::zeros(4);
+        for idx in 0..16usize {
+            f.set(idx, idx.count_ones() % 2 == 1);
+        }
+        let mut m = Mapper::new(4);
+        let out = m.map_fn(&f, &nets(4));
+        assert_eq!(m.netlist.num_luts(), 1);
+        check_equiv(&f, &m, out, 4);
+    }
+
+    #[test]
+    fn shared_function_maps_once() {
+        let mut f = BoolFn::zeros(3);
+        f.set(7, true);
+        let mut m = Mapper::new(3);
+        let a = m.map_fn(&f, &nets(3));
+        let b = m.map_fn(&f, &nets(3));
+        assert_eq!(a, b);
+        assert_eq!(m.netlist.num_luts(), 1);
+    }
+
+    #[test]
+    fn wide_xor_maps_correctly() {
+        // 9-var XOR: worst case for covers, exercises Shannon path.
+        let mut f = BoolFn::zeros(9);
+        for idx in 0..512usize {
+            f.set(idx, idx.count_ones() % 2 == 1);
+        }
+        let mut m = Mapper::new(9);
+        let out = m.map_fn(&f, &nets(9));
+        assert!(m.netlist.num_luts() <= super_shannon_cost(9) + 2, "{}", m.netlist.num_luts());
+        check_equiv(&f, &m, out, 9);
+    }
+
+    #[test]
+    fn wide_and_uses_cover_path() {
+        // 12-var AND: cover = 1 cube -> ~3 LUTs, vs Shannon bound 85.
+        let mut f = BoolFn::zeros(12);
+        f.set((1usize << 12) - 1, true);
+        let mut m = Mapper::new(12);
+        let out = m.map_fn(&f, &nets(12));
+        assert!(m.netlist.num_luts() <= 4, "{}", m.netlist.num_luts());
+        check_equiv(&f, &m, out, 12);
+    }
+
+    #[test]
+    fn prop_mapper_equivalent_on_random_functions() {
+        forall("mapper-equiv", 0xAB, 40, |rng: &mut Rng| {
+            let nvars = 1 + rng.below(9);
+            let mut f = BoolFn::zeros(nvars);
+            for idx in 0..f.num_entries() {
+                f.set(idx, rng.f64() < 0.5);
+            }
+            let mut m = Mapper::new(nvars);
+            let out = m.map_fn(&f, &nets(nvars));
+            check_equiv(&f, &m, out, nvars);
+        });
+    }
+
+    #[test]
+    fn constant_inputs_fold() {
+        // f(a, b) = a AND b with b = const1 -> passthrough of a, no LUT.
+        let mut f = BoolFn::zeros(2);
+        f.set(3, true);
+        let mut m = Mapper::new(1);
+        let out = m.emit_lut(&f, &[Net::Input(0), Net::Const1]);
+        assert_eq!(out, Net::Input(0));
+        assert_eq!(m.netlist.num_luts(), 0);
+    }
+}

@@ -1,0 +1,359 @@
+//! Logic-synthesis simulator (the Vivado substitution; DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! Pipeline: truth tables → two-level minimization (`cover`) → technology
+//! mapping onto 6-input LUTs with structural hashing (`mapper`) → netlist
+//! with static timing (`netlist`) → resource report.  Reproduces the shape
+//! of the paper's Tables 5.2/5.3: synthesized LUT counts are a fraction of
+//! the analytical bound, WNS degrades as fan-in bits grow, and wide-fan-in
+//! neurons spill into BRAMs.
+
+pub mod boolfn;
+pub mod complexity;
+pub mod cover;
+pub mod mapper;
+pub mod netlist;
+
+use crate::luts::ModelTables;
+use crate::nn::ExportedModel;
+use anyhow::{ensure, Result};
+pub use boolfn::BoolFn;
+pub use mapper::Mapper;
+pub use netlist::{BramNeuron, LutNode, Net, Netlist, period_for_depth};
+
+#[derive(Debug, Clone, Copy)]
+pub struct SynthOpts {
+    /// Registers at input and between layers (Fig. 5.1).  Affects FF count
+    /// and the timing model (per-stage vs whole-cone critical path).
+    pub registers: bool,
+    /// Target clock in ns (paper used 5 ns).
+    pub clock_ns: f64,
+    /// Neurons with at least this many truth-table input bits are mapped to
+    /// BRAM instead of LUTs (0 disables BRAM mapping).
+    pub bram_min_bits: usize,
+}
+
+impl Default for SynthOpts {
+    fn default() -> Self {
+        SynthOpts { registers: true, clock_ns: 5.0, bram_min_bits: 13 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub luts: usize,
+    pub ffs: usize,
+    pub brams: usize,
+    pub dsps: usize,
+    pub depth: u32,
+    pub min_period_ns: f64,
+    pub wns_ns: f64,
+    pub analytical_luts: u64,
+    /// analytical / synthesized (the paper's "Reduction" column, T5.2).
+    pub reduction: f64,
+    /// Layers included in the netlist (sparse layers only).
+    pub layers: Vec<usize>,
+}
+
+/// Synthesize every table-mapped (sparse) layer of the model into one LUT
+/// netlist.  Dense heads stay arithmetic (costed by eq. 4.1) exactly as in
+/// the paper's tool-flow.
+pub fn synthesize(
+    model: &ExportedModel,
+    tables: &ModelTables,
+    opts: SynthOpts,
+) -> Result<(Netlist, SynthReport)> {
+    let emitted: Vec<usize> = tables
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.is_some())
+        .map(|(i, _)| i)
+        .collect();
+    ensure!(!emitted.is_empty(), "no sparse layers to synthesize");
+    // Bit-level nets of each activation (input + each emitted layer).
+    let first = emitted[0];
+    let in_bw = tables.layers[first].as_ref().unwrap().quant_in.bw;
+    let in_bus = model.layers[first].in_f * in_bw;
+    let mut mapper = Mapper::new(in_bus);
+
+    let mut acts_nets: Vec<Vec<Net>> =
+        vec![(0..in_bus as u32).map(Net::Input).collect()];
+    let mut layer_depths: Vec<u32> = Vec::new();
+    let mut analytical: u64 = 0;
+    let mut ff_bits = if opts.registers { in_bus } else { 0 };
+    let mut outputs: Vec<Net> = Vec::new();
+
+    for (k, &li) in emitted.iter().enumerate() {
+        let lt = tables.layers[li].as_ref().unwrap();
+        let layer = &model.layers[li];
+        let bw = lt.quant_in.bw;
+        // Input nets with skip wiring (newest-first concat, bit level).
+        let inp_nets: Vec<Net> = if li == 0 || model.skips == 0 {
+            acts_nets.last().unwrap().clone()
+        } else {
+            let lo = li.saturating_sub(model.skips);
+            let mut v = Vec::new();
+            for j in (lo..acts_nets.len()).rev() {
+                v.extend_from_slice(&acts_nets[j]);
+            }
+            v
+        };
+        ensure!(
+            inp_nets.len() == layer.in_f * bw,
+            "layer {li}: net bus {} != in_f {} * bw {bw}",
+            inp_nets.len(),
+            layer.in_f
+        );
+        let base_level: u32 = inp_nets
+            .iter()
+            .map(|&n| mapper.netlist.level_of(n))
+            .max()
+            .unwrap_or(0);
+        let mut layer_out: Vec<Net> = Vec::with_capacity(lt.tables.len() * lt.quant_out.bw);
+        for (nj, table) in lt.tables.iter().enumerate() {
+            let nr = &layer.neurons[nj];
+            analytical += crate::cost::lut_cost(table.in_bits, table.out_bits);
+            if opts.bram_min_bits > 0 && table.in_bits >= opts.bram_min_bits {
+                // Spill to BRAM: 18Kb blocks.
+                let bits = (1u64 << table.in_bits) * table.out_bits as u64;
+                let blocks = bits.div_ceil(18 * 1024) as usize;
+                mapper.netlist.brams.push(BramNeuron {
+                    in_bits: table.in_bits,
+                    out_bits: table.out_bits,
+                    blocks,
+                });
+                // BRAM outputs behave like registered ports: fresh pseudo
+                // inputs (the netlist is no longer end-to-end evaluable;
+                // callers check `brams.is_empty()` before eval).
+                for _ in 0..table.out_bits {
+                    let id = mapper.netlist.num_inputs as u32;
+                    mapper.netlist.num_inputs += 1;
+                    layer_out.push(Net::Input(id));
+                }
+                continue;
+            }
+            // Gather the neuron's input nets in pack_index order.
+            let nets: Vec<Net> = nr
+                .inputs
+                .iter()
+                .flat_map(|&j| (0..bw).map(move |b| (j, b)))
+                .map(|(j, b)| inp_nets[j * bw + b])
+                .collect();
+            for bit in 0..table.out_bits {
+                let f = BoolFn::new(table.in_bits, table.output_bit_fn(bit));
+                layer_out.push(mapper.map_fn(&f, &nets));
+            }
+        }
+        let out_level: u32 = layer_out
+            .iter()
+            .map(|&n| mapper.netlist.level_of(n))
+            .max()
+            .unwrap_or(base_level);
+        layer_depths.push(out_level.saturating_sub(base_level));
+        if k + 1 < emitted.len() {
+            if opts.registers {
+                ff_bits += layer_out.len();
+            }
+            acts_nets.push(layer_out);
+        } else {
+            outputs = layer_out;
+        }
+    }
+
+    mapper.netlist.outputs = outputs;
+    mapper.netlist.layer_depths = layer_depths.clone();
+    let netlist = mapper.netlist;
+
+    let depth = if opts.registers {
+        layer_depths.iter().copied().max().unwrap_or(0)
+    } else {
+        netlist.depth()
+    };
+    let min_period = period_for_depth(depth.max(1));
+    let luts = netlist.num_luts();
+    let report = SynthReport {
+        luts,
+        ffs: ff_bits,
+        brams: netlist.num_brams(),
+        dsps: 0,
+        depth,
+        min_period_ns: min_period,
+        wns_ns: opts.clock_ns - min_period,
+        analytical_luts: analytical,
+        reduction: analytical as f64 / luts.max(1) as f64,
+        layers: emitted,
+    };
+    Ok((netlist, report))
+}
+
+/// Equivalence check: run `samples` random input vectors through both the
+/// truth-table forward and the synthesized netlist; returns mismatches.
+/// Only valid when no neuron was spilled to BRAM.
+pub fn verify_netlist(
+    model: &ExportedModel,
+    tables: &ModelTables,
+    netlist: &Netlist,
+    samples: usize,
+    seed: u64,
+) -> Result<usize> {
+    ensure!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+    let emitted: Vec<usize> = tables
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.is_some())
+        .map(|(i, _)| i)
+        .collect();
+    let first = emitted[0];
+    let last = *emitted.last().unwrap();
+    // Only contiguous sparse prefixes ending the netlist are comparable in
+    // this helper (no skip wiring support here).
+    ensure!(model.skips == 0, "verify_netlist: skip wiring unsupported");
+    let lt_first = tables.layers[first].as_ref().unwrap();
+    let bw_in = lt_first.quant_in.bw;
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut mismatches = 0usize;
+    for _ in 0..samples {
+        // Random input codes.
+        let codes: Vec<u32> = (0..model.layers[first].in_f)
+            .map(|_| rng.below(1 << bw_in) as u32)
+            .collect();
+        // Netlist input bits.
+        let mut bits = vec![false; netlist.num_inputs];
+        for (j, &c) in codes.iter().enumerate() {
+            for b in 0..bw_in {
+                bits[j * bw_in + b] = (c >> b) & 1 == 1;
+            }
+        }
+        let net_out = netlist.eval(&bits);
+        // Table-path reference: propagate codes through sparse layers.
+        let mut cur = codes.clone();
+        for &li in &emitted {
+            let lt = tables.layers[li].as_ref().unwrap();
+            let mut next = Vec::with_capacity(lt.tables.len());
+            for (nj, t) in lt.tables.iter().enumerate() {
+                let nr = &model.layers[li].neurons[nj];
+                let gathered: Vec<u32> = nr.inputs.iter().map(|&j| cur[j]).collect();
+                next.push(t.lookup(crate::util::bits::pack_index(&gathered, lt.quant_in.bw)));
+            }
+            cur = next;
+        }
+        let out_bw = tables.layers[last].as_ref().unwrap().quant_out.bw;
+        let mut expect_bits = Vec::with_capacity(cur.len() * out_bw);
+        for &c in &cur {
+            for b in 0..out_bw {
+                expect_bits.push((c >> b) & 1 == 1);
+            }
+        }
+        if net_out != expect_bits {
+            mismatches += 1;
+        }
+    }
+    Ok(mismatches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+    use crate::util::rng::Rng;
+
+    fn random_model(seed: u64, in_f: usize, widths: &[usize], fanin: usize, bw: usize) -> ExportedModel {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        let mut prev = in_f;
+        for (k, &w) in widths.iter().enumerate() {
+            let qi = if k == 0 { QuantSpec::new(bw, 1.0) } else { QuantSpec::new(bw, 2.0) };
+            let qo = QuantSpec::new(bw, 2.0);
+            let neurons = (0..w)
+                .map(|_| {
+                    let inputs = rng.choose_k(prev, fanin.min(prev));
+                    let weights =
+                        inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect();
+                    Neuron { inputs, weights, bias: rng.normal_f32(0.0, 0.1), g: 1.0, h: 0.0 }
+                })
+                .collect();
+            layers.push(ExportedLayer::uniform(neurons, prev, qi, qo, true));
+            prev = w;
+        }
+        ExportedModel {
+            layers,
+            in_features: in_f,
+            classes: *widths.last().unwrap(),
+            skips: 0,
+            act_widths: std::iter::once(in_f).chain(widths.iter().copied()).collect(),
+        }
+    }
+
+    #[test]
+    fn synthesized_beats_analytical() {
+        let model = random_model(1, 16, &[32, 16], 3, 2);
+        let tables = crate::luts::ModelTables::generate(&model).unwrap();
+        let (netlist, report) =
+            synthesize(&model, &tables, SynthOpts { registers: false, ..Default::default() })
+                .unwrap();
+        assert!(report.luts > 0);
+        assert!(
+            (report.luts as u64) <= report.analytical_luts,
+            "synth {} > analytical {}",
+            report.luts,
+            report.analytical_luts
+        );
+        assert!(report.reduction >= 1.0);
+        assert_eq!(netlist.num_brams(), 0);
+    }
+
+    #[test]
+    fn netlist_equivalent_to_tables() {
+        let model = random_model(2, 12, &[24, 8], 3, 2);
+        let tables = crate::luts::ModelTables::generate(&model).unwrap();
+        let (netlist, _) =
+            synthesize(&model, &tables, SynthOpts { registers: false, ..Default::default() })
+                .unwrap();
+        let mism = verify_netlist(&model, &tables, &netlist, 200, 7).unwrap();
+        assert_eq!(mism, 0, "netlist must be functionally identical");
+    }
+
+    #[test]
+    fn registered_timing_uses_max_layer_depth() {
+        let model = random_model(3, 16, &[32, 32, 16], 4, 2);
+        let tables = crate::luts::ModelTables::generate(&model).unwrap();
+        let (_, reg) =
+            synthesize(&model, &tables, SynthOpts { registers: true, clock_ns: 5.0, bram_min_bits: 13 })
+                .unwrap();
+        let (_, comb) =
+            synthesize(&model, &tables, SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 13 })
+                .unwrap();
+        assert!(reg.depth <= comb.depth);
+        assert!(reg.ffs > 0 && comb.ffs == 0);
+        assert!(reg.wns_ns >= comb.wns_ns);
+    }
+
+    #[test]
+    fn bram_spill_for_wide_neurons() {
+        let model = random_model(4, 20, &[8], 7, 2); // 14 input bits
+        let tables = crate::luts::ModelTables::generate(&model).unwrap();
+        let (netlist, report) = synthesize(
+            &model,
+            &tables,
+            SynthOpts { registers: true, clock_ns: 5.0, bram_min_bits: 14 },
+        )
+        .unwrap();
+        assert!(report.brams > 0, "wide neurons must spill to BRAM");
+        assert_eq!(report.luts, 0);
+        assert!(!netlist.brams.is_empty());
+    }
+
+    #[test]
+    fn deeper_fanin_degrades_wns() {
+        let small = random_model(5, 16, &[16], 3, 2); // 6-bit tables
+        let large = random_model(6, 16, &[16], 5, 2); // 10-bit tables
+        let ts = crate::luts::ModelTables::generate(&small).unwrap();
+        let tl = crate::luts::ModelTables::generate(&large).unwrap();
+        let (_, rs) = synthesize(&small, &ts, SynthOpts::default()).unwrap();
+        let (_, rl) = synthesize(&large, &tl, SynthOpts::default()).unwrap();
+        assert!(rl.depth >= rs.depth);
+        assert!(rl.wns_ns <= rs.wns_ns);
+    }
+}

@@ -1,0 +1,139 @@
+//! Mapped LUT netlist: the synthesis result.  Nodes are K<=6-input LUTs
+//! over primary inputs, constants or other nodes; neurons mapped to BRAM
+//! are tracked separately (the paper observed Vivado spilling wide-fan-in
+//! neurons into BRAMs, §5.4).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Net {
+    Const0,
+    Const1,
+    Input(u32),
+    Node(u32),
+}
+
+impl Net {
+    pub fn key(&self) -> u64 {
+        match self {
+            Net::Const0 => 0,
+            Net::Const1 => 1,
+            Net::Input(i) => 2 + 2 * (*i as u64),
+            Net::Node(i) => 3 + 2 * (*i as u64),
+        }
+    }
+}
+
+/// One mapped K-LUT (K <= 6): output = tt bit at the packed input index.
+#[derive(Debug, Clone)]
+pub struct LutNode {
+    pub inputs: Vec<Net>,
+    pub tt: u64,
+    /// Logic level (1 + max level of inputs); inputs/constants are level 0.
+    pub level: u32,
+}
+
+/// A neuron kept as a memory block instead of logic.
+#[derive(Debug, Clone)]
+pub struct BramNeuron {
+    pub in_bits: usize,
+    pub out_bits: usize,
+    /// 18Kb BRAM blocks consumed.
+    pub blocks: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub num_inputs: usize,
+    pub nodes: Vec<LutNode>,
+    pub outputs: Vec<Net>,
+    pub brams: Vec<BramNeuron>,
+    /// Output nets grouped per layer (for registered-timing analysis);
+    /// `layer_bounds[i]` = node count when layer i finished mapping.
+    pub layer_depths: Vec<u32>,
+}
+
+impl Netlist {
+    pub fn num_luts(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_brams(&self) -> usize {
+        self.brams.iter().map(|b| b.blocks).sum()
+    }
+
+    pub fn level_of(&self, net: Net) -> u32 {
+        match net {
+            Net::Node(i) => self.nodes[i as usize].level,
+            _ => 0,
+        }
+    }
+
+    /// Combinational depth to the outputs.
+    pub fn depth(&self) -> u32 {
+        self.outputs.iter().map(|&o| self.level_of(o)).max().unwrap_or(0)
+    }
+
+    /// Evaluate on a primary-input bit vector (for equivalence checking).
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.num_inputs);
+        let mut values = vec![false; self.nodes.len()];
+        let get = |values: &Vec<bool>, net: Net| -> bool {
+            match net {
+                Net::Const0 => false,
+                Net::Const1 => true,
+                Net::Input(i) => inputs[i as usize],
+                Net::Node(i) => values[i as usize],
+            }
+        };
+        for (i, node) in self.nodes.iter().enumerate() {
+            let mut idx = 0usize;
+            for (j, &inp) in node.inputs.iter().enumerate() {
+                if get(&values, inp) {
+                    idx |= 1 << j;
+                }
+            }
+            values[i] = (node.tt >> idx) & 1 == 1;
+        }
+        self.outputs.iter().map(|&o| get(&values, o)).collect()
+    }
+}
+
+/// Timing model constants (UltraScale+-flavored; see DESIGN.md
+/// §Hardware-Adaptation — calibrated so a 1-level design lands near the
+/// paper's 0.768 ns minimum period).
+pub const T_REG_NS: f64 = 0.30;
+pub const T_LUT_NS: f64 = 0.15;
+pub const T_NET_NS: f64 = 0.40;
+
+pub fn period_for_depth(depth: u32) -> f64 {
+    T_REG_NS + depth as f64 * (T_LUT_NS + T_NET_NS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_simple_and_or() {
+        // n0 = AND(in0, in1); n1 = OR(n0, in2)
+        let netlist = Netlist {
+            num_inputs: 3,
+            nodes: vec![
+                LutNode { inputs: vec![Net::Input(0), Net::Input(1)], tt: 0b1000, level: 1 },
+                LutNode { inputs: vec![Net::Node(0), Net::Input(2)], tt: 0b1110, level: 2 },
+            ],
+            outputs: vec![Net::Node(1)],
+            brams: vec![],
+            layer_depths: vec![2],
+        };
+        assert_eq!(netlist.eval(&[true, true, false]), vec![true]);
+        assert_eq!(netlist.eval(&[false, true, false]), vec![false]);
+        assert_eq!(netlist.eval(&[false, false, true]), vec![true]);
+        assert_eq!(netlist.depth(), 2);
+    }
+
+    #[test]
+    fn period_grows_with_depth() {
+        assert!(period_for_depth(1) < period_for_depth(3));
+        assert!((period_for_depth(1) - 0.85).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,217 @@
+//! Binary checkpointing of `ModelState` (simple length-prefixed LE format).
+//!
+//! Experiments cache trained models under `reports/ckpt/` so that tables
+//! sharing a model (e.g. T6.2 and T5.3) train it once.  Format:
+//!
+//! ```text
+//! magic "LNCK" | version u32 | num_layers u32 |
+//! per layer: out u32, in u32 |
+//! then for each tensor group in a fixed order: f32 LE payloads |
+//! masks as per-neuron index lists (u32 count + u32 indices)
+//! ```
+
+use super::state::ModelState;
+use crate::sparsity::Mask;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"LNCK";
+const VERSION: u32 = 2;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        ensure!(self.i + 4 <= self.b.len(), "truncated checkpoint");
+        let v = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap());
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        ensure!(self.i + 4 * n <= self.b.len(), "truncated checkpoint payload");
+        let mut out = Vec::with_capacity(n);
+        for k in 0..n {
+            let off = self.i + 4 * k;
+            out.push(f32::from_le_bytes(self.b[off..off + 4].try_into().unwrap()));
+        }
+        self.i += 4 * n;
+        Ok(out)
+    }
+}
+
+pub fn serialize(state: &ModelState) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, state.num_layers() as u32);
+    for &(o, i) in &state.layer_dims {
+        put_u32(&mut out, o as u32);
+        put_u32(&mut out, i as u32);
+    }
+    for group in [
+        &state.ws,
+        &state.bs,
+        &state.gammas,
+        &state.betas,
+        &state.vws,
+        &state.vbs,
+        &state.vgammas,
+        &state.vbetas,
+        &state.rmeans,
+        &state.rvars,
+        &state.momentum_m,
+    ] {
+        for t in group.iter() {
+            put_f32s(&mut out, t);
+        }
+    }
+    for m in &state.masks {
+        put_u32(&mut out, m.rows.len() as u32);
+        for row in &m.rows {
+            put_u32(&mut out, row.len() as u32);
+            for &idx in row {
+                put_u32(&mut out, idx as u32);
+            }
+        }
+    }
+    out
+}
+
+pub fn deserialize(bytes: &[u8]) -> Result<ModelState> {
+    if bytes.len() < 12 || &bytes[..4] != MAGIC {
+        bail!("not a LNCK checkpoint");
+    }
+    let mut r = Reader { b: bytes, i: 4 };
+    let version = r.u32()?;
+    ensure!(version == VERSION, "checkpoint version {version} != {VERSION}");
+    let n = r.u32()? as usize;
+    let mut layer_dims = Vec::with_capacity(n);
+    for _ in 0..n {
+        let o = r.u32()? as usize;
+        let i = r.u32()? as usize;
+        layer_dims.push((o, i));
+    }
+    let mut groups: Vec<Vec<Vec<f32>>> = Vec::with_capacity(11);
+    for _ in 0..11 {
+        let mut g = Vec::with_capacity(n);
+        for _ in 0..n {
+            g.push(r.f32s()?);
+        }
+        groups.push(g);
+    }
+    let mut masks = Vec::with_capacity(n);
+    for l in 0..n {
+        let rows_n = r.u32()? as usize;
+        ensure!(rows_n == layer_dims[l].0, "mask row count mismatch");
+        let mut rows = Vec::with_capacity(rows_n);
+        for _ in 0..rows_n {
+            let k = r.u32()? as usize;
+            let mut row = Vec::with_capacity(k);
+            for _ in 0..k {
+                row.push(r.u32()? as usize);
+            }
+            rows.push(row);
+        }
+        masks.push(Mask { out_f: layer_dims[l].0, in_f: layer_dims[l].1, rows });
+    }
+    let mut it = groups.into_iter();
+    Ok(ModelState {
+        layer_dims,
+        ws: it.next().unwrap(),
+        bs: it.next().unwrap(),
+        gammas: it.next().unwrap(),
+        betas: it.next().unwrap(),
+        vws: it.next().unwrap(),
+        vbs: it.next().unwrap(),
+        vgammas: it.next().unwrap(),
+        vbetas: it.next().unwrap(),
+        rmeans: it.next().unwrap(),
+        rvars: it.next().unwrap(),
+        momentum_m: it.next().unwrap(),
+        masks,
+    })
+}
+
+pub fn save(state: &ModelState, path: &std::path::Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(&serialize(state))?;
+    Ok(())
+}
+
+pub fn load(path: &std::path::Path) -> Result<ModelState> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {path:?}"))?
+        .read_to_end(&mut bytes)?;
+    deserialize(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::sparsity::prune::PruneMethod;
+
+    fn man() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "name":"t","kind":"mlp","in_features":6,"classes":3,"hidden":[8],
+          "bw":2,"bw_in":2,"bw_out":2,"fanin":2,"fanin_fc":null,
+          "batch":4,"eval_batch":4,"dataset":"jets",
+          "layers":[{"in":6,"out":8,"fanin":2,"bw_in":2,"maxv_in":1.0},
+                    {"in":8,"out":3,"fanin":null,"bw_in":2,"maxv_in":2.0}]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut st = ModelState::init(&man(), 5, PruneMethod::APriori);
+        st.ws[0][3] = 1.25;
+        st.rvars[1][2] = 0.5;
+        let bytes = serialize(&st);
+        let back = deserialize(&bytes).unwrap();
+        assert_eq!(back.ws, st.ws);
+        assert_eq!(back.rvars, st.rvars);
+        assert_eq!(back.masks, st.masks);
+        assert_eq!(back.layer_dims, st.layer_dims);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let st = ModelState::init(&man(), 5, PruneMethod::APriori);
+        let mut bytes = serialize(&st);
+        bytes.truncate(bytes.len() / 2);
+        assert!(deserialize(&bytes).is_err());
+        assert!(deserialize(b"JUNKJUNKJUNK").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let st = ModelState::init(&man(), 7, PruneMethod::APriori);
+        let path = std::env::temp_dir().join("lnck_test.bin");
+        save(&st, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.ws, st.ws);
+    }
+}

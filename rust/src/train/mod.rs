@@ -1,0 +1,258 @@
+//! L3 training driver: drives the AOT-compiled `train_step` HLO from Rust.
+//!
+//! The coordinator owns everything XLA does not: batching, optimizer-state
+//! buffers, EMA batch-norm statistics, the exponentially-smoothed gradient
+//! (for sparse-momentum pruning) and the pruning schedules that rewrite the
+//! connectivity masks between steps.  Masks are runtime *inputs* of the HLO
+//! entry point, so pruning never recompiles anything.
+//!
+//! Perf note (§Perf in EXPERIMENTS.md): parameters and velocities circulate
+//! as XLA `Literal`s — the tuple outputs of step t are fed directly as the
+//! inputs of step t+1.  Host copies happen only for the small per-step
+//! outputs (loss, batch stats), for weight gradients when the sparse-
+//! momentum method needs them, and at pruning events; this removed the
+//! 2×params/step host round-trip of the naive driver.
+
+pub mod checkpoint;
+pub mod state;
+
+use crate::data::DataSet;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_to_f32, scalar_f32, Artifact};
+use crate::sparsity::prune::{PruneMethod, Pruner};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+pub use state::ModelState;
+
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub method: PruneMethod,
+    pub log_every: usize,
+    /// EMA factor for running batch-norm stats (r = ema*r + (1-ema)*batch).
+    pub bn_ema: f32,
+    /// EMA factor for the sparse-momentum gradient buffer (Alg. 1's alpha).
+    pub momentum_alpha: f32,
+    pub verbose: bool,
+}
+
+impl TrainOpts {
+    pub fn from_manifest(man: &crate::runtime::Manifest) -> TrainOpts {
+        TrainOpts {
+            steps: man.steps,
+            lr: man.lr,
+            seed: 0xC0DE,
+            method: PruneMethod::APriori,
+            log_every: 25,
+            bn_ema: 0.9,
+            momentum_alpha: 0.9,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    /// (step, loss) samples at `log_every` cadence.
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub mask_updates: usize,
+    pub steps: usize,
+    pub seconds: f64,
+}
+
+/// Run `opts.steps` optimizer steps of `art` on `train_set`.
+pub fn train(
+    art: &Artifact,
+    state: &mut ModelState,
+    train_set: &DataSet,
+    opts: &TrainOpts,
+) -> Result<TrainLog> {
+    let man = &art.manifest;
+    ensure!(train_set.d == man.in_features, "dataset width mismatch");
+    ensure!(train_set.classes == man.classes, "dataset class mismatch");
+    let n = man.num_layers();
+    let mut rng = Rng::new(opts.seed ^ 0x7261696e);
+    let pruners: Vec<Pruner> = (0..n)
+        .map(|i| Pruner::new(opts.method, man.layers[i].fanin))
+        .collect();
+    let needs_grads = matches!(opts.method, PruneMethod::Momentum { .. });
+    let mut log = TrainLog::default();
+    let t0 = std::time::Instant::now();
+
+    // Parameter/velocity literals in flat order (w,b,gamma,beta,vw,vb,vg,vbe
+    // × layers each); fed back output->input without host round-trips.
+    let mut plits: Vec<xla::Literal> = Vec::with_capacity(8 * n);
+    for group in [&state.ws, &state.bs, &state.gammas, &state.betas] {
+        for (i, v) in group.iter().enumerate() {
+            plits.push(lit_f32(v, &state.shape(i, v.len()))?);
+        }
+    }
+    for group in [&state.vws, &state.vbs, &state.vgammas, &state.vbetas] {
+        for (i, v) in group.iter().enumerate() {
+            plits.push(lit_f32(v, &state.shape(i, v.len()))?);
+        }
+    }
+    let mut mask_lits: Vec<xla::Literal> = (0..n)
+        .map(|i| {
+            let l = &man.layers[i];
+            lit_f32(&state.masks[i].to_dense_f32(), &[l.out_f as i64, l.in_f as i64])
+        })
+        .collect::<Result<_>>()?;
+
+    for step in 0..opts.steps {
+        let (bx, by) = train_set.sample_batch(man.batch, &mut rng);
+        // Simple linear decay keeps the quantized logits stable late in
+        // training.
+        let lr = opts.lr * (1.0 - 0.9 * step as f32 / opts.steps.max(1) as f32);
+        let x_lit = lit_f32(&bx, &[man.batch as i64, man.in_features as i64])?;
+        let y_lit = lit_i32(&by, &[man.batch as i64])?;
+        let lr_lit = lit_scalar_f32(lr);
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(9 * n + 3);
+        inputs.extend(plits.iter());
+        inputs.extend(mask_lits.iter());
+        inputs.push(&x_lit);
+        inputs.push(&y_lit);
+        inputs.push(&lr_lit);
+
+        let mut out = art.train_step.run(&inputs)?;
+        ensure!(
+            out.len() == 11 * n + 1,
+            "train_step output arity {} != {}",
+            out.len(),
+            11 * n + 1
+        );
+        let rest = out.split_off(8 * n);
+        plits = out;
+
+        let loss = scalar_f32(&rest[0])?;
+        for i in 0..n {
+            if needs_grads {
+                let gw = lit_to_f32(&rest[1 + i])?;
+                let mm = &mut state.momentum_m[i];
+                for (m, g) in mm.iter_mut().zip(&gw) {
+                    *m = opts.momentum_alpha * *m + (1.0 - opts.momentum_alpha) * g;
+                }
+            }
+            let mu = lit_to_f32(&rest[n + 1 + i])?;
+            let var = lit_to_f32(&rest[2 * n + 1 + i])?;
+            for (r, b) in state.rmeans[i].iter_mut().zip(&mu) {
+                *r = opts.bn_ema * *r + (1.0 - opts.bn_ema) * b;
+            }
+            for (r, b) in state.rvars[i].iter_mut().zip(&var) {
+                *r = opts.bn_ema * *r + (1.0 - opts.bn_ema) * b;
+            }
+        }
+
+        // Pruning callbacks (may rewrite masks).  Host copies of the weight
+        // tensors are made only at event steps.
+        if !matches!(opts.method, PruneMethod::APriori) {
+            for i in 0..n {
+                let event = match opts.method {
+                    PruneMethod::Iterative { every } | PruneMethod::Momentum { every, .. } => {
+                        step > 0 && step % every == 0
+                    }
+                    PruneMethod::APriori => false,
+                };
+                if !event {
+                    continue;
+                }
+                let w = lit_to_f32(&plits[i])?;
+                let changed = pruners[i].on_step(
+                    step,
+                    opts.steps,
+                    &w,
+                    &state.momentum_m[i],
+                    &mut state.masks[i],
+                );
+                if changed {
+                    // Zero off-mask weights + velocities and re-upload the
+                    // three affected literals.
+                    let l = &man.layers[i];
+                    let dense = state.masks[i].to_dense_f32();
+                    let mut w = w;
+                    let mut vw = lit_to_f32(&plits[4 * n + i])?;
+                    for (k, m) in dense.iter().enumerate() {
+                        if *m == 0.0 {
+                            w[k] = 0.0;
+                            vw[k] = 0.0;
+                        }
+                    }
+                    let dims = [l.out_f as i64, l.in_f as i64];
+                    plits[i] = lit_f32(&w, &dims)?;
+                    plits[4 * n + i] = lit_f32(&vw, &dims)?;
+                    mask_lits[i] = lit_f32(&dense, &dims)?;
+                    log.mask_updates += 1;
+                }
+            }
+        }
+
+        if step % opts.log_every == 0 || step + 1 == opts.steps {
+            log.losses.push((step, loss));
+            if opts.verbose {
+                eprintln!("step {step:5}  loss {loss:.4}  lr {lr:.4}");
+            }
+        }
+        log.final_loss = loss;
+    }
+
+    // Materialize final parameters back into host state.
+    for i in 0..n {
+        state.ws[i] = lit_to_f32(&plits[i])?;
+        state.bs[i] = lit_to_f32(&plits[n + i])?;
+        state.gammas[i] = lit_to_f32(&plits[2 * n + i])?;
+        state.betas[i] = lit_to_f32(&plits[3 * n + i])?;
+        state.vws[i] = lit_to_f32(&plits[4 * n + i])?;
+        state.vbs[i] = lit_to_f32(&plits[5 * n + i])?;
+        state.vgammas[i] = lit_to_f32(&plits[6 * n + i])?;
+        state.vbetas[i] = lit_to_f32(&plits[7 * n + i])?;
+    }
+    log.steps = opts.steps;
+    log.seconds = t0.elapsed().as_secs_f64();
+    Ok(log)
+}
+
+/// Evaluate `state` on `test` via the `forward` artifact; returns row-major
+/// logits `[test.n, classes]`.
+pub fn evaluate(art: &Artifact, state: &ModelState, test: &DataSet) -> Result<Vec<f32>> {
+    let man = &art.manifest;
+    let n = man.num_layers();
+    let be = man.eval_batch;
+    let mut logits = Vec::with_capacity(test.n * man.classes);
+
+    // Static inputs (params + masks + running stats) are built once and
+    // passed by reference for every chunk; only x changes.
+    let mut static_inputs: Vec<xla::Literal> = Vec::with_capacity(7 * n);
+    for group in [&state.ws, &state.bs, &state.gammas, &state.betas] {
+        for (i, v) in group.iter().enumerate() {
+            static_inputs.push(lit_f32(v, &state.shape(i, v.len()))?);
+        }
+    }
+    for (i, m) in state.masks.iter().enumerate() {
+        let l = &man.layers[i];
+        static_inputs.push(lit_f32(&m.to_dense_f32(), &[l.out_f as i64, l.in_f as i64])?);
+    }
+    for group in [&state.rmeans, &state.rvars] {
+        for (i, v) in group.iter().enumerate() {
+            static_inputs.push(lit_f32(v, &state.shape(i, v.len()))?);
+        }
+    }
+
+    let mut start = 0;
+    while start < test.n {
+        let (bx, _, real) = test.chunk_padded(start, be);
+        let x_lit = lit_f32(&bx, &[be as i64, man.in_features as i64])?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(7 * n + 1);
+        inputs.extend(static_inputs.iter());
+        inputs.push(&x_lit);
+        let out = art.forward.run(&inputs)?;
+        ensure!(out.len() == 1, "forward output arity");
+        let chunk = lit_to_f32(&out[0])?;
+        logits.extend_from_slice(&chunk[..real * man.classes]);
+        start += real;
+    }
+    Ok(logits)
+}

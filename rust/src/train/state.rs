@@ -1,0 +1,186 @@
+//! Host-side model state: parameters, optimizer velocity, masks, running
+//! batch-norm statistics and the smoothed-gradient buffer.  This is the
+//! single source of truth between train steps; the HLO executables are pure
+//! functions over it.
+
+use crate::runtime::Manifest;
+use crate::sparsity::prune::PruneMethod;
+use crate::sparsity::Mask;
+use crate::util::rng::Rng;
+
+#[derive(Clone)]
+pub struct ModelState {
+    pub layer_dims: Vec<(usize, usize)>, // (out_f, in_f)
+    pub ws: Vec<Vec<f32>>,
+    pub bs: Vec<Vec<f32>>,
+    pub gammas: Vec<Vec<f32>>,
+    pub betas: Vec<Vec<f32>>,
+    pub vws: Vec<Vec<f32>>,
+    pub vbs: Vec<Vec<f32>>,
+    pub vgammas: Vec<Vec<f32>>,
+    pub vbetas: Vec<Vec<f32>>,
+    pub masks: Vec<Mask>,
+    pub rmeans: Vec<Vec<f32>>,
+    pub rvars: Vec<Vec<f32>>,
+    /// Exponentially smoothed |grad| buffer for sparse-momentum pruning.
+    pub momentum_m: Vec<Vec<f32>>,
+}
+
+impl ModelState {
+    /// Initialize parameters (He-style, scaled by effective fan-in) and the
+    /// connectivity masks for the chosen pruning method:
+    /// * `APriori` / `Momentum` — random expander masks at target fan-in,
+    /// * `Iterative` — dense masks (pruned down during training).
+    pub fn init(man: &Manifest, seed: u64, method: PruneMethod) -> ModelState {
+        let mut rng = Rng::new(seed ^ 0x6c6f676e); // "logn"
+        let n = man.num_layers();
+        let mut st = ModelState {
+            layer_dims: man.layers.iter().map(|l| (l.out_f, l.in_f)).collect(),
+            ws: Vec::new(),
+            bs: Vec::new(),
+            gammas: Vec::new(),
+            betas: Vec::new(),
+            vws: Vec::new(),
+            vbs: Vec::new(),
+            vgammas: Vec::new(),
+            vbetas: Vec::new(),
+            masks: Vec::new(),
+            rmeans: Vec::new(),
+            rvars: Vec::new(),
+            momentum_m: Vec::new(),
+        };
+        for i in 0..n {
+            let l = &man.layers[i];
+            let (out_f, in_f) = (l.out_f, l.in_f);
+            let mask = match (l.fanin, method) {
+                (None, _) => Mask::dense(out_f, in_f),
+                (Some(_), PruneMethod::Iterative { .. }) => Mask::dense(out_f, in_f),
+                (Some(f), _) => Mask::random(out_f, in_f, f, &mut rng.fork(i as u64)),
+            };
+            let eff_fanin = mask.rows.iter().map(|r| r.len()).max().unwrap_or(in_f);
+            let std = (2.0 / eff_fanin as f32).sqrt();
+            let mut w = vec![0f32; out_f * in_f];
+            // Initialize only on-mask entries; off-mask weights stay zero so
+            // iterative pruning restarts cleanly from any mask.
+            for (o, row) in mask.rows.iter().enumerate() {
+                for &j in row {
+                    w[o * in_f + j] = rng.normal_f32(0.0, std);
+                }
+            }
+            st.ws.push(w);
+            st.bs.push(vec![0.0; out_f]);
+            st.gammas.push(vec![1.0; out_f]);
+            st.betas.push(vec![0.0; out_f]);
+            st.vws.push(vec![0.0; out_f * in_f]);
+            st.vbs.push(vec![0.0; out_f]);
+            st.vgammas.push(vec![0.0; out_f]);
+            st.vbetas.push(vec![0.0; out_f]);
+            st.rmeans.push(vec![0.0; out_f]);
+            st.rvars.push(vec![1.0; out_f]);
+            st.momentum_m.push(vec![0.0; out_f * in_f]);
+            st.masks.push(mask);
+        }
+        st
+    }
+
+    /// Literal shape for the `layer`-th tensor of a parameter group, keyed by
+    /// buffer length (weights are 2-D, everything else is 1-D).
+    pub fn shape(&self, layer: usize, len: usize) -> Vec<i64> {
+        let (out_f, in_f) = self.layer_dims[layer];
+        if len == out_f * in_f && in_f != 1 {
+            vec![out_f as i64, in_f as i64]
+        } else {
+            debug_assert_eq!(len, out_f);
+            vec![out_f as i64]
+        }
+    }
+
+    /// Zero every off-mask weight and velocity entry of layer `i` (called
+    /// after a pruning step rewrites the mask).
+    pub fn apply_mask(&mut self, i: usize) {
+        let (out_f, in_f) = self.layer_dims[i];
+        let dense = self.masks[i].to_dense_f32();
+        debug_assert_eq!(dense.len(), out_f * in_f);
+        for (idx, m) in dense.iter().enumerate() {
+            if *m == 0.0 {
+                self.ws[i][idx] = 0.0;
+                self.vws[i][idx] = 0.0;
+            }
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layer_dims.len()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.ws.iter().map(|w| w.len()).sum::<usize>()
+            + self.bs.iter().map(|b| b.len()).sum::<usize>() * 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn man() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "name":"t","kind":"mlp","in_features":16,"classes":5,"hidden":[32],
+          "bw":2,"bw_in":2,"bw_out":2,"fanin":3,"fanin_fc":null,"skips":0,
+          "batch":64,"eval_batch":128,"dataset":"jets",
+          "layers":[{"in":16,"out":32,"fanin":3,"bw_in":2,"maxv_in":1.0},
+                    {"in":32,"out":5,"fanin":null,"bw_in":2,"maxv_in":2.0}]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_respects_masks() {
+        let st = ModelState::init(&man(), 1, PruneMethod::APriori);
+        assert_eq!(st.num_layers(), 2);
+        // layer 0: exactly 3 nonzero weights per neuron
+        for o in 0..32 {
+            let nz = (0..16).filter(|j| st.ws[0][o * 16 + j] != 0.0).count();
+            assert_eq!(nz, 3);
+        }
+        // dense final layer: all weights initialized
+        assert!(st.ws[1].iter().all(|&w| w != 0.0));
+    }
+
+    #[test]
+    fn iterative_starts_dense() {
+        let st = ModelState::init(
+            &man(),
+            1,
+            PruneMethod::Iterative { every: 10 },
+        );
+        assert!(st.masks[0].is_dense());
+    }
+
+    #[test]
+    fn apply_mask_zeroes_offmask() {
+        let mut st = ModelState::init(&man(), 2, PruneMethod::APriori);
+        st.ws[0].iter_mut().for_each(|w| *w = 1.0);
+        st.vws[0].iter_mut().for_each(|v| *v = 1.0);
+        st.apply_mask(0);
+        let dense = st.masks[0].to_dense_f32();
+        for (i, m) in dense.iter().enumerate() {
+            if *m == 0.0 {
+                assert_eq!(st.ws[0][i], 0.0);
+                assert_eq!(st.vws[0][i], 0.0);
+            } else {
+                assert_eq!(st.ws[0][i], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let st = ModelState::init(&man(), 3, PruneMethod::APriori);
+        assert_eq!(st.shape(0, 32 * 16), vec![32, 16]);
+        assert_eq!(st.shape(0, 32), vec![32]);
+    }
+}

@@ -1,0 +1,127 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`bench`] /
+//! [`bench_n`]: warmup, then timed iterations until a wall-clock budget is
+//! reached, reporting min / median / mean / p95 per-iteration times and
+//! optional throughput.  Deliberately simple but stable enough for the
+//! §Perf before/after logs in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  min {:>12}  median {:>12}  mean {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+
+    /// Report with an items/sec throughput line (e.g. inferences/s).
+    pub fn report_throughput(&self, items_per_iter: f64, unit: &str) {
+        self.report();
+        let per_sec = items_per_iter / (self.median_ns / 1e9);
+        println!("{:<44} {:>17.3e} {unit}/s (median)", "", per_sec);
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` repeatedly for ~`budget` after a warmup; `f` is run once per
+/// iteration sample.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup: at least one run, up to budget/10.
+    let warm_deadline = Instant::now() + budget / 10;
+    loop {
+        f();
+        if Instant::now() >= warm_deadline {
+            break;
+        }
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let deadline = Instant::now() + budget;
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if Instant::now() >= deadline && samples_ns.len() >= 5 {
+            break;
+        }
+        if samples_ns.len() >= 100_000 {
+            break;
+        }
+    }
+    summarize(name, samples_ns)
+}
+
+/// Fixed iteration-count variant for expensive bodies.
+pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples_ns = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    summarize(name, samples_ns)
+}
+
+fn summarize(name: &str, mut samples_ns: Vec<f64>) -> BenchResult {
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        min_ns: samples_ns[0],
+        median_ns: samples_ns[n / 2],
+        mean_ns: mean,
+        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n.max(1)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench_n("noop-ish", 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("us"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with(" s"));
+    }
+}

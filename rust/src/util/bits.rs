@@ -1,0 +1,146 @@
+//! Bit-vector utilities: packed truth tables, index packing, bit iteration.
+//!
+//! A LogicNets neuron's truth table maps `fanin * bw` input bits to `bw_out`
+//! output bits.  Tables are stored packed: output *codes* (not dequantized
+//! values) in a `Vec<u64>` with `bw_out` bits per entry.
+
+/// Fixed-width packed array of `width`-bit codes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedCodes {
+    words: Vec<u64>,
+    pub width: usize,
+    pub len: usize,
+}
+
+impl PackedCodes {
+    pub fn new(len: usize, width: usize) -> PackedCodes {
+        assert!(width >= 1 && width <= 32, "width {width}");
+        let bits = len * width;
+        PackedCodes { words: vec![0; bits.div_ceil(64)], width, len }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len);
+        let bit = i * self.width;
+        let (w, off) = (bit / 64, bit % 64);
+        let mask = if self.width == 64 { u64::MAX } else { (1u64 << self.width) - 1 };
+        let lo = self.words[w] >> off;
+        let v = if off + self.width > 64 {
+            lo | (self.words[w + 1] << (64 - off))
+        } else {
+            lo
+        };
+        (v & mask) as u32
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: u32) {
+        debug_assert!(i < self.len);
+        debug_assert!(self.width == 32 || (v as u64) < (1u64 << self.width), "code {v} too wide");
+        let bit = i * self.width;
+        let (w, off) = (bit / 64, bit % 64);
+        let mask = if self.width == 64 { u64::MAX } else { (1u64 << self.width) - 1 };
+        self.words[w] &= !(mask << off);
+        self.words[w] |= (v as u64 & mask) << off;
+        if off + self.width > 64 {
+            let hi_bits = off + self.width - 64;
+            let hi_mask = (1u64 << hi_bits) - 1;
+            self.words[w + 1] &= !hi_mask;
+            self.words[w + 1] |= (v as u64 & mask) >> (64 - off);
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Pack per-input quantizer codes into a truth-table index.  Input j
+/// occupies bits `[j*bw, (j+1)*bw)` — must match
+/// python/compile/kernels/lut_lookup.py.
+#[inline]
+pub fn pack_index(codes: &[u32], bw: usize) -> usize {
+    let mut idx = 0usize;
+    for (j, &c) in codes.iter().enumerate() {
+        debug_assert!((c as usize) < (1usize << bw));
+        idx |= (c as usize) << (bw * j);
+    }
+    idx
+}
+
+/// Inverse of `pack_index`: unpack index into `fanin` codes of `bw` bits.
+#[inline]
+pub fn unpack_index(idx: usize, bw: usize, fanin: usize, out: &mut [u32]) {
+    let mask = (1usize << bw) - 1;
+    for (j, o) in out.iter_mut().enumerate().take(fanin) {
+        *o = ((idx >> (bw * j)) & mask) as u32;
+    }
+}
+
+/// Iterate the bits of `v` (LSB-first), up to `n` bits.
+pub fn bits_lsb(v: u64, n: usize) -> impl Iterator<Item = bool> {
+    (0..n).map(move |i| (v >> i) & 1 == 1)
+}
+
+/// Population count of a packed boolean function given as u64 words over
+/// `n_bits` valid bits.
+pub fn popcount_words(words: &[u64], n_bits: usize) -> usize {
+    let mut total = 0usize;
+    let full = n_bits / 64;
+    for w in &words[..full] {
+        total += w.count_ones() as usize;
+    }
+    let rem = n_bits % 64;
+    if rem > 0 {
+        total += (words[full] & ((1u64 << rem) - 1)).count_ones() as usize;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_roundtrip_all_widths() {
+        for width in [1usize, 2, 3, 4, 5, 7, 8, 13, 17, 32] {
+            let len = 257;
+            let mut p = PackedCodes::new(len, width);
+            let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+            for i in 0..len {
+                p.set(i, (i as u32).wrapping_mul(2654435761) & mask);
+            }
+            for i in 0..len {
+                assert_eq!(p.get(i), (i as u32).wrapping_mul(2654435761) & mask, "w={width} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_set_overwrites() {
+        let mut p = PackedCodes::new(10, 3);
+        p.set(4, 7);
+        p.set(4, 2);
+        assert_eq!(p.get(4), 2);
+        assert_eq!(p.get(3), 0);
+        assert_eq!(p.get(5), 0);
+    }
+
+    #[test]
+    fn pack_unpack_index() {
+        let codes = [3u32, 0, 2, 1];
+        let idx = pack_index(&codes, 2);
+        assert_eq!(idx, 3 | (0 << 2) | (2 << 4) | (1 << 6));
+        let mut out = [0u32; 4];
+        unpack_index(idx, 2, 4, &mut out);
+        assert_eq!(out, codes);
+    }
+
+    #[test]
+    fn popcount() {
+        assert_eq!(popcount_words(&[0b1011], 4), 3);
+        assert_eq!(popcount_words(&[0b1011], 2), 2);
+        assert_eq!(popcount_words(&[u64::MAX, 0b1], 65), 65);
+    }
+}

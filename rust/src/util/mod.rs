@@ -1,0 +1,11 @@
+//! In-tree infrastructure substrates (the build environment has no network,
+//! so serde/clap/tokio/criterion/proptest are replaced by these modules).
+
+pub mod bench;
+pub mod bits;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod table;

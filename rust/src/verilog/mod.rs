@@ -1,0 +1,18 @@
+//! VERILOG code generation (paper §5.2) and a subset parser for round-trip
+//! verification.
+//!
+//! The generator mirrors the paper's module structure exactly (Listings
+//! 5.2-5.6): a `LogicNetModule` top, one `LUTLayer<i>` per sparse layer
+//! wiring neuron input slices, and one `LUT_L<i>_N<j>` case-statement module
+//! per neuron.  No LUT primitives are instantiated — the whole truth table
+//! is written out and logic synthesis (`crate::synth`) is left to discover
+//! the optimal hardware building block, exactly as the paper argues.
+//!
+//! Bit layout contract (matches `util::bits::pack_index`): element `j` of a
+//! layer's activation vector occupies bus bits `[j*bw, (j+1)*bw)`.
+
+pub mod gen;
+pub mod parse;
+
+pub use gen::{generate, neuron_module, VerilogOpts, VerilogProject};
+pub use parse::{parse_project, ParsedNeuron};

@@ -1,0 +1,198 @@
+//! Parser for the generated Verilog subset — used for round-trip testing
+//! (generate → parse → compare tables) and as the synthesis front-end's
+//! netlist reader in `logicnets synth --from-verilog`.
+
+use crate::util::bits::PackedCodes;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed `LUT_L<i>_N<j>` case module.
+#[derive(Debug, Clone)]
+pub struct ParsedNeuron {
+    pub layer: usize,
+    pub index: usize,
+    pub in_bits: usize,
+    pub out_bits: usize,
+    pub codes: PackedCodes,
+    /// Input element indices recovered from the layer wiring (filled by
+    /// [`parse_project`] when the layer file is present).
+    pub inputs: Vec<usize>,
+}
+
+/// Parse all files of a generated project.  Returns neurons grouped by
+/// layer, each with its recovered input wiring.
+pub fn parse_project(files: &[(String, String)]) -> Result<BTreeMap<usize, Vec<ParsedNeuron>>> {
+    let mut neurons: BTreeMap<(usize, usize), ParsedNeuron> = BTreeMap::new();
+    for (name, text) in files {
+        if let Some(rest) = name.strip_prefix("LUT_L") {
+            let stem = rest.strip_suffix(".v").unwrap_or(rest);
+            let (li, nj) = stem
+                .split_once("_N")
+                .ok_or_else(|| anyhow!("bad neuron file name {name}"))?;
+            let layer: usize = li.parse().context("layer idx")?;
+            let index: usize = nj.parse().context("neuron idx")?;
+            let mut nr = parse_neuron_module(text)?;
+            nr.layer = layer;
+            nr.index = index;
+            neurons.insert((layer, index), nr);
+        }
+    }
+    // Recover wiring from layer files.
+    for (name, text) in files {
+        if let Some(rest) = name.strip_prefix("LUTLayer") {
+            let li: usize = rest
+                .strip_suffix(".v")
+                .unwrap_or(rest)
+                .parse()
+                .context("layer file idx")?;
+            for (nj, lo_bits) in parse_layer_wiring(text)? {
+                if let Some(nr) = neurons.get_mut(&(li, nj)) {
+                    // bw is unambiguous from the neuron module: in_bits
+                    // divided by the number of concatenated elements.
+                    ensure!(!lo_bits.is_empty() && nr.in_bits % lo_bits.len() == 0);
+                    let bw = nr.in_bits / lo_bits.len();
+                    nr.inputs = lo_bits.iter().map(|&lo| lo / bw).collect();
+                }
+            }
+        }
+    }
+    let mut by_layer: BTreeMap<usize, Vec<ParsedNeuron>> = BTreeMap::new();
+    for ((layer, _), nr) in neurons {
+        by_layer.entry(layer).or_default().push(nr);
+    }
+    for v in by_layer.values_mut() {
+        v.sort_by_key(|n| n.index);
+    }
+    Ok(by_layer)
+}
+
+/// Parse one neuron case module.
+pub fn parse_neuron_module(text: &str) -> Result<ParsedNeuron> {
+    // header: module NAME ( input [N:0] M0, output [M:0] M1 );
+    let hdr = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("module "))
+        .ok_or_else(|| anyhow!("no module header"))?;
+    let in_bits = bus_width(hdr, "input").context("input bus")?;
+    let out_bits = bus_width_after(hdr, "output").context("output bus")?;
+    let entries = 1usize << in_bits;
+    let mut codes = PackedCodes::new(entries, out_bits);
+    let mut seen = 0usize;
+    for line in text.lines() {
+        let line = line.trim();
+        // e.g. `6'd13: M1 = 2'b01;`
+        let Some((lhs, rhs)) = line.split_once(": M1 = ") else { continue };
+        let idx: usize = lhs
+            .split_once("'d")
+            .ok_or_else(|| anyhow!("bad case index {lhs:?}"))?
+            .1
+            .parse()
+            .context("case index")?;
+        let bin = rhs
+            .split_once("'b")
+            .ok_or_else(|| anyhow!("bad case value {rhs:?}"))?
+            .1
+            .trim_end_matches(';');
+        let code = u32::from_str_radix(bin, 2).context("case value bits")?;
+        ensure!(idx < entries, "case index {idx} out of range");
+        codes.set(idx, code);
+        seen += 1;
+    }
+    ensure!(seen == entries, "case statement incomplete: {seen}/{entries}");
+    Ok(ParsedNeuron { layer: 0, index: 0, in_bits, out_bits, codes, inputs: Vec::new() })
+}
+
+/// Parse `wire [..] inpWire<l>_<n> = {M0[hi:lo], ...};` lines into the
+/// low bit of each slice, undoing the MSB-first ordering.
+fn parse_layer_wiring(text: &str) -> Result<Vec<(usize, Vec<usize>)>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if !line.starts_with("wire ") || !line.contains("inpWire") {
+            continue;
+        }
+        let nj: usize = line
+            .split("inpWire")
+            .nth(1)
+            .and_then(|s| s.split(&['_', ' '][..]).nth(1))
+            .and_then(|s| s.split(' ').next())
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad inpWire line {line:?}"))?;
+        let body = line
+            .split_once('{')
+            .and_then(|(_, r)| r.split_once('}'))
+            .map(|(b, _)| b)
+            .ok_or_else(|| anyhow!("no concat in {line:?}"))?;
+        let mut elems = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            let inner = part
+                .strip_prefix("M0[")
+                .and_then(|s| s.strip_suffix(']'))
+                .ok_or_else(|| anyhow!("bad slice {part:?}"))?;
+            let lo_bit: usize = match inner.split_once(':') {
+                Some((_, lo)) => lo.parse().context("slice lo")?,
+                None => inner.parse().context("slice bit")?,
+            };
+            elems.push(lo_bit);
+        }
+        // The concat was emitted highest element first.
+        elems.reverse();
+        out.push((nj, elems));
+    }
+    if out.is_empty() {
+        bail!("no inpWire lines found");
+    }
+    Ok(out)
+}
+
+fn bus_width(line: &str, kw: &str) -> Result<usize> {
+    let pos = line.find(kw).ok_or_else(|| anyhow!("no {kw}"))?;
+    let rest = &line[pos..];
+    let hi: usize = rest
+        .split_once('[')
+        .and_then(|(_, r)| r.split_once(':'))
+        .map(|(h, _)| h.trim())
+        .ok_or_else(|| anyhow!("no bus in {line:?}"))?
+        .parse()
+        .context("bus hi")?;
+    Ok(hi + 1)
+}
+
+fn bus_width_after(line: &str, kw: &str) -> Result<usize> {
+    bus_width(line, kw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::ModelTables;
+    use crate::verilog::gen::{generate, VerilogOpts};
+
+    #[test]
+    fn roundtrip_generated_project() {
+        let model = crate::verilog::gen::tests::tiny_model();
+        let tables = ModelTables::generate(&model).unwrap();
+        let proj = generate(&model, &tables, VerilogOpts { registers: false }).unwrap();
+        let parsed = parse_project(&proj.files).unwrap();
+        let layer0 = &parsed[&0];
+        assert_eq!(layer0.len(), 3);
+        let lt = tables.layers[0].as_ref().unwrap();
+        for (nj, nr) in layer0.iter().enumerate() {
+            assert_eq!(nr.in_bits, lt.tables[nj].in_bits);
+            assert_eq!(nr.out_bits, lt.tables[nj].out_bits);
+            for idx in 0..lt.tables[nj].num_entries() {
+                assert_eq!(nr.codes.get(idx), lt.tables[nj].lookup(idx), "n{nj} idx{idx}");
+            }
+            assert_eq!(nr.inputs, model.layers[0].neurons[nj].inputs);
+        }
+    }
+
+    #[test]
+    fn rejects_incomplete_case() {
+        let text = "module X ( input [2:0] M0, output [0:0] M1 );\n\
+                    reg [0:0] M1;\nalways @ (M0) begin\ncase (M0)\n\
+                    3'd0: M1 = 1'b1;\nendcase\nend\nendmodule\n";
+        assert!(parse_neuron_module(text).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Cross-module integration: train (AOT HLO) → export → truth tables →
+//! engine → Verilog → synthesis, all consistent with each other.
+//! Artifact-dependent tests skip with a notice when `make artifacts` has
+//! not been run.
+
+use logicnets::cost;
+use logicnets::hep;
+use logicnets::luts::ModelTables;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::{artifacts_dir, Artifact, Runtime};
+use logicnets::serve::LutEngine;
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, verify_netlist, SynthOpts};
+use logicnets::train::{evaluate, train, ModelState, TrainOpts};
+use logicnets::verilog::{generate, parse_project, VerilogOpts};
+
+fn trained_spike() -> Option<(Artifact, ModelState, logicnets::data::DataSet)> {
+    let dir = artifacts_dir();
+    if !Artifact::exists(&dir, "spike_tiny") {
+        eprintln!("SKIP: spike_tiny artifact missing (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::cpu().expect("pjrt");
+    let art = Artifact::load(&rt, &dir, "spike_tiny").expect("artifact");
+    let man = art.manifest.clone();
+    let mut rng = logicnets::util::rng::Rng::new(5);
+    let (train_set, test_set) = hep::jets(6_000, 42).split(0.25, &mut rng);
+    let mut state = ModelState::init(&man, 3, PruneMethod::APriori);
+    let mut opts = TrainOpts::from_manifest(&man);
+    opts.steps = 150;
+    train(&art, &mut state, &train_set, &opts).expect("train");
+    Some((art, state, test_set))
+}
+
+#[test]
+fn full_flow_tables_engine_verilog_synth() {
+    let Some((art, state, test_set)) = trained_spike() else { return };
+    let man = &art.manifest;
+    let model = ExportedModel::from_state(man, &state);
+    let tables = ModelTables::generate(&model).expect("tables");
+
+    // 1. Truth tables match the arithmetic mirror exactly.
+    assert_eq!(tables.verify(&model, &test_set.x[..100 * test_set.d]), 0);
+
+    // 2. Engine agrees with the mirror on final codes.
+    let engine = LutEngine::build(&model, &tables).expect("engine");
+    let q = model.layers.last().unwrap().quant_out;
+    for row in test_set.x.chunks(test_set.d).take(100) {
+        let codes = engine.infer_codes(row);
+        let expect: Vec<u8> = model.forward(row).iter().map(|&v| q.code(v) as u8).collect();
+        assert_eq!(codes, expect);
+    }
+
+    // 3. Verilog round-trip reproduces every table + wiring.
+    let proj = generate(&model, &tables, VerilogOpts { registers: false }).expect("verilog");
+    let parsed = parse_project(&proj.files).expect("parse");
+    for (li, lt) in tables.layers.iter().enumerate() {
+        let Some(lt) = lt else { continue };
+        let layer = &parsed[&li];
+        assert_eq!(layer.len(), lt.tables.len());
+        for (nj, nr) in layer.iter().enumerate() {
+            assert_eq!(nr.inputs, model.layers[li].neurons[nj].inputs);
+            for idx in 0..lt.tables[nj].num_entries() {
+                assert_eq!(nr.codes.get(idx), lt.tables[nj].lookup(idx));
+            }
+        }
+    }
+
+    // 4. Synthesized netlist is functionally identical and cheaper than the
+    //    analytical bound.
+    let (netlist, rep) = synthesize(
+        &model,
+        &tables,
+        SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+    )
+    .expect("synth");
+    assert_eq!(verify_netlist(&model, &tables, &netlist, 300, 9).unwrap(), 0);
+    assert!(rep.luts as u64 <= rep.analytical_luts);
+
+    // 5. Analytical cost of the sparse layers matches the cost model.
+    let manifest_costs = cost::manifest_cost(man);
+    let sparse_total: u64 = manifest_costs.iter().take(2).map(|c| c.luts).sum();
+    assert_eq!(sparse_total, rep.analytical_luts);
+}
+
+#[test]
+fn hlo_eval_matches_rust_mirror() {
+    let Some((art, state, test_set)) = trained_spike() else { return };
+    let man = &art.manifest;
+    let model = ExportedModel::from_state(man, &state);
+    let hlo_logits = evaluate(&art, &state, &test_set).expect("evaluate");
+    let rust_logits = model.forward_batch(&test_set.x);
+    assert_eq!(hlo_logits.len(), rust_logits.len());
+    // XLA may reorder f32 reductions; only boundary-sitting values may move
+    // by one quantizer step, and they must be rare.
+    let step = man.maxv_out / ((1u32 << man.bw_out) - 1) as f32;
+    let mut mismatch = 0usize;
+    for (a, b) in hlo_logits.iter().zip(&rust_logits) {
+        let d = (a - b).abs();
+        assert!(d < step + 1e-5, "divergence beyond one quantizer step: {a} vs {b}");
+        if d > 1e-6 {
+            mismatch += 1;
+        }
+    }
+    let pct = mismatch as f64 / hlo_logits.len() as f64;
+    assert!(pct < 0.01, "too many boundary mismatches: {pct}");
+}
+
+#[test]
+fn pruning_methods_preserve_fanin_through_training() {
+    let Some((art, _, _)) = trained_spike() else { return };
+    let man = art.manifest.clone();
+    let mut rng = logicnets::util::rng::Rng::new(8);
+    let (train_set, _) = hep::jets(4_000, 43).split(0.25, &mut rng);
+    for method in [
+        PruneMethod::Momentum { every: 5, prune_rate: 0.4 },
+        PruneMethod::Iterative { every: 5 },
+    ] {
+        let mut state = ModelState::init(&man, 11, method);
+        let mut opts = TrainOpts::from_manifest(&man);
+        opts.steps = 60;
+        opts.method = method;
+        let log = train(&art, &mut state, &train_set, &opts).expect("train");
+        assert!(log.mask_updates > 0, "{method:?} must rewrite masks");
+        for (i, spec) in man.layers.iter().enumerate() {
+            if let Some(f) = spec.fanin {
+                match method {
+                    PruneMethod::Momentum { .. } => {
+                        assert!(
+                            state.masks[i].rows.iter().all(|r| r.len() == f),
+                            "momentum must preserve exact fan-in"
+                        );
+                    }
+                    _ => {
+                        // iterative converges to <= target by 75% of training;
+                        // with 60 steps the schedule reaches the target.
+                        assert!(
+                            state.masks[i].rows.iter().all(|r| r.len() <= spec.in_f),
+                        );
+                    }
+                }
+                // off-mask weights must be zero
+                let dense = state.masks[i].to_dense_f32();
+                for (k, m) in dense.iter().enumerate() {
+                    if *m == 0.0 {
+                        assert_eq!(state.ws[i][k], 0.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn skip_artifact_roundtrip() {
+    // A skip-connection MNIST model must evaluate consistently between the
+    // HLO forward and the Rust mirror (exercises the concat wiring).
+    let dir = artifacts_dir();
+    let name = "mnist_skipa_s2";
+    if !Artifact::exists(&dir, name) {
+        eprintln!("SKIP: {name} artifact missing");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt");
+    let art = Artifact::load(&rt, &dir, name).expect("artifact");
+    let man = art.manifest.clone();
+    let state = ModelState::init(&man, 3, PruneMethod::APriori);
+    let ds = logicnets::mnist::synth_digits(man.eval_batch, 5);
+    let hlo = evaluate(&art, &state, &ds).expect("evaluate");
+    let model = ExportedModel::from_state(&man, &state);
+    let rust = model.forward_batch(&ds.x);
+    let step = man.maxv_out / ((1u32 << man.bw_out) - 1) as f32;
+    for (a, b) in hlo.iter().zip(&rust) {
+        assert!((a - b).abs() < step + 1e-5, "skip wiring mismatch: {a} vs {b}");
+    }
+    // tables must also agree through the skip path
+    let tables = ModelTables::generate(&model).expect("tables");
+    assert_eq!(tables.verify(&model, &ds.x[..20 * ds.d]), 0);
+}

@@ -1,0 +1,160 @@
+//! Property-based tests over coordinator invariants (util::prop is the
+//! in-tree proptest substitute; every failure message carries a replay
+//! seed).
+
+use logicnets::luts::{neuron_table, ModelTables};
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::sparsity::prune::{magnitude_prune, momentum_prune_regrow};
+use logicnets::sparsity::Mask;
+use logicnets::synth::cover::minimize;
+use logicnets::synth::BoolFn;
+use logicnets::util::bits::{pack_index, unpack_index};
+use logicnets::util::prop::{forall, small_size};
+use logicnets::util::rng::Rng;
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    forall("pack-unpack", 0x11, 200, |rng: &mut Rng| {
+        let bw = 1 + rng.below(6);
+        let fanin = 1 + rng.below(8.min(24 / bw));
+        let codes: Vec<u32> = (0..fanin).map(|_| rng.below(1 << bw) as u32).collect();
+        let idx = pack_index(&codes, bw);
+        assert!(idx < 1 << (bw * fanin));
+        let mut out = vec![0u32; fanin];
+        unpack_index(idx, bw, fanin, &mut out);
+        assert_eq!(out, codes);
+    });
+}
+
+#[test]
+fn prop_quantizer_idempotent_and_monotone() {
+    forall("quantizer", 0x22, 200, |rng: &mut Rng| {
+        let bw = 1 + rng.below(6);
+        let maxv = [1.0f32, 2.0, 4.0][rng.below(3)];
+        let q = QuantSpec::new(bw, maxv);
+        let x = rng.normal_f32(0.0, 3.0);
+        let y = q.quantize(x);
+        // idempotent
+        assert_eq!(q.quantize(y), y);
+        // code/dequant consistency
+        assert_eq!(q.dequant(q.code(x)), y);
+        // monotone
+        let x2 = x + rng.f32().abs();
+        assert!(q.quantize(x2) >= y);
+    });
+}
+
+#[test]
+fn prop_mask_pruning_invariants() {
+    forall("mask-pruning", 0x33, 100, |rng: &mut Rng| {
+        let in_f = 4 + small_size(rng, 60);
+        let out_f = 1 + small_size(rng, 30);
+        let fanin = 1 + rng.below(in_f.min(8));
+        let mut mask = Mask::random(out_f, in_f, fanin, rng);
+        let w: Vec<f32> = (0..out_f * in_f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let m: Vec<f32> = (0..out_f * in_f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        // momentum prune/regrow keeps exact fan-in and index validity
+        momentum_prune_regrow(&w, &m, &mut mask, fanin, 0.3 + rng.f64() * 0.5);
+        for row in &mask.rows {
+            assert_eq!(row.len(), fanin);
+            assert!(row.windows(2).all(|p| p[0] < p[1]));
+            assert!(row.iter().all(|&i| i < in_f));
+        }
+
+        // magnitude prune to a smaller target keeps the largest weights
+        let target = 1.max(fanin / 2);
+        magnitude_prune(&w, &mut mask, target);
+        for (o, row) in mask.rows.iter().enumerate() {
+            assert_eq!(row.len(), target);
+            let kept_min = row
+                .iter()
+                .map(|&i| w[o * in_f + i].abs())
+                .fold(f32::INFINITY, f32::min);
+            // no discarded weight may be strictly larger than all kept ones
+            let max_possible: f32 =
+                (0..in_f).map(|i| w[o * in_f + i].abs()).fold(0.0, f32::max);
+            assert!(kept_min <= max_possible);
+        }
+    });
+}
+
+#[test]
+fn prop_neuron_table_consistent_with_eval() {
+    forall("neuron-table", 0x44, 60, |rng: &mut Rng| {
+        let bw_in = 1 + rng.below(3);
+        let fanin = 1 + rng.below(4);
+        let qi = QuantSpec::new(bw_in, [1.0f32, 2.0][rng.below(2)]);
+        let qo = QuantSpec::new(1 + rng.below(3), 2.0);
+        let nr = Neuron {
+            inputs: (0..fanin).collect(),
+            weights: (0..fanin).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            bias: rng.normal_f32(0.0, 0.2),
+            g: 0.5 + rng.f32(),
+            h: rng.normal_f32(0.0, 0.3),
+        };
+        let t = neuron_table(&nr, qi, qo).unwrap();
+        // spot-check random entries
+        for _ in 0..20 {
+            let idx = rng.below(t.num_entries());
+            let mut codes = vec![0u32; fanin];
+            unpack_index(idx, bw_in, fanin, &mut codes);
+            let vals: Vec<f32> = codes.iter().map(|&c| qi.dequant(c)).collect();
+            assert_eq!(t.lookup(idx), qo.code(nr.respond(&vals)));
+        }
+    });
+}
+
+#[test]
+fn prop_minimized_cover_equivalent() {
+    forall("cover-equiv", 0x55, 40, |rng: &mut Rng| {
+        let nvars = 1 + rng.below(9);
+        let mut f = BoolFn::zeros(nvars);
+        let density = rng.f64();
+        for i in 0..f.num_entries() {
+            f.set(i, rng.f64() < density);
+        }
+        let c = minimize(&f);
+        assert!(c.equals_fn(&f));
+        // cover never has more cubes than minterms
+        assert!(c.cubes.len() <= f.count_ones().max(1));
+    });
+}
+
+#[test]
+fn prop_table_forward_equals_value_forward() {
+    forall("tables-vs-values", 0x66, 25, |rng: &mut Rng| {
+        let in_f = 6 + rng.below(10);
+        let widths = [4 + rng.below(12), 2 + rng.below(6)];
+        let bw = 1 + rng.below(2);
+        let mut layers = Vec::new();
+        let mut prev = in_f;
+        for (k, &w) in widths.iter().enumerate() {
+            let qi = QuantSpec::new(bw, if k == 0 { 1.0 } else { 2.0 });
+            let neurons = (0..w)
+                .map(|_| {
+                    let inputs = rng.choose_k(prev, 3.min(prev));
+                    Neuron {
+                        inputs: inputs.clone(),
+                        weights: inputs.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                        bias: rng.normal_f32(0.0, 0.2),
+                        g: 1.0,
+                        h: rng.normal_f32(0.0, 0.2),
+                    }
+                })
+                .collect();
+            layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(bw, 2.0), true));
+            prev = w;
+        }
+        let model = ExportedModel {
+            layers,
+            in_features: in_f,
+            classes: prev,
+            skips: 0,
+            act_widths: std::iter::once(in_f).chain(widths.iter().copied()).collect(),
+        };
+        let tables = ModelTables::generate(&model).unwrap();
+        let xs: Vec<f32> = (0..in_f * 10).map(|_| rng.f32()).collect();
+        assert_eq!(tables.verify(&model, &xs), 0);
+    });
+}

@@ -1,0 +1,83 @@
+//! Integration: the full AOT roundtrip — JAX-lowered HLO artifacts loaded
+//! and driven from Rust via PJRT.  Skips (with a notice) when artifacts have
+//! not been built (`make artifacts`).
+
+use logicnets::hep;
+use logicnets::metrics;
+use logicnets::runtime::{artifacts_dir, Artifact, Runtime};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::train::{evaluate, train, ModelState, TrainOpts};
+
+fn artifact(name: &str) -> Option<(Runtime, Artifact)> {
+    let dir = artifacts_dir();
+    if !Artifact::exists(&dir, name) {
+        eprintln!("SKIP: artifact {name:?} missing (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let art = Artifact::load(&rt, &dir, name).expect("load artifact");
+    Some((rt, art))
+}
+
+#[test]
+fn spike_train_step_reduces_loss() {
+    let Some((_rt, art)) = artifact("spike_tiny") else { return };
+    let man = &art.manifest;
+    assert_eq!(man.num_layers(), 3);
+
+    let ds = hep::jets(4000, 42);
+    let mut rng = logicnets::util::rng::Rng::new(7);
+    let (train_set, test_set) = ds.split(0.25, &mut rng);
+
+    let mut state = ModelState::init(man, 1, PruneMethod::APriori);
+    let mut opts = TrainOpts::from_manifest(man);
+    opts.steps = 400;
+    opts.verbose = std::env::var("LOGICNETS_VERBOSE").is_ok();
+    let log = train(&art, &mut state, &train_set, &opts).expect("train");
+
+    let first = log.losses.first().unwrap().1;
+    let last = log.final_loss;
+    assert!(
+        last < first * 0.9,
+        "loss should decrease: first {first} last {last}"
+    );
+
+    // Evaluation through the forward artifact must beat chance (0.2).
+    let logits = evaluate(&art, &state, &test_set).expect("evaluate");
+    assert_eq!(logits.len(), test_set.n * man.classes);
+    let acc = metrics::accuracy(&logits, &test_set.y, man.classes);
+    eprintln!("spike accuracy = {acc:.3}");
+    assert!(acc > 0.35, "accuracy {acc} not above chance");
+}
+
+#[test]
+fn forward_is_deterministic() {
+    let Some((_rt, art)) = artifact("spike_tiny") else { return };
+    let man = &art.manifest;
+    let state = ModelState::init(man, 3, PruneMethod::APriori);
+    let ds = hep::jets(man.eval_batch * 2, 5);
+    let a = evaluate(&art, &state, &ds).expect("eval a");
+    let b = evaluate(&art, &state, &ds).expect("eval b");
+    assert_eq!(a, b, "forward pass must be bit-deterministic");
+}
+
+#[test]
+fn logits_respect_output_quantizer_grid() {
+    // Every logit must be a representable value of the bw_out quantizer:
+    // c * maxv_out / (2^bw_out - 1) for integer c, within [0, maxv_out].
+    let Some((_rt, art)) = artifact("spike_tiny") else { return };
+    let man = &art.manifest;
+    let state = ModelState::init(man, 9, PruneMethod::APriori);
+    let ds = hep::jets(man.eval_batch, 6);
+    let logits = evaluate(&art, &state, &ds).expect("eval");
+    let levels = (1u32 << man.bw_out) - 1;
+    let step = man.maxv_out / levels as f32;
+    for &v in &logits {
+        let c = v / step;
+        assert!(
+            (c - c.round()).abs() < 1e-4,
+            "logit {v} not on the quantizer grid (step {step})"
+        );
+        assert!(v >= -1e-6 && v <= man.maxv_out + 1e-6);
+    }
+}
