@@ -90,6 +90,19 @@ fn main() -> anyhow::Result<()> {
         / test_set.n as f64;
     println!("engine accuracy: {engine_acc:.3} (arithmetic path {acc:.3})");
 
+    // Netlist-backed serving: score the synthesized circuit itself on the
+    // full test set through the bitsliced simulator (64 samples per word).
+    match logicnets::serve::NetlistEngine::build(&model, &tables) {
+        Ok(net) => {
+            let net_acc = logicnets::serve::batch_accuracy(&net, &test_set.x, &test_set.y);
+            println!(
+                "netlist-backed accuracy: {net_acc:.3} ({} mapped LUTs, bitsliced)",
+                net.num_luts()
+            );
+        }
+        Err(e) => println!("netlist backend unavailable: {e}"),
+    }
+
     let requests = 200_000usize;
     let t0 = std::time::Instant::now();
     let mut done = 0;

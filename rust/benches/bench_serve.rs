@@ -6,7 +6,7 @@
 use logicnets::luts::ModelTables;
 use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
 use logicnets::serve::engine::InferScratch;
-use logicnets::serve::{LutEngine, Server, ServerConfig};
+use logicnets::serve::{LutEngine, NetlistEngine, Server, ServerConfig};
 use logicnets::util::bench::bench;
 use logicnets::util::rng::Rng;
 use std::sync::Arc;
@@ -82,6 +82,14 @@ fn main() {
     })
     .report_throughput(batch as f64, "inf");
 
+    // Second backend: the synthesized netlist itself, bitsliced 64-way.
+    let netlist = Arc::new(NetlistEngine::build(&model, &tables).unwrap());
+    println!("netlist backend: {} mapped LUTs", netlist.num_luts());
+    bench("netlist batch 1024 (bitsliced)", Duration::from_millis(800), || {
+        std::hint::black_box(netlist.infer_batch(&xs));
+    })
+    .report_throughput(batch as f64, "inf");
+
     // Router path with 8 concurrent clients.
     let server = Server::start(
         engine.clone(),
@@ -95,6 +103,34 @@ fn main() {
                 let xs = &xs;
                 s.spawn(move || {
                     let mut rng = Rng::new(t as u64);
+                    for _ in 0..per / 8 {
+                        let i = rng.below(batch);
+                        server.infer(xs[i * 16..(i + 1) * 16].to_vec());
+                    }
+                });
+            }
+        });
+    });
+    r.report_throughput(per as f64, "inf");
+    let st = server.stats();
+    println!(
+        "{:<44} p50 {:.0}us p95 {:.0}us p99 {:.0}us fill {:.1}",
+        "", st.p50_us, st.p95_us, st.p99_us, st.mean_batch
+    );
+    server.shutdown();
+
+    // Same router, netlist backend selected.
+    let server = Server::start(
+        netlist,
+        ServerConfig { workers: 4, max_batch: 64, ..Default::default() },
+    );
+    let r = bench("router (netlist) 8 clients x 4000 req", Duration::from_millis(1200), || {
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let server = &server;
+                let xs = &xs;
+                s.spawn(move || {
+                    let mut rng = Rng::new(100 + t as u64);
                     for _ in 0..per / 8 {
                         let i = rng.below(batch);
                         server.infer(xs[i * 16..(i + 1) * 16].to_vec());

@@ -1,0 +1,103 @@
+//! Bench: bitsliced netlist simulation vs the scalar `Netlist::eval` path
+//! on a 1024-sample batch (the acceptance gate for the `sim` subsystem:
+//! bitsliced must be >= 10x scalar), plus the parallel word-block scaling.
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::sim::{eval_netlist, BitMatrix};
+use logicnets::synth::{synthesize, SynthOpts};
+use logicnets::util::bench::bench_n;
+use logicnets::util::rng::Rng;
+
+fn model(widths: &[usize], in_f: usize, fanin: usize, bw: usize, seed: u64) -> ExportedModel {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut prev = in_f;
+    for (k, &w) in widths.iter().enumerate() {
+        let qi = QuantSpec::new(bw, if k == 0 { 1.0 } else { 2.0 });
+        let neurons = (0..w)
+            .map(|_| {
+                let inputs = rng.choose_k(prev, fanin);
+                Neuron {
+                    inputs: inputs.clone(),
+                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect(),
+                    bias: rng.normal_f32(0.0, 0.1),
+                    g: 1.0,
+                    h: 0.0,
+                }
+            })
+            .collect();
+        layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(bw, 2.0), true));
+        prev = w;
+    }
+    ExportedModel {
+        layers,
+        in_features: in_f,
+        classes: *widths.last().unwrap(),
+        skips: 0,
+        act_widths: std::iter::once(in_f).chain(widths.iter().copied()).collect(),
+    }
+}
+
+fn main() {
+    let batch = 1024usize;
+    for (label, widths, fanin, bw) in [
+        ("hep_c-like (64,32,32) X3 BW2", vec![64usize, 32, 32], 3usize, 2usize),
+        ("hep_e-like (64,64,64) X4 BW2", vec![64, 64, 64], 4, 2),
+    ] {
+        let m = model(&widths, 16, fanin, bw, 7);
+        let tables = ModelTables::generate(&m).unwrap();
+        let (netlist, rep) = synthesize(
+            &m,
+            &tables,
+            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        )
+        .unwrap();
+        println!(
+            "{label}: {} LUTs over {} inputs, depth {}",
+            rep.luts, netlist.num_inputs, rep.depth
+        );
+
+        // Prepare both input representations up front so only evaluation is
+        // timed.
+        let mut rng = Rng::new(11);
+        let mut planes = BitMatrix::new(netlist.num_inputs, batch);
+        let rows: Vec<Vec<bool>> = (0..batch)
+            .map(|s| {
+                let bits: Vec<bool> =
+                    (0..netlist.num_inputs).map(|_| rng.f64() < 0.5).collect();
+                planes.set_column(s, &bits);
+                bits
+            })
+            .collect();
+
+        let scalar = bench_n(&format!("scalar eval x{batch}"), 5, || {
+            for row in &rows {
+                std::hint::black_box(netlist.eval(row));
+            }
+        });
+        scalar.report_throughput(batch as f64, "inf");
+
+        let sliced = bench_n(&format!("bitsliced eval batch {batch}"), 30, || {
+            std::hint::black_box(eval_netlist(&netlist, &planes));
+        });
+        sliced.report_throughput(batch as f64, "inf");
+
+        let single = {
+            std::env::set_var("LOGICNETS_THREADS", "1");
+            let r = bench_n(&format!("bitsliced eval batch {batch} (1 core)"), 30, || {
+                std::hint::black_box(eval_netlist(&netlist, &planes));
+            });
+            std::env::remove_var("LOGICNETS_THREADS");
+            r
+        };
+        single.report_throughput(batch as f64, "inf");
+
+        println!(
+            "{:<44} speedup over scalar: {:.1}x all-cores, {:.1}x single-core (target >= 10x)\n",
+            "",
+            scalar.median_ns / sliced.median_ns,
+            scalar.median_ns / single.median_ns
+        );
+    }
+}

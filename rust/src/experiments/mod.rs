@@ -612,6 +612,45 @@ pub fn table_7_6(ctx: &mut ExpCtx) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Netlist-backed serving (bitsliced simulation surface)
+// ---------------------------------------------------------------------------
+
+/// Score mapped designs on their full test set through every execution
+/// surface: the arithmetic mirror, the truth-table engine, and the
+/// synthesized netlist run by the bitsliced simulator.  The three accuracy
+/// columns must agree — this is functional verification at dataset scale,
+/// which the one-sample scalar `Netlist::eval` path made impractically
+/// slow.  Models whose topology the netlist backend cannot serve (skip
+/// wiring, non-prefix sparse layers) report `-`.
+pub fn report_netlist_serving(ctx: &mut ExpCtx, names: &[String]) -> Result<()> {
+    use crate::serve::{batch_accuracy, LutEngine, NetlistEngine};
+    let mut t = TextTable::new(
+        "Netlist-backed serving — accuracy parity and mapped size",
+        &["Model", "Arithmetic acc", "Table engine acc", "Netlist acc", "Mapped LUTs"],
+    );
+    for name in names {
+        let tr = ctx.trained(name, PruneMethod::APriori)?;
+        let ex = tr.export();
+        let tables = ModelTables::generate(&ex)?;
+        let (_, test) = ctx.dataset(&tr.man.dataset);
+        let test = test.clone();
+        let lut_acc = match LutEngine::build(&ex, &tables) {
+            Ok(engine) => f2(100.0 * batch_accuracy(&engine, &test.x, &test.y)),
+            Err(_) => "-".into(),
+        };
+        let (net_acc, luts) = match NetlistEngine::build(&ex, &tables) {
+            Ok(engine) => (
+                f2(100.0 * batch_accuracy(&engine, &test.x, &test.y)),
+                engine.num_luts().to_string(),
+            ),
+            Err(_) => ("-".into(), "-".into()),
+        };
+        t.row(vec![name.clone(), f2(100.0 * tr.accuracy), lut_acc, net_acc, luts]);
+    }
+    save_table(&t, "netlist_serving")
+}
+
+// ---------------------------------------------------------------------------
 // Dispatch
 // ---------------------------------------------------------------------------
 

@@ -11,7 +11,9 @@
 //! * **L3** (this crate) is the coordinator: it drives training through the
 //!   PJRT runtime, owns sparsity/pruning, exports neurons to truth tables,
 //!   emits Verilog, synthesizes it with the in-tree logic-synthesis
-//!   simulator, and serves the resulting LUT netlists at high throughput.
+//!   simulator (`synth`), simulates the mapped netlist bit-parallel 64
+//!   samples per word (`sim`), and serves either the truth tables or the
+//!   synthesized netlist itself at high throughput (`serve`).
 
 pub mod cost;
 pub mod data;
@@ -24,6 +26,7 @@ pub mod mnist;
 pub mod nn;
 pub mod runtime;
 pub mod serve;
+pub mod sim;
 pub mod sparsity;
 pub mod synth;
 pub mod train;

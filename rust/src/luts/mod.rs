@@ -179,72 +179,128 @@ impl ModelTables {
     /// are evaluated by table lookup on codes; dense layers arithmetically.
     /// Returns final quantized logit values.
     pub fn forward_codes(&self, model: &ExportedModel, x: &[f32]) -> Vec<f32> {
+        let mut scratch = ForwardScratch::default();
+        self.forward_codes_with(model, x, &mut scratch).to_vec()
+    }
+
+    /// Allocation-reusing forward pass: all per-layer activation code
+    /// vectors, the skip-concat input, the gathered fan-in, and the output
+    /// values live in `scratch` — after the first call, repeated
+    /// verification never allocates.  Activations are tracked as codes
+    /// (the code domain mirrors the value domain: value = dequant(code)).
+    pub fn forward_codes_with<'a>(
+        &self,
+        model: &ExportedModel,
+        x: &[f32],
+        scratch: &'a mut ForwardScratch,
+    ) -> &'a [f32] {
         let n = model.num_layers();
         let q0 = model.layers[0].quant_in;
-        // Track activations as codes per layer (the code domain mirrors the
-        // value domain exactly: value = dequant(code)).
-        let mut acts_codes: Vec<Vec<u32>> = vec![x.iter().map(|&v| q0.code(v)).collect()];
-        let mut out_values: Vec<f32> = Vec::new();
+        if scratch.acts.len() < n {
+            scratch.acts.resize_with(n, Vec::new);
+        }
+        {
+            let a = &mut scratch.acts[0];
+            a.clear();
+            a.extend(x.iter().map(|&v| q0.code(v)));
+        }
         for i in 0..n {
             let layer = &model.layers[i];
-            let inp_codes: Vec<u32> = if i == 0 || model.skips == 0 {
-                acts_codes.last().unwrap().clone()
+            // Skip wiring: newest-first concat of the last skips+1 acts.
+            scratch.input.clear();
+            if i == 0 || model.skips == 0 {
+                scratch.input.extend_from_slice(&scratch.acts[i]);
             } else {
                 let lo = i.saturating_sub(model.skips);
-                let mut v = Vec::new();
-                for j in (lo..acts_codes.len()).rev() {
-                    v.extend_from_slice(&acts_codes[j]);
+                for j in (lo..=i).rev() {
+                    scratch.input.extend_from_slice(&scratch.acts[j]);
                 }
-                v
+            }
+            debug_assert_eq!(scratch.input.len(), layer.in_f);
+            let is_last = i + 1 == n;
+            let mut out_codes = if is_last {
+                std::mem::take(&mut scratch.last)
+            } else {
+                std::mem::take(&mut scratch.acts[i + 1])
             };
-            debug_assert_eq!(inp_codes.len(), layer.in_f);
-            let mut out_codes = Vec::with_capacity(layer.neurons.len());
+            out_codes.clear();
+            let input = &scratch.input;
             match &self.layers[i] {
                 Some(lt) => {
-                    let mut gathered = Vec::new();
                     for (nr, tbl) in layer.neurons.iter().zip(&lt.tables) {
-                        gathered.clear();
-                        gathered.extend(nr.inputs.iter().map(|&j| inp_codes[j]));
-                        let idx = pack_index(&gathered, lt.quant_in.bw);
+                        scratch.gathered.clear();
+                        scratch.gathered.extend(nr.inputs.iter().map(|&j| input[j]));
+                        let idx = pack_index(&scratch.gathered, lt.quant_in.bw);
                         out_codes.push(tbl.lookup(idx));
                     }
                 }
                 None => {
                     // Dense (or un-tabulated) layer: arithmetic on values,
                     // dequantizing each element with its own source spec.
-                    let vals: Vec<f32> = inp_codes
-                        .iter()
-                        .enumerate()
-                        .map(|(e, &c)| layer.input_specs[e].dequant(c))
-                        .collect();
+                    scratch.vals.clear();
+                    scratch.vals.extend(
+                        input.iter().enumerate().map(|(e, &c)| layer.input_specs[e].dequant(c)),
+                    );
                     for nr in &layer.neurons {
-                        let y = nr.respond_gather(&vals);
+                        let y = nr.respond_gather(&scratch.vals);
                         out_codes.push(layer.quant_out.code(y));
                     }
                 }
             }
-            if i + 1 == n {
-                out_values = out_codes.iter().map(|&c| layer.quant_out.dequant(c)).collect();
+            if is_last {
+                scratch.out.clear();
+                scratch.out.extend(out_codes.iter().map(|&c| layer.quant_out.dequant(c)));
+                scratch.last = out_codes;
             } else {
-                acts_codes.push(out_codes);
+                scratch.acts[i + 1] = out_codes;
             }
         }
-        out_values
+        &scratch.out
     }
 
     /// Functional verification (paper §4.2): run `xs` through both the
     /// tables and the arithmetic mirror; returns the number of samples whose
-    /// outputs differ anywhere.
+    /// outputs differ anywhere.  Samples are split across the worker pool
+    /// in contiguous chunks; each worker owns one reusable
+    /// [`ForwardScratch`], so the sweep is allocation-light and lock-free
+    /// (one atomic add per chunk).
     pub fn verify(&self, model: &ExportedModel, xs: &[f32]) -> usize {
         let d = model.in_features;
-        xs.chunks(d)
-            .filter(|row| {
-                let a = self.forward_codes(model, row);
+        assert_eq!(xs.len() % d, 0, "xs length must be a multiple of in_features");
+        let n = xs.len() / d;
+        let mismatches = std::sync::atomic::AtomicUsize::new(0);
+        crate::util::pool::par_chunks(n, |_, range| {
+            let mut scratch = ForwardScratch::default();
+            let mut local = 0usize;
+            for i in range {
+                let row = &xs[i * d..(i + 1) * d];
+                let a = self.forward_codes_with(model, row, &mut scratch);
                 let b = model.forward(row);
-                a != b
-            })
-            .count()
+                if a != b.as_slice() {
+                    local += 1;
+                }
+            }
+            mismatches.fetch_add(local, std::sync::atomic::Ordering::Relaxed);
+        });
+        mismatches.into_inner()
     }
+}
+
+/// Reusable buffers for [`ModelTables::forward_codes_with`].
+#[derive(Default)]
+pub struct ForwardScratch {
+    /// `acts[i]` holds stage i's input activation codes.
+    acts: Vec<Vec<u32>>,
+    /// Skip-concatenated input of the current layer.
+    input: Vec<u32>,
+    /// Gathered fan-in codes of the current neuron.
+    gathered: Vec<u32>,
+    /// Dequantized input values for dense layers.
+    vals: Vec<f32>,
+    /// Final-layer codes.
+    last: Vec<u32>,
+    /// Final dequantized logit values (the returned slice).
+    out: Vec<f32>,
 }
 
 #[cfg(test)]

@@ -14,7 +14,7 @@
 use anyhow::{bail, Context, Result};
 use logicnets::experiments::{self, ExpCtx};
 use logicnets::luts::ModelTables;
-use logicnets::serve::{LutEngine, Server, ServerConfig};
+use logicnets::serve::{batch_accuracy, Backend, LutEngine, NetlistEngine, Server, ServerConfig};
 use logicnets::sparsity::prune::PruneMethod;
 use logicnets::synth::{synthesize, SynthOpts};
 use logicnets::util::cli::Args;
@@ -45,6 +45,7 @@ fn main() -> Result<()> {
         "verilog" => cmd_verilog(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "score" => cmd_score(&args),
         "complexity" => cmd_complexity(&args),
         "pareto" => cmd_pareto(&args),
         "help" | "--help" | "-h" => {
@@ -61,10 +62,11 @@ fn print_help() {
     println!("  train   --model NAME [--method a-priori|iterative|momentum] [--steps N]");
     println!("  table   <id>|all  [--full] [--retrain] regenerate a paper table");
     println!("  figure  <id>|all  [--full] [--retrain] regenerate a paper figure");
-    println!("  synth   --model NAME [--no-registers] [--clock NS] [--bram-min-bits B]");
+    println!("  synth   --model NAME [--no-registers] [--clock NS] [--bram-min-bits B] [--score]");
     println!("  verilog --model NAME [--out DIR] [--no-registers]");
     println!("  verify  --model NAME [--samples N]");
-    println!("  serve   --model NAME [--requests N] [--workers W]");
+    println!("  serve   --model NAME [--requests N] [--workers W] [--backend tables|netlist]");
+    println!("  score   --models NAME[,NAME...]     accuracy parity: mirror vs tables vs netlist");
     println!("  complexity --model NAME            minimized-logic heuristic (paper 5.5.1)");
     println!("  pareto  --csv reports/figure_6_7.csv   Pareto frontier of a sweep");
     println!("tables : {}", experiments::ALL_TABLES.join(" "));
@@ -163,6 +165,30 @@ fn cmd_synth(args: &Args) -> Result<()> {
         rep.depth, rep.min_period_ns, rep.wns_ns
     );
     println!("  netlist: {} nodes over {} inputs", netlist.num_luts(), netlist.num_inputs);
+    if args.has_flag("score") {
+        // Score the mapped netlist on the full test set through the
+        // bitsliced simulator.  The reported netlist is reused as-is when
+        // it is end-to-end evaluable; with BRAM-mapped neurons a BRAM-free
+        // remap must be scored instead (and is labeled as such).
+        let (_, test) = ctx.dataset(&tr.man.dataset);
+        let test = test.clone();
+        let built = if netlist.brams.is_empty() {
+            NetlistEngine::from_netlist(&ex, &tables, netlist)
+        } else {
+            println!("  (BRAM-mapped neurons present: scoring a BRAM-free remap)");
+            NetlistEngine::build(&ex, &tables)
+        };
+        match built {
+            Ok(engine) => {
+                let acc = batch_accuracy(&engine, &test.x, &test.y);
+                println!(
+                    "  netlist-backed accuracy on {} test samples: {:.3} (arithmetic {:.3})",
+                    test.n, acc, tr.accuracy
+                );
+            }
+            Err(e) => println!("  netlist scoring unavailable: {e}"),
+        }
+    }
     Ok(())
 }
 
@@ -223,16 +249,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get("model").context("--model required")?.to_string();
     let requests = args.get_usize("requests", 50_000);
     let workers = args.get_usize("workers", logicnets::util::pool::num_threads().min(8));
+    let backend = args.get_or("backend", "tables").to_string();
     let mut ctx = ctx_from(args)?;
     let tr = ctx.trained(&name, parse_method(args.get_or("method", "a-priori"))?)?;
     let ex = tr.export();
     let tables = ModelTables::generate(&ex)?;
-    let engine = std::sync::Arc::new(LutEngine::build(&ex, &tables)?);
-    // Raw engine throughput (the FPGA initiation-interval-1 analogue).
     let ds = match tr.man.dataset.as_str() {
         "jets" => logicnets::hep::jets(4096, 7),
         _ => logicnets::mnist::synth_digits(1024, 7),
     };
+    match backend.as_str() {
+        "tables" => {
+            let engine = std::sync::Arc::new(LutEngine::build(&ex, &tables)?);
+            serve_backend(engine, &ds, requests, workers)
+        }
+        "netlist" => {
+            let engine = std::sync::Arc::new(NetlistEngine::build(&ex, &tables)?);
+            serve_backend(engine, &ds, requests, workers)
+        }
+        other => bail!("unknown backend {other} (expected tables|netlist)"),
+    }
+}
+
+fn serve_backend<B: Backend>(
+    engine: std::sync::Arc<B>,
+    ds: &logicnets::data::DataSet,
+    requests: usize,
+    workers: usize,
+) -> Result<()> {
+    println!("serving backend       : {}", engine.name());
+    println!(
+        "eval-set accuracy     : {:.3} ({} samples)",
+        batch_accuracy(&*engine, &ds.x, &ds.y),
+        ds.n
+    );
+    // Raw engine throughput (the FPGA initiation-interval-1 analogue).
     let t0 = std::time::Instant::now();
     let mut done = 0usize;
     while done < requests {
@@ -241,7 +292,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         done += n;
     }
     let raw = requests as f64 / t0.elapsed().as_secs_f64();
-    println!("raw engine throughput : {raw:.0} inferences/s (single thread)");
+    println!("raw engine throughput : {raw:.0} inferences/s (batch path)");
 
     let server = Server::start(
         engine,
@@ -276,6 +327,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("mean batch fill       : {:.1}", stats.mean_batch);
     server.shutdown();
     Ok(())
+}
+
+fn cmd_score(args: &Args) -> Result<()> {
+    let models = args.get_or("models", "hep_c").to_string();
+    let names: Vec<String> = models.split(',').map(|s| s.trim().to_string()).collect();
+    let mut ctx = ctx_from(args)?;
+    experiments::report_netlist_serving(&mut ctx, &names)
 }
 
 fn cmd_complexity(args: &Args) -> Result<()> {

@@ -1,4 +1,9 @@
-//! Flattened, allocation-free inference over truth tables.
+//! The two serving backends behind the router, plus their shared pieces.
+//!
+//! [`LutEngine`] is flattened, allocation-free inference over truth tables;
+//! [`NetlistEngine`] serves the *synthesized LUT netlist* itself through
+//! the bitsliced simulator (`crate::sim`), 64 samples per word.  Both
+//! implement [`Backend`], so `serve::router::Server` can batch over either.
 //!
 //! Layout decisions (this is the measured hot path of `bench_serve`):
 //! * per layer, all neuron fan-in indices live in one contiguous `Vec<u32>`
@@ -9,7 +14,9 @@
 //! * scratch buffers are reused across samples via `InferScratch`.
 
 use crate::luts::ModelTables;
-use crate::nn::{ExportedModel, QuantSpec};
+use crate::nn::{ExportedLayer, ExportedModel, QuantSpec};
+use crate::sim::BitMatrix;
+use crate::synth::{synthesize, Netlist, SynthOpts};
 use anyhow::{ensure, Result};
 
 enum Stage {
@@ -25,19 +32,63 @@ enum Stage {
         num_out: usize,
     },
     /// Arithmetic (dense classifier head) layer.
-    Dense {
-        /// Row-major [out, in] folded weights (g pre-multiplied).
-        w: Vec<f32>,
-        /// Folded bias per neuron: g*b + h.
-        b: Vec<f32>,
-        in_f: usize,
-        num_out: usize,
-        /// Dequant value per (element, code): dequant[e*ncodes + c].  Skip
-        /// wiring makes the scale per-element.
-        dequant: Vec<f32>,
-        ncodes: usize,
-        quant_out: QuantSpec,
-    },
+    Dense(DenseStage),
+}
+
+/// A folded arithmetic layer in code domain, shared by both backends:
+/// `LutEngine` uses it for un-tabulated layers, `NetlistEngine` for the
+/// dense tail after the synthesized netlist — one implementation means the
+/// two backends are bit-identical on the arithmetic path.
+struct DenseStage {
+    /// Row-major [out, in] folded weights (g pre-multiplied).
+    w: Vec<f32>,
+    /// Folded bias per neuron: g*b + h.
+    b: Vec<f32>,
+    in_f: usize,
+    num_out: usize,
+    /// Dequant value per (element, code): dequant[e*ncodes + c].  Skip
+    /// wiring makes the scale per-element.
+    dequant: Vec<f32>,
+    ncodes: usize,
+    quant_out: QuantSpec,
+}
+
+impl DenseStage {
+    fn build(layer: &ExportedLayer) -> DenseStage {
+        let in_f = layer.in_f;
+        let num_out = layer.neurons.len();
+        let mut w = vec![0f32; num_out * in_f];
+        let mut b = vec![0f32; num_out];
+        for (o, nr) in layer.neurons.iter().enumerate() {
+            for (wt, &j) in nr.weights.iter().zip(&nr.inputs) {
+                w[o * in_f + j] = nr.g * wt;
+            }
+            b[o] = nr.g * nr.bias + nr.h;
+        }
+        let ncodes = layer.quant_in.num_codes();
+        let mut dequant = vec![0f32; in_f * ncodes];
+        for (e, spec) in layer.input_specs.iter().enumerate() {
+            for c in 0..ncodes as u32 {
+                dequant[e * ncodes + c as usize] = spec.dequant(c);
+            }
+        }
+        DenseStage { w, b, in_f, num_out, dequant, ncodes, quant_out: layer.quant_out }
+    }
+
+    /// One sample: input codes -> appended output codes (+ raw logits into
+    /// the caller's reusable buffer).
+    fn eval(&self, input: &[u8], out: &mut Vec<u8>, logits: &mut Vec<f32>) {
+        logits.clear();
+        for o in 0..self.num_out {
+            let row = &self.w[o * self.in_f..(o + 1) * self.in_f];
+            let mut z = self.b[o];
+            for (e, (wt, &c)) in row.iter().zip(input.iter()).enumerate() {
+                z += wt * self.dequant[e * self.ncodes + c as usize];
+            }
+            logits.push(z);
+            out.push(self.quant_out.code(z) as u8);
+        }
+    }
 }
 
 pub struct LutEngine {
@@ -88,34 +139,7 @@ impl LutEngine {
                         num_out: lt.tables.len(),
                     });
                 }
-                None => {
-                    let in_f = layer.in_f;
-                    let num_out = layer.neurons.len();
-                    let mut w = vec![0f32; num_out * in_f];
-                    let mut b = vec![0f32; num_out];
-                    for (o, nr) in layer.neurons.iter().enumerate() {
-                        for (wt, &j) in nr.weights.iter().zip(&nr.inputs) {
-                            w[o * in_f + j] = nr.g * wt;
-                        }
-                        b[o] = nr.g * nr.bias + nr.h;
-                    }
-                    let ncodes = layer.quant_in.num_codes();
-                    let mut dequant = vec![0f32; in_f * ncodes];
-                    for (e, spec) in layer.input_specs.iter().enumerate() {
-                        for c in 0..ncodes as u32 {
-                            dequant[e * ncodes + c as usize] = spec.dequant(c);
-                        }
-                    }
-                    stages.push(Stage::Dense {
-                        w,
-                        b,
-                        in_f,
-                        num_out,
-                        dequant,
-                        ncodes,
-                        quant_out: layer.quant_out,
-                    });
-                }
+                None => stages.push(Stage::Dense(DenseStage::build(layer))),
             }
         }
         Ok(LutEngine {
@@ -175,18 +199,7 @@ impl LutEngine {
                         out.push(tab[tab_off[j] as usize + packed]);
                     }
                 }
-                Stage::Dense { w, b, in_f, num_out, dequant, ncodes, quant_out } => {
-                    scratch.logits.clear();
-                    for o in 0..*num_out {
-                        let row = &w[o * in_f..(o + 1) * in_f];
-                        let mut z = b[o];
-                        for (e, (wt, &c)) in row.iter().zip(input.iter()).enumerate() {
-                            z += wt * dequant[e * ncodes + c as usize];
-                        }
-                        scratch.logits.push(z);
-                        out.push(quant_out.code(z) as u8);
-                    }
-                }
+                Stage::Dense(dense) => dense.eval(input, &mut out, &mut scratch.logits),
             }
             if i + 1 == n {
                 scratch.out = out;
@@ -211,21 +224,20 @@ impl LutEngine {
         xs.chunks(d).map(|row| self.infer(row, &mut scratch)).collect()
     }
 
-    /// Multi-core batch classify (one scratch per worker chunk).
+    /// Multi-core batch classify.  The output vector is split into disjoint
+    /// per-worker `&mut` slices up front, so every worker writes results in
+    /// place — no mutex, no per-chunk gather copy (one scratch per worker).
     pub fn infer_batch_par(&self, xs: &[f32]) -> Vec<usize> {
         let d = self.in_features;
         assert_eq!(xs.len() % d, 0);
         let n = xs.len() / d;
         let mut out = vec![0usize; n];
-        let out_ptr = std::sync::Mutex::new(&mut out);
-        crate::util::pool::par_chunks(n, |_, range| {
+        crate::util::pool::par_chunks_mut(&mut out, |_, start, chunk| {
             let mut scratch = InferScratch::default();
-            let mut local = Vec::with_capacity(range.len());
-            for i in range.clone() {
-                local.push(self.infer(&xs[i * d..(i + 1) * d], &mut scratch));
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = start + k;
+                *slot = self.infer(&xs[i * d..(i + 1) * d], &mut scratch);
             }
-            let mut guard = out_ptr.lock().unwrap();
-            guard[range.start..range.end].copy_from_slice(&local);
         });
         out
     }
@@ -235,6 +247,210 @@ impl LutEngine {
         let mut scratch = InferScratch::default();
         self.infer(x, &mut scratch);
         scratch.out
+    }
+}
+
+/// Common surface of the serving backends: classify a contiguous batch of
+/// rows into argmax classes.  `serve::router::Server` is generic over this,
+/// so the truth-table engine and the synthesized-netlist engine are
+/// selectable behind the same batching router.
+pub trait Backend: Send + Sync + 'static {
+    fn in_features(&self) -> usize;
+    fn classes(&self) -> usize;
+    fn infer_batch(&self, xs: &[f32]) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+impl Backend for LutEngine {
+    fn in_features(&self) -> usize {
+        self.in_features
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&self, xs: &[f32]) -> Vec<usize> {
+        LutEngine::infer_batch(self, xs)
+    }
+
+    fn name(&self) -> &'static str {
+        "tables"
+    }
+}
+
+/// Classification accuracy of any serving backend on a labeled test set —
+/// the batch scoring hook the MNIST/HEP flows use to score a mapped
+/// netlist (or the table engine) on a full test set.
+pub fn batch_accuracy<B: Backend + ?Sized>(backend: &B, xs: &[f32], ys: &[i32]) -> f64 {
+    let preds = backend.infer_batch(xs);
+    assert_eq!(preds.len(), ys.len(), "sample/label count mismatch");
+    if ys.is_empty() {
+        return 0.0;
+    }
+    let hits = preds.iter().zip(ys).filter(|(p, y)| **p == **y as usize).count();
+    hits as f64 / ys.len() as f64
+}
+
+/// Serving backend that executes the *synthesized LUT netlist* itself:
+/// quantize → encode input bit-planes → one bitsliced netlist pass (64
+/// samples per word, word-blocks across the worker pool) → decode output
+/// codes → dense tail → argmax.  This is the software model of serving
+/// straight from the mapped circuit, and a third functional-verification
+/// surface: its predictions must match `LutEngine` exactly.
+pub struct NetlistEngine {
+    netlist: Netlist,
+    /// Arithmetic layers after the synthesized prefix (classifier head).
+    dense_tail: Vec<DenseStage>,
+    in_quant: QuantSpec,
+    pub in_features: usize,
+    pub classes: usize,
+    /// Bits per input feature code.
+    bw_in: usize,
+    /// Bits per netlist output code (last sparse layer's quant_out).
+    out_bw: usize,
+    /// Netlist output neurons (= output planes / out_bw).
+    net_outs: usize,
+}
+
+impl NetlistEngine {
+    /// Synthesize the model's table-mapped prefix into a netlist and build
+    /// the engine.  BRAM spill is disabled: serving needs an end-to-end
+    /// evaluable circuit.
+    pub fn build(model: &ExportedModel, tables: &ModelTables) -> Result<NetlistEngine> {
+        let (netlist, _) = synthesize(
+            model,
+            tables,
+            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        )?;
+        Self::from_netlist(model, tables, netlist)
+    }
+
+    /// Build from an already-synthesized netlist.  The table-mapped layers
+    /// must form a contiguous prefix starting at layer 0 (so the netlist's
+    /// input bus is the model input bus); every later layer stays
+    /// arithmetic via [`DenseStage`].
+    pub fn from_netlist(
+        model: &ExportedModel,
+        tables: &ModelTables,
+        netlist: Netlist,
+    ) -> Result<NetlistEngine> {
+        // Shared executable-netlist preconditions (no BRAM, no skip wiring,
+        // emitted layers present) live in synth::verify_plan; serving
+        // additionally needs the prefix to start at layer 0 so the
+        // netlist's input bus is the model input bus.
+        let (emitted, lt_first, out_bw) = crate::synth::verify_plan(model, tables, &netlist)?;
+        ensure!(
+            emitted.iter().enumerate().all(|(k, &li)| k == li),
+            "table-mapped layers must form a contiguous prefix"
+        );
+        let last = *emitted.last().unwrap();
+        let bw_in = lt_first.quant_in.bw;
+        ensure!(
+            netlist.num_inputs == model.layers[0].in_f * bw_in,
+            "netlist input bus {} != in_f {} * bw {bw_in}",
+            netlist.num_inputs,
+            model.layers[0].in_f
+        );
+        ensure!(out_bw <= 8, "engine supports <=8-bit codes");
+        let net_outs = model.layers[last].neurons.len();
+        ensure!(
+            netlist.outputs.len() == net_outs * out_bw,
+            "netlist output bus {} != neurons {net_outs} * bw {out_bw}",
+            netlist.outputs.len()
+        );
+        let dense_tail: Vec<DenseStage> =
+            model.layers[last + 1..].iter().map(DenseStage::build).collect();
+        Ok(NetlistEngine {
+            netlist,
+            dense_tail,
+            in_quant: model.layers[0].quant_in,
+            in_features: model.in_features,
+            classes: model.classes,
+            bw_in,
+            out_bw,
+            net_outs,
+        })
+    }
+
+    pub fn num_luts(&self) -> usize {
+        self.netlist.num_luts()
+    }
+
+    /// Decode netlist output codes for samples `start..start+chunk.len()`,
+    /// run the dense tail, and write argmax classes into `chunk`.
+    fn decode_range(&self, out: &BitMatrix, start: usize, chunk: &mut [usize]) {
+        let mut codes: Vec<u8> = Vec::with_capacity(self.net_outs);
+        let mut next: Vec<u8> = Vec::new();
+        let mut logits: Vec<f32> = Vec::new();
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            let s = start + k;
+            codes.clear();
+            for o in 0..self.net_outs {
+                codes.push(out.get_code(o * self.out_bw, self.out_bw, s) as u8);
+            }
+            for stage in &self.dense_tail {
+                next.clear();
+                stage.eval(&codes, &mut next, &mut logits);
+                std::mem::swap(&mut codes, &mut next);
+            }
+            // Same argmax (and tie-break) as `LutEngine::infer`.
+            *slot = codes
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, &c)| c)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+        }
+    }
+
+    /// Batch classify: one bitsliced pass over the whole batch, then the
+    /// dense tail + argmax.  Router-sized batches decode serially (the
+    /// per-sample work is sub-microsecond, so thread spawn/join would
+    /// dominate); large offline batches split into disjoint per-worker
+    /// output slices.
+    pub fn infer_batch(&self, xs: &[f32]) -> Vec<usize> {
+        const PAR_DECODE_MIN: usize = 512;
+        let d = self.in_features;
+        assert_eq!(xs.len() % d, 0);
+        let n = xs.len() / d;
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut inputs = BitMatrix::new(self.netlist.num_inputs, n);
+        for (s, row) in xs.chunks(d).enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                inputs.set_code(j * self.bw_in, self.bw_in, s, self.in_quant.code(v));
+            }
+        }
+        let out = crate::sim::eval_netlist(&self.netlist, &inputs);
+        let mut preds = vec![0usize; n];
+        if n < PAR_DECODE_MIN {
+            self.decode_range(&out, 0, &mut preds);
+        } else {
+            crate::util::pool::par_chunks_mut(&mut preds, |_, start, chunk| {
+                self.decode_range(&out, start, chunk)
+            });
+        }
+        preds
+    }
+}
+
+impl Backend for NetlistEngine {
+    fn in_features(&self) -> usize {
+        self.in_features
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&self, xs: &[f32]) -> Vec<usize> {
+        NetlistEngine::infer_batch(self, xs)
+    }
+
+    fn name(&self) -> &'static str {
+        "netlist"
     }
 }
 
@@ -386,5 +602,53 @@ mod tests {
         for (i, row) in xs.chunks(12).enumerate() {
             assert_eq!(batch[i], engine.infer(row, &mut scratch));
         }
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial() {
+        let model = random_model(6);
+        let tables = ModelTables::generate(&model).unwrap();
+        let engine = LutEngine::build(&model, &tables).unwrap();
+        let mut rng = Rng::new(8);
+        for n in [1usize, 7, 64, 257] {
+            let xs: Vec<f32> = (0..12 * n).map(|_| rng.f32()).collect();
+            assert_eq!(engine.infer_batch_par(&xs), engine.infer_batch(&xs), "n={n}");
+        }
+    }
+
+    #[test]
+    fn netlist_engine_matches_lut_engine() {
+        // The bitsliced netlist backend must reproduce the table engine's
+        // predictions exactly (incl. argmax tie-breaks), on batch sizes
+        // around the 64-sample word boundary.
+        let model = random_model(3);
+        let tables = ModelTables::generate(&model).unwrap();
+        let lut = LutEngine::build(&model, &tables).unwrap();
+        let net = NetlistEngine::build(&model, &tables).unwrap();
+        assert!(net.num_luts() > 0);
+        assert_eq!(Backend::classes(&net), Backend::classes(&lut));
+        let mut rng = Rng::new(77);
+        for n in [1usize, 63, 64, 65, 200] {
+            let xs: Vec<f32> = (0..12 * n).map(|_| rng.f32()).collect();
+            assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs), "n={n}");
+        }
+    }
+
+    #[test]
+    fn batch_accuracy_counts_hits() {
+        let model = random_model(4);
+        let tables = ModelTables::generate(&model).unwrap();
+        let engine = LutEngine::build(&model, &tables).unwrap();
+        let mut rng = Rng::new(13);
+        let xs: Vec<f32> = (0..12 * 50).map(|_| rng.f32()).collect();
+        let preds = engine.infer_batch(&xs);
+        // Label half the samples with the prediction, half off by one.
+        let ys: Vec<i32> = preds
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| if i % 2 == 0 { p as i32 } else { (p as i32 + 1) % 5 })
+            .collect();
+        let acc = batch_accuracy(&engine, &xs, &ys);
+        assert!((acc - 0.5).abs() < 1e-9, "acc {acc}");
     }
 }

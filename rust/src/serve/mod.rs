@@ -1,15 +1,19 @@
 //! L3 serving engine: the "extreme-throughput trigger" story.
 //!
 //! The FPGA runs a LogicNet at initiation interval 1 — one inference per
-//! clock.  This module is the software model of that datapath: a
-//! cache-friendly truth-table inference engine (`LutEngine`) behind a
-//! batching request router (`Server`) with worker threads, throughput
-//! counters and latency percentiles.  It is also the second functional
-//! verification surface: the engine must agree exactly with the arithmetic
-//! mirror (`ExportedModel::forward`).
+//! clock.  This module is the software model of that datapath, with two
+//! selectable backends behind one batching router:
+//! * [`LutEngine`] — cache-friendly truth-table inference (code-domain
+//!   lookups, allocation-free scratch);
+//! * [`NetlistEngine`] — the *synthesized LUT netlist itself*, executed by
+//!   the bitsliced simulator (`crate::sim`) 64 samples per word.
+//!
+//! Both implement [`Backend`] and must agree exactly with the arithmetic
+//! mirror (`ExportedModel::forward`) — serving doubles as functional
+//! verification of the whole tool-flow.
 
 pub mod engine;
 pub mod router;
 
-pub use engine::LutEngine;
+pub use engine::{batch_accuracy, Backend, LutEngine, NetlistEngine};
 pub use router::{Server, ServerConfig, ServerStats};

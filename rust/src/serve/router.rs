@@ -1,14 +1,18 @@
-//! Request router + dynamic batcher over the LUT engine.
+//! Request router + dynamic batcher over a serving backend.
 //!
 //! Architecture (vLLM-router-flavored, scaled to this workload): clients
 //! submit single samples through a channel; a batcher thread coalesces up
 //! to `max_batch` requests (or whatever arrived within `batch_timeout`) and
-//! hands the batch to a worker pool; each worker owns its scratch buffers,
-//! so the hot loop never allocates or locks.  Latency is tracked per
+//! hands the batch to a worker pool; each worker re-packs its batch into
+//! one contiguous buffer and runs a single `Backend::infer_batch` call, so
+//! backends that are batch-native (the bitsliced `NetlistEngine` computes
+//! 64 samples per word) get full batches, and the table engine keeps its
+//! allocation-free scratch reuse internally.  The backend is selected at
+//! `Server::start` — any `Arc<impl Backend>` works.  Latency is tracked per
 //! request (enqueue -> response) in a fixed-size reservoir for percentile
 //! reporting.
 
-use super::engine::{InferScratch, LutEngine};
+use super::engine::Backend;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -67,7 +71,10 @@ pub struct Server {
 }
 
 impl Server {
-    pub fn start(engine: Arc<LutEngine>, cfg: ServerConfig) -> Server {
+    /// Start the router over any serving backend (`LutEngine`,
+    /// `NetlistEngine`, ...).
+    pub fn start<B: Backend>(engine: Arc<B>, cfg: ServerConfig) -> Server {
+        let engine: Arc<dyn Backend> = engine;
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let stats = Arc::new(StatsInner::default());
         // Batcher thread: coalesce, then fan batches to workers round-robin.
@@ -80,7 +87,7 @@ impl Server {
             let stats = stats.clone();
             handles.push(std::thread::spawn(move || worker_loop(engine, wrx, stats)));
         }
-        let in_features = engine.in_features;
+        let in_features = engine.in_features();
         let stats2 = stats.clone();
         let max_batch = cfg.max_batch.max(1);
         let timeout = cfg.batch_timeout;
@@ -92,6 +99,11 @@ impl Server {
 
     /// Blocking single inference through the full router path.
     pub fn infer(&self, x: Vec<f32>) -> Option<usize> {
+        if x.len() != self.in_features {
+            // Malformed request: never let it scramble a packed batch.
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let (rtx, rrx) = sync_channel(1);
         let req = Request { x, enqueued: Instant::now(), resp: rtx };
         if self.tx.try_send(req).is_err() {
@@ -184,12 +196,19 @@ fn batcher_loop(
     }
 }
 
-fn worker_loop(engine: Arc<LutEngine>, rx: Receiver<Vec<Request>>, stats: Arc<StatsInner>) {
-    let mut scratch = InferScratch::default();
+fn worker_loop(engine: Arc<dyn Backend>, rx: Receiver<Vec<Request>>, stats: Arc<StatsInner>) {
     const RESERVOIR: usize = 100_000;
+    // One reusable pack buffer per worker: requests are copied into a
+    // contiguous [batch, d] matrix so the backend sees a single batch call.
+    let mut xs: Vec<f32> = Vec::new();
     while let Ok(batch) = rx.recv() {
-        for req in batch {
-            let class = engine.infer(&req.x, &mut scratch);
+        xs.clear();
+        for req in &batch {
+            xs.extend_from_slice(&req.x);
+        }
+        let preds = engine.infer_batch(&xs);
+        debug_assert_eq!(preds.len(), batch.len());
+        for (req, class) in batch.into_iter().zip(preds) {
             let lat = req.enqueued.elapsed().as_secs_f64() * 1e6;
             {
                 let mut l = stats.latencies_us.lock().unwrap();
@@ -208,9 +227,10 @@ mod tests {
     use super::*;
     use crate::luts::ModelTables;
     use crate::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+    use crate::serve::engine::{LutEngine, NetlistEngine};
     use crate::util::rng::Rng;
 
-    fn engine() -> Arc<LutEngine> {
+    fn model_and_tables() -> (ExportedModel, ModelTables) {
         let mut rng = Rng::new(3);
         let neurons = (0..8)
             .map(|_| {
@@ -232,6 +252,11 @@ mod tests {
             act_widths: vec![6],
         };
         let tables = ModelTables::generate(&model).unwrap();
+        (model, tables)
+    }
+
+    fn engine() -> Arc<LutEngine> {
+        let (model, tables) = model_and_tables();
         Arc::new(LutEngine::build(&model, &tables).unwrap())
     }
 
@@ -253,6 +278,34 @@ mod tests {
         assert_eq!(stats.completed, 100);
         assert!(stats.batches >= 1);
         assert!(stats.p50_us >= 0.0 && stats.p99_us >= stats.p50_us);
+        server.shutdown();
+    }
+
+    #[test]
+    fn netlist_backend_serves_identically() {
+        // Backend selection: the same router must serve straight from the
+        // synthesized netlist and agree with the table engine per request.
+        let (model, tables) = model_and_tables();
+        let lut = LutEngine::build(&model, &tables).unwrap();
+        let net = Arc::new(NetlistEngine::build(&model, &tables).unwrap());
+        let server = Server::start(
+            net,
+            ServerConfig { workers: 2, max_batch: 8, ..Default::default() },
+        );
+        let mut rng = Rng::new(21);
+        for _ in 0..100 {
+            let x: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+            let direct = lut.infer_batch(&x)[0];
+            assert_eq!(server.infer(x).expect("server response"), direct);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_malformed_width() {
+        let server = Server::start(engine(), ServerConfig::default());
+        assert!(server.infer(vec![0.0; 3]).is_none());
+        assert_eq!(server.stats().rejected, 1);
         server.shutdown();
     }
 

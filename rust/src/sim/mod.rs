@@ -1,0 +1,392 @@
+//! Bitsliced 64-way netlist simulation (DESIGN.md §Bitsliced-Simulation).
+//!
+//! The scalar `Netlist::eval` walks one sample at a time through `Vec<bool>`
+//! — fine for spot checks, hopeless for equivalence sweeps and for serving
+//! from the synthesized circuit.  This module stores a batch of samples as
+//! *bit-planes* (one `u64` word holds the same bit of 64 samples) and
+//! evaluates every `LutNode` over whole words: a 6-input LUT becomes a
+//! short Shannon expansion of AND/OR/NOT word ops, so one pass computes 64
+//! samples per core, parallelized over word-blocks via `util::pool`.
+//!
+//! Layout: [`BitMatrix`] is plane-major — plane `p` (one named bit: a
+//! primary input, or one output bit) owns `words_per_plane` consecutive
+//! `u64`s, and sample `s` lives at bit `s % 64` of word `s / 64`.  Bits at
+//! or beyond `samples` in the last word of every plane are kept zero
+//! (enforced by every constructor and by [`eval_netlist`]), so whole-word
+//! comparisons between matrices are exact.
+//!
+//! The evaluation schedule is levelized implicitly: `Mapper` only ever
+//! appends nodes whose inputs already exist, so node order is a topological
+//! order and a single forward sweep per word suffices (checked by a
+//! debug assertion).
+
+use crate::synth::netlist::{Net, Netlist};
+use crate::util::bits::var_word;
+use crate::util::pool;
+
+/// A batch of bit-vectors stored as bit-planes, 64 samples per word.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    planes: usize,
+    samples: usize,
+    /// Words per plane: `samples.div_ceil(64)`.
+    wpp: usize,
+    /// Plane-major storage: plane `p` is `words[p*wpp .. (p+1)*wpp]`.
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn new(planes: usize, samples: usize) -> BitMatrix {
+        let wpp = samples.div_ceil(64);
+        BitMatrix { planes, samples, wpp, words: vec![0u64; planes * wpp] }
+    }
+
+    pub fn planes(&self) -> usize {
+        self.planes
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    pub fn words_per_plane(&self) -> usize {
+        self.wpp
+    }
+
+    pub fn plane(&self, p: usize) -> &[u64] {
+        &self.words[p * self.wpp..(p + 1) * self.wpp]
+    }
+
+    pub fn plane_mut(&mut self, p: usize) -> &mut [u64] {
+        &mut self.words[p * self.wpp..(p + 1) * self.wpp]
+    }
+
+    /// Valid-bit mask of the last word of every plane.
+    fn tail_mask(&self) -> u64 {
+        let rem = self.samples % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, plane: usize, sample: usize) -> bool {
+        debug_assert!(plane < self.planes && sample < self.samples);
+        (self.words[plane * self.wpp + sample / 64] >> (sample % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, plane: usize, sample: usize, v: bool) {
+        debug_assert!(plane < self.planes && sample < self.samples);
+        let idx = plane * self.wpp + sample / 64;
+        let bit = 1u64 << (sample % 64);
+        if v {
+            self.words[idx] |= bit;
+        } else {
+            self.words[idx] &= !bit;
+        }
+    }
+
+    /// Write the `bw` bits of `code` into planes `base..base+bw` of one
+    /// sample (bit `b` of the code lands in plane `base + b`) — the layout
+    /// the synthesizer uses for a quantized activation bus.
+    #[inline]
+    pub fn set_code(&mut self, base: usize, bw: usize, sample: usize, code: u32) {
+        debug_assert!(bw == 32 || (code as u64) < (1u64 << bw), "code {code} too wide");
+        for b in 0..bw {
+            self.set(base + b, sample, (code >> b) & 1 == 1);
+        }
+    }
+
+    /// Read back a `bw`-bit code from planes `base..base+bw` of one sample.
+    #[inline]
+    pub fn get_code(&self, base: usize, bw: usize, sample: usize) -> u32 {
+        let mut c = 0u32;
+        for b in 0..bw {
+            c |= (self.get(base + b, sample) as u32) << b;
+        }
+        c
+    }
+
+    /// Write one sample's full bit-vector (one column across all planes).
+    pub fn set_column(&mut self, sample: usize, bits: &[bool]) {
+        assert_eq!(bits.len(), self.planes);
+        for (p, &b) in bits.iter().enumerate() {
+            self.set(p, sample, b);
+        }
+    }
+
+    /// Read one sample's full bit-vector.
+    pub fn column(&self, sample: usize) -> Vec<bool> {
+        (0..self.planes).map(|p| self.get(p, sample)).collect()
+    }
+
+    /// Enumerate all `2^k` input patterns as bit-planes: sample `s` of
+    /// plane `v` is `(s >> v) & 1`.  This is how exhaustive table-vs-netlist
+    /// equivalence enumerates a truth-table's index space in word-parallel
+    /// form (64 patterns per word) instead of one scalar eval per pattern.
+    pub fn all_patterns(k: usize) -> BitMatrix {
+        assert!(k < usize::BITS as usize - 7, "pattern space 2^{k} too large");
+        let samples = 1usize << k;
+        let mut m = BitMatrix::new(k, samples);
+        let (wpp, tail) = (m.wpp, m.tail_mask());
+        for v in 0..k {
+            for w in 0..wpp {
+                let mut word = var_word(v, w);
+                if w + 1 == wpp {
+                    word &= tail;
+                }
+                m.words[v * wpp + w] = word;
+            }
+        }
+        m
+    }
+}
+
+/// Word-level evaluation of one K<=6-input LUT by Shannon expansion of its
+/// packed truth table: `xs[j]` holds input `j` of 64 samples, the result
+/// holds the LUT output of the same 64 samples.
+#[inline]
+pub fn lut_word(tt: u64, xs: &[u64]) -> u64 {
+    let k = xs.len();
+    debug_assert!(k <= 6, "LUT arity {k} > 6");
+    let mask = if k >= 6 { u64::MAX } else { (1u64 << (1usize << k)) - 1 };
+    lut_word_rec(tt & mask, xs, mask)
+}
+
+fn lut_word_rec(tt: u64, xs: &[u64], mask: u64) -> u64 {
+    // Constant cofactors terminate most branches early: sparse and
+    // saturated truth tables (the common LogicNets case) cost far fewer
+    // than the worst-case 2^k word ops.
+    if tt == 0 {
+        return 0;
+    }
+    if tt == mask {
+        return u64::MAX;
+    }
+    let k = xs.len();
+    debug_assert!(k >= 1, "non-constant 0-input LUT");
+    let half = 1usize << (k - 1);
+    let lo_mask = (1u64 << half) - 1;
+    let x = xs[k - 1];
+    let f0 = lut_word_rec(tt & lo_mask, &xs[..k - 1], lo_mask);
+    let f1 = lut_word_rec((tt >> half) & lo_mask, &xs[..k - 1], lo_mask);
+    (x & f1) | (!x & f0)
+}
+
+#[inline]
+fn read_net(inputs: &BitMatrix, vals: &[u64], net: Net, w: usize) -> u64 {
+    match net {
+        Net::Const0 => 0,
+        Net::Const1 => u64::MAX,
+        Net::Input(i) => inputs.plane(i as usize)[w],
+        Net::Node(i) => vals[i as usize],
+    }
+}
+
+/// Evaluate a whole word-block (a contiguous range of sample words): one
+/// topological sweep over the nodes per word, all node values live in one
+/// reused `vals` buffer.  Returns the output planes of the block, laid out
+/// `[output][word_in_block]`.
+fn eval_block(netlist: &Netlist, inputs: &BitMatrix, range: std::ops::Range<usize>) -> Vec<u64> {
+    let len = range.len();
+    let mut vals = vec![0u64; netlist.nodes.len()];
+    let mut block = vec![0u64; netlist.outputs.len() * len];
+    let mut xs = [0u64; 6];
+    for (k, w) in range.enumerate() {
+        for (i, node) in netlist.nodes.iter().enumerate() {
+            let arity = node.inputs.len();
+            debug_assert!(arity <= 6);
+            for (j, &inp) in node.inputs.iter().enumerate() {
+                xs[j] = read_net(inputs, &vals, inp, w);
+            }
+            vals[i] = lut_word(node.tt, &xs[..arity]);
+        }
+        for (oi, &o) in netlist.outputs.iter().enumerate() {
+            block[oi * len + k] = read_net(inputs, &vals, o, w);
+        }
+    }
+    block
+}
+
+/// Bitsliced batch evaluation of a netlist: `inputs` holds one plane per
+/// primary input, the result one plane per output net.  Word-blocks are
+/// distributed over the worker pool; each worker owns its value buffer and
+/// writes a disjoint slice of the result, so the sweep is lock-free.
+pub fn eval_netlist(netlist: &Netlist, inputs: &BitMatrix) -> BitMatrix {
+    assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+    assert_eq!(inputs.planes(), netlist.num_inputs, "input plane count");
+    #[cfg(debug_assertions)]
+    for (i, node) in netlist.nodes.iter().enumerate() {
+        for &inp in &node.inputs {
+            if let Net::Node(j) = inp {
+                debug_assert!((j as usize) < i, "node {i} not in topological order");
+            }
+        }
+    }
+    let samples = inputs.samples();
+    let mut out = BitMatrix::new(netlist.outputs.len(), samples);
+    let wpp = inputs.words_per_plane();
+    if wpp == 0 || netlist.outputs.is_empty() {
+        return out;
+    }
+    let per = wpp.div_ceil(pool::num_threads()).max(1);
+    let ranges: Vec<std::ops::Range<usize>> =
+        (0..wpp).step_by(per).map(|lo| lo..(lo + per).min(wpp)).collect();
+    let blocks: Vec<Vec<u64>> =
+        pool::par_map(&ranges, |_, r| eval_block(netlist, inputs, r.clone()));
+    let tail = out.tail_mask();
+    for (range, block) in ranges.iter().zip(blocks) {
+        let len = range.len();
+        for p in 0..out.planes {
+            for (k, w) in range.clone().enumerate() {
+                let mut word = block[p * len + k];
+                if w + 1 == wpp {
+                    word &= tail;
+                }
+                out.words[p * out.wpp + w] = word;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::netlist::LutNode;
+    use crate::util::rng::Rng;
+
+    fn and_or_netlist() -> Netlist {
+        // n0 = AND(in0, in1); n1 = OR(n0, in2); outputs exercise consts and
+        // input passthrough alongside node outputs.
+        Netlist {
+            num_inputs: 3,
+            nodes: vec![
+                LutNode { inputs: vec![Net::Input(0), Net::Input(1)], tt: 0b1000, level: 1 },
+                LutNode { inputs: vec![Net::Node(0), Net::Input(2)], tt: 0b1110, level: 2 },
+            ],
+            outputs: vec![Net::Node(1), Net::Const1, Net::Const0, Net::Input(2)],
+            brams: vec![],
+            layer_depths: vec![2],
+        }
+    }
+
+    #[test]
+    fn bitmatrix_set_get_roundtrip() {
+        let mut m = BitMatrix::new(5, 130);
+        let mut rng = Rng::new(1);
+        let mut mirror = vec![vec![false; 130]; 5];
+        for _ in 0..400 {
+            let (p, s) = (rng.below(5), rng.below(130));
+            let v = rng.f64() < 0.5;
+            m.set(p, s, v);
+            mirror[p][s] = v;
+        }
+        for p in 0..5 {
+            for s in 0..130 {
+                assert_eq!(m.get(p, s), mirror[p][s], "p={p} s={s}");
+            }
+        }
+        // Tail invariant: bits beyond `samples` stay zero.
+        let tail = m.tail_mask();
+        for p in 0..5 {
+            assert_eq!(m.plane(p)[2] & !tail, 0);
+        }
+    }
+
+    #[test]
+    fn codes_and_columns_roundtrip() {
+        let mut m = BitMatrix::new(6, 70);
+        m.set_code(2, 3, 65, 0b101);
+        assert_eq!(m.get_code(2, 3, 65), 0b101);
+        assert!(m.get(2, 65) && !m.get(3, 65) && m.get(4, 65));
+        let bits = vec![true, false, true, true, false, false];
+        m.set_column(7, &bits);
+        assert_eq!(m.column(7), bits);
+    }
+
+    #[test]
+    fn all_patterns_enumerates_indices() {
+        for k in [1usize, 3, 6, 8] {
+            let m = BitMatrix::all_patterns(k);
+            assert_eq!(m.samples(), 1 << k);
+            for s in 0..(1usize << k) {
+                for v in 0..k {
+                    assert_eq!(m.get(v, s), (s >> v) & 1 == 1, "k={k} s={s} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_word_matches_scalar_lookup() {
+        let mut rng = Rng::new(7);
+        for k in 0..=6usize {
+            for _ in 0..20 {
+                let tt = rng.next_u64();
+                let xs: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
+                let word = lut_word(tt, &xs);
+                for b in 0..64usize {
+                    let mut idx = 0usize;
+                    for (j, x) in xs.iter().enumerate() {
+                        if (x >> b) & 1 == 1 {
+                            idx |= 1 << j;
+                        }
+                    }
+                    let expect = (tt >> idx) & 1 == 1;
+                    assert_eq!((word >> b) & 1 == 1, expect, "k={k} bit={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_matches_scalar_on_mixed_outputs() {
+        let nl = and_or_netlist();
+        let samples = 130; // crosses word boundaries, non-multiple of 64
+        let mut inputs = BitMatrix::new(3, samples);
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<bool>> = (0..samples)
+            .map(|s| {
+                let bits: Vec<bool> = (0..3).map(|_| rng.f64() < 0.5).collect();
+                inputs.set_column(s, &bits);
+                bits
+            })
+            .collect();
+        let out = eval_netlist(&nl, &inputs);
+        assert_eq!(out.planes(), 4);
+        for (s, bits) in rows.iter().enumerate() {
+            assert_eq!(out.column(s), nl.eval(bits), "sample {s}");
+        }
+        // Tail bits of every output plane (including Const1) must be zero.
+        let tail = out.tail_mask();
+        for p in 0..out.planes() {
+            assert_eq!(out.plane(p)[out.words_per_plane() - 1] & !tail, 0, "plane {p}");
+        }
+    }
+
+    #[test]
+    fn eval_exhaustive_via_all_patterns() {
+        let nl = and_or_netlist();
+        let inputs = BitMatrix::all_patterns(3);
+        let out = eval_netlist(&nl, &inputs);
+        for idx in 0..8usize {
+            let bits: Vec<bool> = (0..3).map(|v| (idx >> v) & 1 == 1).collect();
+            assert_eq!(out.column(idx), nl.eval(&bits), "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_empty_outputs() {
+        let nl = and_or_netlist();
+        let out = eval_netlist(&nl, &BitMatrix::new(3, 0));
+        assert_eq!(out.samples(), 0);
+        let mut no_out = nl.clone();
+        no_out.outputs.clear();
+        let out = eval_netlist(&no_out, &BitMatrix::new(3, 100));
+        assert_eq!(out.planes(), 0);
+    }
+}

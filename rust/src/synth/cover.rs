@@ -6,6 +6,7 @@
 //! LUT cost is a fraction of the analytical bound).
 
 use super::boolfn::BoolFn;
+use crate::util::bits::var_word;
 
 /// A product term: covers minterm m iff `(m & care) == val`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,9 +67,47 @@ impl Cover {
         self.cubes.iter().any(|c| c.covers(m))
     }
 
-    /// Exact equivalence against the source function.
+    /// Word `w` (minterms `64w..64w+63`) of one cube's coverage plane: the
+    /// AND over cared variables of that variable's (possibly inverted)
+    /// index bit-plane.  Word-parallel — 64 minterms per call.
+    fn cube_word(cube: &Cube, nvars: usize, w: usize) -> u64 {
+        let mut acc = u64::MAX;
+        for v in 0..nvars {
+            if (cube.care >> v) & 1 == 0 {
+                continue;
+            }
+            let plane = var_word(v, w);
+            acc &= if (cube.val >> v) & 1 == 1 { plane } else { !plane };
+            if acc == 0 {
+                break;
+            }
+        }
+        acc
+    }
+
+    /// Materialize the cover as a packed truth table (same word layout as
+    /// [`BoolFn::words`]), OR-ing each cube's plane word by word.
+    pub fn to_words(&self) -> Vec<u64> {
+        let entries = 1usize << self.nvars;
+        let wpp = entries.div_ceil(64);
+        let mut words = vec![0u64; wpp];
+        for cube in &self.cubes {
+            for (w, word) in words.iter_mut().enumerate() {
+                if *word != u64::MAX {
+                    *word |= Self::cube_word(cube, self.nvars, w);
+                }
+            }
+        }
+        if entries < 64 {
+            words[0] &= (1u64 << entries) - 1;
+        }
+        words
+    }
+
+    /// Exact equivalence against the source function, verified word-wise
+    /// (64 minterms per compare) instead of one scalar eval per minterm.
     pub fn equals_fn(&self, f: &BoolFn) -> bool {
-        (0..f.num_entries() as u64).all(|m| self.eval(m) == f.get(m as usize))
+        self.nvars == f.nvars && self.to_words() == f.words
     }
 
     pub fn total_literals(&self) -> usize {
@@ -210,6 +249,25 @@ mod tests {
             }
             let c = minimize(&f);
             assert!(c.equals_fn(&f), "cover != fn for nvars={nvars}");
+        });
+    }
+
+    #[test]
+    fn prop_to_words_matches_scalar_eval() {
+        // The word-parallel materialization must agree with per-minterm
+        // scalar cube evaluation bit for bit.
+        forall("cover-words", 0xBEEF, 40, |rng: &mut Rng| {
+            let nvars = 1 + rng.below(8);
+            let mut f = BoolFn::zeros(nvars);
+            for m in 0..f.num_entries() {
+                f.set(m, rng.f64() < 0.4);
+            }
+            let c = minimize(&f);
+            let words = c.to_words();
+            for m in 0..f.num_entries() {
+                let bit = (words[m / 64] >> (m % 64)) & 1 == 1;
+                assert_eq!(bit, c.eval(m as u64), "nvars={nvars} m={m}");
+            }
         });
     }
 

@@ -352,20 +352,19 @@ mod tests {
         (0..n as u32).map(Net::Input).collect()
     }
 
+    /// Exhaustive table-vs-netlist equivalence: enumerate all `2^k` input
+    /// patterns as bit-planes and compare one bitsliced pass against the
+    /// source function (64 patterns per word instead of one scalar
+    /// `Netlist::eval` — and one netlist clone — per pattern).
     fn check_equiv(f: &BoolFn, mapper: &Mapper, out: Net, num_inputs: usize) {
+        use crate::sim::{eval_netlist, BitMatrix};
+        assert_eq!(f.nvars, num_inputs);
+        let mut nl = mapper.netlist.clone();
+        nl.outputs = vec![out];
+        let patterns = BitMatrix::all_patterns(num_inputs);
+        let got = eval_netlist(&nl, &patterns);
         for idx in 0..f.num_entries() {
-            let bits: Vec<bool> = (0..num_inputs).map(|v| (idx >> v) & 1 == 1).collect();
-            let got = match out {
-                Net::Const0 => false,
-                Net::Const1 => true,
-                Net::Input(i) => bits[i as usize],
-                Net::Node(_) => {
-                    let mut nl = mapper.netlist.clone();
-                    nl.outputs = vec![out];
-                    nl.eval(&bits)[0]
-                }
-            };
-            assert_eq!(got, f.get(idx), "idx {idx}");
+            assert_eq!(got.get(0, idx), f.get(idx), "idx {idx}");
         }
     }
 

@@ -3,7 +3,9 @@
 //!
 //! Pipeline: truth tables → two-level minimization (`cover`) → technology
 //! mapping onto 6-input LUTs with structural hashing (`mapper`) → netlist
-//! with static timing (`netlist`) → resource report.  Reproduces the shape
+//! with static timing (`netlist`) → resource report, with equivalence
+//! checking against the truth-table path running through the bitsliced
+//! simulator (`crate::sim`, 64 samples per word).  Reproduces the shape
 //! of the paper's Tables 5.2/5.3: synthesized LUT counts are a fraction of
 //! the analytical bound, WNS degrades as fan-in bits grow, and wide-fan-in
 //! neurons spill into BRAMs.
@@ -187,8 +189,66 @@ pub fn synthesize(
     Ok((netlist, report))
 }
 
+/// Indices of the table-mapped (sparse) layers, plus the shared
+/// preconditions every netlist-executing surface needs (equivalence
+/// checkers here, `serve::NetlistEngine` for serving): no BRAM ports, no
+/// skip wiring, at least one emitted layer.  Returns the emitted layer
+/// indices, the first emitted layer's tables, and the output code width.
+pub(crate) fn verify_plan<'a>(
+    model: &ExportedModel,
+    tables: &'a ModelTables,
+    netlist: &Netlist,
+) -> Result<(Vec<usize>, &'a crate::luts::LayerTables, usize)> {
+    ensure!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+    // Only contiguous sparse prefixes ending the netlist are comparable in
+    // this helper (no skip wiring support here).
+    ensure!(model.skips == 0, "verify_netlist: skip wiring unsupported");
+    let emitted: Vec<usize> = tables
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.is_some())
+        .map(|(i, _)| i)
+        .collect();
+    ensure!(!emitted.is_empty(), "no table-mapped layers to verify");
+    let last = *emitted.last().unwrap();
+    let out_bw = tables.layers[last].as_ref().unwrap().quant_out.bw;
+    let lt_first = tables.layers[emitted[0]].as_ref().unwrap();
+    Ok((emitted, lt_first, out_bw))
+}
+
+/// Table-path reference: propagate one sample's input codes through the
+/// emitted sparse layers.  All buffers are caller-owned and reused across
+/// samples; the result lands in `cur`.
+fn table_forward_codes(
+    model: &ExportedModel,
+    tables: &ModelTables,
+    emitted: &[usize],
+    input: &[u32],
+    cur: &mut Vec<u32>,
+    next: &mut Vec<u32>,
+    gathered: &mut Vec<u32>,
+) {
+    cur.clear();
+    cur.extend_from_slice(input);
+    for &li in emitted {
+        let lt = tables.layers[li].as_ref().unwrap();
+        next.clear();
+        for (nj, t) in lt.tables.iter().enumerate() {
+            let nr = &model.layers[li].neurons[nj];
+            gathered.clear();
+            gathered.extend(nr.inputs.iter().map(|&j| cur[j]));
+            next.push(t.lookup(crate::util::bits::pack_index(gathered, lt.quant_in.bw)));
+        }
+        std::mem::swap(cur, next);
+    }
+}
+
 /// Equivalence check: run `samples` random input vectors through both the
 /// truth-table forward and the synthesized netlist; returns mismatches.
+/// The netlist side is one bitsliced pass over the whole batch (64 samples
+/// per word, `crate::sim`); [`verify_netlist_scalar`] keeps the original
+/// one-sample-at-a-time path for cross-checking the simulator itself.
 /// Only valid when no neuron was spilled to BRAM.
 pub fn verify_netlist(
     model: &ExportedModel,
@@ -197,28 +257,66 @@ pub fn verify_netlist(
     samples: usize,
     seed: u64,
 ) -> Result<usize> {
-    ensure!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
-    let emitted: Vec<usize> = tables
-        .layers
-        .iter()
-        .enumerate()
-        .filter(|(_, t)| t.is_some())
-        .map(|(i, _)| i)
-        .collect();
-    let first = emitted[0];
-    let last = *emitted.last().unwrap();
-    // Only contiguous sparse prefixes ending the netlist are comparable in
-    // this helper (no skip wiring support here).
-    ensure!(model.skips == 0, "verify_netlist: skip wiring unsupported");
-    let lt_first = tables.layers[first].as_ref().unwrap();
+    let (emitted, lt_first, out_bw) = verify_plan(model, tables, netlist)?;
     let bw_in = lt_first.quant_in.bw;
+    let in_f = model.layers[emitted[0]].in_f;
+    // Draw all random input codes up front (same RNG stream order as the
+    // scalar checker: sample-major, then feature) and encode them as
+    // bit-planes.
     let mut rng = crate::util::rng::Rng::new(seed);
+    let mut codes = vec![0u32; samples * in_f];
+    for c in codes.iter_mut() {
+        *c = rng.below(1 << bw_in) as u32;
+    }
+    let mut inputs = crate::sim::BitMatrix::new(netlist.num_inputs, samples);
+    for s in 0..samples {
+        for j in 0..in_f {
+            inputs.set_code(j * bw_in, bw_in, s, codes[s * in_f + j]);
+        }
+    }
+    let out = crate::sim::eval_netlist(netlist, &inputs);
+    let (mut cur, mut next, mut gathered) = (Vec::new(), Vec::new(), Vec::new());
+    let mut mismatches = 0usize;
+    for s in 0..samples {
+        table_forward_codes(
+            model,
+            tables,
+            &emitted,
+            &codes[s * in_f..(s + 1) * in_f],
+            &mut cur,
+            &mut next,
+            &mut gathered,
+        );
+        let ok = cur
+            .iter()
+            .enumerate()
+            .all(|(k, &c)| out.get_code(k * out_bw, out_bw, s) == c);
+        if !ok {
+            mismatches += 1;
+        }
+    }
+    Ok(mismatches)
+}
+
+/// The original scalar equivalence check (`Netlist::eval` per sample).
+/// Kept as the cross-check oracle for the bitsliced path: on any inputs the
+/// two must return identical mismatch counts.
+pub fn verify_netlist_scalar(
+    model: &ExportedModel,
+    tables: &ModelTables,
+    netlist: &Netlist,
+    samples: usize,
+    seed: u64,
+) -> Result<usize> {
+    let (emitted, lt_first, out_bw) = verify_plan(model, tables, netlist)?;
+    let bw_in = lt_first.quant_in.bw;
+    let in_f = model.layers[emitted[0]].in_f;
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let (mut cur, mut next, mut gathered) = (Vec::new(), Vec::new(), Vec::new());
     let mut mismatches = 0usize;
     for _ in 0..samples {
         // Random input codes.
-        let codes: Vec<u32> = (0..model.layers[first].in_f)
-            .map(|_| rng.below(1 << bw_in) as u32)
-            .collect();
+        let codes: Vec<u32> = (0..in_f).map(|_| rng.below(1 << bw_in) as u32).collect();
         // Netlist input bits.
         let mut bits = vec![false; netlist.num_inputs];
         for (j, &c) in codes.iter().enumerate() {
@@ -227,19 +325,7 @@ pub fn verify_netlist(
             }
         }
         let net_out = netlist.eval(&bits);
-        // Table-path reference: propagate codes through sparse layers.
-        let mut cur = codes.clone();
-        for &li in &emitted {
-            let lt = tables.layers[li].as_ref().unwrap();
-            let mut next = Vec::with_capacity(lt.tables.len());
-            for (nj, t) in lt.tables.iter().enumerate() {
-                let nr = &model.layers[li].neurons[nj];
-                let gathered: Vec<u32> = nr.inputs.iter().map(|&j| cur[j]).collect();
-                next.push(t.lookup(crate::util::bits::pack_index(&gathered, lt.quant_in.bw)));
-            }
-            cur = next;
-        }
-        let out_bw = tables.layers[last].as_ref().unwrap().quant_out.bw;
+        table_forward_codes(model, tables, &emitted, &codes, &mut cur, &mut next, &mut gathered);
         let mut expect_bits = Vec::with_capacity(cur.len() * out_bw);
         for &c in &cur {
             for b in 0..out_bw {
@@ -247,6 +333,41 @@ pub fn verify_netlist(
             }
         }
         if net_out != expect_bits {
+            mismatches += 1;
+        }
+    }
+    Ok(mismatches)
+}
+
+/// Exhaustive equivalence over the *whole* primary-input space: all
+/// `2^(in_f*bw)` patterns are enumerated as bit-planes (64 patterns per
+/// word — `BitMatrix::all_patterns` produces exactly the netlist's input
+/// bus layout, bit `j*bw+b` = bit `b` of feature `j`'s code) and checked in
+/// one bitsliced pass.  Returns the number of mismatching patterns.
+pub fn verify_netlist_exhaustive(
+    model: &ExportedModel,
+    tables: &ModelTables,
+    netlist: &Netlist,
+) -> Result<usize> {
+    let (emitted, lt_first, out_bw) = verify_plan(model, tables, netlist)?;
+    let bw_in = lt_first.quant_in.bw;
+    let in_f = model.layers[emitted[0]].in_f;
+    let in_bits = in_f * bw_in;
+    ensure!(in_bits == netlist.num_inputs, "input bus width mismatch");
+    ensure!(in_bits <= 22, "exhaustive space 2^{in_bits} too large");
+    let inputs = crate::sim::BitMatrix::all_patterns(in_bits);
+    let out = crate::sim::eval_netlist(netlist, &inputs);
+    let mut in_codes = vec![0u32; in_f];
+    let (mut cur, mut next, mut gathered) = (Vec::new(), Vec::new(), Vec::new());
+    let mut mismatches = 0usize;
+    for idx in 0..(1usize << in_bits) {
+        crate::util::bits::unpack_index(idx, bw_in, in_f, &mut in_codes);
+        table_forward_codes(model, tables, &emitted, &in_codes, &mut cur, &mut next, &mut gathered);
+        let ok = cur
+            .iter()
+            .enumerate()
+            .all(|(k, &c)| out.get_code(k * out_bw, out_bw, idx) == c);
+        if !ok {
             mismatches += 1;
         }
     }
@@ -313,6 +434,66 @@ mod tests {
                 .unwrap();
         let mism = verify_netlist(&model, &tables, &netlist, 200, 7).unwrap();
         assert_eq!(mism, 0, "netlist must be functionally identical");
+    }
+
+    /// Complement the node driving the first node-driven output: that
+    /// output bit is wrong on *every* pattern, so corruption detection is
+    /// deterministic regardless of sampling.
+    fn corrupt(netlist: &Netlist) -> Netlist {
+        let mut bad = netlist.clone();
+        let node = bad
+            .outputs
+            .iter()
+            .find_map(|o| match o {
+                Net::Node(i) => Some(*i as usize),
+                _ => None,
+            })
+            .expect("a node-driven output");
+        bad.nodes[node].tt = !bad.nodes[node].tt;
+        bad
+    }
+
+    #[test]
+    fn bitsliced_verify_agrees_with_scalar() {
+        // Identical pass/fail (and identical mismatch counts) on both a
+        // correct netlist and a deliberately corrupted one — the RNG stream
+        // is shared, so the two checkers see the very same samples.
+        let model = random_model(9, 10, &[16, 6], 3, 2);
+        let tables = crate::luts::ModelTables::generate(&model).unwrap();
+        let (netlist, _) = synthesize(
+            &model,
+            &tables,
+            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        )
+        .unwrap();
+        for (label, nl) in [("clean", netlist.clone()), ("corrupt", corrupt(&netlist))] {
+            for (samples, seed) in [(1usize, 1u64), (63, 2), (64, 3), (200, 4)] {
+                let fast = verify_netlist(&model, &tables, &nl, samples, seed).unwrap();
+                let slow = verify_netlist_scalar(&model, &tables, &nl, samples, seed).unwrap();
+                assert_eq!(fast, slow, "{label}: samples={samples} seed={seed}");
+            }
+        }
+        let mism = verify_netlist(&model, &tables, &corrupt(&netlist), 200, 4).unwrap();
+        assert_eq!(mism, 200, "an inverted output cone must miss every sample");
+    }
+
+    #[test]
+    fn exhaustive_verify_covers_whole_input_space() {
+        // Small enough to enumerate: 6 features x 2 bits = 4096 patterns.
+        let model = random_model(10, 6, &[10, 4], 3, 2);
+        let tables = crate::luts::ModelTables::generate(&model).unwrap();
+        let (netlist, _) = synthesize(
+            &model,
+            &tables,
+            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        )
+        .unwrap();
+        assert_eq!(verify_netlist_exhaustive(&model, &tables, &netlist).unwrap(), 0);
+        assert_eq!(
+            verify_netlist_exhaustive(&model, &tables, &corrupt(&netlist)).unwrap(),
+            4096,
+            "an inverted output cone must miss every pattern"
+        );
     }
 
     #[test]

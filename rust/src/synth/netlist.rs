@@ -72,7 +72,11 @@ impl Netlist {
         self.outputs.iter().map(|&o| self.level_of(o)).max().unwrap_or(0)
     }
 
-    /// Evaluate on a primary-input bit vector (for equivalence checking).
+    /// Scalar reference evaluation on one primary-input bit vector.  Batch
+    /// workloads (equivalence sweeps, accuracy scoring, netlist-backed
+    /// serving) should use the bitsliced simulator instead —
+    /// `crate::sim::eval_netlist` computes 64 samples per word per core and
+    /// is cross-checked against this implementation by property tests.
     pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
         assert_eq!(inputs.len(), self.num_inputs);
         let mut values = vec![false; self.nodes.len()];

@@ -83,6 +83,34 @@ pub fn bits_lsb(v: u64, n: usize) -> impl Iterator<Item = bool> {
     (0..n).map(move |i| (v >> i) & 1 == 1)
 }
 
+/// Periodic bit-plane patterns of the first six index variables: bit `s` of
+/// `VAR_MASKS[v]` equals `(s >> v) & 1`.  These are the word-level planes
+/// used when an index space (minterms of a truth table, or the samples
+/// `0..2^k` of an exhaustive enumeration) is packed 64 per `u64`.
+pub const VAR_MASKS: [u64; 6] = [
+    0xAAAA_AAAA_AAAA_AAAA,
+    0xCCCC_CCCC_CCCC_CCCC,
+    0xF0F0_F0F0_F0F0_F0F0,
+    0xFF00_FF00_FF00_FF00,
+    0xFFFF_0000_FFFF_0000,
+    0xFFFF_FFFF_0000_0000,
+];
+
+/// Word `w` of index-variable `v`'s bit-plane over a packed index space:
+/// bit `b` of the result equals `((64*w + b) >> v) & 1`.  Variables 0..5
+/// toggle within a word (periodic masks); higher variables are constant
+/// across a whole word.
+#[inline]
+pub fn var_word(v: usize, w: usize) -> u64 {
+    if v < 6 {
+        VAR_MASKS[v]
+    } else if (w >> (v - 6)) & 1 == 1 {
+        u64::MAX
+    } else {
+        0
+    }
+}
+
 /// Population count of a packed boolean function given as u64 words over
 /// `n_bits` valid bits.
 pub fn popcount_words(words: &[u64], n_bits: usize) -> usize {
@@ -142,5 +170,19 @@ mod tests {
         assert_eq!(popcount_words(&[0b1011], 4), 3);
         assert_eq!(popcount_words(&[0b1011], 2), 2);
         assert_eq!(popcount_words(&[u64::MAX, 0b1], 65), 65);
+    }
+
+    #[test]
+    fn var_word_matches_index_bits() {
+        for v in 0..10usize {
+            for w in 0..20usize {
+                let word = var_word(v, w);
+                for b in 0..64usize {
+                    let idx = 64 * w + b;
+                    let expect = (idx >> v) & 1 == 1;
+                    assert_eq!((word >> b) & 1 == 1, expect, "v={v} w={w} b={b}");
+                }
+            }
+        }
     }
 }

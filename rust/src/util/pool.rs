@@ -51,6 +51,33 @@ where
     results.into_iter().map(|r| r.expect("worker filled slot")).collect()
 }
 
+/// Split `out` into near-equal contiguous chunks, one per worker, and run
+/// `f(chunk_index, start_offset, chunk)` on each.  Every worker owns a
+/// disjoint `&mut` sub-slice, so results are written in place with no lock
+/// and no gather copy — this is the batch-inference output path.
+pub fn par_chunks_mut<T, F>(out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        f(0, 0, out);
+        return;
+    }
+    let per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (w, chunk) in out.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || f(w, w * per, chunk));
+        }
+    });
+}
+
 /// Run `f(chunk_index, range)` for `n` items split into near-equal ranges,
 /// one per worker.  Used when the work wants big contiguous slices.
 pub fn par_chunks<F>(n: usize, f: F)
@@ -93,6 +120,20 @@ mod tests {
     fn par_map_empty() {
         let items: Vec<u32> = vec![];
         assert!(par_map(&items, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint_slices() {
+        let n = 517;
+        let mut out = vec![0usize; n];
+        par_chunks_mut(&mut out, |_, start, chunk| {
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                *slot = (start + k) * 3;
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * 3));
+        let mut empty: Vec<u8> = vec![];
+        par_chunks_mut(&mut empty, |_, _, _| panic!("no chunks for empty input"));
     }
 
     #[test]

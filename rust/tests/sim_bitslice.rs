@@ -1,0 +1,188 @@
+//! Bitsliced-simulation properties: the word-parallel evaluator
+//! (`logicnets::sim`) must agree bit-for-bit with the scalar
+//! `Netlist::eval` reference on randomized netlists and inputs — including
+//! constant nets, input-passthrough outputs, unused (skipped) inputs, and
+//! batch sizes off the 64-sample word boundary — and the netlist-backed
+//! serving engine must reproduce the table engine's predictions exactly.
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::serve::{LutEngine, NetlistEngine};
+use logicnets::sim::{eval_netlist, BitMatrix};
+use logicnets::synth::netlist::LutNode;
+use logicnets::synth::{synthesize, verify_netlist, verify_netlist_scalar};
+use logicnets::synth::{Net, Netlist, SynthOpts};
+use logicnets::util::prop::forall;
+use logicnets::util::rng::Rng;
+
+fn random_model(seed: u64, in_f: usize, widths: &[usize], fanin: usize, bw: usize) -> ExportedModel {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut prev = in_f;
+    for (k, &w) in widths.iter().enumerate() {
+        let qi = QuantSpec::new(bw, if k == 0 { 1.0 } else { 2.0 });
+        let neurons = (0..w)
+            .map(|_| {
+                let inputs = rng.choose_k(prev, fanin.min(prev));
+                Neuron {
+                    inputs: inputs.clone(),
+                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect(),
+                    bias: rng.normal_f32(0.0, 0.1),
+                    g: 1.0,
+                    h: 0.0,
+                }
+            })
+            .collect();
+        layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(bw, 2.0), true));
+        prev = w;
+    }
+    ExportedModel {
+        layers,
+        in_features: in_f,
+        classes: *widths.last().unwrap(),
+        skips: 0,
+        act_widths: std::iter::once(in_f).chain(widths.iter().copied()).collect(),
+    }
+}
+
+/// Random netlist straight from the synthesis flow, plus a scalar-vs-sim
+/// comparison over a random batch.
+#[test]
+fn prop_bitsliced_matches_scalar_on_synthesized_netlists() {
+    forall("sim-vs-scalar", 0x51, 12, |rng: &mut Rng| {
+        let in_f = 6 + rng.below(8);
+        let widths = [4 + rng.below(12), 2 + rng.below(6)];
+        let bw = 1 + rng.below(2);
+        let fanin = 2 + rng.below(2);
+        let model = random_model(rng.next_u64(), in_f, &widths, fanin, bw);
+        let tables = ModelTables::generate(&model).unwrap();
+        let (netlist, _) = synthesize(
+            &model,
+            &tables,
+            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        )
+        .unwrap();
+        // Batch sizes straddling the word boundary, incl. tiny ones.
+        let samples = [1usize, 63, 64, 65, 150][rng.below(5)];
+        let mut inputs = BitMatrix::new(netlist.num_inputs, samples);
+        let rows: Vec<Vec<bool>> = (0..samples)
+            .map(|s| {
+                let bits: Vec<bool> =
+                    (0..netlist.num_inputs).map(|_| rng.f64() < 0.5).collect();
+                inputs.set_column(s, &bits);
+                bits
+            })
+            .collect();
+        let out = eval_netlist(&netlist, &inputs);
+        for (s, bits) in rows.iter().enumerate() {
+            assert_eq!(out.column(s), netlist.eval(bits), "sample {s}");
+        }
+    });
+}
+
+/// Handcrafted netlist exercising every net kind the evaluator must
+/// handle: constants, direct input passthrough, an input the logic never
+/// reads (skipped input), and duplicate fan-in nets.
+#[test]
+fn handcrafted_nets_constants_and_skipped_inputs() {
+    // 4 primary inputs; input 3 is never read by any node (skipped).
+    let netlist = Netlist {
+        num_inputs: 4,
+        nodes: vec![
+            // n0 = XOR(in0, in1)
+            LutNode { inputs: vec![Net::Input(0), Net::Input(1)], tt: 0b0110, level: 1 },
+            // n1 = MAJ(n0, in2, in2) == duplicate fan-in net
+            LutNode {
+                inputs: vec![Net::Node(0), Net::Input(2), Net::Input(2)],
+                tt: 0b1110_1000,
+                level: 2,
+            },
+        ],
+        outputs: vec![
+            Net::Node(1),
+            Net::Const0,
+            Net::Const1,
+            Net::Input(3), // passthrough of the otherwise-skipped input
+            Net::Input(0),
+        ],
+        brams: vec![],
+        layer_depths: vec![2],
+    };
+    for samples in [1usize, 64, 100, 129] {
+        let mut rng = Rng::new(samples as u64);
+        let mut inputs = BitMatrix::new(4, samples);
+        let rows: Vec<Vec<bool>> = (0..samples)
+            .map(|s| {
+                let bits: Vec<bool> = (0..4).map(|_| rng.f64() < 0.5).collect();
+                inputs.set_column(s, &bits);
+                bits
+            })
+            .collect();
+        let out = eval_netlist(&netlist, &inputs);
+        for (s, bits) in rows.iter().enumerate() {
+            assert_eq!(out.column(s), netlist.eval(bits), "samples={samples} s={s}");
+        }
+    }
+}
+
+/// The two equivalence checkers in `synth` must produce identical
+/// pass/fail results (they share one RNG stream, so the comparison is per
+/// sample, not just in aggregate).
+#[test]
+fn prop_verify_netlist_bitsliced_equals_scalar() {
+    forall("verify-parity", 0x52, 8, |rng: &mut Rng| {
+        let model = random_model(rng.next_u64(), 8 + rng.below(6), &[12, 5], 3, 2);
+        let tables = ModelTables::generate(&model).unwrap();
+        let (netlist, _) = synthesize(
+            &model,
+            &tables,
+            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        )
+        .unwrap();
+        let samples = 1 + rng.below(130);
+        let seed = rng.next_u64();
+        let fast = verify_netlist(&model, &tables, &netlist, samples, seed).unwrap();
+        let slow = verify_netlist_scalar(&model, &tables, &netlist, samples, seed).unwrap();
+        assert_eq!(fast, slow);
+        assert_eq!(fast, 0, "synthesized netlist must be equivalent");
+    });
+}
+
+/// Regression: the netlist-backed serving engine agrees with the table
+/// engine on a random model with a dense classifier head.
+#[test]
+fn netlist_engine_agrees_with_lut_engine_on_random_model() {
+    let mut rng = Rng::new(0x53);
+    let mut model = random_model(9, 14, &[24, 16], 3, 2);
+    // Dense head: 5 classes, un-tabulated (sparse = false).
+    let prev = 16usize;
+    let neurons = (0..5)
+        .map(|_| {
+            let inputs: Vec<usize> = (0..prev).collect();
+            Neuron {
+                inputs: inputs.clone(),
+                weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+                bias: 0.0,
+                g: 1.0,
+                h: 0.0,
+            }
+        })
+        .collect();
+    model.layers.push(ExportedLayer::uniform(
+        neurons,
+        prev,
+        QuantSpec::new(2, 2.0),
+        QuantSpec::new(4, 4.0),
+        false,
+    ));
+    model.classes = 5;
+    let tables = ModelTables::generate(&model).unwrap();
+    let lut = LutEngine::build(&model, &tables).unwrap();
+    let net = NetlistEngine::build(&model, &tables).unwrap();
+    for n in [1usize, 63, 64, 65, 257] {
+        let xs: Vec<f32> = (0..14 * n).map(|_| rng.f32()).collect();
+        let expect = lut.infer_batch(&xs);
+        assert_eq!(net.infer_batch(&xs), expect, "n={n}");
+        assert_eq!(lut.infer_batch_par(&xs), expect, "par n={n}");
+    }
+}

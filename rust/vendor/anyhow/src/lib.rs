@@ -1,0 +1,208 @@
+//! Minimal offline subset of the `anyhow` crate: a string-chained error
+//! type plus the `anyhow!` / `bail!` / `ensure!` macros and the `Context`
+//! extension trait.  The API mirrors upstream closely enough that swapping
+//! in the real crate requires no source changes in this repository.
+
+use std::fmt;
+
+/// A context-chained error.  Each `.context(...)` layer wraps the previous
+/// error; `Display` shows the outermost message, `Debug` the whole chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` under a new outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = &cur.source {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut rest = self.source.as_deref();
+        if rest.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = rest {
+            write!(f, "\n    {}", e.msg)?;
+            rest = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context layers.
+        let mut msgs: Vec<String> = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error::msg(msgs.pop().unwrap());
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`, exactly as upstream anyhow does.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_and_displays() {
+        let r: Result<()> = Err(io_err().into());
+        let e = r.context("loading file").unwrap_err();
+        assert_eq!(format!("{e}"), "loading file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+        assert_eq!(e.root_cause(), "gone");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing flag").unwrap_err();
+        assert_eq!(format!("{e}"), "missing flag");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.context("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_compile_and_fire() {
+        fn inner(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with code {}", 3);
+            Ok(1)
+        }
+        fn inner2() -> Result<u32> {
+            bail!("always {}", "bails");
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "failed with code 3");
+        assert_eq!(format!("{}", inner2().unwrap_err()), "always bails");
+        let e = anyhow!("x = {}", 5);
+        assert_eq!(format!("{e}"), "x = 5");
+    }
+
+    #[test]
+    fn bare_ensure() {
+        fn inner(v: usize) -> Result<()> {
+            ensure!(v < 10);
+            Ok(())
+        }
+        assert!(inner(5).is_ok());
+        assert!(format!("{}", inner(20).unwrap_err()).contains("v < 10"));
+    }
+}
