@@ -50,7 +50,7 @@ fn main() {
         let (netlist, rep) = synthesize(
             &m,
             &tables,
-            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
         )
         .unwrap();
         println!(

@@ -3,7 +3,7 @@
 
 use logicnets::luts::ModelTables;
 use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
-use logicnets::synth::{synthesize, SynthOpts};
+use logicnets::synth::{synthesize, OptLevel, SynthOpts};
 use logicnets::util::bench::bench_n;
 use logicnets::util::rng::Rng;
 
@@ -68,6 +68,29 @@ fn ablation(widths: &[usize], fanin: usize, bw: usize) {
     }
 }
 
+/// Optimizer pipeline cost and LUT savings per level (the tentpole metric:
+/// `NetlistEngine` serving throughput scales with LUT count).
+fn opt_sweep(label: &str, widths: &[usize], fanin: usize, bw: usize, iters: usize) {
+    let m = model(widths, 16, fanin, bw, 7);
+    let tables = ModelTables::generate(&m).unwrap();
+    let base = SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() };
+    let (_, plain) = synthesize(&m, &tables, base).unwrap();
+    for level in [OptLevel::Structural, OptLevel::Full] {
+        let mut report = None;
+        let r = bench_n(&format!("synth+opt({}) {label}", level.name()), iters, || {
+            let (_, rep) =
+                synthesize(&m, &tables, SynthOpts { opt: level, ..base }).unwrap();
+            report = Some(rep);
+        });
+        r.report();
+        let rep = report.unwrap();
+        println!(
+            "{:<44} {} -> {} LUTs ({:.2}x opt, {} rounds; unopt {})",
+            "", rep.pre_opt_luts, rep.luts, rep.opt_reduction, rep.opt_rounds, plain.luts
+        );
+    }
+}
+
 fn main() {
     ablation(&[64, 32, 32], 5, 2);
 
@@ -89,5 +112,6 @@ fn main() {
             "{:<44} {} LUTs (analytical {}, {:.2}x), depth {}",
             "", rep.luts, rep.analytical_luts, rep.reduction, rep.depth
         );
+        opt_sweep(label, &widths, fanin, bw, iters.min(3));
     }
 }

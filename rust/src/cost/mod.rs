@@ -14,7 +14,10 @@
 //! post-synthesis costs are a fraction of them.
 
 /// Closed-form 6-LUT cost of one neuron, eq. 2.3.  For N <= 6 a single LUT
-/// per output bit suffices.
+/// per output bit suffices.  Saturates at `u64::MAX` instead of
+/// overflowing — by N = 70 the *per-output-bit* cost alone exceeds u64
+/// (the paper's ch. 1 point: such a neuron is unimplementable on any
+/// fabric), and [`lut_cost_recursive`] saturates identically.
 pub fn lut_cost(n_bits: usize, m_bits: usize) -> u64 {
     if n_bits == 0 || m_bits == 0 {
         return 0;
@@ -22,18 +25,20 @@ pub fn lut_cost(n_bits: usize, m_bits: usize) -> u64 {
     if n_bits <= 6 {
         return m_bits as u64;
     }
-    if n_bits >= 66 {
-        // 2^(N-4)/3 no longer fits u64: the neuron is unimplementable on
-        // any fabric (paper ch. 1: a 16-bit dense neuron needs ~4.5e15 bits)
-        // — saturate instead of overflowing.
+    if n_bits >= 72 {
+        // (2^(N-4) ∓ 1)/3 > u64::MAX from N = 70 on; cut well before the
+        // i128 shift itself could overflow (N - 4 >= 127).
         return u64::MAX;
     }
     let sign: i128 = if n_bits % 2 == 0 { 1 } else { -1 };
     let per_bit = ((1i128 << (n_bits - 4)) - sign) / 3;
-    u64::try_from(m_bits as i128 * per_bit).unwrap_or(u64::MAX)
+    u64::try_from((m_bits as i128).saturating_mul(per_bit)).unwrap_or(u64::MAX)
 }
 
-/// Recursive form, eq. 2.1 — used to cross-check the closed form.
+/// Recursive form, eq. 2.1 — used to cross-check the closed form.  The
+/// per-output-bit recursion runs in i128 and clamps to `u64::MAX`
+/// (mirroring [`lut_cost`]'s saturation): the old i64 arithmetic wrapped
+/// negative past N ≈ 66 and the cross-check diverged.
 pub fn lut_cost_recursive(n_bits: usize, m_bits: usize) -> u64 {
     if n_bits == 0 || m_bits == 0 {
         return 0;
@@ -41,9 +46,12 @@ pub fn lut_cost_recursive(n_bits: usize, m_bits: usize) -> u64 {
     if n_bits <= 6 {
         return m_bits as u64;
     }
-    let prev = lut_cost_recursive(n_bits - 1, m_bits) / m_bits as u64;
-    let sign: i64 = if n_bits % 2 == 0 { 1 } else { -1 };
-    (m_bits as i64 * (2 * prev as i64 - sign)) as u64
+    const CAP: i128 = u64::MAX as i128;
+    // L(N, 1): one level of eq. 2.1 over the saturating per-bit cost.
+    let prev = lut_cost_recursive(n_bits - 1, 1) as i128;
+    let sign: i128 = if n_bits % 2 == 0 { 1 } else { -1 };
+    let per_bit = if prev >= CAP { CAP } else { 2 * prev - sign };
+    u64::try_from(per_bit.saturating_mul(m_bits as i128)).unwrap_or(u64::MAX)
 }
 
 /// One row of the paper's Table 2.1 static-mapping cost.
@@ -208,11 +216,33 @@ mod tests {
 
     #[test]
     fn closed_form_matches_recursive() {
-        for n in 1..=24 {
+        // All the way across the saturation boundary: exact values up to
+        // ~N=69, u64::MAX beyond.  The old i64 recursion wrapped negative
+        // here and the cross-check diverged.
+        for n in 1..=90 {
             for m in 1..=5 {
                 assert_eq!(lut_cost(n, m), lut_cost_recursive(n, m), "n={n} m={m}");
             }
         }
+    }
+
+    #[test]
+    fn lut_cost_saturates_instead_of_wrapping() {
+        // Exact just below the per-bit boundary...
+        let n65 = lut_cost(65, 1);
+        assert_eq!(n65, (((1i128 << 61) + 1) / 3) as u64);
+        assert!(n65 < u64::MAX);
+        // ...saturated at and beyond it, for both forms, never negative-ish
+        // (the wrap bug produced huge-but-wrong values via `as u64`).
+        for n in [70usize, 72, 80, 120, 200] {
+            assert_eq!(lut_cost(n, 1), u64::MAX, "n={n}");
+            assert_eq!(lut_cost_recursive(n, 1), u64::MAX, "n={n}");
+        }
+        // m scaling saturates too when the product (but not the per-bit
+        // cost) overflows: per_bit(68) = (2^64-1)/3 fits, 5x does not.
+        assert!(lut_cost(68, 1) < u64::MAX);
+        assert_eq!(lut_cost(68, 5), u64::MAX);
+        assert_eq!(lut_cost_recursive(68, 5), u64::MAX);
     }
 
     #[test]

@@ -226,22 +226,29 @@ pub fn table_5_1() -> Result<()> {
 pub fn table_5_2(ctx: &mut ExpCtx) -> Result<()> {
     let mut t = TextTable::new(
         "Table 5.2 — analytical vs synthesized LUT cost (combinational)",
-        &["Model", "Analytical LUT cost", "LUTs After Synthesis", "Reduction"],
+        &["Model", "Analytical LUT cost", "LUTs After Synthesis", "Reduction", "Optimized", "Opt x"],
     );
     for name in ["hep_c", "t53_b", "t52_big"] {
         let tr = ctx.trained(name, PruneMethod::APriori)?;
         let ex = tr.export();
         let tables = ModelTables::generate(&ex)?;
-        let (_, rep) = synthesize(
+        let base = SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() };
+        let (_, rep) = synthesize(&ex, &tables, base)?;
+        // The pipeline's extra reduction on top of the mapper's (the
+        // Constantinides-2019 point: LUT-native nets win exactly when
+        // logic optimization exploits their don't-cares).
+        let (_, orep) = synthesize(
             &ex,
             &tables,
-            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+            SynthOpts { opt: crate::synth::OptLevel::Full, ..base },
         )?;
         t.row(vec![
             name.into(),
             rep.analytical_luts.to_string(),
             rep.luts.to_string(),
             format!("{:.2}x", rep.reduction),
+            orep.luts.to_string(),
+            format!("{:.2}x", rep.luts as f64 / orep.luts.max(1) as f64),
         ]);
     }
     save_table(&t, "table_5_2")
@@ -620,9 +627,15 @@ pub fn table_7_6(ctx: &mut ExpCtx) -> Result<()> {
 /// synthesized netlist run by the bitsliced simulator.  The three accuracy
 /// columns must agree — this is functional verification at dataset scale,
 /// which the one-sample scalar `Netlist::eval` path made impractically
-/// slow.  Models whose topology the netlist backend cannot serve (skip
-/// wiring, non-prefix sparse layers) report `-`.
-pub fn report_netlist_serving(ctx: &mut ExpCtx, names: &[String]) -> Result<()> {
+/// slow.  `opt` runs the netlist-optimization pipeline before serving (the
+/// accuracy parity then also validates the optimizer at dataset scale).
+/// Models whose topology the netlist backend cannot serve (skip wiring,
+/// non-prefix sparse layers) report `-`.
+pub fn report_netlist_serving(
+    ctx: &mut ExpCtx,
+    names: &[String],
+    opt: crate::synth::OptLevel,
+) -> Result<()> {
     use crate::serve::{batch_accuracy, LutEngine, NetlistEngine};
     let mut t = TextTable::new(
         "Netlist-backed serving — accuracy parity and mapped size",
@@ -638,7 +651,7 @@ pub fn report_netlist_serving(ctx: &mut ExpCtx, names: &[String]) -> Result<()> 
             Ok(engine) => f2(100.0 * batch_accuracy(&engine, &test.x, &test.y)),
             Err(_) => "-".into(),
         };
-        let (net_acc, luts) = match NetlistEngine::build(&ex, &tables) {
+        let (net_acc, luts) = match NetlistEngine::build_opt(&ex, &tables, opt) {
             Ok(engine) => (
                 f2(100.0 * batch_accuracy(&engine, &test.x, &test.y)),
                 engine.num_luts().to_string(),

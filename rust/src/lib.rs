@@ -11,9 +11,11 @@
 //! * **L3** (this crate) is the coordinator: it drives training through the
 //!   PJRT runtime, owns sparsity/pruning, exports neurons to truth tables,
 //!   emits Verilog, synthesizes it with the in-tree logic-synthesis
-//!   simulator (`synth`), simulates the mapped netlist bit-parallel 64
-//!   samples per word (`sim`), and serves either the truth tables or the
-//!   synthesized netlist itself at high throughput (`serve`).
+//!   simulator (`synth`), optimizes the mapped netlist with a verified
+//!   CSE/constant-sweep/don't-care pass pipeline (`synth::opt`), simulates
+//!   the netlist bit-parallel 64 samples per word (`sim`), and serves
+//!   either the truth tables or the (optimized) synthesized netlist itself
+//!   at high throughput (`serve`).
 
 pub mod cost;
 pub mod data;

@@ -16,9 +16,9 @@ use logicnets::experiments::{self, ExpCtx};
 use logicnets::luts::ModelTables;
 use logicnets::serve::{batch_accuracy, Backend, LutEngine, NetlistEngine, Server, ServerConfig};
 use logicnets::sparsity::prune::PruneMethod;
-use logicnets::synth::{synthesize, SynthOpts};
+use logicnets::synth::{synthesize, OptLevel, SynthOpts};
 use logicnets::util::cli::Args;
-use logicnets::verilog::{generate, VerilogOpts};
+use logicnets::verilog::{generate, netlist_module, VerilogOpts};
 
 fn parse_method(s: &str) -> Result<PruneMethod> {
     Ok(match s {
@@ -27,6 +27,21 @@ fn parse_method(s: &str) -> Result<PruneMethod> {
         "momentum" => PruneMethod::Momentum { every: 8, prune_rate: 0.3 },
         other => bail!("unknown pruning method {other}"),
     })
+}
+
+/// `--opt` (bare flag) enables the full pipeline; `--opt LEVEL` picks one
+/// of none|structural|full.
+fn parse_opt(args: &Args) -> Result<OptLevel> {
+    if let Some(s) = args.get("opt") {
+        match OptLevel::parse(s) {
+            Some(l) => Ok(l),
+            None => bail!("unknown opt level {s} (expected none|structural|full)"),
+        }
+    } else if args.has_flag("opt") {
+        Ok(OptLevel::Full)
+    } else {
+        Ok(OptLevel::None)
+    }
 }
 
 fn main() -> Result<()> {
@@ -63,10 +78,12 @@ fn print_help() {
     println!("  table   <id>|all  [--full] [--retrain] regenerate a paper table");
     println!("  figure  <id>|all  [--full] [--retrain] regenerate a paper figure");
     println!("  synth   --model NAME [--no-registers] [--clock NS] [--bram-min-bits B] [--score]");
-    println!("  verilog --model NAME [--out DIR] [--no-registers]");
+    println!("          [--opt [none|structural|full]]   netlist optimization pipeline");
+    println!("  verilog --model NAME [--out DIR] [--no-registers] [--opt]");
     println!("  verify  --model NAME [--samples N]");
     println!("  serve   --model NAME [--requests N] [--workers W] [--backend tables|netlist]");
-    println!("  score   --models NAME[,NAME...]     accuracy parity: mirror vs tables vs netlist");
+    println!("          [--opt]   optimize the served netlist (netlist backend only)");
+    println!("  score   --models NAME[,NAME...] [--opt]  accuracy parity: mirror vs tables vs netlist");
     println!("  complexity --model NAME            minimized-logic heuristic (paper 5.5.1)");
     println!("  pareto  --csv reports/figure_6_7.csv   Pareto frontier of a sweep");
     println!("tables : {}", experiments::ALL_TABLES.join(" "));
@@ -151,14 +168,31 @@ fn cmd_synth(args: &Args) -> Result<()> {
         registers: !args.has_flag("no-registers"),
         clock_ns: args.get_f64("clock", 5.0),
         bram_min_bits: args.get_usize("bram-min-bits", 13),
+        opt: parse_opt(args)?,
     };
     let (netlist, rep) = synthesize(&ex, &tables, opts)?;
     println!(
-        "synthesis report for {name} (registers={}, clock {} ns):",
-        opts.registers, opts.clock_ns
+        "synthesis report for {name} (registers={}, clock {} ns, opt {}):",
+        opts.registers,
+        opts.clock_ns,
+        opts.opt.name()
     );
     println!("  analytical LUTs : {}", rep.analytical_luts);
     println!("  synthesized LUTs: {}  ({:.2}x reduction)", rep.luts, rep.reduction);
+    if opts.opt.structural() {
+        if rep.opt_rounds > 0 {
+            println!(
+                "  optimizer       : {} -> {} LUTs ({:.2}x, {} rounds, equivalence checked)",
+                rep.pre_opt_luts, rep.luts, rep.opt_reduction, rep.opt_rounds
+            );
+        } else {
+            // BRAM pseudo-ports make the netlist unverifiable, so the
+            // pipeline (and don't-care pruning) refused to run.
+            println!(
+                "  optimizer       : skipped (BRAM-mapped neurons; rerun with --bram-min-bits 0)"
+            );
+        }
+    }
     println!("  FF {}  BRAM {}  DSP {}", rep.ffs, rep.brams, rep.dsps);
     println!(
         "  depth {}  min period {:.3} ns  WNS {:+.3} ns",
@@ -176,7 +210,7 @@ fn cmd_synth(args: &Args) -> Result<()> {
             NetlistEngine::from_netlist(&ex, &tables, netlist)
         } else {
             println!("  (BRAM-mapped neurons present: scoring a BRAM-free remap)");
-            NetlistEngine::build(&ex, &tables)
+            NetlistEngine::build_opt(&ex, &tables, opts.opt)
         };
         match built {
             Ok(engine) => {
@@ -208,6 +242,21 @@ fn cmd_verilog(args: &Args) -> Result<()> {
         proj.total_bytes,
         dir.display()
     );
+    let opt = parse_opt(args)?;
+    if opt.structural() {
+        // Also emit the optimized flat LUT netlist as one structural module.
+        let (netlist, rep) = synthesize(
+            &ex,
+            &tables,
+            SynthOpts { registers: false, bram_min_bits: 0, opt, ..SynthOpts::default() },
+        )?;
+        let text = netlist_module("LogicNetNetlist", &netlist)?;
+        std::fs::write(dir.join("LogicNetNetlist.v"), &text)?;
+        println!(
+            "wrote LogicNetNetlist.v ({} LUTs, {} pre-opt, {:.2}x)",
+            rep.luts, rep.pre_opt_luts, rep.opt_reduction
+        );
+    }
     Ok(())
 }
 
@@ -260,11 +309,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     match backend.as_str() {
         "tables" => {
+            if parse_opt(args)? != OptLevel::None {
+                println!(
+                    "note: --opt applies to the netlist backend only; the tables \
+                     backend serves unoptimized truth tables"
+                );
+            }
             let engine = std::sync::Arc::new(LutEngine::build(&ex, &tables)?);
             serve_backend(engine, &ds, requests, workers)
         }
         "netlist" => {
-            let engine = std::sync::Arc::new(NetlistEngine::build(&ex, &tables)?);
+            let opt = parse_opt(args)?;
+            let engine = std::sync::Arc::new(NetlistEngine::build_opt(&ex, &tables, opt)?);
+            println!("netlist backend ({} opt): {} LUTs", opt.name(), engine.num_luts());
             serve_backend(engine, &ds, requests, workers)
         }
         other => bail!("unknown backend {other} (expected tables|netlist)"),
@@ -333,7 +390,7 @@ fn cmd_score(args: &Args) -> Result<()> {
     let models = args.get_or("models", "hep_c").to_string();
     let names: Vec<String> = models.split(',').map(|s| s.trim().to_string()).collect();
     let mut ctx = ctx_from(args)?;
-    experiments::report_netlist_serving(&mut ctx, &names)
+    experiments::report_netlist_serving(&mut ctx, &names, parse_opt(args)?)
 }
 
 fn cmd_complexity(args: &Args) -> Result<()> {

@@ -98,6 +98,13 @@ pub fn auc_ovr(scores: &[f32], y: &[i32], c: usize) -> Vec<f64> {
 }
 
 /// ROC curve points (fpr, tpr) for class `k` one-vs-rest, sorted by fpr.
+///
+/// Curve points are emitted only at *distinct-score boundaries*.  Quantized
+/// logits take a handful of values, so long runs of tied scores are the
+/// norm; a point inside a tied run would depend on how the sort happened to
+/// interleave positives and negatives within the run, biasing the curve
+/// (the tied region must be a straight segment, not a staircase).
+/// `points` downsamples long curves, but a tied group is never split.
 pub fn roc_curve(scores: &[f32], y: &[i32], c: usize, k: usize, points: usize) -> Vec<(f64, f64)> {
     let s: Vec<f32> = scores.chunks(c).map(|row| row[k]).collect();
     let pos: Vec<bool> = y.iter().map(|&t| t as usize == k).collect();
@@ -108,17 +115,30 @@ pub fn roc_curve(scores: &[f32], y: &[i32], c: usize, k: usize, points: usize) -
     let mut out = vec![(0.0, 0.0)];
     let (mut tp, mut fp) = (0usize, 0usize);
     let stride = (order.len() / points.max(1)).max(1);
-    for (i, &j) in order.iter().enumerate() {
-        if pos[j] {
-            tp += 1;
-        } else {
-            fp += 1;
+    let mut next_emit = stride;
+    let mut i = 0;
+    while i < order.len() {
+        // Consume the whole tied-score group before considering a point.
+        let mut j = i;
+        while j + 1 < order.len() && s[order[j + 1]] == s[order[i]] {
+            j += 1;
         }
-        if i % stride == 0 || i + 1 == order.len() {
+        for &idx in &order[i..=j] {
+            if pos[idx] {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+        }
+        if j + 1 == order.len() || j + 1 >= next_emit {
             out.push((fp as f64 / n_neg, tp as f64 / n_pos));
+            next_emit = j + 1 + stride;
         }
+        i = j + 1;
     }
-    out.push((1.0, 1.0));
+    if out.last() != Some(&(1.0, 1.0)) {
+        out.push((1.0, 1.0));
+    }
     out
 }
 
@@ -173,5 +193,42 @@ mod tests {
         for w in roc.windows(2) {
             assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1);
         }
+    }
+
+    fn roc_of(s: &[f32], y: &[i32], points: usize) -> Vec<(f64, f64)> {
+        let logits: Vec<f32> = s.iter().flat_map(|&v| [1.0 - v, v]).collect();
+        roc_curve(&logits, y, 2, 1, points)
+    }
+
+    #[test]
+    fn roc_all_tied_scores_is_the_diagonal() {
+        // Regression: every score identical (the extreme quantized-logit
+        // case).  The old point-per-sample sweep emitted a staircase whose
+        // shape depended on sort order; the only honest curve is the
+        // straight diagonal with no interior points.
+        let s = vec![0.5f32; 6];
+        let y = vec![1, 0, 1, 0, 1, 0];
+        let roc = roc_of(&s, &y, 10);
+        assert_eq!(roc, vec![(0.0, 0.0), (1.0, 1.0)]);
+    }
+
+    #[test]
+    fn roc_never_splits_a_tied_group() {
+        // Positives and negatives interleaved inside one tied group: the
+        // curve must jump across the whole group in one segment.
+        let s = vec![0.9, 0.5, 0.5, 0.5, 0.1];
+        let y = vec![1, 1, 0, 1, 0];
+        let roc = roc_of(&s, &y, 100);
+        // Boundaries: after 0.9 (tp=1), after the 0.5 group (tp=3, fp=1),
+        // after 0.1 (fp=2).
+        assert_eq!(
+            roc,
+            vec![(0.0, 0.0), (0.0, 1.0 / 3.0), (0.5, 1.0), (1.0, 1.0)]
+        );
+        // No sort order of the tied group can change the curve: reversing
+        // the sample order must give the identical point list.
+        let s_rev: Vec<f32> = s.iter().rev().cloned().collect();
+        let y_rev: Vec<i32> = y.iter().rev().cloned().collect();
+        assert_eq!(roc_of(&s_rev, &y_rev, 100), roc);
     }
 }

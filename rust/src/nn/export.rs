@@ -96,6 +96,25 @@ impl ExportedLayer {
     pub fn in_bits(&self) -> usize {
         self.neurons.iter().map(|n| n.fanin()).max().unwrap_or(0) * self.quant_in.bw
     }
+
+    /// Pin every neuron of this layer to the two extreme output codes:
+    /// alternating ±1 weights and a small negative bias keep each
+    /// pre-activation at least 0.05/3 away from zero on quantized inputs,
+    /// so the 200x gain saturates the output quantizer either way.  This
+    /// is the trained-LogicNets regime (activation saturation) in its
+    /// purest form; the don't-care-pruning tests, the optimizer example
+    /// and the CI LUT-reduction gate all share this one recipe so they
+    /// exercise the same saturation behavior.
+    pub fn saturate_binary(&mut self) {
+        for nr in self.neurons.iter_mut() {
+            nr.g = 200.0;
+            nr.h = 0.0;
+            nr.bias = -0.05;
+            for (wi, w) in nr.weights.iter_mut().enumerate() {
+                *w = if wi % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+    }
 }
 
 /// The full exported model plus the skip wiring needed to mirror the JAX

@@ -16,7 +16,7 @@
 use crate::luts::ModelTables;
 use crate::nn::{ExportedLayer, ExportedModel, QuantSpec};
 use crate::sim::BitMatrix;
-use crate::synth::{synthesize, Netlist, SynthOpts};
+use crate::synth::{synthesize, Netlist, OptLevel, SynthOpts};
 use anyhow::{ensure, Result};
 
 enum Stage {
@@ -318,10 +318,23 @@ impl NetlistEngine {
     /// the engine.  BRAM spill is disabled: serving needs an end-to-end
     /// evaluable circuit.
     pub fn build(model: &ExportedModel, tables: &ModelTables) -> Result<NetlistEngine> {
+        Self::build_opt(model, tables, OptLevel::None)
+    }
+
+    /// Like [`NetlistEngine::build`], but run the netlist-optimization
+    /// pipeline (`synth::opt`) at the given level first.  The optimized
+    /// circuit serves fewer LUTs per sample while staying bit-identical to
+    /// [`LutEngine`] — `synthesize` machine-checks the equivalence before
+    /// the engine ever sees the netlist.
+    pub fn build_opt(
+        model: &ExportedModel,
+        tables: &ModelTables,
+        opt: OptLevel,
+    ) -> Result<NetlistEngine> {
         let (netlist, _) = synthesize(
             model,
             tables,
-            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+            SynthOpts { registers: false, bram_min_bits: 0, opt, ..SynthOpts::default() },
         )?;
         Self::from_netlist(model, tables, netlist)
     }
@@ -631,6 +644,25 @@ mod tests {
         for n in [1usize, 63, 64, 65, 200] {
             let xs: Vec<f32> = (0..12 * n).map(|_| rng.f32()).collect();
             assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs), "n={n}");
+        }
+    }
+
+    #[test]
+    fn optimized_netlist_engine_bit_identical() {
+        // Serving the *optimized* circuit must stay bit-identical to the
+        // table engine at every optimization level.
+        let model = random_model(5);
+        let tables = ModelTables::generate(&model).unwrap();
+        let lut = LutEngine::build(&model, &tables).unwrap();
+        let plain = NetlistEngine::build(&model, &tables).unwrap();
+        for opt in [OptLevel::Structural, OptLevel::Full] {
+            let net = NetlistEngine::build_opt(&model, &tables, opt).unwrap();
+            assert!(net.num_luts() <= plain.num_luts(), "{opt:?}");
+            let mut rng = Rng::new(31);
+            for n in [1usize, 63, 64, 65, 200] {
+                let xs: Vec<f32> = (0..12 * n).map(|_| rng.f32()).collect();
+                assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs), "{opt:?} n={n}");
+            }
         }
     }
 

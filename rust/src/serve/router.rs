@@ -13,6 +13,7 @@
 //! reporting.
 
 use super::engine::Backend;
+use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -42,13 +43,86 @@ struct Request {
     resp: SyncSender<usize>,
 }
 
-#[derive(Default)]
+/// Latency samples kept for percentile reporting.
+const LATENCY_RESERVOIR: usize = 100_000;
+
+/// Algorithm-R reservoir sample over the latency stream: every request is
+/// a candidate with uniform probability for the whole lifetime of the
+/// server.  (The previous "reservoir" stopped recording once full, so
+/// p50/p95/p99 only ever described the first 100k requests — startup
+/// traffic, cold caches and all.)  Each worker offers samples with its own
+/// private RNG; only the stream index is shared, via an atomic counter.
+struct Reservoir {
+    cap: usize,
+    /// Total samples offered (0-based stream index dispenser).
+    seen: AtomicU64,
+    samples: Mutex<Vec<f64>>,
+}
+
+impl Reservoir {
+    fn new(cap: usize) -> Reservoir {
+        Reservoir { cap: cap.max(1), seen: AtomicU64::new(0), samples: Mutex::new(Vec::new()) }
+    }
+
+    /// Offer one sample; `rng` must be private to the calling thread.
+    fn offer(&self, v: f64, rng: &mut Rng) {
+        let t = self.seen.fetch_add(1, Ordering::Relaxed) as usize;
+        if t < self.cap {
+            self.samples.lock().unwrap().push(v);
+        } else {
+            // Keep with probability cap/(t+1), evicting a uniform victim.
+            let j = rng.below(t + 1);
+            if j < self.cap {
+                let mut s = self.samples.lock().unwrap();
+                if j < s.len() {
+                    s[j] = v;
+                }
+            }
+        }
+    }
+
+    fn seen(&self) -> u64 {
+        self.seen.load(Ordering::Relaxed)
+    }
+
+    fn snapshot(&self) -> Vec<f64> {
+        self.samples.lock().unwrap().clone()
+    }
+}
+
 struct StatsInner {
-    latencies_us: Mutex<Vec<f64>>,
+    lat: Reservoir,
     completed: AtomicU64,
     batches: AtomicU64,
     batch_fill: AtomicU64,
     rejected: AtomicUsize,
+}
+
+impl Default for StatsInner {
+    fn default() -> Self {
+        StatsInner {
+            lat: Reservoir::new(LATENCY_RESERVOIR),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_fill: AtomicU64::new(0),
+            rejected: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// Interpolated percentile of an ascending-sorted sample (linear between
+/// closest ranks).  The truncating nearest-rank it replaces rounded *down*,
+/// which on small samples could report p99 == p50.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    match sorted.len() {
+        0 => 0.0,
+        n => {
+            let rank = (n - 1) as f64 * p;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
+        }
+    }
 }
 
 /// Snapshot of server statistics.
@@ -80,12 +154,12 @@ impl Server {
         // Batcher thread: coalesce, then fan batches to workers round-robin.
         let mut worker_txs = Vec::new();
         let mut handles = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
+        for wi in 0..cfg.workers.max(1) {
             let (wtx, wrx) = sync_channel::<Vec<Request>>(8);
             worker_txs.push(wtx);
             let engine = engine.clone();
             let stats = stats.clone();
-            handles.push(std::thread::spawn(move || worker_loop(engine, wrx, stats)));
+            handles.push(std::thread::spawn(move || worker_loop(engine, wrx, stats, wi)));
         }
         let in_features = engine.in_features();
         let stats2 = stats.clone();
@@ -114,14 +188,9 @@ impl Server {
     }
 
     pub fn stats(&self) -> ServerStats {
-        let mut lats = self.stats.latencies_us.lock().unwrap().clone();
+        let mut lats = self.stats.lat.snapshot();
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if lats.is_empty() {
-                return 0.0;
-            }
-            lats[((lats.len() as f64 - 1.0) * p) as usize]
-        };
+        let pct = |p: f64| percentile(&lats, p);
         let batches = self.stats.batches.load(Ordering::Relaxed);
         let fill = self.stats.batch_fill.load(Ordering::Relaxed);
         ServerStats {
@@ -196,8 +265,16 @@ fn batcher_loop(
     }
 }
 
-fn worker_loop(engine: Arc<dyn Backend>, rx: Receiver<Vec<Request>>, stats: Arc<StatsInner>) {
-    const RESERVOIR: usize = 100_000;
+fn worker_loop(
+    engine: Arc<dyn Backend>,
+    rx: Receiver<Vec<Request>>,
+    stats: Arc<StatsInner>,
+    worker: usize,
+) {
+    // Private sampling stream per worker: Algorithm R needs an RNG on every
+    // post-fill offer, and sharing one behind a lock would serialize the
+    // hot path.
+    let mut rng = Rng::new(0x5EED_0A11 ^ (worker as u64).wrapping_mul(0x9E3779B97F4A7C15));
     // One reusable pack buffer per worker: requests are copied into a
     // contiguous [batch, d] matrix so the backend sees a single batch call.
     let mut xs: Vec<f32> = Vec::new();
@@ -210,12 +287,7 @@ fn worker_loop(engine: Arc<dyn Backend>, rx: Receiver<Vec<Request>>, stats: Arc<
         debug_assert_eq!(preds.len(), batch.len());
         for (req, class) in batch.into_iter().zip(preds) {
             let lat = req.enqueued.elapsed().as_secs_f64() * 1e6;
-            {
-                let mut l = stats.latencies_us.lock().unwrap();
-                if l.len() < RESERVOIR {
-                    l.push(lat);
-                }
-            }
+            stats.lat.offer(lat, &mut rng);
             stats.completed.fetch_add(1, Ordering::Relaxed);
             let _ = req.resp.send(class);
         }
@@ -299,6 +371,45 @@ mod tests {
             assert_eq!(server.infer(x).expect("server response"), direct);
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn reservoir_keeps_sampling_past_capacity() {
+        // Regression: the old buffer froze once full; Algorithm R must keep
+        // admitting late samples and stay a uniform sample of the stream.
+        let r = Reservoir::new(50);
+        let mut rng = Rng::new(9);
+        let n = 5_000usize;
+        for i in 0..n {
+            r.offer(i as f64, &mut rng);
+        }
+        assert_eq!(r.seen(), n as u64);
+        let s = r.snapshot();
+        assert_eq!(s.len(), 50, "reservoir must stay at capacity");
+        assert!(
+            s.iter().any(|&v| v >= (n / 2) as f64),
+            "late samples must be admitted (old bug: only the first 50 survive)"
+        );
+        // Uniformity sanity: the sample mean tracks the stream mean.
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        let stream_mean = (n - 1) as f64 / 2.0;
+        assert!(
+            (mean - stream_mean).abs() < stream_mean * 0.4,
+            "mean {mean} vs stream {stream_mean}"
+        );
+    }
+
+    #[test]
+    fn percentiles_interpolate_between_ranks() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        let two = [0.0, 10.0];
+        assert!((percentile(&two, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile(&two, 0.95) - 9.5).abs() < 1e-12);
+        // The old truncating nearest-rank collapsed p99 onto p50 here.
+        assert!(percentile(&two, 0.99) > percentile(&two, 0.5));
+        let many: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert!((percentile(&many, 0.95) - 95.0).abs() < 1e-12);
     }
 
     #[test]

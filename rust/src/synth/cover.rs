@@ -119,20 +119,40 @@ impl Cover {
 /// result is always verified exactly equivalent to `f` by construction:
 /// every expansion step is validated against the off-set.
 pub fn minimize(f: &BoolFn) -> Cover {
+    let ones = BoolFn::new(f.nvars, vec![u64::MAX; f.words.len()]);
+    let cover = minimize_dc(f, &ones);
+    debug_assert!(cover.equals_fn(f), "minimized cover must stay equivalent");
+    cover
+}
+
+/// Minimize `f` against a care set (the Espresso don't-care formulation):
+/// the returned cover covers every minterm of the care on-set
+/// (`f & care`), covers no minterm of the care off-set (`!f & care`), and
+/// may freely cover don't-care minterms (`!care`) when that lets a cube
+/// drop literals.  `minimize(f)` is the `care == 1` special case.  The
+/// synthesizer's reachable-code pruning (`synth::opt`) feeds unreachable
+/// truth-table entries in as don't-cares.
+pub fn minimize_dc(f: &BoolFn, care: &BoolFn) -> Cover {
+    assert_eq!(f.nvars, care.nvars, "care set arity mismatch");
     let nvars = f.nvars;
-    let onset: Vec<u64> =
-        (0..f.num_entries() as u64).filter(|&m| f.get(m as usize)).collect();
+    let entries = f.num_entries();
+    // A minterm may be covered iff it is on-set or don't-care.
+    let allowed = |m: u64| f.get(m as usize) || !care.get(m as usize);
+    // Minterms the cover is *required* to contain.
+    let onset: Vec<u64> = (0..entries as u64)
+        .filter(|&m| f.get(m as usize) && care.get(m as usize))
+        .collect();
     if onset.is_empty() {
         return Cover { nvars, cubes: Vec::new() };
     }
-    if onset.len() == f.num_entries() {
+    if (0..entries as u64).all(allowed) {
         return Cover { nvars, cubes: vec![Cube { care: 0, val: 0 }] };
     }
 
-    // EXPAND: grow each minterm cube by dropping literals while the cube
-    // stays inside the on-set.
+    // EXPAND: grow each required minterm's cube by dropping literals while
+    // the cube stays inside the on-set ∪ don't-care set.
     let mut cubes: Vec<Cube> = Vec::new();
-    let mut covered = vec![false; f.num_entries()];
+    let mut covered = vec![false; entries];
     for &m in &onset {
         if covered[m as usize] {
             continue;
@@ -145,8 +165,8 @@ pub fn minimize(f: &BoolFn) -> Cover {
                 continue;
             }
             let trial = Cube { care: cube.care & !bit, val: cube.val & !bit };
-            // Valid iff every minterm of the expanded cube is in the on-set.
-            if trial.minterms(nvars).all(|t| f.get(t as usize)) {
+            // Valid iff the expanded cube never touches the care off-set.
+            if trial.minterms(nvars).all(allowed) {
                 cube = trial;
             }
         }
@@ -167,20 +187,23 @@ pub fn minimize(f: &BoolFn) -> Cover {
         keep.push(*c);
     }
 
-    // IRREDUNDANT: greedy removal of cubes whose minterms are all covered
-    // by the others (largest cubes kept first).
+    // IRREDUNDANT: greedy removal of cubes whose *required* minterms are
+    // all covered by the others (largest cubes kept first).  Don't-care
+    // minterms never pin a cube in place.
     keep.sort_by_key(|c| c.num_literals());
     let mut result: Vec<Cube> = Vec::new();
-    let mut cover_count = vec![0u32; f.num_entries()];
+    let mut cover_count = vec![0u32; entries];
+    let required = |t: u64| f.get(t as usize) && care.get(t as usize);
     for c in &keep {
-        for t in c.minterms(nvars) {
+        for t in c.minterms(nvars).filter(|&t| required(t)) {
             cover_count[t as usize] += 1;
         }
     }
     for c in &keep {
-        let redundant = c.minterms(nvars).all(|t| cover_count[t as usize] > 1);
+        let redundant =
+            c.minterms(nvars).filter(|&t| required(t)).all(|t| cover_count[t as usize] > 1);
         if redundant {
-            for t in c.minterms(nvars) {
+            for t in c.minterms(nvars).filter(|&t| required(t)) {
                 cover_count[t as usize] -= 1;
             }
         } else {
@@ -188,7 +211,12 @@ pub fn minimize(f: &BoolFn) -> Cover {
         }
     }
     let cover = Cover { nvars, cubes: result };
-    debug_assert!(cover.equals_fn(f), "minimized cover must stay equivalent");
+    debug_assert!(
+        (0..entries as u64).all(|m| {
+            !care.get(m as usize) || cover.eval(m) == f.get(m as usize)
+        }),
+        "don't-care minimization must agree with f on every care minterm"
+    );
     cover
 }
 
@@ -267,6 +295,57 @@ mod tests {
             for m in 0..f.num_entries() {
                 let bit = (words[m / 64] >> (m % 64)) & 1 == 1;
                 assert_eq!(bit, c.eval(m as u64), "nvars={nvars} m={m}");
+            }
+        });
+    }
+
+    #[test]
+    fn dont_cares_drop_literals() {
+        // f(x1,x0): on-set {11}, off-set {00}, DC {01, 10}.  With the DC
+        // entries free the single cube can drop to one literal.
+        let mut f = BoolFn::zeros(2);
+        f.set(3, true);
+        let mut care = BoolFn::zeros(2);
+        care.set(0, true);
+        care.set(3, true);
+        let c = minimize_dc(&f, &care);
+        assert_eq!(c.cubes.len(), 1);
+        assert_eq!(c.cubes[0].num_literals(), 1, "DC must enable a literal drop");
+        assert!(c.eval(3));
+        assert!(!c.eval(0));
+        // Without don't-cares the cube keeps both literals.
+        assert_eq!(minimize(&f).cubes[0].num_literals(), 2);
+    }
+
+    #[test]
+    fn minimize_dc_full_care_equals_minimize() {
+        forall("dc-full-care", 0xDC0, 40, |rng: &mut Rng| {
+            let nvars = 1 + rng.below(7);
+            let mut f = BoolFn::zeros(nvars);
+            for m in 0..f.num_entries() {
+                f.set(m, rng.f64() < 0.4);
+            }
+            let ones = BoolFn::new(nvars, vec![u64::MAX; f.words.len()]);
+            let c = minimize_dc(&f, &ones);
+            assert!(c.equals_fn(&f), "full-care DC minimization must be exact");
+        });
+    }
+
+    #[test]
+    fn prop_minimize_dc_respects_care_set() {
+        forall("dc-care", 0xDC1, 60, |rng: &mut Rng| {
+            let nvars = 1 + rng.below(7);
+            let mut f = BoolFn::zeros(nvars);
+            let mut care = BoolFn::zeros(nvars);
+            for m in 0..f.num_entries() {
+                f.set(m, rng.f64() < 0.4);
+                care.set(m, rng.f64() < 0.7);
+            }
+            let c = minimize_dc(&f, &care);
+            for m in 0..f.num_entries() as u64 {
+                if care.get(m as usize) {
+                    assert_eq!(c.eval(m), f.get(m as usize), "care minterm {m} diverged");
+                }
             }
         });
     }

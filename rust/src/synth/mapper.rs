@@ -298,8 +298,10 @@ impl Mapper {
 }
 
 /// Permute a <=6-var function so its input nets are in ascending order;
-/// returns the permuted u64 truth table and sorted nets.
-fn canonical_order(f: &BoolFn, nets: &[Net]) -> (u64, Vec<Net>) {
+/// returns the permuted u64 truth table and sorted nets.  Shared with the
+/// post-mapping optimizer (`synth::opt`), whose CSE pass must hash nodes
+/// exactly the way the mapper does.
+pub(crate) fn canonical_order(f: &BoolFn, nets: &[Net]) -> (u64, Vec<Net>) {
     let k = f.nvars;
     let mut order: Vec<usize> = (0..k).collect();
     order.sort_by_key(|&i| nets[i]);

@@ -15,6 +15,7 @@ pub mod complexity;
 pub mod cover;
 pub mod mapper;
 pub mod netlist;
+pub mod opt;
 
 use crate::luts::ModelTables;
 use crate::nn::ExportedModel;
@@ -22,6 +23,7 @@ use anyhow::{ensure, Result};
 pub use boolfn::BoolFn;
 pub use mapper::Mapper;
 pub use netlist::{BramNeuron, LutNode, Net, Netlist, period_for_depth};
+pub use opt::OptLevel;
 
 #[derive(Debug, Clone, Copy)]
 pub struct SynthOpts {
@@ -33,11 +35,15 @@ pub struct SynthOpts {
     /// Neurons with at least this many truth-table input bits are mapped to
     /// BRAM instead of LUTs (0 disables BRAM mapping).
     pub bram_min_bits: usize,
+    /// Netlist optimization level (DESIGN.md §Netlist-Optimization): the
+    /// CSE + constant/dead-sweep pipeline over the mapped netlist, and at
+    /// `Full` additionally reachable-code don't-care pruning at map time.
+    pub opt: OptLevel,
 }
 
 impl Default for SynthOpts {
     fn default() -> Self {
-        SynthOpts { registers: true, clock_ns: 5.0, bram_min_bits: 13 }
+        SynthOpts { registers: true, clock_ns: 5.0, bram_min_bits: 13, opt: OptLevel::None }
     }
 }
 
@@ -53,6 +59,14 @@ pub struct SynthReport {
     pub analytical_luts: u64,
     /// analytical / synthesized (the paper's "Reduction" column, T5.2).
     pub reduction: f64,
+    /// LUTs the mapper produced before the optimization pipeline ran
+    /// (equals `luts` when `SynthOpts::opt` is `OptLevel::None`).
+    pub pre_opt_luts: usize,
+    /// pre-opt / post-opt LUT ratio (1.0 when optimization is off or the
+    /// pipeline changed nothing).
+    pub opt_reduction: f64,
+    /// CSE+sweep rounds the pipeline ran to reach its fixed point.
+    pub opt_rounds: usize,
     /// Layers included in the netlist (sparse layers only).
     pub layers: Vec<usize>,
 }
@@ -86,6 +100,28 @@ pub fn synthesize(
     let mut ff_bits = if opts.registers { in_bus } else { 0 };
     let mut outputs: Vec<Net> = Vec::new();
 
+    // Reachable-code tracking for don't-care pruning (OptLevel::Full).
+    // `acts_masks` parallels `acts_nets`: one producible-code bitmask per
+    // neuron/feature of each activation, or `None` when tracking is off
+    // for that activation (wide codes).  Gated to skip-free models whose
+    // tables all stay under the BRAM threshold: a spilled neuron would
+    // make the netlist unevaluable and silently ship an unverified
+    // rewrite, while a merely *enabled* threshold that nothing reaches
+    // (the CLI default) must not downgrade the requested level.
+    let will_spill = opts.bram_min_bits > 0
+        && emitted.iter().any(|&li| {
+            let lt = tables.layers[li].as_ref().unwrap();
+            lt.tables.iter().any(|t| t.in_bits >= opts.bram_min_bits)
+        });
+    let track_dc = opts.opt.dont_cares() && model.skips == 0 && !will_spill;
+    let mut acts_masks: Vec<Option<Vec<u64>>> = vec![if track_dc
+        && in_bw <= opt::DC_MAX_CODE_BITS
+    {
+        Some(vec![opt::full_code_mask(in_bw); model.layers[first].in_f])
+    } else {
+        None
+    }];
+
     for (k, &li) in emitted.iter().enumerate() {
         let lt = tables.layers[li].as_ref().unwrap();
         let layer = &model.layers[li];
@@ -112,6 +148,17 @@ pub fn synthesize(
             .map(|&n| mapper.netlist.level_of(n))
             .max()
             .unwrap_or(0);
+        // Producible-code masks of this layer's input positions (aligned
+        // with the bit-group order of `inp_nets`); `None` disables pruning
+        // for this layer.
+        let inp_masks: Option<&Vec<u64>> = acts_masks
+            .last()
+            .and_then(|m| m.as_ref())
+            .filter(|ms| track_dc && ms.len() == layer.in_f);
+        // Masks this layer's neurons produce, for the next layer's pruning.
+        // A layer whose codes are too wide drops out of tracking entirely.
+        let mut out_masks: Option<Vec<u64>> =
+            (track_dc && lt.quant_out.bw <= opt::DC_MAX_CODE_BITS).then(Vec::new);
         let mut layer_out: Vec<Net> = Vec::with_capacity(lt.tables.len() * lt.quant_out.bw);
         for (nj, table) in lt.tables.iter().enumerate() {
             let nr = &layer.neurons[nj];
@@ -133,6 +180,10 @@ pub fn synthesize(
                     mapper.netlist.num_inputs += 1;
                     layer_out.push(Net::Input(id));
                 }
+                if let Some(om) = out_masks.as_mut() {
+                    // A memory port can emit any code.
+                    om.push(opt::full_code_mask(table.out_bits));
+                }
                 continue;
             }
             // Gather the neuron's input nets in pack_index order.
@@ -142,9 +193,47 @@ pub fn synthesize(
                 .flat_map(|&j| (0..bw).map(move |b| (j, b)))
                 .map(|(j, b)| inp_nets[j * bw + b])
                 .collect();
+            // Reachable-code don't-cares: truth-table entries whose input
+            // codes the previous layer can never produce.  `None` when the
+            // whole entry space is reachable (e.g. the first layer).
+            let care: Option<BoolFn> = match inp_masks {
+                Some(ms) if table.in_bits <= opt::DC_MAX_TABLE_BITS => {
+                    let src: Vec<u64> = nr.inputs.iter().map(|&j| ms[j]).collect();
+                    // All sources unconstrained (e.g. the first layer):
+                    // the care set would be constant-true, so skip the
+                    // 2^in_bits enumeration outright.
+                    if src.iter().all(|&m| m == opt::full_code_mask(bw)) {
+                        None
+                    } else {
+                        let c = opt::care_fn(&src, bw);
+                        if c.is_const() == Some(true) {
+                            None
+                        } else {
+                            Some(c)
+                        }
+                    }
+                }
+                _ => None,
+            };
             for bit in 0..table.out_bits {
                 let f = BoolFn::new(table.in_bits, table.output_bit_fn(bit));
+                let f = match &care {
+                    Some(c) => opt::dc_simplify(&f, c),
+                    None => f,
+                };
                 layer_out.push(mapper.map_fn(&f, &nets));
+            }
+            match out_masks.as_mut() {
+                Some(om) if table.in_bits <= opt::DC_MAX_TABLE_BITS => {
+                    let img = match &care {
+                        Some(c) => opt::reachable_image(table, c),
+                        None => opt::table_image(table),
+                    };
+                    om.push(img);
+                }
+                // Table too wide to enumerate: over-approximate.
+                Some(om) => om.push(opt::full_code_mask(table.out_bits)),
+                None => {}
             }
         }
         let out_level: u32 = layer_out
@@ -158,6 +247,7 @@ pub fn synthesize(
                 ff_bits += layer_out.len();
             }
             acts_nets.push(layer_out);
+            acts_masks.push(out_masks);
         } else {
             outputs = layer_out;
         }
@@ -165,8 +255,50 @@ pub fn synthesize(
 
     mapper.netlist.outputs = outputs;
     mapper.netlist.layer_depths = layer_depths.clone();
-    let netlist = mapper.netlist;
+    let pre_netlist = mapper.netlist;
+    let pre_opt_luts = pre_netlist.num_luts();
 
+    // Netlist optimization pipeline (CSE + constant/dead sweep to a fixed
+    // point), then machine-check the result with the bitsliced simulator.
+    let (netlist, opt_stats) = if opts.opt.structural() && pre_netlist.brams.is_empty() {
+        let (optimized, stats) = opt::optimize(&pre_netlist, opts.opt);
+        // The pipeline output must match the unoptimized netlist over the
+        // primary-input space (exhaustive for small buses, a deterministic
+        // 4096-sample sweep otherwise).
+        ensure!(
+            opt::netlists_equivalent(&pre_netlist, &optimized, 0x0D0C_5EED),
+            "netlist optimization changed circuit behavior"
+        );
+        // And match the truth-table forward pass whenever the table-side
+        // checkers support the layout (don't-care pruning is gated to
+        // skip-free models, so every pruned netlist lands here).
+        if model.skips == 0 {
+            let mism = if optimized.num_inputs <= 16 {
+                verify_netlist_exhaustive(model, tables, &optimized)?
+            } else {
+                verify_netlist(model, tables, &optimized, 2048, 0x0D0C_5EED)?
+            };
+            ensure!(
+                mism == 0,
+                "optimized netlist diverged from the truth tables ({mism} mismatches)"
+            );
+        }
+        (optimized, stats)
+    } else {
+        // Optimization off (or BRAM pseudo-ports present, which the
+        // simulator cannot re-verify): the mapped netlist ships as-is.
+        let stats = opt::OptStats {
+            pre_luts: pre_opt_luts,
+            post_luts: pre_opt_luts,
+            ..opt::OptStats::default()
+        };
+        (pre_netlist, stats)
+    };
+
+    // Per-layer depths are measured during mapping; optimization can only
+    // shorten cones, so for registered timing they are a (tight in
+    // practice) upper bound.  Combinational depth is recomputed from the
+    // optimized netlist.
     let depth = if opts.registers {
         layer_depths.iter().copied().max().unwrap_or(0)
     } else {
@@ -184,6 +316,9 @@ pub fn synthesize(
         wns_ns: opts.clock_ns - min_period,
         analytical_luts: analytical,
         reduction: analytical as f64 / luts.max(1) as f64,
+        pre_opt_luts,
+        opt_reduction: opt_stats.reduction(),
+        opt_rounds: opt_stats.rounds,
         layers: emitted,
     };
     Ok((netlist, report))
@@ -463,7 +598,7 @@ mod tests {
         let (netlist, _) = synthesize(
             &model,
             &tables,
-            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
         )
         .unwrap();
         for (label, nl) in [("clean", netlist.clone()), ("corrupt", corrupt(&netlist))] {
@@ -485,7 +620,7 @@ mod tests {
         let (netlist, _) = synthesize(
             &model,
             &tables,
-            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
         )
         .unwrap();
         assert_eq!(verify_netlist_exhaustive(&model, &tables, &netlist).unwrap(), 0);
@@ -501,10 +636,10 @@ mod tests {
         let model = random_model(3, 16, &[32, 32, 16], 4, 2);
         let tables = crate::luts::ModelTables::generate(&model).unwrap();
         let (_, reg) =
-            synthesize(&model, &tables, SynthOpts { registers: true, clock_ns: 5.0, bram_min_bits: 13 })
+            synthesize(&model, &tables, SynthOpts { registers: true, ..SynthOpts::default() })
                 .unwrap();
         let (_, comb) =
-            synthesize(&model, &tables, SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 13 })
+            synthesize(&model, &tables, SynthOpts { registers: false, ..SynthOpts::default() })
                 .unwrap();
         assert!(reg.depth <= comb.depth);
         assert!(reg.ffs > 0 && comb.ffs == 0);
@@ -518,7 +653,7 @@ mod tests {
         let (netlist, report) = synthesize(
             &model,
             &tables,
-            SynthOpts { registers: true, clock_ns: 5.0, bram_min_bits: 14 },
+            SynthOpts { registers: true, bram_min_bits: 14, ..SynthOpts::default() },
         )
         .unwrap();
         assert!(report.brams > 0, "wide neurons must spill to BRAM");
@@ -536,5 +671,66 @@ mod tests {
         let (_, rl) = synthesize(&large, &tl, SynthOpts::default()).unwrap();
         assert!(rl.depth >= rs.depth);
         assert!(rl.wns_ns <= rs.wns_ns);
+    }
+
+    #[test]
+    fn optimized_synthesis_stays_equivalent() {
+        // Full optimization is machine-checked internally (synthesize
+        // errors on divergence); here we also re-verify externally and
+        // check the report wiring.
+        for level in [OptLevel::Structural, OptLevel::Full] {
+            let model = random_model(11, 6, &[12, 6], 3, 2); // 12-bit bus
+            let tables = crate::luts::ModelTables::generate(&model).unwrap();
+            let base = SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() };
+            let (_, plain) = synthesize(&model, &tables, base).unwrap();
+            let (netlist, rep) =
+                synthesize(&model, &tables, SynthOpts { opt: level, ..base }).unwrap();
+            assert_eq!(verify_netlist_exhaustive(&model, &tables, &netlist).unwrap(), 0);
+            if level == OptLevel::Structural {
+                // Structural levels map exactly what the plain flow maps.
+                assert_eq!(rep.pre_opt_luts, plain.luts);
+            }
+            assert!(rep.luts <= rep.pre_opt_luts, "{level:?}");
+            assert!(rep.opt_reduction >= 1.0 && rep.opt_rounds >= 1, "{level:?}");
+            assert_eq!(netlist.num_luts(), rep.luts);
+        }
+    }
+
+    #[test]
+    fn unoptimized_report_has_identity_opt_fields() {
+        let model = random_model(12, 8, &[10], 3, 2);
+        let tables = crate::luts::ModelTables::generate(&model).unwrap();
+        let (_, rep) = synthesize(&model, &tables, SynthOpts::default()).unwrap();
+        assert_eq!(rep.pre_opt_luts, rep.luts);
+        assert!((rep.opt_reduction - 1.0).abs() < 1e-12);
+        assert_eq!(rep.opt_rounds, 0);
+    }
+
+    /// A model whose first layer saturates to the two extreme codes
+    /// (`ExportedLayer::saturate_binary`): the second layer then has
+    /// unreachable input patterns that only the don't-care pass can
+    /// exploit (each bit of a {0,3}-valued code is individually
+    /// non-constant, so the plain mapper keeps full cones).
+    fn binary_activation_model(seed: u64) -> ExportedModel {
+        let mut model = random_model(seed, 8, &[16, 8], 4, 2);
+        model.layers[0].saturate_binary();
+        model
+    }
+
+    #[test]
+    fn dont_care_pruning_strictly_reduces_saturated_models() {
+        let model = binary_activation_model(13);
+        let tables = crate::luts::ModelTables::generate(&model).unwrap();
+        let base = SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() };
+        let (_, plain) = synthesize(&model, &tables, base).unwrap();
+        let (netlist, full) =
+            synthesize(&model, &tables, SynthOpts { opt: OptLevel::Full, ..base }).unwrap();
+        assert_eq!(verify_netlist_exhaustive(&model, &tables, &netlist).unwrap(), 0);
+        assert!(
+            full.luts < plain.luts,
+            "don't-care pruning must strictly reduce: {} vs {}",
+            full.luts,
+            plain.luts
+        );
     }
 }

@@ -23,7 +23,7 @@ impl Net {
 }
 
 /// One mapped K-LUT (K <= 6): output = tt bit at the packed input index.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LutNode {
     pub inputs: Vec<Net>,
     pub tt: u64,
@@ -32,7 +32,7 @@ pub struct LutNode {
 }
 
 /// A neuron kept as a memory block instead of logic.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BramNeuron {
     pub in_bits: usize,
     pub out_bits: usize,
@@ -40,7 +40,9 @@ pub struct BramNeuron {
     pub blocks: usize,
 }
 
-#[derive(Debug, Clone, Default)]
+/// Structural equality (`PartialEq`) compares node lists, outputs, BRAMs
+/// and depths verbatim — `synth::opt` uses it to detect its fixed point.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Netlist {
     pub num_inputs: usize,
     pub nodes: Vec<LutNode>,

@@ -1,0 +1,546 @@
+//! Netlist optimization: a fixed-point pipeline of equivalence-preserving
+//! passes over the mapped [`Netlist`] (DESIGN.md §Netlist-Optimization).
+//!
+//! The mapper already hashes structurally while it builds, but it works one
+//! boolean function at a time: it cannot see sharing that only appears
+//! after another neuron's cone folds, and it cannot use cross-layer
+//! reachability.  The pipeline closes that gap with three passes:
+//!
+//! 1. **CSE** ([`Pass::Cse`]): global structural hashing — two LUTs with
+//!    the same canonical truth table over the same (rewritten) fan-in nets
+//!    merge into one, across neurons and layers.
+//! 2. **Sweep** ([`Pass::Sweep`]): constant propagation and dead-LUT
+//!    removal — constant inputs are cofactored away, duplicate fan-in nets
+//!    merged, tables that ignore an input get their support reduced,
+//!    constant tables and wire-passthrough tables are replaced by their
+//!    driving net, and every node unreachable from an output is dropped.
+//! 3. **Reachable-code don't-care pruning** (map-time, [`care_fn`] +
+//!    [`dc_simplify`]): only activation codes the previous layer can
+//!    actually produce reach a neuron, so unreachable truth-table entries
+//!    are don't-cares fed back into [`cover::minimize_dc`].  This runs
+//!    inside `synthesize` (it needs the layer tables), before the netlist
+//!    passes.
+//!
+//! Every pass emits a freshly renumbered netlist in topological order and
+//! can only merge, shrink or drop nodes, so the LUT count is monotonically
+//! non-increasing per pass and the [`optimize`] loop terminates at an
+//! idempotent fixed point.  `synthesize` machine-checks the optimized
+//! result against the truth-table forward pass with the bitsliced
+//! simulator (exhaustively when the input bus permits).
+
+use super::boolfn::BoolFn;
+use super::cover;
+use super::mapper::canonical_order;
+use super::netlist::{LutNode, Net, Netlist};
+use crate::sim::{eval_netlist, BitMatrix};
+use std::collections::HashMap;
+
+/// How hard `synthesize` optimizes the mapped netlist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptLevel {
+    /// No optimization: the netlist is exactly what the mapper produced.
+    #[default]
+    None,
+    /// Netlist passes only (CSE + constant/dead sweep to a fixed point).
+    Structural,
+    /// Netlist passes plus reachable-code don't-care pruning at map time.
+    Full,
+}
+
+impl OptLevel {
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s {
+            "none" | "off" | "0" => Some(OptLevel::None),
+            "structural" | "struct" | "1" => Some(OptLevel::Structural),
+            "full" | "2" => Some(OptLevel::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OptLevel::None => "none",
+            OptLevel::Structural => "structural",
+            OptLevel::Full => "full",
+        }
+    }
+
+    /// Run the netlist pass pipeline at all?
+    pub fn structural(self) -> bool {
+        !matches!(self, OptLevel::None)
+    }
+
+    /// Apply reachable-code don't-care pruning at map time?
+    pub fn dont_cares(self) -> bool {
+        matches!(self, OptLevel::Full)
+    }
+}
+
+/// One netlist pass of the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Cse,
+    Sweep,
+}
+
+/// What [`optimize`] did, for reporting and for the monotonicity tests.
+#[derive(Debug, Clone, Default)]
+pub struct OptStats {
+    pub pre_luts: usize,
+    pub post_luts: usize,
+    /// LUT count after each executed pass, in pipeline order.
+    pub pass_luts: Vec<usize>,
+    /// CSE+sweep rounds until the fixed point.
+    pub rounds: usize,
+}
+
+impl OptStats {
+    /// pre/post LUT ratio (>= 1.0; 1.0 when nothing changed).
+    pub fn reduction(&self) -> f64 {
+        self.pre_luts.max(1) as f64 / self.post_luts.max(1) as f64
+    }
+}
+
+/// Cap on fixed-point rounds — a pure safety net: every productive round
+/// strictly lowers the node count, so real inputs converge far earlier.
+const MAX_ROUNDS: usize = 64;
+
+/// Run the CSE+sweep pipeline to its fixed point.  Netlists with BRAM
+/// pseudo-ports are returned unchanged: their pseudo-input wiring cannot be
+/// re-verified by the simulator, and BRAM-mapped designs are never served.
+pub fn optimize(netlist: &Netlist, level: OptLevel) -> (Netlist, OptStats) {
+    let pre = netlist.num_luts();
+    let mut stats = OptStats { pre_luts: pre, post_luts: pre, ..OptStats::default() };
+    if !level.structural() || !netlist.brams.is_empty() {
+        return (netlist.clone(), stats);
+    }
+    let mut cur = netlist.clone();
+    loop {
+        let a = run_pass(&cur, Pass::Cse);
+        stats.pass_luts.push(a.num_luts());
+        let b = run_pass(&a, Pass::Sweep);
+        stats.pass_luts.push(b.num_luts());
+        stats.rounds += 1;
+        let fixed = b == cur;
+        cur = b;
+        if fixed || stats.rounds >= MAX_ROUNDS {
+            break;
+        }
+    }
+    stats.post_luts = cur.num_luts();
+    (cur, stats)
+}
+
+/// Execute one pass: rebuild the netlist in topological order, keeping only
+/// nodes reachable from an output.  Both passes renumber compactly, so a
+/// pass that changes nothing reproduces its input verbatim (the fixed-point
+/// test in [`optimize`] relies on this).
+pub fn run_pass(nl: &Netlist, pass: Pass) -> Netlist {
+    let reach = reachable(nl);
+    let mut out = Netlist {
+        num_inputs: nl.num_inputs,
+        brams: nl.brams.clone(),
+        layer_depths: nl.layer_depths.clone(),
+        ..Netlist::default()
+    };
+    let mut cache: HashMap<(u64, Vec<Net>), Net> = HashMap::new();
+    // Old node id -> its replacement net in the rebuilt netlist.
+    let mut map: Vec<Net> = vec![Net::Const0; nl.nodes.len()];
+    for (i, node) in nl.nodes.iter().enumerate() {
+        if !reach[i] {
+            continue;
+        }
+        let inputs: Vec<Net> = node.inputs.iter().map(|&n| resolve(&map, n)).collect();
+        let f = BoolFn::from_tt6(inputs.len(), node.tt);
+        map[i] = match pass {
+            Pass::Cse => emit_hashed(&mut out, &mut cache, &f, &inputs),
+            Pass::Sweep => emit_simplified(&mut out, &mut cache, &f, &inputs),
+        };
+    }
+    out.outputs = nl.outputs.iter().map(|&n| resolve(&map, n)).collect();
+    out
+}
+
+fn resolve(map: &[Net], n: Net) -> Net {
+    match n {
+        Net::Node(i) => map[i as usize],
+        other => other,
+    }
+}
+
+/// Nodes reachable from the output nets.
+fn reachable(nl: &Netlist) -> Vec<bool> {
+    let mut reach = vec![false; nl.nodes.len()];
+    let mut stack: Vec<usize> = nl
+        .outputs
+        .iter()
+        .filter_map(|&o| match o {
+            Net::Node(i) => Some(i as usize),
+            _ => None,
+        })
+        .collect();
+    while let Some(i) = stack.pop() {
+        if reach[i] {
+            continue;
+        }
+        reach[i] = true;
+        for &inp in &nl.nodes[i].inputs {
+            if let Net::Node(j) = inp {
+                if !reach[j as usize] {
+                    stack.push(j as usize);
+                }
+            }
+        }
+    }
+    reach
+}
+
+/// CSE emit: canonicalize and hash, merging identical (truth table, fan-in
+/// nets) pairs.  No boolean simplification beyond constant-table detection
+/// (which only fires on tables an upstream sweep just folded).
+fn emit_hashed(
+    out: &mut Netlist,
+    cache: &mut HashMap<(u64, Vec<Net>), Net>,
+    f: &BoolFn,
+    nets: &[Net],
+) -> Net {
+    if let Some(c) = f.is_const() {
+        return if c { Net::Const1 } else { Net::Const0 };
+    }
+    let (tt, sorted) = canonical_order(f, nets);
+    let key = (tt, sorted.clone());
+    if let Some(&n) = cache.get(&key) {
+        return n;
+    }
+    let level = 1 + sorted.iter().map(|&n| out.level_of(n)).max().unwrap_or(0);
+    let id = out.nodes.len() as u32;
+    out.nodes.push(LutNode { inputs: sorted, tt, level });
+    cache.insert(key, Net::Node(id));
+    Net::Node(id)
+}
+
+/// Sweep emit: fold constant inputs, merge duplicate fan-in nets, reduce
+/// the support, replace constant tables and wire passthroughs, then hash.
+/// Mirrors `Mapper::emit_lut`, but rebuilding an existing netlist instead
+/// of mapping fresh functions.
+fn emit_simplified(
+    out: &mut Netlist,
+    cache: &mut HashMap<(u64, Vec<Net>), Net>,
+    f: &BoolFn,
+    nets: &[Net],
+) -> Net {
+    // Fold constant inputs.
+    if let Some(pos) = nets.iter().position(|n| matches!(n, Net::Const0 | Net::Const1)) {
+        let val = matches!(nets[pos], Net::Const1);
+        let g = f.cofactor(pos, val);
+        let mut sub = nets.to_vec();
+        sub.remove(pos);
+        return emit_simplified(out, cache, &g, &sub);
+    }
+    // Merge duplicate nets (restrict to x_i == x_j).
+    for i in 0..nets.len() {
+        for j in (i + 1)..nets.len() {
+            if nets[i] == nets[j] {
+                let k = f.nvars - 1;
+                let mut g = BoolFn::zeros(k);
+                for idx2 in 0..(1usize << k) {
+                    // Reinsert bit j equal to bit i; i < j always holds
+                    // here, so position i is unshifted in the reduced index.
+                    let low_mask = (1usize << j) - 1;
+                    let base = (idx2 & low_mask) | ((idx2 & !low_mask) << 1);
+                    let idx = base | (((idx2 >> i) & 1) << j);
+                    g.set(idx2, f.get(idx));
+                }
+                let mut sub = nets.to_vec();
+                sub.remove(j);
+                return emit_simplified(out, cache, &g, &sub);
+            }
+        }
+    }
+    if let Some(c) = f.is_const() {
+        return if c { Net::Const1 } else { Net::Const0 };
+    }
+    // Support reduction.
+    let supp = f.support();
+    let (g, gnets): (BoolFn, Vec<Net>) = if supp.len() == f.nvars {
+        (f.clone(), nets.to_vec())
+    } else {
+        (f.compact(&supp), supp.iter().map(|&v| nets[v]).collect())
+    };
+    // Positive single-variable passthrough is a wire.
+    if g.nvars == 1 && g.get(1) && !g.get(0) {
+        return gnets[0];
+    }
+    emit_hashed(out, cache, &g, &gnets)
+}
+
+// ---------------------------------------------------------------------------
+// Reachable-code don't-care support (used by `synthesize` at map time)
+// ---------------------------------------------------------------------------
+
+/// Code-set masks only track quantizers up to this many bits (mask fits a
+/// u64).  Every paper configuration uses 1-3 bit activations.
+pub const DC_MAX_CODE_BITS: usize = 6;
+
+/// Truth tables larger than this skip the don't-care pass (the care-set
+/// enumeration is linear in table size, same as table generation itself).
+pub const DC_MAX_TABLE_BITS: usize = 20;
+
+/// All-codes mask for a `bw`-bit quantizer (`bw <= 6`).
+pub fn full_code_mask(bw: usize) -> u64 {
+    debug_assert!(bw <= DC_MAX_CODE_BITS);
+    let ncodes = 1usize << bw;
+    if ncodes >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << ncodes) - 1
+    }
+}
+
+/// Care function of one neuron: entry `idx` is reachable iff every fan-in
+/// position's unpacked code is in that source's producible-code mask.
+/// `src_masks` are in pack order (one per fan-in position), each over
+/// `bw`-bit codes.
+pub fn care_fn(src_masks: &[u64], bw: usize) -> BoolFn {
+    let fanin = src_masks.len();
+    let in_bits = fanin * bw;
+    debug_assert!(in_bits <= DC_MAX_TABLE_BITS);
+    let mut care = BoolFn::zeros(in_bits);
+    let mut codes = vec![0u32; fanin];
+    for idx in 0..(1usize << in_bits) {
+        crate::util::bits::unpack_index(idx, bw, fanin, &mut codes);
+        let ok = codes.iter().zip(src_masks).all(|(&c, &m)| (m >> c) & 1 == 1);
+        care.set(idx, ok);
+    }
+    care
+}
+
+/// Producible-code mask of one neuron: the image of its truth table over
+/// the care entries.  Requires `table.out_bits <= 6` so codes fit the mask.
+pub fn reachable_image(table: &crate::luts::NeuronTable, care: &BoolFn) -> u64 {
+    debug_assert!(table.out_bits <= DC_MAX_CODE_BITS);
+    debug_assert_eq!(1usize << care.nvars, table.num_entries());
+    let mut img = 0u64;
+    for idx in 0..table.num_entries() {
+        if care.get(idx) {
+            img |= 1u64 << table.lookup(idx);
+        }
+    }
+    img
+}
+
+/// Producible-code mask over *all* table entries — the seed of the
+/// reachability chain when nothing upstream constrains the inputs (e.g.
+/// the first emitted layer, whose primary inputs are free).
+pub fn table_image(table: &crate::luts::NeuronTable) -> u64 {
+    debug_assert!(table.out_bits <= DC_MAX_CODE_BITS);
+    let mut img = 0u64;
+    for idx in 0..table.num_entries() {
+        img |= 1u64 << table.lookup(idx);
+    }
+    img
+}
+
+/// Re-specify one output-bit function against its care set: unreachable
+/// entries become don't-cares for [`cover::minimize_dc`], and the cover's
+/// completely-specified function replaces `f`.  The replacement agrees
+/// with `f` on every reachable entry, so the swap is invisible to any
+/// input the circuit can actually see while often shrinking the support
+/// the mapper has to implement.  The cover *can* trade a true-support
+/// variable for one `f` ignores (a cube may keep a literal on an ignored
+/// variable when its expansion is blocked by the care off-set), so the
+/// guard below enforces supp(g) ⊆ supp(f) — callers may rely on pruning
+/// never adding a wire dependency.
+pub fn dc_simplify(f: &BoolFn, care: &BoolFn) -> BoolFn {
+    if care.is_const() == Some(true) {
+        return f.clone();
+    }
+    let cov = cover::minimize_dc(f, care);
+    let g = BoolFn::new(f.nvars, cov.to_words());
+    let supp_f = f.support();
+    let supp_g = g.support();
+    if supp_g.len() <= supp_f.len() && supp_g.iter().all(|v| supp_f.contains(v)) {
+        g
+    } else {
+        f.clone()
+    }
+}
+
+/// Equivalence of two netlists over the primary-input space, via the
+/// bitsliced simulator: exhaustive when the bus is small enough, otherwise
+/// a deterministic random sample.  This is the machine check each pass (and
+/// the whole pipeline) is gated on inside `synthesize`.
+pub fn netlists_equivalent(a: &Netlist, b: &Netlist, seed: u64) -> bool {
+    const EXHAUSTIVE_MAX_BITS: usize = 16;
+    const SAMPLES: usize = 4096;
+    if a.num_inputs != b.num_inputs
+        || a.outputs.len() != b.outputs.len()
+        || !a.brams.is_empty()
+        || !b.brams.is_empty()
+    {
+        return false;
+    }
+    let inputs = if a.num_inputs <= EXHAUSTIVE_MAX_BITS {
+        BitMatrix::all_patterns(a.num_inputs)
+    } else {
+        // SAMPLES is a multiple of 64, so every word is fully valid.
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut m = BitMatrix::new(a.num_inputs, SAMPLES);
+        for p in 0..a.num_inputs {
+            for w in m.plane_mut(p).iter_mut() {
+                *w = rng.next_u64();
+            }
+        }
+        m
+    };
+    eval_netlist(a, &inputs) == eval_netlist(b, &inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lut(inputs: Vec<Net>, tt: u64, level: u32) -> LutNode {
+        LutNode { inputs, tt, level }
+    }
+
+    /// A netlist with one duplicated AND pair (CSE fodder), a constant-fed
+    /// node (sweep fodder) and a dead node.
+    fn messy_netlist() -> Netlist {
+        Netlist {
+            num_inputs: 3,
+            nodes: vec![
+                // n0 = AND(in0, in1)
+                lut(vec![Net::Input(0), Net::Input(1)], 0b1000, 1),
+                // n1 = AND(in0, in1)  (duplicate of n0)
+                lut(vec![Net::Input(0), Net::Input(1)], 0b1000, 1),
+                // n2 = OR(n0, n1) == n0 after CSE, a wire after sweep
+                lut(vec![Net::Node(0), Net::Node(1)], 0b1110, 2),
+                // n3 = XOR(n2, Const0) == n2, another wire
+                lut(vec![Net::Node(2), Net::Const0], 0b0110, 3),
+                // n4 = dead (never reaches an output)
+                lut(vec![Net::Input(2)], 0b01, 1),
+            ],
+            outputs: vec![Net::Node(3), Net::Input(2)],
+            brams: vec![],
+            layer_depths: vec![3],
+        }
+    }
+
+    #[test]
+    fn cse_merges_and_drops_dead() {
+        let nl = messy_netlist();
+        let after = run_pass(&nl, Pass::Cse);
+        // n4 dead, n1 merged into n0.
+        assert!(after.num_luts() <= 3, "{}", after.num_luts());
+        assert!(netlists_equivalent(&nl, &after, 1));
+    }
+
+    #[test]
+    fn sweep_folds_constants_and_wires() {
+        let nl = messy_netlist();
+        let a = run_pass(&nl, Pass::Cse);
+        let b = run_pass(&a, Pass::Sweep);
+        // After CSE, n2 = OR(n0, n0) -> wire to n0; n3 = XOR(n0, 0) -> wire.
+        assert_eq!(b.num_luts(), 1, "only the AND survives");
+        assert!(netlists_equivalent(&nl, &b, 2));
+    }
+
+    #[test]
+    fn optimize_reaches_fixed_point() {
+        let nl = messy_netlist();
+        let (o1, s1) = optimize(&nl, OptLevel::Structural);
+        assert_eq!(s1.pre_luts, 5);
+        assert_eq!(s1.post_luts, o1.num_luts());
+        assert!(s1.pass_luts.windows(2).all(|w| w[1] <= w[0]), "{:?}", s1.pass_luts);
+        let (o2, s2) = optimize(&o1, OptLevel::Structural);
+        assert_eq!(o1, o2, "fixed point must be idempotent");
+        assert_eq!(s2.pre_luts, s2.post_luts);
+        assert!(netlists_equivalent(&nl, &o1, 3));
+    }
+
+    #[test]
+    fn opt_level_none_is_identity() {
+        let nl = messy_netlist();
+        let (o, s) = optimize(&nl, OptLevel::None);
+        assert_eq!(o, nl);
+        assert_eq!(s.pre_luts, s.post_luts);
+        assert!(s.pass_luts.is_empty());
+    }
+
+    #[test]
+    fn opt_level_parse_roundtrip() {
+        for l in [OptLevel::None, OptLevel::Structural, OptLevel::Full] {
+            assert_eq!(OptLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(OptLevel::parse("bogus"), None);
+        assert!(OptLevel::Full.dont_cares() && OptLevel::Full.structural());
+        assert!(!OptLevel::Structural.dont_cares() && OptLevel::Structural.structural());
+        assert!(!OptLevel::None.structural());
+    }
+
+    #[test]
+    fn care_fn_and_image() {
+        // Two 2-bit sources; source 0 produces {0,3}, source 1 everything.
+        let care = care_fn(&[0b1001, 0b1111], 2);
+        assert_eq!(care.nvars, 4);
+        for idx in 0..16usize {
+            let c0 = idx & 0b11;
+            assert_eq!(care.get(idx), c0 == 0 || c0 == 3, "idx {idx}");
+        }
+        assert_eq!(full_code_mask(2), 0b1111);
+        assert_eq!(full_code_mask(1), 0b11);
+        // A steep neuron saturates: its image over the full input space is
+        // the two extreme codes only.
+        let nr = crate::nn::Neuron {
+            inputs: vec![0, 1],
+            weights: vec![1.0, -1.0],
+            bias: -0.1,
+            g: 100.0,
+            h: 0.0,
+        };
+        let q = crate::nn::QuantSpec::new(2, 2.0);
+        let t = crate::luts::neuron_table(&nr, q, q).unwrap();
+        let full = care_fn(&[0b1111, 0b1111], 2);
+        let img = reachable_image(&t, &full);
+        assert_eq!(img, 0b1001, "steep neuron must produce only codes 0 and 3");
+    }
+
+    #[test]
+    fn dc_simplify_collapses_correlated_bits() {
+        // f = XOR of one 2-bit source's bits.  With the source confined to
+        // {0b00, 0b11} (a saturating upstream neuron) the XOR is constant 0
+        // on every reachable entry — DC pruning must fold the whole cone.
+        let mut f = BoolFn::zeros(2);
+        f.set(1, true);
+        f.set(2, true);
+        let care = care_fn(&[0b1001], 2);
+        let g = dc_simplify(&f, &care);
+        assert_eq!(g.is_const(), Some(false), "XOR collapses to const on {{0,3}}");
+        // The XNOR dual collapses to const 1.
+        let mut h = BoolFn::zeros(2);
+        h.set(0, true);
+        h.set(3, true);
+        let g1 = dc_simplify(&h, &care);
+        assert_eq!(g1.is_const(), Some(true));
+    }
+
+    #[test]
+    fn full_care_is_a_no_op() {
+        let mut f = BoolFn::zeros(4);
+        for idx in 0..16usize {
+            f.set(idx, idx.count_ones() % 2 == 1);
+        }
+        let care = care_fn(&[0b1111, 0b1111], 2);
+        assert_eq!(dc_simplify(&f, &care), f);
+    }
+
+    #[test]
+    fn netlists_equivalent_detects_corruption() {
+        let nl = messy_netlist();
+        let (opt, _) = optimize(&nl, OptLevel::Structural);
+        let mut bad = opt.clone();
+        bad.nodes[0].tt = !bad.nodes[0].tt & 0b1111;
+        assert!(!netlists_equivalent(&nl, &bad, 4));
+    }
+}

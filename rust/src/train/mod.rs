@@ -24,6 +24,23 @@ use anyhow::{ensure, Result};
 
 pub use state::ModelState;
 
+/// Logging cadence: log on every `log_every`-th step plus the final step.
+/// `log_every == 0` is clamped to 1 (mirroring the router's
+/// `max_batch.max(1)` idiom) — the raw `step % opts.log_every` it replaces
+/// panicked with a division by zero.
+#[inline]
+pub fn should_log(step: usize, total_steps: usize, log_every: usize) -> bool {
+    step % log_every.max(1) == 0 || step + 1 == total_steps
+}
+
+/// Pruning cadence for the `Iterative`/`Momentum` schedules: fire every
+/// `every` steps, never on step 0, and never when `every == 0` (a zero
+/// period means "no events", not a panic).
+#[inline]
+pub fn prune_event(step: usize, every: usize) -> bool {
+    every > 0 && step > 0 && step % every == 0
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainOpts {
     pub steps: usize,
@@ -153,7 +170,7 @@ pub fn train(
             for i in 0..n {
                 let event = match opts.method {
                     PruneMethod::Iterative { every } | PruneMethod::Momentum { every, .. } => {
-                        step > 0 && step % every == 0
+                        prune_event(step, every)
                     }
                     PruneMethod::APriori => false,
                 };
@@ -190,7 +207,7 @@ pub fn train(
             }
         }
 
-        if step % opts.log_every == 0 || step + 1 == opts.steps {
+        if should_log(step, opts.steps, opts.log_every) {
             log.losses.push((step, loss));
             if opts.verbose {
                 eprintln!("step {step:5}  loss {loss:.4}  lr {lr:.4}");
@@ -255,4 +272,38 @@ pub fn evaluate(art: &Artifact, state: &ModelState, test: &DataSet) -> Result<Ve
         start += real;
     }
     Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_cadence_survives_zero_log_every() {
+        // Regression: `step % opts.log_every` panicked when a manifest (or
+        // caller) set log_every = 0.  Clamped, 0 behaves like 1: log every
+        // step.
+        for step in 0..10 {
+            assert!(should_log(step, 10, 0));
+            assert!(should_log(step, 10, 1));
+        }
+        // Normal cadence: multiples of the period plus the final step.
+        assert!(should_log(0, 100, 25));
+        assert!(should_log(50, 100, 25));
+        assert!(!should_log(26, 100, 25));
+        assert!(should_log(99, 100, 25), "final step always logs");
+    }
+
+    #[test]
+    fn prune_cadence_survives_zero_period() {
+        // `every == 0` must mean "no pruning events", not a div-by-zero on
+        // the same modulo pattern.
+        for step in 0..50 {
+            assert!(!prune_event(step, 0));
+        }
+        assert!(!prune_event(0, 8), "never prune before the first step");
+        assert!(prune_event(8, 8));
+        assert!(prune_event(16, 8));
+        assert!(!prune_event(9, 8));
+    }
 }

@@ -67,6 +67,57 @@ pub fn neuron_module(name: &str, table: &NeuronTable) -> String {
     s
 }
 
+/// Emit a mapped (and typically optimized, `synth::opt`) LUT netlist as one
+/// flat structural module: every `LutNode` becomes a truth-table constant
+/// indexed by the concatenation of its input nets.  This is the
+/// post-synthesis counterpart of the behavioral case-statement modules —
+/// what the circuit looks like *after* the in-tree logic synthesis, LUT
+/// for LUT.
+pub fn netlist_module(name: &str, netlist: &crate::synth::Netlist) -> Result<String> {
+    use crate::synth::Net;
+    ensure!(
+        netlist.brams.is_empty(),
+        "BRAM-mapped neurons cannot be emitted as a flat LUT netlist"
+    );
+    ensure!(netlist.num_inputs > 0, "netlist has no primary inputs");
+    ensure!(!netlist.outputs.is_empty(), "netlist has no outputs");
+    let net_ref = |n: Net| -> String {
+        match n {
+            Net::Const0 => "1'b0".into(),
+            Net::Const1 => "1'b1".into(),
+            Net::Input(i) => format!("M0[{i}]"),
+            Net::Node(i) => format!("n{i}"),
+        }
+    };
+    let mut s = String::new();
+    s.push_str(&format!(
+        "module {name} ( input [{}:0] M0, output [{}:0] M1 );\n",
+        netlist.num_inputs - 1,
+        netlist.outputs.len() - 1
+    ));
+    for (i, node) in netlist.nodes.iter().enumerate() {
+        let k = node.inputs.len();
+        ensure!((1..=6).contains(&k), "node {i}: arity {k} out of range");
+        let bits = 1usize << k;
+        let mask = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        // Verilog concatenation is MSB-first: the highest-index variable of
+        // the packed truth table is listed first.
+        let sel: Vec<String> = node.inputs.iter().rev().map(|&n| net_ref(n)).collect();
+        s.push_str(&format!(
+            "  wire [{}:0] t{i} = {}'h{:x};\n  wire n{i} = t{i}[{{{}}}];\n",
+            bits - 1,
+            bits,
+            node.tt & mask,
+            sel.join(", ")
+        ));
+    }
+    for (oi, &o) in netlist.outputs.iter().enumerate() {
+        s.push_str(&format!("  assign M1[{oi}] = {};\n", net_ref(o)));
+    }
+    s.push_str("endmodule\n");
+    Ok(s)
+}
+
 /// Emit the layer module wiring neuron input slices (Listing 5.3).
 fn layer_module(
     li: usize,
@@ -245,6 +296,34 @@ pub(crate) mod tests {
         let top = proj.file("LogicNetModule.v").unwrap();
         assert!(top.contains("input clk"));
         assert!(top.contains("always @(posedge clk) stage_in <= M0;"));
+    }
+
+    #[test]
+    fn netlist_module_emits_structural_luts() {
+        use crate::synth::{synthesize, OptLevel, SynthOpts};
+        let model = tiny_model();
+        let tables = ModelTables::generate(&model).unwrap();
+        let (netlist, rep) = synthesize(
+            &model,
+            &tables,
+            SynthOpts {
+                registers: false,
+                bram_min_bits: 0,
+                opt: OptLevel::Full,
+                ..SynthOpts::default()
+            },
+        )
+        .unwrap();
+        let text = netlist_module("LogicNetNetlist", &netlist).unwrap();
+        assert!(text.contains("module LogicNetNetlist ( input [4:0] M0, output [2:0] M1 );"));
+        // One truth-table wire pair per LUT, one assign per output bit.
+        assert_eq!(text.matches("wire n").count(), rep.luts);
+        assert_eq!(text.matches("assign M1[").count(), netlist.outputs.len());
+        assert!(text.ends_with("endmodule\n"));
+        // BRAM-mapped netlists are rejected.
+        let mut with_bram = netlist.clone();
+        with_bram.brams.push(crate::synth::BramNeuron { in_bits: 14, out_bits: 2, blocks: 2 });
+        assert!(netlist_module("X", &with_bram).is_err());
     }
 
     #[test]

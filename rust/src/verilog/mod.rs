@@ -14,5 +14,5 @@
 pub mod gen;
 pub mod parse;
 
-pub use gen::{generate, neuron_module, VerilogOpts, VerilogProject};
+pub use gen::{generate, netlist_module, neuron_module, VerilogOpts, VerilogProject};
 pub use parse::{parse_project, ParsedNeuron};

@@ -71,7 +71,7 @@ fn full_flow_tables_engine_verilog_synth() {
     let (netlist, rep) = synthesize(
         &model,
         &tables,
-        SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
     )
     .expect("synth");
     assert_eq!(verify_netlist(&model, &tables, &netlist, 300, 9).unwrap(), 0);

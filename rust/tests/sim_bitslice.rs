@@ -59,7 +59,7 @@ fn prop_bitsliced_matches_scalar_on_synthesized_netlists() {
         let (netlist, _) = synthesize(
             &model,
             &tables,
-            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
         )
         .unwrap();
         // Batch sizes straddling the word boundary, incl. tiny ones.
@@ -136,7 +136,7 @@ fn prop_verify_netlist_bitsliced_equals_scalar() {
         let (netlist, _) = synthesize(
             &model,
             &tables,
-            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
         )
         .unwrap();
         let samples = 1 + rng.below(130);

@@ -49,7 +49,7 @@ fn equivalence_across_sizes() {
         let (netlist, rep) = synthesize(
             &m,
             &tables,
-            SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
         )
         .unwrap();
         let mism = verify_netlist(&m, &tables, &netlist, 150, seed).unwrap();
@@ -67,7 +67,7 @@ fn reduction_grows_with_table_width() {
     let big = random_model(5, 16, &[32, 16], 5, 2); // 10-bit tables
     let ts = ModelTables::generate(&small).unwrap();
     let tb = ModelTables::generate(&big).unwrap();
-    let opts = SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 };
+    let opts = SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() };
     let (_, rs) = synthesize(&small, &ts, opts).unwrap();
     let (_, rb) = synthesize(&big, &tb, opts).unwrap();
     // On purely random weights the reduction *ratio* is modest either way;
@@ -114,7 +114,7 @@ fn trained_like_degenerate_neurons_reduce_hard() {
     let (_, rep) = synthesize(
         &m,
         &tables,
-        SynthOpts { registers: false, clock_ns: 5.0, bram_min_bits: 0 },
+        SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
     )
     .unwrap();
     // half the neurons are free

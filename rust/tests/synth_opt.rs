@@ -1,0 +1,179 @@
+//! Netlist-optimizer suite (ISSUE 2 tentpole): every pass is
+//! equivalence-preserving on randomized models (exhaustive bitsliced check
+//! where the input bus permits, sampled otherwise), LUT count is
+//! monotonically non-increasing per pass, and the pipeline is idempotent at
+//! its fixed point.
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::serve::{LutEngine, NetlistEngine};
+use logicnets::synth::opt::{self, OptLevel, Pass};
+use logicnets::synth::{
+    synthesize, verify_netlist, verify_netlist_exhaustive, Netlist, SynthOpts,
+};
+use logicnets::util::rng::Rng;
+
+fn random_model(seed: u64, in_f: usize, widths: &[usize], fanin: usize, bw: usize) -> ExportedModel {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut prev = in_f;
+    for (k, &w) in widths.iter().enumerate() {
+        let qi = QuantSpec::new(bw, if k == 0 { 1.0 } else { 2.0 });
+        let neurons = (0..w)
+            .map(|_| {
+                let inputs = rng.choose_k(prev, fanin.min(prev));
+                Neuron {
+                    inputs: inputs.clone(),
+                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect(),
+                    bias: rng.normal_f32(0.0, 0.1),
+                    g: 1.0,
+                    h: 0.0,
+                }
+            })
+            .collect();
+        layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(bw, 2.0), true));
+        prev = w;
+    }
+    ExportedModel {
+        layers,
+        in_features: in_f,
+        classes: *widths.last().unwrap(),
+        skips: 0,
+        act_widths: std::iter::once(in_f).chain(widths.iter().copied()).collect(),
+    }
+}
+
+fn comb_opts(opt: OptLevel) -> SynthOpts {
+    SynthOpts { registers: false, bram_min_bits: 0, opt, ..SynthOpts::default() }
+}
+
+/// Equivalence of a netlist against the truth-table forward pass:
+/// exhaustive when the input bus permits, sampled otherwise.
+fn assert_equiv(model: &ExportedModel, tables: &ModelTables, nl: &Netlist, ctx: &str) {
+    let mism = if nl.num_inputs <= 16 {
+        verify_netlist_exhaustive(model, tables, nl).unwrap()
+    } else {
+        verify_netlist(model, tables, nl, 512, 0xE0).unwrap()
+    };
+    assert_eq!(mism, 0, "{ctx}: optimized netlist must match the tables");
+}
+
+#[test]
+fn every_pass_is_equivalence_preserving_and_monotone() {
+    // Small buses -> exhaustive; the last config (32-bit bus) -> sampled.
+    for (seed, in_f, widths, fanin, bw) in [
+        (1u64, 6usize, vec![12usize, 6], 3usize, 2usize),
+        (2, 8, vec![16, 8], 4, 2),
+        (3, 12, vec![10, 10, 4], 3, 1),
+        (4, 16, vec![24, 12], 3, 2),
+    ] {
+        let model = random_model(seed, in_f, &widths, fanin, bw);
+        let tables = ModelTables::generate(&model).unwrap();
+        let (netlist, _) = synthesize(&model, &tables, comb_opts(OptLevel::None)).unwrap();
+        let mut cur = netlist;
+        let mut luts = cur.num_luts();
+        for (step, pass) in [Pass::Cse, Pass::Sweep, Pass::Cse, Pass::Sweep]
+            .into_iter()
+            .enumerate()
+        {
+            let next = opt::run_pass(&cur, pass);
+            assert!(
+                next.num_luts() <= luts,
+                "seed {seed} step {step}: {pass:?} grew {} -> {}",
+                luts,
+                next.num_luts()
+            );
+            assert!(
+                opt::netlists_equivalent(&cur, &next, seed),
+                "seed {seed} step {step}: {pass:?} changed behavior"
+            );
+            assert_equiv(&model, &tables, &next, &format!("seed {seed} step {step}"));
+            luts = next.num_luts();
+            cur = next;
+        }
+    }
+}
+
+#[test]
+fn pipeline_is_idempotent_at_fixed_point() {
+    for seed in [5u64, 6, 7] {
+        let model = random_model(seed, 8, &[16, 8], 3, 2);
+        let tables = ModelTables::generate(&model).unwrap();
+        let (netlist, _) = synthesize(&model, &tables, comb_opts(OptLevel::None)).unwrap();
+        let (o1, s1) = opt::optimize(&netlist, OptLevel::Structural);
+        assert!(s1.post_luts <= s1.pre_luts, "seed {seed}");
+        assert!(
+            s1.pass_luts.windows(2).all(|w| w[1] <= w[0]),
+            "seed {seed}: per-pass counts must be non-increasing: {:?}",
+            s1.pass_luts
+        );
+        let (o2, s2) = opt::optimize(&o1, OptLevel::Structural);
+        assert_eq!(o1, o2, "seed {seed}: a second run must be a no-op");
+        assert_eq!(s2.pre_luts, s2.post_luts, "seed {seed}");
+        assert_eq!(s2.rounds, 1, "seed {seed}: fixed point re-detected in one round");
+        assert_equiv(&model, &tables, &o1, &format!("seed {seed} fixed point"));
+    }
+}
+
+#[test]
+fn full_opt_never_worse_and_always_equivalent() {
+    for seed in [8u64, 9, 10] {
+        let model = random_model(seed, 8, &[14, 6], 3, 2);
+        let tables = ModelTables::generate(&model).unwrap();
+        let (_, plain) = synthesize(&model, &tables, comb_opts(OptLevel::None)).unwrap();
+        let (nl, rep) = synthesize(&model, &tables, comb_opts(OptLevel::Full)).unwrap();
+        assert!(
+            rep.luts <= plain.luts,
+            "seed {seed}: full opt grew {} -> {}",
+            plain.luts,
+            rep.luts
+        );
+        assert_equiv(&model, &tables, &nl, &format!("seed {seed} full"));
+    }
+}
+
+/// First layer saturates to the two extreme codes
+/// (`ExportedLayer::saturate_binary`); every bit of a {0,3} code is
+/// individually non-constant, so only reachable-code don't-care pruning
+/// can exploit the correlation — and with fan-in 4 (8-bit tables) it must
+/// strictly win.
+#[test]
+fn dont_cares_strictly_reduce_saturated_models() {
+    let mut model = random_model(11, 8, &[16, 8], 4, 2);
+    model.layers[0].saturate_binary();
+    let tables = ModelTables::generate(&model).unwrap();
+    let (_, plain) = synthesize(&model, &tables, comb_opts(OptLevel::None)).unwrap();
+    let (nl, rep) = synthesize(&model, &tables, comb_opts(OptLevel::Full)).unwrap();
+    assert!(
+        rep.luts < plain.luts,
+        "don't-care pruning must strictly reduce: {} vs {}",
+        rep.luts,
+        plain.luts
+    );
+    assert_eq!(
+        verify_netlist_exhaustive(&model, &tables, &nl).unwrap(),
+        0,
+        "exhaustive equivalence over the whole 16-bit input space"
+    );
+}
+
+#[test]
+fn optimized_serving_is_bit_identical_to_tables() {
+    // End-to-end: the router-facing engine built from the optimized
+    // netlist must agree with the truth-table engine on every prediction.
+    let mut rng = Rng::new(77);
+    let model = random_model(12, 10, &[20, 10], 3, 2);
+    let tables = ModelTables::generate(&model).unwrap();
+    let lut = LutEngine::build(&model, &tables).unwrap();
+    for level in [OptLevel::Structural, OptLevel::Full] {
+        let net = NetlistEngine::build_opt(&model, &tables, level).unwrap();
+        for n in [1usize, 63, 64, 65, 300] {
+            let xs: Vec<f32> = (0..10 * n).map(|_| rng.f32()).collect();
+            assert_eq!(
+                net.infer_batch(&xs),
+                lut.infer_batch(&xs),
+                "{level:?} n={n}: optimized serving must stay bit-identical"
+            );
+        }
+    }
+}
