@@ -1,0 +1,124 @@
+//! DSE smoke gate (no artifacts needed): run a tiny-budget automated
+//! search on the jet-substructure task end to end — generate → cost-gate →
+//! successive halving through the native trainer → Pareto archive →
+//! frontier emit through `synthesize --opt` + `NetlistEngine` — and FAIL
+//! (non-zero exit) if any stage regresses:
+//!
+//! * the archive must be written and non-empty,
+//! * the frontier must be non-empty and strictly non-dominated,
+//! * at least one frontier model must synthesize, machine-verify against
+//!   its truth tables, and serve through the netlist backend,
+//! * re-running with `resume` must perform **zero** retraining,
+//! * the cost gate must screen >= 10k candidates/sec.
+//!
+//! CI runs this; locally: `cargo run --release --example dse_search`.
+
+use logicnets::dse::search::{
+    gate_screen_rate, generate, run_search, CostGate, SearchAxes, SearchOpts, SearchTask,
+    GATE_RATE_FLOOR,
+};
+use logicnets::sparsity::prune::PruneMethod;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::temp_dir().join("logicnets_dse_smoke");
+    // Fresh directory so the first run cannot accidentally resume.
+    let _ = std::fs::remove_dir_all(&out_dir);
+
+    let task = SearchTask::jets_small(4_000, 11);
+    let axes = SearchAxes {
+        widths: vec![16, 32],
+        depths: vec![1, 2],
+        fanins: vec![2, 3],
+        bws: vec![1, 2],
+        methods: vec![PruneMethod::APriori],
+        bram_min_bits: vec![13],
+    };
+    let opts = SearchOpts {
+        budget_luts: 8_000,
+        rungs: 2,
+        base_steps: 20,
+        eta: 2,
+        seed: 11,
+        max_candidates: 8,
+        out_dir: out_dir.clone(),
+        resume: false,
+        emit: 1,
+    };
+
+    let t0 = std::time::Instant::now();
+    let out = run_search(&task, &axes, &opts)?;
+    println!(
+        "smoke search: {} generated / {} admitted / {} gated, {} steps, {:.1}s",
+        out.generated,
+        out.admitted,
+        out.gated,
+        out.steps_trained,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Gate 1: non-empty resumable archive on disk.
+    anyhow::ensure!(out.archive_path.exists(), "archive not written");
+    let archive = logicnets::dse::search::Archive::load(&out.archive_path)?;
+    anyhow::ensure!(!archive.entries.is_empty(), "archive is empty");
+    anyhow::ensure!(out.steps_trained > 0, "fresh search trained nothing");
+
+    // Gate 2: non-empty, non-dominated frontier.
+    anyhow::ensure!(!out.frontier.is_empty(), "empty Pareto frontier");
+    for w in out.frontier.windows(2) {
+        anyhow::ensure!(
+            w[0].luts <= w[1].luts && w[0].quality < w[1].quality,
+            "frontier not monotone: {:?} -> {:?}",
+            (w[0].luts, w[0].quality),
+            (w[1].luts, w[1].quality)
+        );
+    }
+
+    // Gate 3: a frontier model ended as a verified, servable netlist.
+    anyhow::ensure!(!out.emitted.is_empty(), "no frontier model emitted");
+    let e = &out.emitted[0];
+    anyhow::ensure!(e.mapped_luts > 0, "emitted netlist has no LUTs");
+    anyhow::ensure!(
+        (e.mapped_luts as u64) <= e.analytical_luts,
+        "mapped {} exceeds the analytical bound {}",
+        e.mapped_luts,
+        e.analytical_luts
+    );
+    println!(
+        "emitted {}: {} -> {} LUTs, netlist accuracy {:.3}",
+        e.name, e.analytical_luts, e.mapped_luts, e.netlist_accuracy
+    );
+
+    // Gate 4: resume replays the whole search with zero retraining.
+    let resumed = run_search(&task, &axes, &SearchOpts { resume: true, ..opts.clone() })?;
+    anyhow::ensure!(
+        resumed.steps_trained == 0,
+        "resume retrained {} steps (must be 0)",
+        resumed.steps_trained
+    );
+    anyhow::ensure!(
+        resumed.frontier.len() == out.frontier.len(),
+        "resume changed the frontier ({} vs {} points)",
+        resumed.frontier.len(),
+        out.frontier.len()
+    );
+
+    // Gate 5: the cost gate screens >= GATE_RATE_FLOOR candidates/sec
+    // (same measurement bench_dse asserts).
+    let cands = generate(&axes, 11, usize::MAX);
+    let gate = CostGate { budget_luts: opts.budget_luts };
+    let rate = gate_screen_rate(
+        &cands,
+        &gate,
+        task.in_features,
+        task.classes,
+        std::time::Duration::from_millis(100),
+    );
+    println!("gate screening rate: {rate:.0} candidates/sec");
+    anyhow::ensure!(
+        rate >= GATE_RATE_FLOOR,
+        "gate below {GATE_RATE_FLOOR} candidates/sec: {rate:.0}"
+    );
+
+    println!("dse-search gate: OK");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Bench: DSE generator + cost-gate throughput.
+//!
+//! The search contract is that screening is effectively free — the gate
+//! must price >= 10k candidates/sec (it actually does orders of magnitude
+//! more) so search cost is dominated by training, never by pricing.
+
+use logicnets::dse::search::{
+    gate_screen_rate, generate, CostGate, SearchAxes, GATE_RATE_FLOOR,
+};
+use logicnets::util::bench::bench;
+use std::time::Duration;
+
+fn main() {
+    let axes = SearchAxes::jets_default();
+    let n = axes.num_candidates();
+
+    // Generator alone: full cross product + deterministic shuffle.
+    let r = bench("dse generate (full axis product)", Duration::from_millis(300), || {
+        std::hint::black_box(generate(&axes, 1, usize::MAX));
+    });
+    r.report_throughput(n as f64, "candidates");
+
+    // Gate alone over a pre-generated list (the steady-state screen loop).
+    let cands = generate(&axes, 1, usize::MAX);
+    let gate = CostGate { budget_luts: 30_000 };
+    let r = bench("dse cost gate (price + admit)", Duration::from_millis(300), || {
+        let mut admitted = 0usize;
+        for c in &cands {
+            if gate.admits(gate.price(c, 16, 5)) {
+                admitted += 1;
+            }
+        }
+        std::hint::black_box(admitted);
+    });
+    r.report_throughput(cands.len() as f64, "candidates");
+
+    // End to end: generate + price + admit, the `explore` startup path.
+    let r = bench("dse generate + gate (end to end)", Duration::from_millis(300), || {
+        let mut admitted = 0usize;
+        for c in generate(&axes, 1, usize::MAX) {
+            if gate.admits(gate.price(&c, 16, 5)) {
+                admitted += 1;
+            }
+        }
+        std::hint::black_box(admitted);
+    });
+    r.report_throughput(n as f64, "candidates");
+
+    // The ISSUE-level floor, asserted so `cargo bench` runs double as a
+    // regression check (same measurement the CI smoke gate uses).
+    let screened = gate_screen_rate(&cands, &gate, 16, 5, Duration::from_millis(200));
+    println!("gate screening rate: {screened:.0} candidates/sec (floor {GATE_RATE_FLOOR})");
+    assert!(
+        screened >= GATE_RATE_FLOOR,
+        "cost gate regressed below {GATE_RATE_FLOOR} candidates/sec: {screened:.0}"
+    );
+}

@@ -90,8 +90,11 @@ pub fn dense_layer_cost(n_out: usize, n_in: usize, bw_in: usize, bw_wt: usize) -
 pub const DENSE_BW_WT: usize = 4;
 
 /// Sparse layer cost: every neuron is a `fanin*bw_in -> bw_out` table.
+/// Saturating like [`lut_cost`] itself: a saturated per-neuron cost times
+/// the layer width must stay pinned at `u64::MAX` (the DSE cost gate
+/// compares this against finite budgets), not wrap.
 pub fn sparse_layer_cost(n_out: usize, fanin: usize, bw_in: usize, bw_out: usize) -> u64 {
-    n_out as u64 * lut_cost(fanin * bw_in, bw_out)
+    (n_out as u64).saturating_mul(lut_cost(fanin * bw_in, bw_out))
 }
 
 /// Storage bits of the raw truth table of one neuron (paper ch. 3:
@@ -185,8 +188,11 @@ pub fn manifest_cost(man: &crate::runtime::Manifest) -> Vec<LayerCost> {
     mlp_cost(&layers)
 }
 
+/// Whole-model LUT total.  Saturating: a single saturated layer cost
+/// (`u64::MAX`, see [`lut_cost`]) must pin the total at `u64::MAX`, not
+/// wrap the sum — the DSE cost gate compares this against finite budgets.
 pub fn total_luts(costs: &[LayerCost]) -> u64 {
-    costs.iter().map(|c| c.luts).sum()
+    costs.iter().fold(0u64, |acc, c| acc.saturating_add(c.luts))
 }
 
 #[cfg(test)]
@@ -281,6 +287,32 @@ mod tests {
         let dw = conv_dw_cost(26 * 26, 2, 16, 5, 2);
         let pw = conv_pw_cost(26 * 26, 2, 16, 5, 2);
         assert!(dw + pw < dense / 10, "dw+pw={} dense={}", dw + pw, dense);
+    }
+
+    #[test]
+    fn sparse_layer_cost_saturates() {
+        // 24 synapses * 3 bits = 72 table input bits: per-neuron cost is
+        // already u64::MAX, and the layer-width product must stay pinned
+        // there (the old plain multiply wrapped in release / panicked in
+        // debug).
+        assert_eq!(lut_cost(72, 3), u64::MAX);
+        assert_eq!(sparse_layer_cost(16, 24, 3, 3), u64::MAX);
+        // Finite regime unchanged (Table 6.1 model A).
+        assert_eq!(sparse_layer_cost(64, 3, 3, 3), 2112);
+    }
+
+    #[test]
+    fn total_luts_saturates() {
+        let costs = vec![
+            LayerCost { name: "a".into(), luts: u64::MAX },
+            LayerCost { name: "b".into(), luts: 100 },
+        ];
+        assert_eq!(total_luts(&costs), u64::MAX);
+        let finite = vec![
+            LayerCost { name: "a".into(), luts: 3 },
+            LayerCost { name: "b".into(), luts: 4 },
+        ];
+        assert_eq!(total_luts(&finite), 7);
     }
 
     #[test]

@@ -1,9 +1,16 @@
 //! Design-space exploration (paper §6 "axes of exploration" and §3.3).
 //!
-//! Operates on (cost, quality) points produced by the experiment sweeps:
-//! Pareto-frontier extraction, dominated-point analysis and the
-//! Erdős–Rényi "ensembling" arithmetic of §3.3.2 (how many sparse small
-//! layers can be afforded for the LUT budget of one larger layer).
+//! Two halves:
+//!
+//! * this module — (cost, quality) point tooling shared by the experiment
+//!   sweeps and the search engine: Pareto-frontier extraction,
+//!   dominated-point analysis, the Erdős–Rényi "ensembling" arithmetic of
+//!   §3.3.2 (how many sparse small layers can be afforded for the LUT
+//!   budget of one larger layer), and CSV ingestion;
+//! * [`search`] — the automated search driver itself (topology generator →
+//!   cost gate → successive-halving trainer → persistent Pareto archive).
+
+pub mod search;
 
 use crate::cost;
 
@@ -17,10 +24,19 @@ pub struct DesignPoint {
 }
 
 /// Pareto-optimal subset (minimal LUTs, maximal quality), sorted by cost.
-/// Ties on cost keep the best quality.
+/// Ties on cost keep the best quality.  NaN-quality points (a diverged
+/// training run, a malformed CSV row) are dropped with a warning — the old
+/// `partial_cmp(..).unwrap()` sort aborted the whole analysis on the first
+/// NaN — and the remaining comparisons use the IEEE total order so the
+/// sort is safe for any float input.
 pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
-    let mut sorted: Vec<&DesignPoint> = points.iter().collect();
-    sorted.sort_by(|a, b| a.luts.cmp(&b.luts).then(b.quality.partial_cmp(&a.quality).unwrap()));
+    let n_nan = points.iter().filter(|p| p.quality.is_nan()).count();
+    if n_nan > 0 {
+        eprintln!("[dse] warning: ignoring {n_nan} NaN-quality point(s) in frontier");
+    }
+    let mut sorted: Vec<&DesignPoint> =
+        points.iter().filter(|p| !p.quality.is_nan()).collect();
+    sorted.sort_by(|a, b| a.luts.cmp(&b.luts).then(b.quality.total_cmp(&a.quality)));
     let mut out: Vec<DesignPoint> = Vec::new();
     let mut best = f64::NEG_INFINITY;
     for p in sorted {
@@ -62,6 +78,14 @@ pub fn marginal_cost(frontier: &[DesignPoint]) -> Vec<(String, f64)> {
 
 /// §3.3.2: how many layers of (n2 neurons, b2 fan-in bits, m out bits) can
 /// be "ensembled" within the LUT budget of one (n1, b1, m) layer.
+///
+/// `lut_cost` saturates at `u64::MAX` past N ≈ 70 fan-in bits; a saturated
+/// cost is a *lower bound*, so the true ratio is unknowable and the old
+/// silent `as f64` conversion produced a meaningless number.  Sentinels
+/// instead: if the *denominator* layer saturates the budget buys zero of
+/// them (`0.0`, also when both saturate — conservative); if only the
+/// numerator saturates, its budget is unbounded relative to a finite
+/// denominator (`f64::INFINITY`).
 pub fn ensemble_count(
     n1: usize,
     b1_bits: usize,
@@ -69,12 +93,41 @@ pub fn ensemble_count(
     b2_bits: usize,
     m_bits: usize,
 ) -> f64 {
-    let c1 = cost::lut_cost(b1_bits, m_bits) as f64 * n1 as f64;
-    let c2 = cost::lut_cost(b2_bits, m_bits) as f64 * n2 as f64;
-    if c2 <= 0.0 {
+    let c1 = cost::lut_cost(b1_bits, m_bits).saturating_mul(n1 as u64);
+    let c2 = cost::lut_cost(b2_bits, m_bits).saturating_mul(n2 as u64);
+    if c2 == u64::MAX {
+        return 0.0;
+    }
+    if c1 == u64::MAX {
         return f64::INFINITY;
     }
-    c1 / c2
+    if c2 == 0 {
+        return f64::INFINITY;
+    }
+    c1 as f64 / c2 as f64
+}
+
+/// Detected `(name_col, lut_col, quality_col)` from a CSV header line.
+/// Each slot is `None` when no header cell matches, so callers can fall
+/// back per-column (explicit CLI flags override all of this).
+///
+/// Matching (case-insensitive): the cost column is the first cell
+/// containing `lut`; the quality column prefers `auc`, then `acc`(uracy),
+/// then `quality`; the name column is the first cell containing `model`
+/// or `name`.  This covers every sweep CSV the experiments emit
+/// (`figure_6_7`: `model,...,LUTs,avg AUC,accuracy`; `figure_7_1`:
+/// `model,LUTs,accuracy`; the DSE archive report).
+pub fn detect_columns(header_line: &str) -> (Option<usize>, Option<usize>, Option<usize>) {
+    let cells: Vec<String> =
+        header_line.split(',').map(|c| c.trim().to_lowercase()).collect();
+    let name = cells.iter().position(|c| c.contains("model") || c.contains("name"));
+    let lut = cells.iter().position(|c| c.contains("lut"));
+    let q = cells
+        .iter()
+        .position(|c| c.contains("auc"))
+        .or_else(|| cells.iter().position(|c| c.contains("acc")))
+        .or_else(|| cells.iter().position(|c| c.contains("quality")));
+    (name, lut, q)
 }
 
 /// Load design points from an experiment CSV with columns containing
@@ -156,6 +209,61 @@ mod tests {
         // (lut_cost(12,2)=170 vs lut_cost(10,2)=42).
         let k = ensemble_count(64, 12, 64, 10, 2);
         assert!(k > 3.9 && k < 4.2, "{k}");
+    }
+
+    #[test]
+    fn frontier_survives_nan_quality() {
+        // Regression: the sort's partial_cmp(..).unwrap() aborted on any
+        // NaN point; NaN must be dropped, not panic, and never appear in
+        // the frontier.
+        let mut p = pts();
+        p.push(DesignPoint { name: "nan".into(), luts: 10, quality: f64::NAN });
+        p.push(DesignPoint { name: "nan2".into(), luts: 200, quality: f64::NAN });
+        let f = pareto_frontier(&p);
+        let names: Vec<&str> = f.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["f", "a", "b", "d"]);
+        assert!(f.iter().all(|p| !p.quality.is_nan()));
+        // All-NaN input: empty frontier, no panic.
+        let all_nan =
+            vec![DesignPoint { name: "x".into(), luts: 1, quality: f64::NAN }];
+        assert!(pareto_frontier(&all_nan).is_empty());
+    }
+
+    #[test]
+    fn ensemble_saturation_sentinels() {
+        // N ≈ 90 regime (PR 2's cross-check range): per-bit cost saturates
+        // at u64::MAX from N = 70 on.
+        use crate::cost::lut_cost;
+        assert_eq!(lut_cost(90, 2), u64::MAX, "premise: N=90 saturates");
+        // Saturated numerator, finite denominator: unbounded budget.
+        assert_eq!(ensemble_count(1, 90, 64, 10, 2), f64::INFINITY);
+        // Saturated denominator: the budget buys zero such layers.
+        assert_eq!(ensemble_count(64, 10, 1, 90, 2), 0.0);
+        // Both saturated: unknowable ratio, conservative 0.0.
+        assert_eq!(ensemble_count(1, 90, 1, 90, 2), 0.0);
+        // n * per-neuron product overflow (not just per-bit): lut_cost(68,1)
+        // fits but a huge neuron count pushes the product past u64.
+        assert!(lut_cost(68, 1) < u64::MAX);
+        assert_eq!(ensemble_count(1_000_000, 68, 64, 10, 2), f64::INFINITY);
+        // Finite regime unchanged.
+        let k = ensemble_count(64, 12, 64, 10, 2);
+        assert!(k > 3.9 && k < 4.2, "{k}");
+    }
+
+    #[test]
+    fn header_detection_matches_experiment_csvs() {
+        // figure_6_7 shape.
+        let (n, l, q) = detect_columns("model,bw,fanin,hidden,LUTs,avg AUC,accuracy");
+        assert_eq!((n, l, q), (Some(0), Some(4), Some(5)));
+        // figure_7_1 shape (no AUC column: falls back to accuracy).
+        let (n, l, q) = detect_columns("model,LUTs,accuracy");
+        assert_eq!((n, l, q), (Some(0), Some(1), Some(2)));
+        // Case-insensitive, name-keyed.
+        let (n, l, q) = detect_columns("Name,lut cost,Quality");
+        assert_eq!((n, l, q), (Some(0), Some(1), Some(2)));
+        // Nothing matches: all None (caller falls back to explicit flags).
+        let (n, l, q) = detect_columns("a,b,c");
+        assert_eq!((n, l, q), (None, None, None));
     }
 
     #[test]

@@ -1,0 +1,1181 @@
+//! Automated design-space exploration: the paper's second pillar ("how to
+//! *automate* such a strategy of neural network design") as a control
+//! plane over the train → synth → serve pipeline.
+//!
+//! Dataflow (DESIGN.md §8):
+//!
+//! ```text
+//! SearchAxes ──generate──▶ Candidate* ──CostGate──▶ admitted
+//!                                         │ (over budget: archived as
+//!                                         ▼  "gated", never trained)
+//!                              successive halving over rungs
+//!                         rung r: train base_steps·2^r more steps
+//!                         (util::pool, warm-started from rung r-1,
+//!                          checkpointed) → quality on the held-out
+//!                         split → keep the top 1/eta fraction
+//!                                         │
+//!                                         ▼
+//!                   Pareto archive (reports/dse/archive.json, resumable)
+//!                                         │
+//!                                         ▼
+//!              frontier emit: synthesize --opt → NetlistEngine (verified)
+//! ```
+//!
+//! The gate prices every candidate with the analytical model
+//! (`cost::lut_cost` family, exactly `cost::manifest_cost`) *before* any
+//! training — the paper built the worst-case cost model "to aid faster
+//! prototyping", and here it screens tens of thousands of candidates per
+//! second so search cost is dominated by training, never by pricing
+//! (`bench_dse` measures this).  Training runs through the native
+//! pure-Rust trainer (`train::native`), so a search works offline with no
+//! HLO artifact, and a finished search ends with servable, LUT-priced
+//! netlists.
+
+use super::{marginal_cost, pareto_frontier, DesignPoint};
+use crate::cost;
+use crate::data::DataSet;
+use crate::luts::ModelTables;
+use crate::metrics;
+use crate::nn::ExportedModel;
+use crate::runtime::Manifest;
+use crate::serve::{batch_accuracy, NetlistEngine};
+use crate::sparsity::prune::PruneMethod;
+use crate::synth::{synthesize, verify_netlist, OptLevel, SynthOpts};
+use crate::train::{checkpoint, native, ModelState, TrainOpts};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::util::table::{f2, TextTable};
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Axes and candidates
+// ---------------------------------------------------------------------------
+
+/// The search space: one choice per axis of the paper's exploration
+/// chapter — hidden width/depth, per-layer fan-in γ, activation bits β,
+/// sparsity method, and the BRAM-spill threshold used when the winner is
+/// synthesized.
+#[derive(Debug, Clone)]
+pub struct SearchAxes {
+    pub widths: Vec<usize>,
+    pub depths: Vec<usize>,
+    pub fanins: Vec<usize>,
+    pub bws: Vec<usize>,
+    pub methods: Vec<PruneMethod>,
+    pub bram_min_bits: Vec<usize>,
+}
+
+impl SearchAxes {
+    /// Default grid for the jet-substructure task: brackets the paper's
+    /// hand-enumerated figure-6.7 sweep (bw 1–3, fan-in 2–4) with width
+    /// and depth choices around the hep_a…e family.
+    pub fn jets_default() -> SearchAxes {
+        SearchAxes {
+            widths: vec![16, 32, 64],
+            depths: vec![1, 2],
+            fanins: vec![2, 3, 4],
+            bws: vec![1, 2, 3],
+            methods: vec![PruneMethod::APriori],
+            bram_min_bits: vec![13],
+        }
+    }
+
+    /// Size of the full cross product.
+    pub fn num_candidates(&self) -> usize {
+        self.widths.len()
+            * self.depths.len()
+            * self.fanins.len()
+            * self.bws.len()
+            * self.methods.len()
+            * self.bram_min_bits.len()
+    }
+
+    /// Compact fingerprint of the whole search space.  Stored in the
+    /// archive and compared on `--resume`: two runs over different axes
+    /// generate different candidate pools, so replaying one against the
+    /// other's archive would silently break the zero-retraining contract.
+    pub fn key(&self) -> String {
+        let join = |v: &[usize]| {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("-")
+        };
+        let methods: Vec<&str> = self.methods.iter().map(|m| m.name()).collect();
+        format!(
+            "w{}_d{}_f{}_b{}_m{}_r{}",
+            join(&self.widths),
+            join(&self.depths),
+            join(&self.fanins),
+            join(&self.bws),
+            methods.join("-"),
+            join(&self.bram_min_bits),
+        )
+    }
+}
+
+/// One topology candidate: everything needed to build its `Manifest`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub hidden: Vec<usize>,
+    pub fanin: usize,
+    pub bw: usize,
+    pub method: PruneMethod,
+    pub bram_min_bits: usize,
+}
+
+impl Candidate {
+    /// Stable identifier: axes only, so the same point re-identifies
+    /// itself across runs (the archive is keyed by this).
+    pub fn name(&self) -> String {
+        let hl: Vec<String> = self.hidden.iter().map(|h| h.to_string()).collect();
+        let tag = match self.method {
+            PruneMethod::APriori => "ap",
+            PruneMethod::Iterative { .. } => "it",
+            PruneMethod::Momentum { .. } => "mo",
+        };
+        let mut n = format!("dse_h{}_f{}_b{}_{}", hl.join("-"), self.fanin, self.bw, tag);
+        if self.bram_min_bits != 13 {
+            n.push_str(&format!("_r{}", self.bram_min_bits));
+        }
+        n
+    }
+
+    /// Full manifest for this candidate on the given task shape.
+    pub fn manifest(&self, dataset: &str, in_features: usize, classes: usize) -> Manifest {
+        Manifest::synthetic_mlp(
+            &self.name(),
+            dataset,
+            in_features,
+            classes,
+            &self.hidden,
+            self.fanin,
+            self.bw,
+        )
+    }
+
+    /// Analytical LUT cost of the whole model — the gate's fast path.
+    /// Must agree exactly with `cost::total_luts(cost::manifest_cost(m))`
+    /// for this candidate's manifest (property-tested in
+    /// `tests/dse_search.rs`): sparse hidden layers at eq. 2.3, dense
+    /// head at eq. 4.1.
+    pub fn analytical_luts(&self, in_features: usize, classes: usize) -> u64 {
+        let mut total = self.sparse_prefix_luts(in_features);
+        let prev = self.hidden.last().copied().unwrap_or(in_features);
+        total = total
+            .saturating_add(cost::dense_layer_cost(classes, prev, self.bw, cost::DENSE_BW_WT));
+        total
+    }
+
+    /// Analytical cost of the sparse (table-mapped) prefix only — what
+    /// `synthesize` reports as `analytical_luts` for this model.
+    pub fn sparse_prefix_luts(&self, in_features: usize) -> u64 {
+        let mut total = 0u64;
+        let mut prev = in_features;
+        for &h in &self.hidden {
+            let f = self.fanin.min(prev);
+            total = total.saturating_add(cost::sparse_layer_cost(h, f, self.bw, self.bw));
+            prev = h;
+        }
+        total
+    }
+}
+
+/// Deterministic candidate generator: the full axis cross product in a
+/// fixed order, seed-shuffled, truncated to `max`.  Same (axes, seed,
+/// max) → same candidate list, which is what makes whole searches
+/// replayable.
+pub fn generate(axes: &SearchAxes, seed: u64, max: usize) -> Vec<Candidate> {
+    let mut out = Vec::with_capacity(axes.num_candidates());
+    for &d in &axes.depths {
+        for &w in &axes.widths {
+            for &f in &axes.fanins {
+                for &bw in &axes.bws {
+                    for &m in &axes.methods {
+                        for &bram in &axes.bram_min_bits {
+                            out.push(Candidate {
+                                hidden: vec![w; d],
+                                fanin: f,
+                                bw,
+                                method: m,
+                                bram_min_bits: bram,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut rng = Rng::new(seed ^ 0x6473_6531); // "dse1"
+    rng.shuffle(&mut out);
+    out.truncate(max);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Cost gate
+// ---------------------------------------------------------------------------
+
+/// Prices candidates with the analytical model and rejects over-budget
+/// points before any training happens.
+#[derive(Debug, Clone, Copy)]
+pub struct CostGate {
+    pub budget_luts: u64,
+}
+
+impl CostGate {
+    /// Exact analytical price (see [`Candidate::analytical_luts`]).
+    pub fn price(&self, c: &Candidate, in_features: usize, classes: usize) -> u64 {
+        c.analytical_luts(in_features, classes)
+    }
+
+    /// Admission is monotone in the exact price: a candidate is rejected
+    /// *only* when its exact analytical cost exceeds the budget, so the
+    /// gate can never reject a point the exact pricing would accept.
+    pub fn admits(&self, luts: u64) -> bool {
+        luts <= self.budget_luts
+    }
+}
+
+/// Screening-rate floor the gate must sustain (candidates priced/sec):
+/// below this, pricing would start to matter next to training cost.
+/// Asserted by `bench_dse` and the `examples/dse_search.rs` CI gate.
+pub const GATE_RATE_FLOOR: f64 = 10_000.0;
+
+/// Measure the gate's screening rate over a wall-clock window by looping
+/// price+admit across `cands`.  One shared implementation so the bench
+/// and the CI smoke gate cannot drift apart.
+pub fn gate_screen_rate(
+    cands: &[Candidate],
+    gate: &CostGate,
+    in_features: usize,
+    classes: usize,
+    window: std::time::Duration,
+) -> f64 {
+    assert!(!cands.is_empty(), "need candidates to screen");
+    let t0 = std::time::Instant::now();
+    let mut priced = 0usize;
+    let mut admitted = 0usize;
+    while t0.elapsed() < window {
+        for c in cands {
+            priced += 1;
+            if gate.admits(gate.price(c, in_features, classes)) {
+                admitted += 1;
+            }
+        }
+    }
+    std::hint::black_box(admitted);
+    priced as f64 / t0.elapsed().as_secs_f64()
+}
+
+// ---------------------------------------------------------------------------
+// Task and options
+// ---------------------------------------------------------------------------
+
+/// The workload a search optimizes over: dataset splits plus shape.
+pub struct SearchTask {
+    pub dataset: String,
+    pub in_features: usize,
+    pub classes: usize,
+    pub train: DataSet,
+    pub test: DataSet,
+}
+
+impl SearchTask {
+    /// The experiment-standard split (`experiments::dataset_split` with
+    /// `ExpCtx`'s seed), so searched quality is measured exactly like the
+    /// hand-enumerated tables.
+    pub fn from_dataset(kind: &str) -> SearchTask {
+        let (train, test) = crate::experiments::dataset_split(kind, 0xEC0);
+        SearchTask::from_splits(kind, train, test)
+    }
+
+    /// Small jets task for smoke tests and CI (same generator, fewer
+    /// samples).
+    pub fn jets_small(n: usize, seed: u64) -> SearchTask {
+        let mut rng = Rng::new(seed ^ 1);
+        let (train, test) = crate::hep::jets(n, 42).split(0.2, &mut rng);
+        SearchTask::from_splits("jets", train, test)
+    }
+
+    pub fn from_splits(kind: &str, train: DataSet, test: DataSet) -> SearchTask {
+        let (in_features, classes) = (train.d, train.classes);
+        SearchTask { dataset: kind.to_string(), in_features, classes, train, test }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchOpts {
+    /// Gate budget: candidates above this analytical LUT cost never train.
+    pub budget_luts: u64,
+    /// Successive-halving rungs; rung r trains `base_steps * 2^r` *more*
+    /// steps on top of the previous rungs (warm start).
+    pub rungs: usize,
+    pub base_steps: usize,
+    /// Promotion divisor: the top `ceil(n/eta)` survivors reach rung r+1.
+    pub eta: usize,
+    pub seed: u64,
+    /// Cap on generated candidates (after the deterministic shuffle).
+    pub max_candidates: usize,
+    /// Archive/checkpoint/report directory.
+    pub out_dir: PathBuf,
+    /// Reuse an existing archive: archived rung qualities replay without
+    /// retraining; checkpoints resume training past the archived rungs.
+    pub resume: bool,
+    /// Synthesize + verify the top-N frontier models after the search.
+    pub emit: usize,
+}
+
+impl Default for SearchOpts {
+    fn default() -> SearchOpts {
+        SearchOpts {
+            budget_luts: 30_000,
+            rungs: 3,
+            base_steps: 40,
+            eta: 2,
+            seed: 1,
+            max_candidates: 24,
+            out_dir: PathBuf::from("reports/dse"),
+            resume: false,
+            emit: 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent Pareto archive
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ArchiveEntry {
+    pub name: String,
+    pub hidden: Vec<usize>,
+    pub fanin: usize,
+    pub bw: usize,
+    pub method: String,
+    pub bram_min_bits: usize,
+    /// Analytical whole-model LUT cost (the frontier's cost axis).
+    pub luts: u64,
+    /// "gated" (rejected before training) or "trained".
+    pub status: String,
+    /// Quality (100 × avg AUC-ROC) after each completed rung.
+    pub qualities: Vec<f64>,
+    /// Test accuracy at the last completed rung.
+    pub accuracy: f64,
+    /// Cumulative native-trainer steps across all rungs/runs.
+    pub trained_steps: usize,
+    /// Post-synthesis LUTs of the emitted netlist (frontier models only).
+    pub mapped_luts: Option<u64>,
+    pub netlist_accuracy: Option<f64>,
+}
+
+impl ArchiveEntry {
+    fn from_candidate(c: &Candidate, luts: u64, status: &str) -> ArchiveEntry {
+        ArchiveEntry {
+            name: c.name(),
+            hidden: c.hidden.clone(),
+            fanin: c.fanin,
+            bw: c.bw,
+            method: c.method.name().to_string(),
+            bram_min_bits: c.bram_min_bits,
+            luts,
+            status: status.to_string(),
+            qualities: Vec::new(),
+            accuracy: 0.0,
+            trained_steps: 0,
+            mapped_luts: None,
+            netlist_accuracy: None,
+        }
+    }
+
+    /// Quality at the deepest completed rung (`None` for gated points).
+    pub fn final_quality(&self) -> Option<f64> {
+        self.qualities.last().copied()
+    }
+}
+
+/// The resumable search state on disk: parameters + one entry per
+/// candidate ever priced.  `reports/dse/archive.json` by default.
+#[derive(Debug, Clone)]
+pub struct Archive {
+    pub dataset: String,
+    pub budget_luts: u64,
+    pub seed: u64,
+    pub rungs: usize,
+    pub base_steps: usize,
+    pub eta: usize,
+    pub max_candidates: usize,
+    /// `SearchAxes::key()` of the run that produced this archive.
+    pub axes_key: String,
+    pub entries: BTreeMap<String, ArchiveEntry>,
+}
+
+impl Archive {
+    pub fn new(task: &SearchTask, axes: &SearchAxes, opts: &SearchOpts) -> Archive {
+        Archive {
+            dataset: task.dataset.clone(),
+            budget_luts: opts.budget_luts,
+            seed: opts.seed,
+            rungs: opts.rungs,
+            base_steps: opts.base_steps,
+            eta: opts.eta,
+            max_candidates: opts.max_candidates,
+            axes_key: axes.key(),
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// A resumed archive must have been produced by the same search
+    /// parameters — including the axes and the candidate cap, which
+    /// determine the candidate pool and every promotion cut — otherwise
+    /// replayed selections would silently diverge.
+    pub fn check_compatible(
+        &self,
+        task: &SearchTask,
+        axes: &SearchAxes,
+        opts: &SearchOpts,
+    ) -> Result<()> {
+        ensure!(
+            self.dataset == task.dataset
+                && self.budget_luts == opts.budget_luts
+                && self.seed == opts.seed
+                && self.rungs == opts.rungs
+                && self.base_steps == opts.base_steps
+                && self.eta == opts.eta
+                && self.max_candidates == opts.max_candidates
+                && self.axes_key == axes.key(),
+            "archive was produced with different search parameters \
+             (dataset {} budget {} seed {} rungs {} steps {} eta {} cap {} axes {}); \
+             rerun without --resume or delete it",
+            self.dataset,
+            self.budget_luts,
+            self.seed,
+            self.rungs,
+            self.base_steps,
+            self.eta,
+            self.max_candidates,
+            self.axes_key
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .values()
+            .map(|e| {
+                let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+                Json::obj(vec![
+                    ("name", Json::str(&e.name)),
+                    (
+                        "hidden",
+                        Json::Arr(e.hidden.iter().map(|&h| Json::Num(h as f64)).collect()),
+                    ),
+                    ("fanin", Json::num(e.fanin as f64)),
+                    ("bw", Json::num(e.bw as f64)),
+                    ("method", Json::str(&e.method)),
+                    ("bram_min_bits", Json::num(e.bram_min_bits as f64)),
+                    // String like the top-level u64s: gated entries can
+                    // carry saturated (u64::MAX) costs that f64 would round.
+                    ("luts", Json::str(&e.luts.to_string())),
+                    ("status", Json::str(&e.status)),
+                    ("qualities", Json::arr_f64(&e.qualities)),
+                    ("accuracy", Json::num(e.accuracy)),
+                    ("trained_steps", Json::num(e.trained_steps as f64)),
+                    ("mapped_luts", opt_num(e.mapped_luts.map(|v| v as f64))),
+                    ("netlist_accuracy", opt_num(e.netlist_accuracy)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("dataset", Json::str(&self.dataset)),
+            // u64 parameters go through strings: the JSON layer is f64 and
+            // would round values above 2^53, making a resumed archive fail
+            // its own compatibility check.
+            ("budget_luts", Json::str(&self.budget_luts.to_string())),
+            ("seed", Json::str(&self.seed.to_string())),
+            ("rungs", Json::num(self.rungs as f64)),
+            ("base_steps", Json::num(self.base_steps as f64)),
+            ("eta", Json::num(self.eta as f64)),
+            ("max_candidates", Json::num(self.max_candidates as f64)),
+            ("axes_key", Json::str(&self.axes_key)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Archive> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let version = j.req_usize("version")?;
+        ensure!(version == 1, "archive version {version} != 1");
+        let mut entries = BTreeMap::new();
+        for e in j.req("entries")?.as_arr().unwrap_or(&[]) {
+            let hidden: Vec<usize> = e
+                .req("hidden")?
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default();
+            let qualities: Vec<f64> = e
+                .req("qualities")?
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+                .unwrap_or_default();
+            let entry = ArchiveEntry {
+                name: e.req_str("name")?.to_string(),
+                hidden,
+                fanin: e.req_usize("fanin")?,
+                bw: e.req_usize("bw")?,
+                method: e.req_str("method")?.to_string(),
+                bram_min_bits: e.req_usize("bram_min_bits")?,
+                luts: e
+                    .req_str("luts")?
+                    .parse::<u64>()
+                    .map_err(|err| anyhow::anyhow!("archive entry luts: {err}"))?,
+                status: e.req_str("status")?.to_string(),
+                qualities,
+                accuracy: e.opt_f64("accuracy", 0.0),
+                trained_steps: e.opt_usize("trained_steps").unwrap_or(0),
+                mapped_luts: e
+                    .get("mapped_luts")
+                    .and_then(|v| v.as_f64())
+                    .map(|v| v as u64),
+                netlist_accuracy: e.get("netlist_accuracy").and_then(|v| v.as_f64()),
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        let parse_u64 = |key: &str| -> Result<u64> {
+            j.req_str(key)?
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("archive key {key}: {e}"))
+        };
+        Ok(Archive {
+            dataset: j.req_str("dataset")?.to_string(),
+            budget_luts: parse_u64("budget_luts")?,
+            seed: parse_u64("seed")?,
+            rungs: j.req_usize("rungs")?,
+            base_steps: j.req_usize("base_steps")?,
+            eta: j.req_usize("eta")?,
+            max_candidates: j.req_usize("max_candidates")?,
+            axes_key: j.req_str("axes_key")?.to_string(),
+            entries,
+        })
+    }
+
+    /// Trained design points (for the frontier).
+    pub fn design_points(&self) -> Vec<DesignPoint> {
+        self.entries
+            .values()
+            .filter(|e| e.status == "trained")
+            .filter_map(|e| {
+                e.final_quality().map(|q| DesignPoint {
+                    name: e.name.clone(),
+                    luts: e.luts,
+                    quality: q,
+                })
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Successive-halving driver
+// ---------------------------------------------------------------------------
+
+/// Per-candidate running state inside one search.
+#[derive(Clone)]
+struct Runner {
+    cand: Candidate,
+    name: String,
+    man: Manifest,
+    seed: u64,
+    luts: u64,
+    /// Rung qualities replayed from the archive (resume path).
+    archived_qualities: Vec<f64>,
+    archived_accuracy: f64,
+    state: Option<ModelState>,
+    /// Rungs whose training is reflected in `state`.
+    completed: usize,
+    quality: f64,
+    accuracy: f64,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Checkpoint path for a candidate after `rungs_done` completed rungs.
+/// The rung count is part of the file name so a checkpoint can never be
+/// replayed against the wrong rung (e.g. a crash between the checkpoint
+/// write and the archive write would otherwise double-train that rung on
+/// resume).
+fn ckpt_file(out_dir: &Path, name: &str, rungs_done: usize) -> PathBuf {
+    out_dir.join("ckpt").join(format!("{name}.r{rungs_done}.bin"))
+}
+
+/// Quality metric: 100 × average one-vs-rest AUC (the paper's headline
+/// number), with accuracy alongside.  Non-finite logits (a diverged run)
+/// floor to quality 0 instead of poisoning rank statistics with NaN.
+fn quality_of(logits: &[f32], y: &[i32], classes: usize) -> (f64, f64) {
+    if logits.is_empty() || !logits.iter().all(|v| v.is_finite()) {
+        return (0.0, 0.0);
+    }
+    let probs = metrics::softmax_rows(logits, classes);
+    let aucs = metrics::auc_ovr(&probs, y, classes);
+    let q = 100.0 * aucs.iter().sum::<f64>() / aucs.len().max(1) as f64;
+    let acc = metrics::accuracy(logits, y, classes);
+    (q, acc)
+}
+
+/// Short rungs can leave Iterative masks above the target fan-in (no
+/// prune event fired yet); enforce the target at each rung boundary,
+/// exactly like `ExpCtx::trained` does after short runs, so the archived
+/// quality and the analytical cost describe the same sparse model — and
+/// so the emitted truth tables stay within `luts::MAX_IN_BITS`.
+fn enforce_target_fanin(man: &Manifest, method: PruneMethod, st: &mut ModelState) {
+    if !matches!(method, PruneMethod::Iterative { .. }) {
+        return;
+    }
+    for (i, l) in man.layers.iter().enumerate() {
+        if let Some(f) = l.fanin {
+            crate::sparsity::prune::magnitude_prune(&st.ws[i], &mut st.masks[i], f);
+            st.apply_mask(i);
+        }
+    }
+}
+
+/// Advance one runner through rung `rung`: replay the archived quality if
+/// this rung is already recorded, otherwise (warm-)train `base_steps·2^r`
+/// steps and evaluate.  Returns the updated runner plus the steps trained
+/// now (0 on pure replay).  Runs inside `util::pool::par_map`.
+fn advance_runner(
+    task: &SearchTask,
+    opts: &SearchOpts,
+    runner: &Runner,
+    rung: usize,
+) -> Result<(Runner, usize)> {
+    let mut ru = runner.clone();
+    if ru.archived_qualities.len() > rung {
+        ru.quality = ru.archived_qualities[rung];
+        // Accuracy is "latest known" — keep the archived value on replay
+        // so intermediate rungs never clobber it with a zero.
+        ru.accuracy = ru.archived_accuracy;
+        return Ok((ru, 0));
+    }
+    let mut trained_now = 0usize;
+    if ru.state.is_none() {
+        // A checkpoint written after the archive's last recorded rung can
+        // seed this rung exactly (the rung count is in the file name, so a
+        // newer orphaned checkpoint can never be replayed against an older
+        // archive); anything else restarts from scratch and catches up
+        // deterministically.
+        let k = ru.archived_qualities.len();
+        if k == rung && rung > 0 {
+            let ck = ckpt_file(&opts.out_dir, &ru.name, rung);
+            if ck.exists() {
+                if let Ok(st) = checkpoint::load(&ck) {
+                    if st.num_layers() == ru.man.num_layers() {
+                        ru.state = Some(st);
+                        ru.completed = rung;
+                    }
+                }
+            }
+        }
+        if ru.state.is_none() {
+            ru.state = Some(ModelState::init(&ru.man, ru.seed, ru.cand.method));
+            ru.completed = 0;
+        }
+    }
+    while ru.completed <= rung {
+        let steps = opts.base_steps << ru.completed;
+        let mut topts = TrainOpts::from_manifest(&ru.man);
+        topts.steps = steps;
+        topts.method = ru.cand.method;
+        topts.seed = ru.seed ^ (ru.completed as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        native::train_native(&ru.man, ru.state.as_mut().expect("state"), &task.train, &topts)?;
+        // Enforce at *every* rung boundary (not once after catch-up), so a
+        // crash-recovery catch-up walks the exact mask trajectory of an
+        // uninterrupted run.
+        enforce_target_fanin(&ru.man, ru.cand.method, ru.state.as_mut().expect("state"));
+        trained_now += steps;
+        ru.completed += 1;
+    }
+    let logits =
+        native::evaluate_native(&ru.man, ru.state.as_ref().expect("state"), &task.test);
+    let (q, acc) = quality_of(&logits, &task.test.y, task.classes);
+    ru.quality = q;
+    ru.accuracy = acc;
+    if trained_now > 0 {
+        checkpoint::save(
+            ru.state.as_ref().expect("state"),
+            &ckpt_file(&opts.out_dir, &ru.name, ru.completed),
+        )?;
+    }
+    Ok((ru, trained_now))
+}
+
+/// One emitted frontier model: synthesized, optimized, machine-verified
+/// and scored through the netlist serving backend.
+#[derive(Debug, Clone)]
+pub struct EmitResult {
+    pub name: String,
+    pub analytical_luts: u64,
+    pub mapped_luts: usize,
+    pub brams: usize,
+    pub opt_reduction: f64,
+    pub netlist_accuracy: f64,
+}
+
+/// Search outcome summary (the archive on disk is the full record).
+pub struct SearchOutcome {
+    pub generated: usize,
+    pub admitted: usize,
+    pub gated: usize,
+    /// Native-trainer steps actually run in this invocation (0 on a full
+    /// resume — the acceptance contract for `--resume`).
+    pub steps_trained: usize,
+    pub frontier: Vec<DesignPoint>,
+    pub emitted: Vec<EmitResult>,
+    pub archive_path: PathBuf,
+}
+
+/// Run a cost-gated successive-halving search and persist the archive.
+pub fn run_search(
+    task: &SearchTask,
+    axes: &SearchAxes,
+    opts: &SearchOpts,
+) -> Result<SearchOutcome> {
+    ensure!(opts.rungs >= 1, "need at least one rung");
+    ensure!(opts.base_steps >= 1, "need at least one step per rung");
+    ensure!(opts.eta >= 2, "eta must be >= 2 (got {})", opts.eta);
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let archive_path = opts.out_dir.join("archive.json");
+    let mut archive = if opts.resume && archive_path.exists() {
+        let a = Archive::load(&archive_path)?;
+        a.check_compatible(task, axes, opts)?;
+        println!(
+            "[dse] resuming archive {} ({} entries)",
+            archive_path.display(),
+            a.entries.len()
+        );
+        a
+    } else {
+        Archive::new(task, axes, opts)
+    };
+
+    // ---- generate + gate --------------------------------------------------
+    let candidates = generate(axes, opts.seed, opts.max_candidates);
+    let generated = candidates.len();
+    let gate = CostGate { budget_luts: opts.budget_luts };
+    let mut admitted: Vec<(Candidate, u64)> = Vec::new();
+    let mut gated = 0usize;
+    for c in candidates {
+        let luts = gate.price(&c, task.in_features, task.classes);
+        if gate.admits(luts) {
+            admitted.push((c, luts));
+        } else {
+            gated += 1;
+            archive
+                .entries
+                .entry(c.name())
+                .or_insert_with(|| ArchiveEntry::from_candidate(&c, luts, "gated"));
+        }
+    }
+    ensure!(
+        !admitted.is_empty(),
+        "cost gate rejected all {generated} candidates (budget {} LUTs)",
+        opts.budget_luts
+    );
+    println!(
+        "[dse] {generated} candidates generated; gate admitted {} / rejected {gated} \
+         (budget {} LUTs)",
+        admitted.len(),
+        opts.budget_luts
+    );
+
+    // ---- successive halving ----------------------------------------------
+    let mut survivors: Vec<Runner> = admitted
+        .iter()
+        .map(|(c, luts)| {
+            let name = c.name();
+            let man = c.manifest(&task.dataset, task.in_features, task.classes);
+            let (aq, aa) = archive
+                .entries
+                .get(&name)
+                .filter(|e| e.status == "trained")
+                .map(|e| (e.qualities.clone(), e.accuracy))
+                .unwrap_or_default();
+            Runner {
+                seed: opts.seed ^ fnv1a(name.as_bytes()),
+                cand: c.clone(),
+                name,
+                man,
+                luts: *luts,
+                archived_qualities: aq,
+                archived_accuracy: aa,
+                state: None,
+                completed: 0,
+                quality: 0.0,
+                accuracy: 0.0,
+            }
+        })
+        .collect();
+
+    let mut steps_trained = 0usize;
+    for rung in 0..opts.rungs {
+        let results: Vec<Result<(Runner, usize)>> =
+            pool::par_map(&survivors, |_, ru| advance_runner(task, opts, ru, rung));
+        let mut next: Vec<Runner> = Vec::with_capacity(results.len());
+        let mut rung_steps = 0usize;
+        for r in results {
+            let (ru, steps) = r?;
+            rung_steps += steps;
+            next.push(ru);
+        }
+        steps_trained += rung_steps;
+        // Record this rung into the archive.
+        for ru in &next {
+            let e = archive
+                .entries
+                .entry(ru.name.clone())
+                .or_insert_with(|| ArchiveEntry::from_candidate(&ru.cand, ru.luts, "trained"));
+            e.status = "trained".to_string();
+            if e.qualities.len() == rung {
+                e.qualities.push(ru.quality);
+            }
+            e.accuracy = ru.accuracy;
+            e.trained_steps = e.trained_steps.max(cumulative_steps(opts, e.qualities.len()));
+        }
+        archive.save(&archive_path)?;
+        // Promote the top fraction (deterministic total order).
+        next.sort_by(|a, b| {
+            b.quality
+                .total_cmp(&a.quality)
+                .then(a.luts.cmp(&b.luts))
+                .then(a.name.cmp(&b.name))
+        });
+        let keep = if rung + 1 == opts.rungs {
+            next.len()
+        } else {
+            next.len().div_ceil(opts.eta).max(1)
+        };
+        println!(
+            "[dse] rung {rung}: {} candidates, +{} steps each planned, {} promoted \
+             (best {} @ {:.2})",
+            next.len(),
+            opts.base_steps << rung,
+            keep.min(next.len()),
+            next.first().map(|r| r.name.as_str()).unwrap_or("-"),
+            next.first().map(|r| r.quality).unwrap_or(0.0),
+        );
+        next.truncate(keep);
+        survivors = next;
+    }
+
+    // ---- frontier + report ------------------------------------------------
+    let points = archive.design_points();
+    let frontier = pareto_frontier(&points);
+    print_search_report(&archive, &frontier, &opts.out_dir)?;
+
+    // ---- emit: frontier → synthesize --opt → NetlistEngine ---------------
+    let mut emitted = Vec::new();
+    if opts.emit > 0 {
+        // Highest-quality frontier points first.  Eliminated-early frontier
+        // points are emittable too: their last checkpoint is on disk.
+        let mut targets: Vec<&DesignPoint> = frontier.iter().collect();
+        targets.sort_by(|a, b| b.quality.total_cmp(&a.quality));
+        for p in targets.into_iter().take(opts.emit) {
+            let entry = archive.entries.get(&p.name).expect("frontier point archived").clone();
+            let state = survivors
+                .iter()
+                .find(|r| r.name == p.name)
+                .and_then(|r| r.state.clone());
+            match emit_model(task, opts, &entry, state) {
+                Ok(res) => {
+                    if let Some(e) = archive.entries.get_mut(&res.name) {
+                        e.mapped_luts = Some(res.mapped_luts as u64);
+                        e.netlist_accuracy = Some(res.netlist_accuracy);
+                    }
+                    emitted.push(res);
+                }
+                Err(err) => eprintln!("[dse] emit {} failed: {err:#}", p.name),
+            }
+        }
+        archive.save(&archive_path)?;
+    }
+
+    Ok(SearchOutcome {
+        generated,
+        admitted: admitted.len(),
+        gated,
+        steps_trained,
+        frontier,
+        emitted,
+        archive_path,
+    })
+}
+
+/// Total steps after `rungs_done` completed rungs (base·(2^r − 1) sum).
+fn cumulative_steps(opts: &SearchOpts, rungs_done: usize) -> usize {
+    (0..rungs_done).map(|r| opts.base_steps << r).sum()
+}
+
+/// `PruneMethod` from its archived `name()` tag (mirrors the CLI parser's
+/// default hyper-parameters).
+fn method_from_name(s: &str) -> PruneMethod {
+    match s {
+        "iterative" => PruneMethod::Iterative { every: 10 },
+        "momentum" => PruneMethod::Momentum { every: 8, prune_rate: 0.3 },
+        _ => PruneMethod::APriori,
+    }
+}
+
+/// Synthesize one frontier model with the full optimization pipeline,
+/// machine-verify it, and score the served netlist on the task's test
+/// split — "a search ends with servable, LUT-priced artifacts".  `state`
+/// is the in-memory survivor state when available; eliminated-early
+/// frontier points reload their last rung checkpoint instead.
+fn emit_model(
+    task: &SearchTask,
+    opts: &SearchOpts,
+    entry: &ArchiveEntry,
+    state: Option<ModelState>,
+) -> Result<EmitResult> {
+    let cand = Candidate {
+        hidden: entry.hidden.clone(),
+        fanin: entry.fanin,
+        bw: entry.bw,
+        method: method_from_name(&entry.method),
+        bram_min_bits: entry.bram_min_bits,
+    };
+    let man = cand.manifest(&task.dataset, task.in_features, task.classes);
+    let state = match state {
+        Some(st) => st,
+        None => {
+            // The last recorded rung names the checkpoint that produced
+            // the archived quality.
+            let ck = ckpt_file(&opts.out_dir, &entry.name, entry.qualities.len());
+            checkpoint::load(&ck)
+                .with_context(|| format!("frontier model {} has no checkpoint", entry.name))?
+        }
+    };
+    ensure!(
+        state.num_layers() == man.num_layers(),
+        "checkpoint/manifest shape mismatch for {}",
+        entry.name
+    );
+    let ex = ExportedModel::from_state(&man, &state);
+    let tables = ModelTables::generate(&ex)?;
+    // Deployment-flavored report first (the candidate's own BRAM
+    // threshold), then a BRAM-free netlist for end-to-end verification
+    // and serving (mirrors `synth --score`).
+    let report_opts = SynthOpts {
+        registers: false,
+        bram_min_bits: cand.bram_min_bits,
+        opt: OptLevel::Full,
+        ..SynthOpts::default()
+    };
+    let (_, rep) = synthesize(&ex, &tables, report_opts)?;
+    let serve_opts = SynthOpts { bram_min_bits: 0, ..report_opts };
+    let (netlist, srep) = synthesize(&ex, &tables, serve_opts)?;
+    let mism = verify_netlist(&ex, &tables, &netlist, 2048, opts.seed)?;
+    ensure!(mism == 0, "{mism} netlist/table mismatches on {}", entry.name);
+    let engine = NetlistEngine::from_netlist(&ex, &tables, netlist)?;
+    let acc = batch_accuracy(&engine, &task.test.x, &task.test.y);
+    println!(
+        "[dse] emitted {}: {} analytical -> {} mapped LUTs ({} BRAM, {:.2}x opt), \
+         netlist accuracy {:.3}",
+        entry.name, entry.luts, srep.luts, rep.brams, srep.opt_reduction, acc
+    );
+    Ok(EmitResult {
+        name: entry.name.clone(),
+        analytical_luts: entry.luts,
+        mapped_luts: srep.luts,
+        brams: rep.brams,
+        opt_reduction: srep.opt_reduction,
+        netlist_accuracy: acc,
+    })
+}
+
+/// Print + save the search report table (the "search section" companion
+/// to the synth report), then the frontier and its marginal costs.
+fn print_search_report(
+    archive: &Archive,
+    frontier: &[DesignPoint],
+    out_dir: &Path,
+) -> Result<()> {
+    let on_frontier: std::collections::BTreeSet<&str> =
+        frontier.iter().map(|p| p.name.as_str()).collect();
+    let mut t = TextTable::new(
+        "DSE search report — cost-gated successive halving",
+        &["candidate", "LUTs", "rungs", "steps", "avg AUC", "accuracy", "status", "frontier"],
+    );
+    let mut rows: Vec<&ArchiveEntry> = archive.entries.values().collect();
+    rows.sort_by(|a, b| a.luts.cmp(&b.luts).then(a.name.cmp(&b.name)));
+    for e in rows {
+        t.row(vec![
+            e.name.clone(),
+            e.luts.to_string(),
+            e.qualities.len().to_string(),
+            e.trained_steps.to_string(),
+            e.final_quality().map(f2).unwrap_or_else(|| "-".into()),
+            if e.status == "trained" { f2(100.0 * e.accuracy) } else { "-".into() },
+            e.status.clone(),
+            if on_frontier.contains(e.name.as_str()) { "*".into() } else { "".into() },
+        ]);
+    }
+    t.print();
+    let csv_path = out_dir.join("search_report.csv");
+    t.save_csv(csv_path.to_str().unwrap_or("reports/dse/search_report.csv"))?;
+    println!("[saved {}]", csv_path.display());
+    println!("Pareto frontier ({} points):", frontier.len());
+    for p in frontier {
+        println!("  {:<28} {:>8} LUTs   quality {:.2}", p.name, p.luts, p.quality);
+    }
+    for (name, mc) in marginal_cost(frontier) {
+        println!("  marginal cost at {name}: {mc:.0} LUTs per quality point");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_and_capped() {
+        let axes = SearchAxes::jets_default();
+        let a = generate(&axes, 7, 10);
+        let b = generate(&axes, 7, 10);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        let full = generate(&axes, 7, usize::MAX);
+        assert_eq!(full.len(), axes.num_candidates());
+        // Different seed, different order.
+        let c = generate(&axes, 8, 10);
+        assert_ne!(a, c);
+        // Names are unique across the full product.
+        let names: std::collections::BTreeSet<String> =
+            full.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), full.len());
+    }
+
+    #[test]
+    fn gate_pricing_matches_manifest_cost() {
+        let axes = SearchAxes::jets_default();
+        for c in generate(&axes, 3, usize::MAX) {
+            let man = c.manifest("jets", 16, 5);
+            let exact = cost::total_luts(&cost::manifest_cost(&man));
+            assert_eq!(c.analytical_luts(16, 5), exact, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn archive_roundtrips_through_json() {
+        let task = SearchTask::jets_small(200, 3);
+        let opts = SearchOpts::default();
+        let axes = SearchAxes::jets_default();
+        let mut a = Archive::new(&task, &axes, &opts);
+        let c = Candidate {
+            hidden: vec![32, 32],
+            fanin: 3,
+            bw: 2,
+            method: PruneMethod::APriori,
+            bram_min_bits: 13,
+        };
+        let mut e = ArchiveEntry::from_candidate(&c, 1234, "trained");
+        e.qualities = vec![55.5, 60.25];
+        e.accuracy = 0.625;
+        e.trained_steps = 120;
+        e.mapped_luts = Some(321);
+        e.netlist_accuracy = Some(0.61);
+        a.entries.insert(e.name.clone(), e);
+        let g = Candidate { hidden: vec![64], bw: 3, ..c.clone() };
+        a.entries.insert(g.name(), ArchiveEntry::from_candidate(&g, 99_999, "gated"));
+        let dir = std::env::temp_dir().join("lnck_dse_archive_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("archive.json");
+        a.save(&path).unwrap();
+        let back = Archive::load(&path).unwrap();
+        assert_eq!(back.entries.len(), 2);
+        let be = &back.entries[&c.name()];
+        assert_eq!(be.hidden, vec![32, 32]);
+        assert_eq!(be.qualities, vec![55.5, 60.25]);
+        assert_eq!(be.luts, 1234);
+        assert_eq!(be.mapped_luts, Some(321));
+        assert_eq!(be.status, "trained");
+        let bg = &back.entries[&g.name()];
+        assert_eq!(bg.status, "gated");
+        assert_eq!(bg.mapped_luts, None);
+        assert_eq!(back.budget_luts, a.budget_luts);
+        assert_eq!(back.axes_key, axes.key());
+        // Compatibility check trips on a parameter, axes, or cap change.
+        let mut other = SearchOpts::default();
+        other.seed += 1;
+        assert!(back.check_compatible(&task, &axes, &opts).is_ok());
+        assert!(back.check_compatible(&task, &axes, &other).is_err());
+        let mut other_axes = axes.clone();
+        other_axes.widths.push(128);
+        assert!(back.check_compatible(&task, &other_axes, &opts).is_err());
+        let mut other_cap = SearchOpts::default();
+        other_cap.max_candidates += 1;
+        assert!(back.check_compatible(&task, &axes, &other_cap).is_err());
+    }
+
+    #[test]
+    fn archive_u64_params_survive_beyond_f64_precision() {
+        // 2^53 + 1 is not representable in f64; the string round-trip must
+        // preserve it exactly or resume would refuse its own archive.
+        let task = SearchTask::jets_small(200, 5);
+        let axes = SearchAxes::jets_default();
+        let opts = SearchOpts {
+            seed: (1u64 << 53) + 1,
+            budget_luts: u64::MAX - 1,
+            ..SearchOpts::default()
+        };
+        let mut a = Archive::new(&task, &axes, &opts);
+        // Entry costs must survive too: a saturated gated candidate sits
+        // at exactly u64::MAX.
+        let c = Candidate {
+            hidden: vec![8],
+            fanin: 2,
+            bw: 1,
+            method: PruneMethod::APriori,
+            bram_min_bits: 13,
+        };
+        a.entries
+            .insert(c.name(), ArchiveEntry::from_candidate(&c, u64::MAX, "gated"));
+        let dir = std::env::temp_dir().join("lnck_dse_archive_u64_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("archive.json");
+        a.save(&path).unwrap();
+        let back = Archive::load(&path).unwrap();
+        assert_eq!(back.seed, (1u64 << 53) + 1);
+        assert_eq!(back.budget_luts, u64::MAX - 1);
+        assert_eq!(back.entries[&c.name()].luts, u64::MAX);
+        assert!(back.check_compatible(&task, &axes, &opts).is_ok());
+    }
+
+    #[test]
+    fn cumulative_steps_sums_rung_budgets() {
+        let opts = SearchOpts { base_steps: 40, ..SearchOpts::default() };
+        assert_eq!(cumulative_steps(&opts, 0), 0);
+        assert_eq!(cumulative_steps(&opts, 1), 40);
+        assert_eq!(cumulative_steps(&opts, 3), 40 + 80 + 160);
+    }
+}

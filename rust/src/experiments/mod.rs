@@ -57,14 +57,7 @@ impl ExpCtx {
     /// (train, test) split for the manifest's dataset.
     pub fn dataset(&mut self, kind: &str) -> &(DataSet, DataSet) {
         let seed = self.seed;
-        self.datasets.entry(kind.to_string()).or_insert_with(|| match kind {
-            "jets" => {
-                let mut rng = crate::util::rng::Rng::new(seed ^ 1);
-                hep::jets(24_000, 42).split(0.2, &mut rng)
-            }
-            "mnist" => mnist::load_or_synth(9_000, 1_800, 42),
-            other => panic!("unknown dataset {other}"),
-        })
+        self.datasets.entry(kind.to_string()).or_insert_with(|| dataset_split(kind, seed))
     }
 
     fn ckpt_path(&self, name: &str, method: PruneMethod) -> PathBuf {
@@ -117,6 +110,29 @@ impl ExpCtx {
         let logits = evaluate(art, &state, &test_set)?;
         let accuracy = metrics::accuracy(&logits, &test_set.y, man.classes);
         Ok(Trained { man, state, logits, test_y: test_set.y.clone(), accuracy })
+    }
+}
+
+/// Dataset kinds [`dataset_split`] understands — the list CLI validation
+/// (e.g. `explore --dataset`) checks against, so adding a kind below is
+/// one edit.
+pub const DATASET_KINDS: &[&str] = &["jets", "mnist"];
+
+/// Deterministic (train, test) split for a dataset kind — the single
+/// source of truth shared by `ExpCtx` (paper tables/figures) and the DSE
+/// search engine (`dse::search`), so a searched candidate's quality is
+/// measured on exactly the split the hand-enumerated experiments use.
+/// `ExpCtx` passes its own seed (`0xEC0` by default).  Panics on kinds
+/// outside [`DATASET_KINDS`] (it backs the infallible `ExpCtx` path);
+/// fallible callers validate against the list first.
+pub fn dataset_split(kind: &str, seed: u64) -> (DataSet, DataSet) {
+    match kind {
+        "jets" => {
+            let mut rng = crate::util::rng::Rng::new(seed ^ 1);
+            hep::jets(24_000, 42).split(0.2, &mut rng)
+        }
+        "mnist" => mnist::load_or_synth(9_000, 1_800, 42),
+        other => panic!("unknown dataset {other}"),
     }
 }
 

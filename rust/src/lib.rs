@@ -15,7 +15,12 @@
 //!   CSE/constant-sweep/don't-care pass pipeline (`synth::opt`), simulates
 //!   the netlist bit-parallel 64 samples per word (`sim`), and serves
 //!   either the truth tables or the (optimized) synthesized netlist itself
-//!   at high throughput (`serve`).
+//!   at high throughput (`serve`).  On top of that pipeline sits an
+//!   automated design-space exploration engine (`dse::search`): a
+//!   cost-gated successive-halving topology search driven by the native
+//!   pure-Rust trainer (`train::native`, no PJRT needed) that maintains a
+//!   resumable Pareto archive and emits its frontier as verified,
+//!   servable netlists (`logicnets explore`).
 
 pub mod cost;
 pub mod data;

@@ -63,6 +63,7 @@ fn main() -> Result<()> {
         "score" => cmd_score(&args),
         "complexity" => cmd_complexity(&args),
         "pareto" => cmd_pareto(&args),
+        "explore" => cmd_explore(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -86,6 +87,11 @@ fn print_help() {
     println!("  score   --models NAME[,NAME...] [--opt]  accuracy parity: mirror vs tables vs netlist");
     println!("  complexity --model NAME            minimized-logic heuristic (paper 5.5.1)");
     println!("  pareto  --csv reports/figure_6_7.csv   Pareto frontier of a sweep");
+    println!("          [--name-col N --lut-col N --q-col N]  (default: header-detected)");
+    println!("  explore --budget-luts N [--rungs R] [--seed S] [--resume]   automated DSE");
+    println!("          [--candidates C] [--steps B] [--eta E] [--emit K] [--dataset jets]");
+    println!("          [--widths 16,32,64] [--depths 1,2] [--fanins 2,3,4] [--bws 1,2,3]");
+    println!("          [--methods a-priori,iterative] [--out reports/dse]");
     println!("tables : {}", experiments::ALL_TABLES.join(" "));
     println!("figures: {}", experiments::ALL_FIGURES.join(" "));
 }
@@ -417,9 +423,15 @@ fn cmd_complexity(args: &Args) -> Result<()> {
 fn cmd_pareto(args: &Args) -> Result<()> {
     let path = args.get_or("csv", "reports/figure_6_7.csv").to_string();
     let csv = std::fs::read_to_string(&path).with_context(|| path.clone())?;
-    let name_col = args.get_usize("name-col", 0);
-    let lut_col = args.get_usize("lut-col", 4);
-    let q_col = args.get_usize("q-col", 5);
+    // Columns: explicit flags win, then header-name detection, then the
+    // historical figure_6_7 defaults (name 0 / LUTs 4 / quality 5).
+    let (det_name, det_lut, det_q) =
+        logicnets::dse::detect_columns(csv.lines().next().unwrap_or(""));
+    let explicit = |key: &str| args.get(key).and_then(|v| v.parse::<usize>().ok());
+    let name_col = explicit("name-col").or(det_name).unwrap_or(0);
+    let lut_col = explicit("lut-col").or(det_lut).unwrap_or(4);
+    let q_col = explicit("q-col").or(det_q).unwrap_or(5);
+    println!("[pareto] columns: name {name_col}, LUTs {lut_col}, quality {q_col}");
     let pts = logicnets::dse::points_from_csv(&csv, name_col, lut_col, q_col);
     anyhow::ensure!(!pts.is_empty(), "no points parsed from {path}");
     let frontier = logicnets::dse::pareto_frontier(&pts);
@@ -431,5 +443,80 @@ fn cmd_pareto(args: &Args) -> Result<()> {
     for (name, mc) in logicnets::dse::marginal_cost(&frontier) {
         println!("  marginal cost at {name}: {mc:.0} LUTs per quality point");
     }
+    Ok(())
+}
+
+fn parse_usize_list(s: &str) -> Vec<usize> {
+    s.split(',').filter_map(|t| t.trim().parse().ok()).collect()
+}
+
+/// `explore` — the automated design-space search (dse::search): generate
+/// topologies over the paper's axes, price them with the analytical cost
+/// model, successive-halve the survivors through the native trainer, and
+/// persist a resumable Pareto archive whose frontier is synthesized,
+/// verified and scored through the netlist serving backend.
+fn cmd_explore(args: &Args) -> Result<()> {
+    use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask};
+    fn axis(args: &Args, key: &str, slot: &mut Vec<usize>) {
+        if let Some(s) = args.get(key) {
+            let v = parse_usize_list(s);
+            if !v.is_empty() {
+                *slot = v;
+            }
+        }
+    }
+    let dataset = args.get_or("dataset", "jets").to_string();
+    // dataset_split panics on unknown kinds (it backs the infallible
+    // ExpCtx path); fail like every other CLI flag instead.
+    anyhow::ensure!(
+        experiments::DATASET_KINDS.contains(&dataset.as_str()),
+        "unknown dataset {dataset} (expected one of {:?})",
+        experiments::DATASET_KINDS
+    );
+    let mut axes = SearchAxes::jets_default();
+    axis(args, "widths", &mut axes.widths);
+    axis(args, "depths", &mut axes.depths);
+    axis(args, "fanins", &mut axes.fanins);
+    axis(args, "bws", &mut axes.bws);
+    axis(args, "bram-min-bits", &mut axes.bram_min_bits);
+    if let Some(s) = args.get("methods") {
+        let mut ms = Vec::new();
+        for t in s.split(',') {
+            ms.push(parse_method(t.trim())?);
+        }
+        if !ms.is_empty() {
+            axes.methods = ms;
+        }
+    }
+    let opts = SearchOpts {
+        budget_luts: args.get_u64("budget-luts", 30_000),
+        rungs: args.get_usize("rungs", 3),
+        base_steps: args.get_usize("steps", 40),
+        eta: args.get_usize("eta", 2),
+        seed: args.get_u64("seed", 1),
+        max_candidates: args.get_usize("candidates", 24),
+        out_dir: std::path::PathBuf::from(args.get_or("out", "reports/dse")),
+        resume: args.has_flag("resume"),
+        emit: args.get_usize("emit", 1),
+    };
+    let t0 = std::time::Instant::now();
+    let task = SearchTask::from_dataset(&dataset);
+    let out = run_search(&task, &axes, &opts)?;
+    println!(
+        "explore: {} generated, {} admitted, {} gated; {} native steps trained this run{}",
+        out.generated,
+        out.admitted,
+        out.gated,
+        out.steps_trained,
+        if opts.resume { " (archived rungs replayed without retraining)" } else { "" },
+    );
+    println!(
+        "frontier: {} non-dominated points; {} emitted as verified netlists; \
+         archive {} ({:.1}s total)",
+        out.frontier.len(),
+        out.emitted.len(),
+        out.archive_path.display(),
+        t0.elapsed().as_secs_f64(),
+    );
     Ok(())
 }

@@ -120,6 +120,74 @@ impl Manifest {
         Manifest::parse(&text)
     }
 
+    /// Build an in-memory MLP manifest with the repo's standard quantizer
+    /// scales (maxv 1.0 / 2.0 / 4.0, as every hep/mnist config uses) — the
+    /// entry point for *generated* models that have no artifact on disk.
+    /// The design-space exploration engine (`crate::dse::search`) produces
+    /// these, trains them through `train::native`, and feeds them into the
+    /// exact same export → tables → synth → serve pipeline as artifact
+    /// models.  Sparse hidden layers at `fanin`, dense classifier head.
+    pub fn synthetic_mlp(
+        name: &str,
+        dataset: &str,
+        in_features: usize,
+        classes: usize,
+        hidden: &[usize],
+        fanin: usize,
+        bw: usize,
+    ) -> Manifest {
+        let mut layers = Vec::with_capacity(hidden.len() + 1);
+        let mut prev = in_features;
+        for (i, &h) in hidden.iter().enumerate() {
+            layers.push(LayerSpec {
+                in_f: prev,
+                out_f: h,
+                fanin: Some(fanin.min(prev)),
+                bw_in: bw,
+                maxv_in: if i == 0 { 1.0 } else { 2.0 },
+            });
+            prev = h;
+        }
+        layers.push(LayerSpec {
+            in_f: prev,
+            out_f: classes,
+            fanin: None,
+            bw_in: bw,
+            maxv_in: if hidden.is_empty() { 1.0 } else { 2.0 },
+        });
+        Manifest {
+            name: name.to_string(),
+            kind: "mlp".to_string(),
+            in_features,
+            classes,
+            hidden: hidden.to_vec(),
+            bw,
+            bw_in: bw,
+            bw_out: bw,
+            fanin,
+            fanin_fc: None,
+            skips: 0,
+            batch: 64,
+            eval_batch: 256,
+            maxv_in: 1.0,
+            maxv_hidden: 2.0,
+            maxv_out: 4.0,
+            momentum: 0.9,
+            bn_eps: 1e-5,
+            dataset: dataset.to_string(),
+            train_softmax: true,
+            steps: 300,
+            lr: 0.03,
+            layers,
+            conv_mode: None,
+            image_hw: 28,
+            channels: Vec::new(),
+            kernel_size: 3,
+            fanin_dw: None,
+            fanin_pw: None,
+        }
+    }
+
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
@@ -139,6 +207,25 @@ mod tests {
                 {"in":32,"out":32,"fanin":3,"bw_in":2,"maxv_in":2.0},
                 {"in":32,"out":5,"fanin":null,"bw_in":2,"maxv_in":2.0}]
     }"#;
+
+    #[test]
+    fn synthetic_mlp_layer_wiring() {
+        let m = Manifest::synthetic_mlp("g", "jets", 16, 5, &[32, 24], 3, 2);
+        assert_eq!(m.num_layers(), 3);
+        assert_eq!(m.layers[0].in_f, 16);
+        assert_eq!(m.layers[0].out_f, 32);
+        assert_eq!(m.layers[0].fanin, Some(3));
+        assert_eq!(m.layers[0].maxv_in, 1.0);
+        assert_eq!(m.layers[1].in_f, 32);
+        assert_eq!(m.layers[1].maxv_in, 2.0);
+        assert_eq!(m.layers[2].out_f, 5);
+        assert_eq!(m.layers[2].fanin, None);
+        assert_eq!(m.hidden, vec![32, 24]);
+        assert_eq!(m.kind, "mlp");
+        // Fan-in never exceeds the layer's input width.
+        let wide = Manifest::synthetic_mlp("w", "jets", 4, 2, &[8], 7, 1);
+        assert_eq!(wide.layers[0].fanin, Some(4));
+    }
 
     #[test]
     fn parses_sample() {

@@ -14,6 +14,7 @@
 //! 2×params/step host round-trip of the naive driver.
 
 pub mod checkpoint;
+pub mod native;
 pub mod state;
 
 use crate::data::DataSet;

@@ -1,0 +1,468 @@
+//! Native pure-Rust training path — the PJRT-free mirror of [`super::train`].
+//!
+//! The AOT HLO `train_step` is the canonical trainer, but it needs a live
+//! PJRT runtime and on-disk artifacts; the offline `xla` stub errors at
+//! runtime.  The design-space-exploration engine (`crate::dse::search`)
+//! must train *generated* candidates that have no artifact at all, so this
+//! module reimplements the same training semantics directly on
+//! [`ModelState`]:
+//!
+//! * quantized forward pass with **batch** batch-norm statistics
+//!   (training mode), activation quantizers applied through a
+//!   straight-through estimator (STE) in the backward pass,
+//! * softmax cross-entropy on the *quantized* logits (the manifests'
+//!   `train_softmax` convention),
+//! * SGD with classical momentum and the same linear learning-rate decay
+//!   as the HLO driver,
+//! * EMA running-stat updates, smoothed-gradient buffer maintenance and
+//!   the pruning schedules of `sparsity::prune` between steps.
+//!
+//! It intentionally does **not** promise bit-identity with the HLO path
+//! (XLA reorders f32 sums); it promises the same *training dynamics* on
+//! the same [`ModelState`] layout, so checkpoints, export, truth tables,
+//! synthesis and serving all work unchanged downstream.
+
+use super::{prune_event, should_log, ModelState, TrainLog, TrainOpts};
+use crate::data::DataSet;
+use crate::runtime::Manifest;
+use crate::sparsity::prune::{PruneMethod, Pruner};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+/// Per-tensor gradient L2-norm clip.  The quantized-STE loss surface is
+/// piecewise constant in places and occasionally spikes; clipping keeps a
+/// short-rung search from diverging on an unlucky batch.
+const GRAD_CLIP: f32 = 5.0;
+
+/// One layer's forward tape (everything the backward pass needs; the raw
+/// pre-BN response is not kept — BN backward runs on `zhat`).
+struct Tape {
+    /// Layer input values `[b, in_f]` (dequantized activation values).
+    a_in: Vec<f32>,
+    /// Batch mean / biased variance per neuron.
+    mu: Vec<f32>,
+    var: Vec<f32>,
+    /// Normalized response `[b, out_f]`.
+    zhat: Vec<f32>,
+    /// BN output (quantizer input) `[b, out_f]`.
+    y: Vec<f32>,
+}
+
+/// STE pass-through mask: 1.0 where the activation quantizer's gradient
+/// flows.  `bw == 1` is QuantHardTanh (pass inside `|y| <= maxv`), wider
+/// widths are QuantReLU (pass inside `[0, maxv]`).
+#[inline]
+fn ste_gate(bw: usize, maxv: f32, y: f32) -> f32 {
+    let pass = if bw == 1 { y.abs() <= maxv } else { (0.0..=maxv).contains(&y) };
+    if pass {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Output quantizer spec of layer `i` (hidden vs final head), mirroring
+/// `ExportedModel::from_state`.
+fn quant_out_of(man: &Manifest, i: usize) -> crate::nn::QuantSpec {
+    let last = i + 1 == man.num_layers();
+    crate::nn::QuantSpec::new(
+        if last { man.bw_out } else { man.bw },
+        if last { man.maxv_out } else { man.maxv_hidden },
+    )
+}
+
+fn clip_grad(g: &mut [f32]) {
+    let norm = g.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32;
+    if norm > GRAD_CLIP && norm.is_finite() {
+        let s = GRAD_CLIP / norm;
+        for v in g.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// Gradients of one layer, dense `[out_f, in_f]` like the state tensors.
+struct LayerGrads {
+    w: Vec<f32>,
+    b: Vec<f32>,
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+/// Run `opts.steps` native optimizer steps of the manifest's model on
+/// `train_set`.  Same contract as [`super::train`]: mutates `state` in
+/// place and returns the log.  Supports the MLP family (`skips == 0`);
+/// conv manifests must go through the HLO path.
+pub fn train_native(
+    man: &Manifest,
+    state: &mut ModelState,
+    train_set: &DataSet,
+    opts: &TrainOpts,
+) -> Result<TrainLog> {
+    ensure!(train_set.d == man.in_features, "dataset width mismatch");
+    ensure!(train_set.classes == man.classes, "dataset class mismatch");
+    ensure!(man.skips == 0, "native trainer supports skip-free MLPs only");
+    ensure!(man.kind == "mlp", "native trainer supports kind=mlp only (got {})", man.kind);
+    let n = man.num_layers();
+    ensure!(state.num_layers() == n, "state/manifest layer count mismatch");
+    let b = man.batch.max(1);
+    let mut rng = Rng::new(opts.seed ^ 0x6e617469); // "nati"
+    let pruners: Vec<Pruner> =
+        (0..n).map(|i| Pruner::new(opts.method, man.layers[i].fanin)).collect();
+    let needs_grads = matches!(opts.method, PruneMethod::Momentum { .. });
+    let mut log = TrainLog::default();
+    let t0 = std::time::Instant::now();
+
+    for step in 0..opts.steps {
+        let (bx, by) = train_set.sample_batch(b, &mut rng);
+        let lr = opts.lr * (1.0 - 0.9 * step as f32 / opts.steps.max(1) as f32);
+
+        // ---------------- forward (batch BN stats, quantized acts) --------
+        let mut tapes: Vec<Tape> = Vec::with_capacity(n);
+        // Input quantizer of layer 0 (values domain, like nn::export).
+        let q0 = crate::nn::QuantSpec::new(man.layers[0].bw_in, man.layers[0].maxv_in);
+        let mut act: Vec<f32> = bx.iter().map(|&v| q0.quantize(v)).collect();
+        for i in 0..n {
+            let l = &man.layers[i];
+            let (out_f, in_f) = (l.out_f, l.in_f);
+            debug_assert_eq!(act.len(), b * in_f, "layer {i} input width");
+            let w = &state.ws[i];
+            let mut z = vec![0f32; b * out_f];
+            for s in 0..b {
+                let xs = &act[s * in_f..(s + 1) * in_f];
+                let zs = &mut z[s * out_f..(s + 1) * out_f];
+                for (o, zo) in zs.iter_mut().enumerate() {
+                    let row = &w[o * in_f..(o + 1) * in_f];
+                    let mut acc = state.bs[i][o];
+                    for (wv, xv) in row.iter().zip(xs) {
+                        acc += wv * xv;
+                    }
+                    *zo = acc;
+                }
+            }
+            // Batch statistics (biased variance, like standard BN training).
+            let mut mu = vec![0f32; out_f];
+            let mut var = vec![0f32; out_f];
+            for s in 0..b {
+                for o in 0..out_f {
+                    mu[o] += z[s * out_f + o];
+                }
+            }
+            for m in mu.iter_mut() {
+                *m /= b as f32;
+            }
+            for s in 0..b {
+                for o in 0..out_f {
+                    let d = z[s * out_f + o] - mu[o];
+                    var[o] += d * d;
+                }
+            }
+            for v in var.iter_mut() {
+                *v /= b as f32;
+            }
+            let mut zhat = vec![0f32; b * out_f];
+            let mut y = vec![0f32; b * out_f];
+            for o in 0..out_f {
+                let inv = 1.0 / (var[o] + man.bn_eps).sqrt();
+                let (g, be) = (state.gammas[i][o], state.betas[i][o]);
+                for s in 0..b {
+                    let zh = (z[s * out_f + o] - mu[o]) * inv;
+                    zhat[s * out_f + o] = zh;
+                    y[s * out_f + o] = g * zh + be;
+                }
+            }
+            let q = quant_out_of(man, i);
+            let next: Vec<f32> = y.iter().map(|&v| q.quantize(v)).collect();
+            tapes.push(Tape { a_in: std::mem::take(&mut act), mu, var, zhat, y });
+            act = next;
+        }
+
+        // ---------------- loss on quantized logits -------------------------
+        // Mirrors python/compile/model.py::loss_fn exactly: softmax CE at
+        // the 8/maxv_out logit temperature (the quantized logit range is
+        // narrow; the fixed positive scale keeps gradients healthy without
+        // changing the argmax), or MSE against maxv_out-scaled one-hot
+        // targets when the manifest disables the softmax head.
+        let c = man.classes;
+        debug_assert_eq!(act.len(), b * c);
+        let mut loss = 0f32;
+        // dL/d(quantized logits), mean-reduced over the batch.
+        let mut grad: Vec<f32> = vec![0.0; b * c];
+        if man.train_softmax {
+            let temp = 8.0 / man.maxv_out;
+            for s in 0..b {
+                let row = &act[s * c..(s + 1) * c];
+                let scaled: Vec<f32> = row.iter().map(|v| v * temp).collect();
+                let m = scaled.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> = scaled.iter().map(|v| (v - m).exp()).collect();
+                let sum: f32 = exps.iter().sum();
+                let t = by[s] as usize;
+                loss += -(exps[t] / sum).max(1e-12).ln();
+                for k in 0..c {
+                    let p = exps[k] / sum;
+                    grad[s * c + k] = temp * (p - if k == t { 1.0 } else { 0.0 }) / b as f32;
+                }
+            }
+        } else {
+            for s in 0..b {
+                let row = &act[s * c..(s + 1) * c];
+                let t = by[s] as usize;
+                for k in 0..c {
+                    let target = if k == t { man.maxv_out } else { 0.0 };
+                    let d = row[k] - target;
+                    loss += d * d;
+                    grad[s * c + k] = 2.0 * d / b as f32;
+                }
+            }
+        }
+        loss /= b as f32;
+
+        // ---------------- backward ----------------------------------------
+        let mut grads: Vec<Option<LayerGrads>> = (0..n).map(|_| None).collect();
+        // `grad` holds dL/d(layer i's quantized output) entering iteration i.
+        for i in (0..n).rev() {
+            let l = &man.layers[i];
+            let (out_f, in_f) = (l.out_f, l.in_f);
+            let tape = &tapes[i];
+            let q = quant_out_of(man, i);
+            // STE through the activation quantizer.
+            let mut dy = grad;
+            for (g, &yv) in dy.iter_mut().zip(&tape.y) {
+                *g *= ste_gate(q.bw, q.maxv, yv);
+            }
+            // BN backward (batch statistics).
+            let mut dgamma = vec![0f32; out_f];
+            let mut dbeta = vec![0f32; out_f];
+            let mut dz = vec![0f32; b * out_f];
+            for o in 0..out_f {
+                let inv = 1.0 / (tape.var[o] + man.bn_eps).sqrt();
+                let g = state.gammas[i][o];
+                let mut sum_dzh = 0f32;
+                let mut sum_dzh_zh = 0f32;
+                for s in 0..b {
+                    let dyv = dy[s * out_f + o];
+                    dgamma[o] += dyv * tape.zhat[s * out_f + o];
+                    dbeta[o] += dyv;
+                    let dzh = dyv * g;
+                    sum_dzh += dzh;
+                    sum_dzh_zh += dzh * tape.zhat[s * out_f + o];
+                }
+                for s in 0..b {
+                    let dzh = dy[s * out_f + o] * g;
+                    dz[s * out_f + o] = inv
+                        * (dzh - sum_dzh / b as f32
+                            - tape.zhat[s * out_f + o] * sum_dzh_zh / b as f32);
+                }
+            }
+            // Linear backward.
+            let mut dw = vec![0f32; out_f * in_f];
+            let mut db = vec![0f32; out_f];
+            let mut dx = vec![0f32; b * in_f];
+            let w = &state.ws[i];
+            for s in 0..b {
+                let xs = &tape.a_in[s * in_f..(s + 1) * in_f];
+                let dzs = &dz[s * out_f..(s + 1) * out_f];
+                let dxs = &mut dx[s * in_f..(s + 1) * in_f];
+                for (o, &dzo) in dzs.iter().enumerate() {
+                    db[o] += dzo;
+                    let wrow = &w[o * in_f..(o + 1) * in_f];
+                    let drow = &mut dw[o * in_f..(o + 1) * in_f];
+                    for j in 0..in_f {
+                        drow[j] += dzo * xs[j];
+                        dxs[j] += dzo * wrow[j];
+                    }
+                }
+            }
+            // Off-mask weight gradients are structural zeros.
+            let dense = state.masks[i].to_dense_f32();
+            for (gv, m) in dw.iter_mut().zip(&dense) {
+                if *m == 0.0 {
+                    *gv = 0.0;
+                }
+            }
+            clip_grad(&mut dw);
+            clip_grad(&mut db);
+            clip_grad(&mut dgamma);
+            clip_grad(&mut dbeta);
+            if needs_grads {
+                let alpha = opts.momentum_alpha;
+                for (m, g) in state.momentum_m[i].iter_mut().zip(&dw) {
+                    *m = alpha * *m + (1.0 - alpha) * g;
+                }
+            }
+            grads[i] = Some(LayerGrads { w: dw, b: db, gamma: dgamma, beta: dbeta });
+            // Gradient w.r.t. this layer's input values becomes the next
+            // iteration's output gradient (layer i-1's quantizer output).
+            grad = dx;
+        }
+
+        // ---------------- SGD + momentum update ---------------------------
+        let mu_v = man.momentum;
+        for i in 0..n {
+            let g = grads[i].take().expect("layer grads");
+            for ((wv, vv), gv) in
+                state.ws[i].iter_mut().zip(state.vws[i].iter_mut()).zip(&g.w)
+            {
+                *vv = mu_v * *vv + gv;
+                *wv -= lr * *vv;
+            }
+            for ((bv, vv), gv) in
+                state.bs[i].iter_mut().zip(state.vbs[i].iter_mut()).zip(&g.b)
+            {
+                *vv = mu_v * *vv + gv;
+                *bv -= lr * *vv;
+            }
+            for ((gm, vv), gv) in
+                state.gammas[i].iter_mut().zip(state.vgammas[i].iter_mut()).zip(&g.gamma)
+            {
+                *vv = mu_v * *vv + gv;
+                *gm -= lr * *vv;
+            }
+            for ((be, vv), gv) in
+                state.betas[i].iter_mut().zip(state.vbetas[i].iter_mut()).zip(&g.beta)
+            {
+                *vv = mu_v * *vv + gv;
+                *be -= lr * *vv;
+            }
+            state.apply_mask(i);
+            // Running BN statistics (EMA over batch stats).
+            for (r, bm) in state.rmeans[i].iter_mut().zip(&tapes[i].mu) {
+                *r = opts.bn_ema * *r + (1.0 - opts.bn_ema) * bm;
+            }
+            for (r, bv) in state.rvars[i].iter_mut().zip(&tapes[i].var) {
+                *r = opts.bn_ema * *r + (1.0 - opts.bn_ema) * bv;
+            }
+        }
+
+        // ---------------- pruning schedules --------------------------------
+        if !matches!(opts.method, PruneMethod::APriori) {
+            for i in 0..n {
+                let event = match opts.method {
+                    PruneMethod::Iterative { every } | PruneMethod::Momentum { every, .. } => {
+                        prune_event(step, every)
+                    }
+                    PruneMethod::APriori => false,
+                };
+                if !event {
+                    continue;
+                }
+                // Split borrow: ws/momentum_m read-only, masks mutable —
+                // disjoint fields, no tensor copies in the train loop.
+                let changed = pruners[i].on_step(
+                    step,
+                    opts.steps,
+                    &state.ws[i],
+                    &state.momentum_m[i],
+                    &mut state.masks[i],
+                );
+                if changed {
+                    state.apply_mask(i);
+                    log.mask_updates += 1;
+                }
+            }
+        }
+
+        if should_log(step, opts.steps, opts.log_every) {
+            log.losses.push((step, loss));
+            if opts.verbose {
+                eprintln!("native step {step:5}  loss {loss:.4}  lr {lr:.4}");
+            }
+        }
+        log.final_loss = loss;
+    }
+
+    log.steps = opts.steps;
+    log.seconds = t0.elapsed().as_secs_f64();
+    Ok(log)
+}
+
+/// Evaluate `state` on `test` through the exported pure-Rust mirror
+/// (folded BN over *running* statistics — the same path truth tables,
+/// synthesis and serving see).  Returns row-major logits `[n, classes]`.
+pub fn evaluate_native(man: &Manifest, state: &ModelState, test: &DataSet) -> Vec<f32> {
+    crate::nn::ExportedModel::from_state(man, state).forward_batch(&test.x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+
+    fn man(hidden: &[usize], fanin: usize, bw: usize) -> Manifest {
+        crate::runtime::Manifest::synthetic_mlp("native_t", "jets", 16, 5, hidden, fanin, bw)
+    }
+
+    #[test]
+    fn loss_decreases_on_jets() {
+        let man = man(&[32], 3, 2);
+        let ds = crate::hep::jets(2_000, 17);
+        let mut st = ModelState::init(&man, 17, PruneMethod::APriori);
+        let mut opts = TrainOpts::from_manifest(&man);
+        opts.steps = 120;
+        opts.log_every = 10;
+        let log = train_native(&man, &mut st, &ds, &opts).unwrap();
+        assert_eq!(log.steps, 120);
+        let first = log.losses.first().unwrap().1;
+        assert!(
+            log.final_loss < first,
+            "loss should drop: {first} -> {}",
+            log.final_loss
+        );
+        assert!(log.final_loss.is_finite());
+        // Training must beat chance on the training distribution.
+        let logits = evaluate_native(&man, &st, &ds);
+        let acc = metrics::accuracy(&logits, &ds.y, man.classes);
+        assert!(acc > 0.30, "trained accuracy {acc} is not above chance");
+    }
+
+    #[test]
+    fn masks_are_respected_throughout() {
+        let man = man(&[24, 24], 3, 2);
+        let ds = crate::hep::jets(600, 5);
+        let mut st = ModelState::init(&man, 5, PruneMethod::APriori);
+        let masks_before = st.masks.clone();
+        let mut opts = TrainOpts::from_manifest(&man);
+        opts.steps = 30;
+        train_native(&man, &mut st, &ds, &opts).unwrap();
+        // A-priori masks never move, and off-mask weights stay zero.
+        assert_eq!(st.masks, masks_before);
+        for i in 0..st.num_layers() {
+            let dense = st.masks[i].to_dense_f32();
+            for (w, m) in st.ws[i].iter().zip(&dense) {
+                if *m == 0.0 {
+                    assert_eq!(*w, 0.0, "off-mask weight updated in layer {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let man = man(&[16], 2, 2);
+        let ds = crate::hep::jets(400, 9);
+        let run = |seed: u64| {
+            let mut st = ModelState::init(&man, seed, PruneMethod::APriori);
+            let mut opts = TrainOpts::from_manifest(&man);
+            opts.steps = 25;
+            opts.seed = seed;
+            train_native(&man, &mut st, &ds, &opts).unwrap();
+            st.ws.clone()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn iterative_pruning_reaches_target_fanin() {
+        let man = man(&[16], 3, 2);
+        let ds = crate::hep::jets(400, 13);
+        let mut st = ModelState::init(&man, 13, PruneMethod::Iterative { every: 5 });
+        assert!(st.masks[0].is_dense(), "iterative starts dense");
+        let mut opts = TrainOpts::from_manifest(&man);
+        opts.steps = 60;
+        opts.method = PruneMethod::Iterative { every: 5 };
+        let log = train_native(&man, &mut st, &ds, &opts).unwrap();
+        assert!(log.mask_updates > 0, "iterative pruning must fire");
+        assert!(st.masks[0].max_fanin() < 16, "fan-in must shrink from dense");
+    }
+}

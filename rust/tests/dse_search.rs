@@ -1,0 +1,196 @@
+//! Search-engine test suite (ISSUE 3 satellite): property tests over the
+//! Pareto frontier, determinism of successive halving, gate-vs-exact
+//! pricing agreement, and the resume contract.
+
+use logicnets::cost;
+use logicnets::dse::search::{
+    generate, run_search, Archive, CostGate, SearchAxes, SearchOpts, SearchTask,
+};
+use logicnets::dse::{pareto_frontier, DesignPoint};
+use logicnets::luts::ModelTables;
+use logicnets::nn::ExportedModel;
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, SynthOpts};
+use logicnets::train::ModelState;
+use logicnets::util::prop::{forall, small_size};
+use logicnets::util::rng::Rng;
+
+/// Strict Pareto dominance (the library's `dominated` definition).
+fn dominates(q: &DesignPoint, p: &DesignPoint) -> bool {
+    (q.luts <= p.luts && q.quality > p.quality)
+        || (q.luts < p.luts && q.quality >= p.quality)
+}
+
+/// Best quality achievable at or below a cost, per a frontier.
+fn best_at(frontier: &[DesignPoint], luts: u64) -> f64 {
+    frontier
+        .iter()
+        .filter(|p| p.luts <= luts)
+        .map(|p| p.quality)
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+fn rand_point(rng: &mut Rng, i: usize, allow_nan: bool) -> DesignPoint {
+    DesignPoint {
+        name: format!("p{i}"),
+        luts: rng.below(1_000) as u64,
+        quality: if allow_nan && rng.below(16) == 0 {
+            f64::NAN
+        } else {
+            rng.range_f64(0.0, 100.0)
+        },
+    }
+}
+
+#[test]
+fn prop_frontier_nondominated_and_monotone() {
+    forall("frontier-nondominated", 0xD5E1, 150, |rng: &mut Rng| {
+        let n = small_size(rng, 40);
+        let pts: Vec<DesignPoint> =
+            (0..n).map(|i| rand_point(rng, i, true)).collect();
+        let f = pareto_frontier(&pts);
+        // Monotone: nondecreasing cost, strictly increasing quality.
+        assert!(
+            f.windows(2).all(|w| w[0].luts <= w[1].luts && w[0].quality < w[1].quality),
+            "frontier not monotone"
+        );
+        // Non-dominated against every (finite) input point.
+        for p in &f {
+            for q in pts.iter().filter(|q| !q.quality.is_nan()) {
+                assert!(!dominates(q, p), "frontier point {p:?} dominated by {q:?}");
+            }
+        }
+        // Every finite input point is dominated-or-equal by the frontier.
+        for q in pts.iter().filter(|q| !q.quality.is_nan()) {
+            assert!(best_at(&f, q.luts) >= q.quality, "{q:?} above its frontier");
+        }
+    });
+}
+
+#[test]
+fn prop_frontier_monotone_under_insertion() {
+    forall("frontier-insertion", 0xD5E2, 150, |rng: &mut Rng| {
+        let n = small_size(rng, 30);
+        let pts: Vec<DesignPoint> =
+            (0..n).map(|i| rand_point(rng, i, false)).collect();
+        let f1 = pareto_frontier(&pts);
+        let mut pts2 = pts.clone();
+        pts2.push(rand_point(rng, n, true));
+        let f2 = pareto_frontier(&pts2);
+        // Inserting a point can only improve (or keep) the best quality
+        // available at every cost level.
+        for probe in pts.iter().map(|p| p.luts).chain([0, 500, 1_000]) {
+            assert!(
+                best_at(&f2, probe) >= best_at(&f1, probe),
+                "insertion worsened the frontier at cost {probe}"
+            );
+        }
+    });
+}
+
+#[test]
+fn gate_agrees_with_exact_synthesize_pricing() {
+    // Small but full axis product; every candidate is cross-checked
+    // against the real Manifest pricing and a real synthesis run.
+    let axes = SearchAxes {
+        widths: vec![8, 12],
+        depths: vec![1, 2],
+        fanins: vec![2, 3],
+        bws: vec![1, 2],
+        methods: vec![PruneMethod::APriori],
+        bram_min_bits: vec![13],
+    };
+    let budget = 2_000u64;
+    let gate = CostGate { budget_luts: budget };
+    for c in generate(&axes, 5, usize::MAX) {
+        let man = c.manifest("jets", 16, 5);
+        let exact_total = cost::total_luts(&cost::manifest_cost(&man));
+        // The gate's fast-path price IS the exact analytical price...
+        assert_eq!(gate.price(&c, 16, 5), exact_total, "{}", c.name());
+        // ...so the gate never rejects a candidate the exact pricing
+        // would accept (and never admits one it would reject).
+        assert_eq!(gate.admits(gate.price(&c, 16, 5)), exact_total <= budget);
+        // And the sparse-prefix share equals what `synthesize` reports as
+        // the analytical bound for the mapped netlist.
+        let st = ModelState::init(&man, 1, PruneMethod::APriori);
+        let ex = ExportedModel::from_state(&man, &st);
+        let tables = ModelTables::generate(&ex).unwrap();
+        let (_, rep) = synthesize(
+            &ex,
+            &tables,
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.analytical_luts, c.sparse_prefix_luts(16), "{}", c.name());
+    }
+}
+
+fn tiny_axes() -> SearchAxes {
+    SearchAxes {
+        widths: vec![8, 12],
+        depths: vec![1],
+        fanins: vec![2],
+        bws: vec![1, 2],
+        methods: vec![PruneMethod::APriori],
+        bram_min_bits: vec![13],
+    }
+}
+
+fn tiny_opts(dir: &str, seed: u64) -> SearchOpts {
+    let out_dir = std::env::temp_dir().join(dir);
+    let _ = std::fs::remove_dir_all(&out_dir);
+    SearchOpts {
+        budget_luts: 5_000,
+        rungs: 2,
+        base_steps: 6,
+        eta: 2,
+        seed,
+        max_candidates: 4,
+        out_dir,
+        resume: false,
+        emit: 0,
+    }
+}
+
+type FrontierKey = Vec<(String, u64, f64)>;
+
+fn frontier_key(points: &[DesignPoint]) -> FrontierKey {
+    points.iter().map(|p| (p.name.clone(), p.luts, p.quality)).collect()
+}
+
+#[test]
+fn successive_halving_is_deterministic_for_fixed_seed() {
+    let task = SearchTask::jets_small(600, 3);
+    let a = run_search(&task, &tiny_axes(), &tiny_opts("lnck_dse_det_a", 9)).unwrap();
+    let b = run_search(&task, &tiny_axes(), &tiny_opts("lnck_dse_det_b", 9)).unwrap();
+    assert_eq!(frontier_key(&a.frontier), frontier_key(&b.frontier));
+    assert_eq!(a.steps_trained, b.steps_trained);
+    assert_eq!((a.admitted, a.gated), (b.admitted, b.gated));
+    // A different seed must be allowed to differ (and candidate order
+    // does, so trained qualities virtually always do).
+    let c = run_search(&task, &tiny_axes(), &tiny_opts("lnck_dse_det_c", 10)).unwrap();
+    assert_eq!(c.admitted, a.admitted, "gate decisions are seed-independent");
+}
+
+#[test]
+fn resume_performs_zero_retraining_and_replays_the_frontier() {
+    let task = SearchTask::jets_small(600, 7);
+    let opts = tiny_opts("lnck_dse_resume", 4);
+    let fresh = run_search(&task, &tiny_axes(), &opts).unwrap();
+    assert!(fresh.steps_trained > 0, "fresh run must train");
+    let resumed = run_search(
+        &task,
+        &tiny_axes(),
+        &SearchOpts { resume: true, ..opts.clone() },
+    )
+    .unwrap();
+    assert_eq!(resumed.steps_trained, 0, "resume must not retrain archived points");
+    assert_eq!(frontier_key(&fresh.frontier), frontier_key(&resumed.frontier));
+    // The archive on disk survives both runs and stays loadable.
+    let archive = Archive::load(&fresh.archive_path).unwrap();
+    assert!(!archive.entries.is_empty());
+    // Changed parameters must refuse to resume rather than silently
+    // diverge.
+    let incompatible = SearchOpts { resume: true, seed: 5, ..opts };
+    assert!(run_search(&task, &tiny_axes(), &incompatible).is_err());
+}
