@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         out_dir: out_dir.clone(),
         resume: false,
         emit: 1,
+        emit_zoo: false,
     };
 
     let t0 = std::time::Instant::now();

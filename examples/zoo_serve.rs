@@ -1,0 +1,158 @@
+//! Zoo-serving smoke gate (no artifacts needed): run a small automated
+//! search with `emit_zoo`, then serve the emitted manifest budget-routed,
+//! end to end — and FAIL (non-zero exit) if any stage regresses:
+//!
+//! * `explore --emit-zoo` must write a `zoo.json` with >= 2 registered
+//!   models, every one 3-D (LUTs, quality, latency) non-dominated and
+//!   carrying calibrated (> 0) p50/p99 latencies,
+//! * `serve --zoo` must rebuild every entry from its checkpoint into a
+//!   machine-verified netlist engine,
+//! * a strict-latency-budget request and a no-budget request must route
+//!   to two *different* registered models,
+//! * mixed-budget traffic must complete with sane per-model stats.
+//!
+//! CI runs this; locally: `cargo run --release --example zoo_serve`.
+
+use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask};
+use logicnets::dse::{dominates_3d, pareto_frontier_3d};
+use logicnets::serve::router::Budget;
+use logicnets::serve::zoo::{serve_zoo, ZooManifest};
+use logicnets::serve::ServerConfig;
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::temp_dir().join("logicnets_zoo_smoke");
+    // Fresh directory so the search cannot accidentally resume.
+    let _ = std::fs::remove_dir_all(&out_dir);
+
+    let task = SearchTask::jets_small(4_000, 31);
+    // Wide LUT spread (16- vs 64-neuron layers, 1- vs 2-bit activations)
+    // so the emitted frontier has clearly separated cost/quality points.
+    let axes = SearchAxes {
+        widths: vec![16, 64],
+        depths: vec![1, 2],
+        fanins: vec![2, 4],
+        bws: vec![1, 2],
+        methods: vec![PruneMethod::APriori],
+        bram_min_bits: vec![13],
+    };
+    let opts = SearchOpts {
+        budget_luts: 60_000,
+        rungs: 2,
+        base_steps: 20,
+        eta: 2,
+        seed: 31,
+        max_candidates: 8,
+        out_dir: out_dir.clone(),
+        resume: false,
+        // Emit the whole frontier (cap >= candidate pool), so the zoo
+        // spans the full cheap-to-best range and budget routing has real
+        // choices.
+        emit: 8,
+        emit_zoo: true,
+    };
+
+    let t0 = std::time::Instant::now();
+    let out = run_search(&task, &axes, &opts)?;
+    println!(
+        "smoke search: {} generated / {} admitted, {} emitted, {:.1}s",
+        out.generated,
+        out.admitted,
+        out.emitted.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Gate 1: a zoo manifest with at least two registered models.
+    let zoo_path = out.zoo_path.ok_or_else(|| anyhow::anyhow!("no zoo.json written"))?;
+    let zoo = ZooManifest::load(&zoo_path)?;
+    anyhow::ensure!(
+        zoo.entries.len() >= 2,
+        "zoo needs >= 2 models for budget routing, got {}",
+        zoo.entries.len()
+    );
+    for e in &zoo.entries {
+        println!(
+            "  zoo entry {}: {} LUTs, quality {:.2}, p50 {:.1}us, p99 {:.1}us",
+            e.name, e.luts, e.quality, e.p50_us, e.p99_us
+        );
+        // Gate 2: calibrated latencies, never the empty-reservoir 0.0.
+        anyhow::ensure!(
+            e.p50_us > 0.0 && e.p99_us >= e.p50_us,
+            "{} has uncalibrated latency",
+            e.name
+        );
+    }
+    // Gate 3: every registered entry is 3-D non-dominated.
+    let pts = zoo.points();
+    for p in &pts {
+        for q in &pts {
+            anyhow::ensure!(!dominates_3d(q, p), "zoo entry {} dominated by {}", p.name, q.name);
+        }
+    }
+    anyhow::ensure!(pareto_frontier_3d(&pts).len() == pts.len(), "zoo is not its own frontier");
+
+    // Gate 4: the manifest serves — every entry rebuilds from its
+    // checkpoint into a verified netlist engine behind its own pool.
+    let server = serve_zoo(
+        &zoo_path,
+        &ServerConfig { workers: 2, max_batch: 16, ..Default::default() },
+    )?;
+    let cheap = server.models()[0].clone();
+    let best = server.best_model().to_string();
+    anyhow::ensure!(
+        cheap.name != best,
+        "cheapest ({}) and best-quality ({best}) models coincide; zoo: {:?}",
+        cheap.name,
+        zoo.points()
+    );
+
+    // Gate 5: a strict-latency-budget request and a no-budget request
+    // route to two different registered models.
+    let x = task.test.x[..task.test.d].to_vec();
+    let strict_budget = Budget::latency_us(cheap.p99_us);
+    let (_, strict_model) = server
+        .infer(x.clone(), &strict_budget)
+        .ok_or_else(|| anyhow::anyhow!("strict-budget request failed"))?;
+    let strict_model = strict_model.to_string();
+    let (_, free_model) = server
+        .infer(x, &Budget::none())
+        .ok_or_else(|| anyhow::anyhow!("no-budget request failed"))?;
+    let free_model = free_model.to_string();
+    println!("routing: strict (p99<={:.1}us) -> {strict_model}, no budget -> {free_model}", cheap.p99_us);
+    anyhow::ensure!(strict_model == cheap.name, "strict budget must route to the cheapest model");
+    anyhow::ensure!(free_model == best, "no budget must route to the best-quality model");
+    anyhow::ensure!(strict_model != free_model, "budget routing hit a single model");
+
+    // Gate 6: mixed-budget traffic completes with sane per-model stats.
+    let mut rng = Rng::new(5);
+    let n_req = 400usize;
+    for k in 0..n_req {
+        let i = rng.below(task.test.n);
+        let row = task.test.x[i * task.test.d..(i + 1) * task.test.d].to_vec();
+        let budget = if k % 2 == 0 { Budget::none() } else { strict_budget };
+        anyhow::ensure!(server.infer(row, &budget).is_some(), "request {k} failed");
+    }
+    let stats = server.stats();
+    let routed: u64 = stats.iter().map(|m| m.routed).sum();
+    let completed: u64 = stats.iter().map(|m| m.stats.completed).sum();
+    anyhow::ensure!(routed == n_req as u64 + 2, "routed {routed} != {}", n_req + 2);
+    anyhow::ensure!(completed == n_req as u64 + 2, "completed {completed} != {}", n_req + 2);
+    anyhow::ensure!(server.fallbacks() == 0, "unexpected budget fallbacks");
+    for m in &stats {
+        println!(
+            "  served {}: routed {} completed {} live p50 {:.1}us p99 {:.1}us",
+            m.name, m.routed, m.stats.completed, m.stats.p50_us, m.stats.p99_us
+        );
+        if m.routed > 0 {
+            anyhow::ensure!(
+                m.stats.lat_samples > 0 && m.stats.p50_us > 0.0 && m.stats.p99_us >= m.stats.p50_us,
+                "{}: implausible latency stats",
+                m.name
+            );
+        }
+    }
+    server.shutdown();
+    println!("zoo-serve gate: OK");
+    Ok(())
+}

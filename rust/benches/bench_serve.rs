@@ -6,15 +6,16 @@
 use logicnets::luts::ModelTables;
 use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
 use logicnets::serve::engine::InferScratch;
-use logicnets::serve::{LutEngine, NetlistEngine, Server, ServerConfig};
+use logicnets::serve::router::{Budget, ModelMeta, ZooServer};
+use logicnets::serve::zoo::calibrate_latency;
+use logicnets::serve::{Backend, LutEngine, NetlistEngine, Server, ServerConfig};
 use logicnets::util::bench::bench;
 use logicnets::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Duration;
 
-fn hep_like_model(seed: u64) -> ExportedModel {
+fn hep_like_model_widths(seed: u64, widths: &[usize]) -> ExportedModel {
     let mut rng = Rng::new(seed);
-    let widths = [64usize, 64, 64];
     let mut layers = Vec::new();
     let mut prev = 16usize;
     for (k, &w) in widths.iter().enumerate() {
@@ -48,13 +49,19 @@ fn hep_like_model(seed: u64) -> ExportedModel {
         })
         .collect();
     layers.push(ExportedLayer::uniform(neurons, prev, QuantSpec::new(2, 2.0), QuantSpec::new(4, 4.0), false));
+    let mut act_widths = vec![16];
+    act_widths.extend_from_slice(widths);
     ExportedModel {
         layers,
         in_features: 16,
         classes: 5,
         skips: 0,
-        act_widths: vec![16, 64, 64, 64],
+        act_widths,
     }
+}
+
+fn hep_like_model(seed: u64) -> ExportedModel {
+    hep_like_model_widths(seed, &[64, 64, 64])
 }
 
 fn main() {
@@ -161,4 +168,79 @@ fn main() {
         "", st.p50_us, st.p95_us, st.p99_us, st.mean_batch
     );
     server.shutdown();
+
+    // Zoo scenario: budget routing across a cheap and an expensive
+    // netlist behind per-model worker pools.  Calibrated p99s feed the
+    // router exactly like a DSE-emitted zoo.json would; traffic is an
+    // even mix of unbudgeted (best-quality) and strict-latency requests.
+    let small_model = hep_like_model_widths(2, &[16]);
+    let small_tables = ModelTables::generate(&small_model).unwrap();
+    let small = Arc::new(NetlistEngine::build(&small_model, &small_tables).unwrap());
+    let big = Arc::new(NetlistEngine::build(&model, &tables).unwrap());
+    let (s50, s99) = calibrate_latency(&*small, &xs[..16 * 64], 200);
+    let (b50, b99) = calibrate_latency(&*big, &xs[..16 * 64], 200);
+    println!(
+        "zoo calibration: small {} LUTs p50 {:.1}us p99 {:.1}us | big {} LUTs p50 {:.1}us p99 {:.1}us",
+        small.num_luts(),
+        s50,
+        s99,
+        big.num_luts(),
+        b50,
+        b99
+    );
+    let zoo = ZooServer::start(
+        vec![
+            (
+                ModelMeta {
+                    name: "small".into(),
+                    luts: small.num_luts() as u64,
+                    brams: 0,
+                    quality: 60.0,
+                    p50_us: s50,
+                    p99_us: s99,
+                },
+                small.clone() as Arc<dyn Backend>,
+            ),
+            (
+                ModelMeta {
+                    name: "big".into(),
+                    luts: big.num_luts() as u64,
+                    brams: 0,
+                    quality: 90.0,
+                    p50_us: b50,
+                    p99_us: b99,
+                },
+                big.clone() as Arc<dyn Backend>,
+            ),
+        ],
+        &ServerConfig { workers: 2, max_batch: 64, ..Default::default() },
+    )
+    .unwrap();
+    let strict = Budget::latency_us(s99);
+    let r = bench("zoo router 8 clients x 4000 req (50% budgeted)", Duration::from_millis(1200), || {
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let zoo = &zoo;
+                let xs = &xs;
+                let strict = &strict;
+                s.spawn(move || {
+                    let mut rng = Rng::new(200 + t as u64);
+                    for k in 0..per / 8 {
+                        let i = rng.below(batch);
+                        let budget = if k % 2 == 0 { Budget::none() } else { *strict };
+                        let _ = zoo.infer(xs[i * 16..(i + 1) * 16].to_vec(), &budget);
+                    }
+                });
+            }
+        });
+    });
+    r.report_throughput(per as f64, "inf");
+    for m in zoo.stats() {
+        println!(
+            "{:<12} routed {:>8}  completed {:>8}  p50 {:.0}us p99 {:.0}us fill {:.1}",
+            m.name, m.routed, m.stats.completed, m.stats.p50_us, m.stats.p99_us, m.stats.mean_batch
+        );
+    }
+    println!("zoo fallbacks: {}", zoo.fallbacks());
+    zoo.shutdown();
 }

@@ -48,6 +48,67 @@ pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
     out
 }
 
+/// One calibrated serving-zoo point: two cost axes (LUTs, measured p99
+/// serving latency — both minimized) plus quality (maximized).  This is the
+/// multi-objective extension of [`DesignPoint`] used by the DSE→serving
+/// handoff: the emitted zoo must be non-dominated in all three dimensions,
+/// not just the (LUTs, quality) plane the search archive ranks on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ZooPoint {
+    pub name: String,
+    pub luts: u64,
+    /// Higher is better (100 × avg AUC, like [`DesignPoint::quality`]).
+    pub quality: f64,
+    /// Measured p99 single-request latency in microseconds (lower is
+    /// better).
+    pub latency_us: f64,
+}
+
+/// `a` dominates `b` in the 3-D (LUTs ↓, quality ↑, latency ↓) order:
+/// no worse on every axis and strictly better on at least one.  Callers
+/// must filter NaN axes first (NaN compares false everywhere here, so a
+/// NaN point would spuriously look non-dominated).
+pub fn dominates_3d(a: &ZooPoint, b: &ZooPoint) -> bool {
+    let no_worse =
+        a.luts <= b.luts && a.quality >= b.quality && a.latency_us <= b.latency_us;
+    let better = a.luts < b.luts || a.quality > b.quality || a.latency_us < b.latency_us;
+    no_worse && better
+}
+
+/// 3-D Pareto frontier over (LUTs ↓, quality ↑, measured latency ↓),
+/// sorted by LUTs.  Same NaN policy as [`pareto_frontier`]: a point with a
+/// NaN quality *or* NaN latency (a failed calibration pass) is dropped
+/// with a warning instead of aborting the sort, and all float comparisons
+/// use the IEEE total order.  Duplicate points (identical on every axis)
+/// are all kept — neither dominates the other.
+pub fn pareto_frontier_3d(points: &[ZooPoint]) -> Vec<ZooPoint> {
+    let n_nan = points
+        .iter()
+        .filter(|p| p.quality.is_nan() || p.latency_us.is_nan())
+        .count();
+    if n_nan > 0 {
+        eprintln!("[dse] warning: ignoring {n_nan} NaN-axis point(s) in 3-D frontier");
+    }
+    let valid: Vec<&ZooPoint> = points
+        .iter()
+        .filter(|p| !p.quality.is_nan() && !p.latency_us.is_nan())
+        .collect();
+    let mut out: Vec<ZooPoint> = Vec::new();
+    for p in &valid {
+        if !valid.iter().any(|q| dominates_3d(q, p)) {
+            out.push((*p).clone());
+        }
+    }
+    out.sort_by(|a, b| {
+        a.luts
+            .cmp(&b.luts)
+            .then(b.quality.total_cmp(&a.quality))
+            .then(a.latency_us.total_cmp(&b.latency_us))
+            .then(a.name.cmp(&b.name))
+    });
+    out
+}
+
 /// Points strictly dominated by some other point (≥ cost and ≤ quality,
 /// with at least one strict) — the paper's "million-LUT models that barely
 /// beat 2.5k-LUT models" (Fig. 6.7 discussion).
@@ -248,6 +309,69 @@ mod tests {
         // Finite regime unchanged.
         let k = ensemble_count(64, 12, 64, 10, 2);
         assert!(k > 3.9 && k < 4.2, "{k}");
+    }
+
+    fn zp(name: &str, luts: u64, quality: f64, latency_us: f64) -> ZooPoint {
+        ZooPoint { name: name.into(), luts, quality, latency_us }
+    }
+
+    #[test]
+    fn frontier_3d_keeps_latency_tradeoffs_2d_would_drop() {
+        // b is 2-D dominated by a (same LUTs, worse quality) but serves
+        // strictly faster — in 3-D it is a real trade-off and must stay.
+        let pts = vec![
+            zp("a", 100, 90.0, 50.0),
+            zp("b", 100, 85.0, 10.0),
+            zp("c", 100, 85.0, 60.0), // dominated by both a and b
+            zp("d", 50, 80.0, 40.0),
+            zp("e", 200, 80.0, 45.0), // dominated by d on every axis
+        ];
+        let f = pareto_frontier_3d(&pts);
+        let names: Vec<&str> = f.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["d", "a", "b"]);
+        // Non-domination is exhaustive: no kept point dominated by any input.
+        for p in &f {
+            for q in &pts {
+                assert!(!dominates_3d(q, p), "{} dominated by {}", p.name, q.name);
+            }
+        }
+        // Every dropped finite point is dominated by some kept point.
+        for q in &pts {
+            if !names.contains(&q.name.as_str()) {
+                assert!(
+                    f.iter().any(|p| dominates_3d(p, q)),
+                    "{} dropped but undominated",
+                    q.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_3d_drops_nan_axes_without_panicking() {
+        let pts = vec![
+            zp("ok", 100, 80.0, 20.0),
+            zp("nan_q", 10, f64::NAN, 5.0),
+            zp("nan_l", 10, 99.0, f64::NAN),
+        ];
+        let f = pareto_frontier_3d(&pts);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].name, "ok");
+        // All-NaN input: empty frontier, no panic.
+        assert!(pareto_frontier_3d(&[zp("x", 1, f64::NAN, f64::NAN)]).is_empty());
+    }
+
+    #[test]
+    fn dominance_3d_needs_one_strict_axis() {
+        let a = zp("a", 100, 80.0, 20.0);
+        assert!(!dominates_3d(&a, &a), "a point never dominates itself");
+        // Equal on two axes, strictly better on one: dominates.
+        assert!(dominates_3d(&zp("b", 100, 80.0, 19.0), &a));
+        assert!(dominates_3d(&zp("c", 99, 80.0, 20.0), &a));
+        assert!(dominates_3d(&zp("d", 100, 80.5, 20.0), &a));
+        // Better on one axis, worse on another: incomparable both ways.
+        let e = zp("e", 50, 70.0, 20.0);
+        assert!(!dominates_3d(&e, &a) && !dominates_3d(&a, &e));
     }
 
     #[test]

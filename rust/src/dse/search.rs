@@ -31,13 +31,14 @@
 //! HLO artifact, and a finished search ends with servable, LUT-priced
 //! netlists.
 
-use super::{marginal_cost, pareto_frontier, DesignPoint};
+use super::{marginal_cost, pareto_frontier, pareto_frontier_3d, DesignPoint};
 use crate::cost;
 use crate::data::DataSet;
 use crate::luts::ModelTables;
 use crate::metrics;
 use crate::nn::ExportedModel;
 use crate::runtime::Manifest;
+use crate::serve::zoo::{calibrate_latency, ZooEntry, ZooManifest, CALIBRATION_ITERS};
 use crate::serve::{batch_accuracy, NetlistEngine};
 use crate::sparsity::prune::PruneMethod;
 use crate::synth::{synthesize, verify_netlist, OptLevel, SynthOpts};
@@ -324,6 +325,11 @@ pub struct SearchOpts {
     pub resume: bool,
     /// Synthesize + verify the top-N frontier models after the search.
     pub emit: usize,
+    /// After emitting, calibrate each emitted netlist's serving latency
+    /// and write the `zoo.json` manifest (the DSE→serving handoff for
+    /// `serve --zoo`), keeping only 3-D (LUTs, quality, latency)
+    /// non-dominated models.
+    pub emit_zoo: bool,
 }
 
 impl Default for SearchOpts {
@@ -338,6 +344,7 @@ impl Default for SearchOpts {
             out_dir: PathBuf::from("reports/dse"),
             resume: false,
             emit: 1,
+            emit_zoo: false,
         }
     }
 }
@@ -752,6 +759,8 @@ pub struct SearchOutcome {
     pub frontier: Vec<DesignPoint>,
     pub emitted: Vec<EmitResult>,
     pub archive_path: PathBuf,
+    /// `zoo.json` path when `emit_zoo` produced one.
+    pub zoo_path: Option<PathBuf>,
 }
 
 /// Run a cost-gated successive-halving search and persist the archive.
@@ -894,6 +903,9 @@ pub fn run_search(
 
     // ---- emit: frontier → synthesize --opt → NetlistEngine ---------------
     let mut emitted = Vec::new();
+    // Engines kept alongside (same index) so the zoo calibration pass can
+    // reuse them instead of re-running the whole synthesis pipeline.
+    let mut emitted_engines: Vec<NetlistEngine> = Vec::new();
     if opts.emit > 0 {
         // Highest-quality frontier points first.  Eliminated-early frontier
         // points are emittable too: their last checkpoint is on disk.
@@ -906,17 +918,36 @@ pub fn run_search(
                 .find(|r| r.name == p.name)
                 .and_then(|r| r.state.clone());
             match emit_model(task, opts, &entry, state) {
-                Ok(res) => {
+                Ok((res, engine)) => {
                     if let Some(e) = archive.entries.get_mut(&res.name) {
                         e.mapped_luts = Some(res.mapped_luts as u64);
                         e.netlist_accuracy = Some(res.netlist_accuracy);
                     }
                     emitted.push(res);
+                    emitted_engines.push(engine);
                 }
                 Err(err) => eprintln!("[dse] emit {} failed: {err:#}", p.name),
             }
         }
         archive.save(&archive_path)?;
+    }
+
+    // ---- zoo: the DSE→serving handoff ------------------------------------
+    let mut zoo_path = None;
+    if opts.emit_zoo {
+        if emitted.is_empty() {
+            eprintln!("[dse] emit-zoo requested but nothing was emitted; no zoo written");
+        } else {
+            let zoo = build_zoo(task, opts, &archive, &emitted, &emitted_engines)?;
+            let path = opts.out_dir.join("zoo.json");
+            zoo.save(&path)?;
+            println!(
+                "[dse] zoo: {} budget-servable model(s) -> {}",
+                zoo.entries.len(),
+                path.display()
+            );
+            zoo_path = Some(path);
+        }
     }
 
     Ok(SearchOutcome {
@@ -927,7 +958,75 @@ pub fn run_search(
         frontier,
         emitted,
         archive_path,
+        zoo_path,
     })
+}
+
+/// Build the serving zoo from this run's emitted frontier models:
+/// calibrate each emitted engine's single-request latency on the task's
+/// test rows (the engine is the exact circuit `serve --zoo` will rebuild —
+/// `emit_model`'s serving synthesis uses the same BRAM-free
+/// `OptLevel::Full` options as `serve::zoo::build_engine`) and register
+/// only the models that are non-dominated under the 3-D (mapped LUTs ↓,
+/// quality ↑, p99 latency ↓) check — a dominated model is never the right
+/// routing answer for any budget.
+fn build_zoo(
+    task: &SearchTask,
+    opts: &SearchOpts,
+    archive: &Archive,
+    emitted: &[EmitResult],
+    engines: &[NetlistEngine],
+) -> Result<ZooManifest> {
+    debug_assert_eq!(emitted.len(), engines.len());
+    let mut entries: Vec<ZooEntry> = Vec::new();
+    for (res, engine) in emitted.iter().zip(engines) {
+        let e = archive.entries.get(&res.name).expect("emitted model archived");
+        // The last recorded rung names the checkpoint that produced the
+        // archived quality (same rule as `emit_model`'s reload).  `serve
+        // --zoo` rebuilds from this file, so refuse to register a model
+        // whose checkpoint is not on disk.
+        let checkpoint = format!("ckpt/{}.r{}.bin", e.name, e.qualities.len());
+        let ck = opts.out_dir.join(&checkpoint);
+        if !ck.exists() {
+            eprintln!("[dse] zoo: skipping {} (no checkpoint at {})", res.name, ck.display());
+            continue;
+        }
+        let (p50, p99) = calibrate_latency(engine, &task.test.x, CALIBRATION_ITERS);
+        println!(
+            "[dse] zoo calibration {}: {} mapped LUTs, p50 {p50:.1}us p99 {p99:.1}us",
+            res.name, res.mapped_luts
+        );
+        entries.push(ZooEntry {
+            name: e.name.clone(),
+            dataset: task.dataset.clone(),
+            in_features: task.in_features,
+            classes: task.classes,
+            hidden: e.hidden.clone(),
+            fanin: e.fanin,
+            bw: e.bw,
+            checkpoint,
+            luts: res.mapped_luts as u64,
+            brams: res.brams,
+            quality: e.final_quality().unwrap_or(0.0),
+            netlist_accuracy: res.netlist_accuracy,
+            p50_us: p50,
+            p99_us: p99,
+        });
+    }
+    ensure!(!entries.is_empty(), "no emitted model could be calibrated for the zoo");
+    let points: Vec<_> = entries.iter().map(|e| e.point()).collect();
+    let keep: std::collections::BTreeSet<String> =
+        pareto_frontier_3d(&points).into_iter().map(|p| p.name).collect();
+    let before = entries.len();
+    entries.retain(|e| keep.contains(&e.name));
+    if entries.len() < before {
+        println!(
+            "[dse] zoo: dropped {} 3-D-dominated model(s); {} registered",
+            before - entries.len(),
+            entries.len()
+        );
+    }
+    Ok(ZooManifest { dataset: task.dataset.clone(), entries })
 }
 
 /// Total steps after `rungs_done` completed rungs (base·(2^r − 1) sum).
@@ -955,7 +1054,7 @@ fn emit_model(
     opts: &SearchOpts,
     entry: &ArchiveEntry,
     state: Option<ModelState>,
-) -> Result<EmitResult> {
+) -> Result<(EmitResult, NetlistEngine)> {
     let cand = Candidate {
         hidden: entry.hidden.clone(),
         fanin: entry.fanin,
@@ -1002,14 +1101,17 @@ fn emit_model(
          netlist accuracy {:.3}",
         entry.name, entry.luts, srep.luts, rep.brams, srep.opt_reduction, acc
     );
-    Ok(EmitResult {
-        name: entry.name.clone(),
-        analytical_luts: entry.luts,
-        mapped_luts: srep.luts,
-        brams: rep.brams,
-        opt_reduction: srep.opt_reduction,
-        netlist_accuracy: acc,
-    })
+    Ok((
+        EmitResult {
+            name: entry.name.clone(),
+            analytical_luts: entry.luts,
+            mapped_luts: srep.luts,
+            brams: rep.brams,
+            opt_reduction: srep.opt_reduction,
+            netlist_accuracy: acc,
+        },
+        engine,
+    ))
 }
 
 /// Print + save the search report table (the "search section" companion

@@ -84,12 +84,15 @@ fn print_help() {
     println!("  verify  --model NAME [--samples N]");
     println!("  serve   --model NAME [--requests N] [--workers W] [--backend tables|netlist]");
     println!("          [--opt]   optimize the served netlist (netlist backend only)");
+    println!("  serve   --zoo reports/dse/zoo.json [--requests N] [--workers W] [--budget-us US]");
+    println!("          budget-routed multi-model serving from an explore-emitted zoo");
     println!("  score   --models NAME[,NAME...] [--opt]  accuracy parity: mirror vs tables vs netlist");
     println!("  complexity --model NAME            minimized-logic heuristic (paper 5.5.1)");
     println!("  pareto  --csv reports/figure_6_7.csv   Pareto frontier of a sweep");
     println!("          [--name-col N --lut-col N --q-col N]  (default: header-detected)");
     println!("  explore --budget-luts N [--rungs R] [--seed S] [--resume]   automated DSE");
     println!("          [--candidates C] [--steps B] [--eta E] [--emit K] [--dataset jets]");
+    println!("          [--emit-zoo]   calibrate emitted netlists + write zoo.json for serve --zoo");
     println!("          [--widths 16,32,64] [--depths 1,2] [--fanins 2,3,4] [--bws 1,2,3]");
     println!("          [--methods a-priori,iterative] [--out reports/dse]");
     println!("tables : {}", experiments::ALL_TABLES.join(" "));
@@ -301,6 +304,9 @@ fn cmd_verify(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(zoo) = args.get("zoo") {
+        return cmd_serve_zoo(zoo, args);
+    }
     let name = args.get("model").context("--model required")?.to_string();
     let requests = args.get_usize("requests", 50_000);
     let workers = args.get_usize("workers", logicnets::util::pool::num_threads().min(8));
@@ -332,6 +338,108 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => bail!("unknown backend {other} (expected tables|netlist)"),
     }
+}
+
+/// `serve --zoo zoo.json`: load an explore-emitted model zoo (each entry
+/// rebuilt from its checkpoint, synthesized and machine-verified), start
+/// one worker pool per model, and drive a mixed-budget request stream:
+/// even requests carry no budget (routed to the best-quality model), odd
+/// requests a strict latency budget (`--budget-us`, default: the cheapest
+/// model's calibrated p99 — which that model always satisfies).
+fn cmd_serve_zoo(path: &str, args: &Args) -> Result<()> {
+    use logicnets::serve::router::Budget;
+    use logicnets::serve::zoo::{serve_manifest, ZooManifest};
+    let requests = args.get_usize("requests", 10_000);
+    let workers = args.get_usize("workers", logicnets::util::pool::num_threads().min(4));
+    let zoo_path = std::path::Path::new(path);
+    let manifest = ZooManifest::load(zoo_path)?;
+    println!(
+        "zoo {} — {} registered model(s), dataset {}:",
+        path,
+        manifest.entries.len(),
+        manifest.dataset
+    );
+    for e in &manifest.entries {
+        println!(
+            "  {:<28} {:>8} LUTs {:>3} BRAM  quality {:>6.2}  p50 {:>8.1}us  p99 {:>8.1}us",
+            e.name, e.luts, e.brams, e.quality, e.p50_us, e.p99_us
+        );
+    }
+    let zoo_dir = zoo_path
+        .parent()
+        .filter(|p| !p.as_os_str().is_empty())
+        .unwrap_or(std::path::Path::new("."));
+    let server =
+        serve_manifest(&manifest, zoo_dir, &ServerConfig { workers, ..Default::default() })?;
+    let ds = match manifest.dataset.as_str() {
+        "jets" => logicnets::hep::jets(4096, 7),
+        "mnist" => logicnets::mnist::synth_digits(1024, 7),
+        other => bail!(
+            "zoo dataset {other:?} has no request stream here (expected one of {:?})",
+            experiments::DATASET_KINDS
+        ),
+    };
+    anyhow::ensure!(
+        ds.d == server.in_features,
+        "dataset width {} != zoo input width {}",
+        ds.d,
+        server.in_features
+    );
+    let budget_us = match args.get("budget-us") {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|e| anyhow::anyhow!("--budget-us {v:?}: {e}"))?,
+        // Default: the cheapest model's calibrated p99, which that model
+        // always satisfies (models() is sorted cheapest-first).
+        None => server.models()[0].p99_us,
+    };
+    let strict = Budget::latency_us(budget_us);
+    println!(
+        "strict budget: p99 <= {budget_us:.1}us on odd requests; no budget on even requests"
+    );
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        // Distribute the remainder so exactly `requests` are sent (a
+        // plain /8 would drop the tail and serve nothing for tiny runs).
+        let (base, extra) = (requests / 8, requests % 8);
+        for t in 0..8usize {
+            let server = &server;
+            let ds = &ds;
+            let strict = &strict;
+            let n_t = base + usize::from(t < extra);
+            s.spawn(move || {
+                let mut rng = logicnets::util::rng::Rng::new(t as u64);
+                for k in 0..n_t {
+                    let i = rng.below(ds.n);
+                    let budget = if k % 2 == 0 { Budget::none() } else { *strict };
+                    let _ = server.infer(ds.row(i).to_vec(), &budget);
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut completed = 0u64;
+    println!("per-model stats (cheapest first):");
+    for ms in server.stats() {
+        completed += ms.stats.completed;
+        println!(
+            "  {:<28} routed {:>8}  completed {:>8}  live p50 {:>7.1}us  p99 {:>7.1}us  fill {:>5.1}",
+            ms.name,
+            ms.routed,
+            ms.stats.completed,
+            ms.stats.p50_us,
+            ms.stats.p99_us,
+            ms.stats.mean_batch
+        );
+    }
+    println!(
+        "zoo throughput        : {:.0} inferences/s across {} model(s); {} fallback(s)",
+        completed as f64 / elapsed,
+        manifest.entries.len(),
+        server.fallbacks()
+    );
+    server.shutdown();
+    Ok(())
 }
 
 fn serve_backend<B: Backend>(
@@ -498,6 +606,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         out_dir: std::path::PathBuf::from(args.get_or("out", "reports/dse")),
         resume: args.has_flag("resume"),
         emit: args.get_usize("emit", 1),
+        emit_zoo: args.has_flag("emit-zoo"),
     };
     let t0 = std::time::Instant::now();
     let task = SearchTask::from_dataset(&dataset);
@@ -518,5 +627,8 @@ fn cmd_explore(args: &Args) -> Result<()> {
         out.archive_path.display(),
         t0.elapsed().as_secs_f64(),
     );
+    if let Some(zp) = &out.zoo_path {
+        println!("zoo written: serve it with `logicnets serve --zoo {}`", zp.display());
+    }
     Ok(())
 }

@@ -6,13 +6,20 @@
 //! (the paper's convention, Fig. 6.5).
 
 /// Row-major logits `[n, c]` -> predicted class per row.
+///
+/// NaN policy (the old `partial_cmp().unwrap()` aborted on the first NaN
+/// logit): NaN entries are excluded from the argmax — a diverged logit can
+/// never become the predicted class — and an all-NaN (or empty) row
+/// deterministically predicts class 0.  Ties between real logits keep the
+/// highest index, matching the engines' `max_by_key` tie-break.
 pub fn argmax_rows(logits: &[f32], c: usize) -> Vec<usize> {
     logits
         .chunks(c)
         .map(|row| {
             row.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .filter(|(_, v)| !v.is_nan())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0)
         })
@@ -61,14 +68,24 @@ pub fn confusion(logits: &[f32], y: &[i32], c: usize, normalize: bool) -> Vec<Ve
 /// probability/score of the positive class, `pos[i]` marks positives.
 pub fn auc_binary(scores: &[f32], pos: &[bool]) -> f64 {
     assert_eq!(scores.len(), pos.len());
+    // NaN policy: every NaN score ranks as the most-positive prediction
+    // (and ties with other NaNs) — the old partial_cmp().unwrap()
+    // panicked on the first one.  NaNs are canonicalized first because
+    // the IEEE total order is sign-sensitive: runtime divergence (e.g.
+    // 0.0/0.0 on x86) yields sign-*negative* NaNs, which total_cmp alone
+    // would rank below every real score.
+    let scores: Vec<f32> =
+        scores.iter().map(|&v| if v.is_nan() { f32::NAN } else { v }).collect();
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
-    // midranks for ties
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+    // midranks for ties (NaN == NaN is false, but NaN scores are mutually
+    // indistinguishable, so they tie with each other)
+    let tied = |a: f32, b: f32| a == b || (a.is_nan() && b.is_nan());
     let mut ranks = vec![0f64; scores.len()];
     let mut i = 0;
     while i < idx.len() {
         let mut j = i;
-        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+        while j + 1 < idx.len() && tied(scores[idx[j + 1]], scores[idx[i]]) {
             j += 1;
         }
         let mid = (i + j) as f64 / 2.0 + 1.0;
@@ -106,12 +123,30 @@ pub fn auc_ovr(scores: &[f32], y: &[i32], c: usize) -> Vec<f64> {
 /// (the tied region must be a straight segment, not a staircase).
 /// `points` downsamples long curves, but a tied group is never split.
 pub fn roc_curve(scores: &[f32], y: &[i32], c: usize, k: usize, points: usize) -> Vec<(f64, f64)> {
-    let s: Vec<f32> = scores.chunks(c).map(|row| row[k]).collect();
+    // Canonicalize NaN scores (see `auc_binary`): sign-negative runtime
+    // NaNs would otherwise sort at the *bottom* of the descending sweep
+    // instead of the documented most-positive rank.
+    let s: Vec<f32> = scores
+        .chunks(c)
+        .map(|row| {
+            let v = row[k];
+            if v.is_nan() {
+                f32::NAN
+            } else {
+                v
+            }
+        })
+        .collect();
     let pos: Vec<bool> = y.iter().map(|&t| t as usize == k).collect();
     let n_pos = pos.iter().filter(|&&p| p).count().max(1) as f64;
     let n_neg = (pos.len() - pos.iter().filter(|&&p| p).count()).max(1) as f64;
     let mut order: Vec<usize> = (0..s.len()).collect();
-    order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    // Descending IEEE total order: NaN scores rank above every real score
+    // and are consumed first, as one tied group (mutually
+    // indistinguishable).  No input can panic the sweep; the curve stays
+    // monotone.
+    order.sort_by(|&a, &b| s[b].total_cmp(&s[a]));
+    let tied = |a: f32, b: f32| a == b || (a.is_nan() && b.is_nan());
     let mut out = vec![(0.0, 0.0)];
     let (mut tp, mut fp) = (0usize, 0usize);
     let stride = (order.len() / points.max(1)).max(1);
@@ -120,7 +155,7 @@ pub fn roc_curve(scores: &[f32], y: &[i32], c: usize, k: usize, points: usize) -
     while i < order.len() {
         // Consume the whole tied-score group before considering a point.
         let mut j = i;
-        while j + 1 < order.len() && s[order[j + 1]] == s[order[i]] {
+        while j + 1 < order.len() && tied(s[order[j + 1]], s[order[i]]) {
             j += 1;
         }
         for &idx in &order[i..=j] {
@@ -192,6 +227,59 @@ mod tests {
         let roc = roc_curve(&s.iter().flat_map(|&v| [1.0 - v, v]).collect::<Vec<_>>(), &y, 2, 1, 10);
         for w in roc.windows(2) {
             assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn accuracy_survives_nan_logits() {
+        // Regression: the argmax's partial_cmp().unwrap() aborted on the
+        // first NaN logit.  Documented ordering: NaN never wins, all-NaN
+        // rows predict class 0.
+        let logits = vec![
+            f32::NAN, 1.0, 0.0, // NaN excluded -> class 1
+            2.0, f32::NAN, 0.0, // NaN excluded -> class 0
+            f32::NAN, f32::NAN, f32::NAN, // all NaN -> class 0
+        ];
+        let pred = argmax_rows(&logits, 3);
+        assert_eq!(pred, vec![1, 0, 0]);
+        let y = vec![1, 0, 0];
+        assert!((accuracy(&logits, &y, 3) - 1.0).abs() < 1e-12);
+        // -inf is a real value and may win only against smaller reals.
+        let pred = argmax_rows(&[f32::NEG_INFINITY, f32::NAN], 2);
+        assert_eq!(pred, vec![0]);
+    }
+
+    #[test]
+    fn auc_survives_nan_scores() {
+        // NaN scores sort as the most-positive predictions (IEEE total
+        // order); no panic, result stays a valid AUC.
+        let s = vec![0.9, f32::NAN, 0.2, 0.1];
+        let p = vec![true, true, false, false];
+        let auc = auc_binary(&s, &p);
+        assert!((0.0..=1.0).contains(&auc), "{auc}");
+        // A NaN on a positive ranks it top: perfect separation preserved.
+        assert!((auc - 1.0).abs() < 1e-12);
+        // Sign-negative NaN (what 0.0/0.0 produces at runtime on x86)
+        // must follow the same most-positive policy, not sort below -inf.
+        let s = vec![0.9, -f32::NAN, 0.2, 0.1];
+        assert!((auc_binary(&s, &p) - 1.0).abs() < 1e-12);
+        // All-NaN (mixed signs): every score tied -> midranks -> 0.5.
+        let s = vec![f32::NAN, -f32::NAN, f32::NAN, -f32::NAN];
+        assert!((auc_binary(&s, &p) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roc_survives_nan_scores() {
+        // NaN scores (either sign) must not panic the sweep; the curve
+        // stays a monotone (0,0) -> (1,1) staircase.
+        let s = vec![0.9, f32::NAN, 0.6, -f32::NAN, 0.3, 0.1];
+        let y = vec![1, 1, 0, 1, 0, 0];
+        let logits: Vec<f32> = s.iter().flat_map(|&v| [1.0 - v, v]).collect();
+        let roc = roc_curve(&logits, &y, 2, 1, 100);
+        assert_eq!(roc.first(), Some(&(0.0, 0.0)));
+        assert_eq!(roc.last(), Some(&(1.0, 1.0)));
+        for w in roc.windows(2) {
+            assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1, "{roc:?}");
         }
     }
 

@@ -528,10 +528,13 @@ mod tests {
         for _ in 0..200 {
             let x: Vec<f32> = (0..12).map(|_| rng.f32()).collect();
             let logits = model.forward(&x);
+            // Reference argmax via the NaN-safe total order (the bare
+            // partial_cmp().unwrap() here was the last of that panic
+            // family on the serve path).
             let expect = logits
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             let mut scratch = InferScratch::default();

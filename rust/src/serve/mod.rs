@@ -12,8 +12,16 @@
 //! mirror (`ExportedModel::forward`) — serving doubles as functional
 //! verification of the whole tool-flow.
 
+//! [`zoo`] adds the DSE→serving handoff: a search-emitted `zoo.json`
+//! manifest of calibrated frontier netlists loads into a
+//! [`router::ZooServer`], where each request's optional latency/LUT
+//! [`router::Budget`] picks the cheapest registered model that satisfies
+//! it.
+
 pub mod engine;
 pub mod router;
+pub mod zoo;
 
 pub use engine::{batch_accuracy, Backend, LutEngine, NetlistEngine};
-pub use router::{Server, ServerConfig, ServerStats};
+pub use router::{Budget, ModelMeta, Server, ServerConfig, ServerStats, ZooServer};
+pub use zoo::{ZooEntry, ZooManifest};

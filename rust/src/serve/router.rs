@@ -11,6 +11,12 @@
 //! `Server::start` — any `Arc<impl Backend>` works.  Latency is tracked per
 //! request (enqueue -> response) in a fixed-size reservoir for percentile
 //! reporting.
+//!
+//! [`ZooServer`] stacks a budget router on top: one `Server` (worker pool,
+//! queue, stats) per registered model, each request carrying an optional
+//! latency/LUT [`Budget`] dispatched to the cheapest model whose
+//! *calibrated* metadata satisfies it (best-quality fallback otherwise).
+//! `serve::zoo` builds one from a DSE-emitted `zoo.json` manifest.
 
 use super::engine::Backend;
 use crate::util::rng::Rng;
@@ -19,6 +25,7 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+#[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub workers: usize,
     pub max_batch: usize,
@@ -113,24 +120,36 @@ impl Default for StatsInner {
 /// Interpolated percentile of an ascending-sorted sample (linear between
 /// closest ranks).  The truncating nearest-rank it replaces rounded *down*,
 /// which on small samples could report p99 == p50.
-fn percentile(sorted: &[f64], p: f64) -> f64 {
+///
+/// An empty sample has **no** percentiles: this returns `None` rather than
+/// a fabricated number.  (The old signature silently returned `0.0`, which
+/// read as a real — impossibly good — latency to anything recording the
+/// value, e.g. a zoo calibration pass run before any request completed.)
+pub fn percentile(sorted: &[f64], p: f64) -> Option<f64> {
     match sorted.len() {
-        0 => 0.0,
+        0 => None,
         n => {
             let rank = (n - 1) as f64 * p;
             let lo = rank.floor() as usize;
             let hi = rank.ceil() as usize;
-            sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
+            Some(sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64))
         }
     }
 }
 
 /// Snapshot of server statistics.
+///
+/// The percentile fields describe the latency reservoir and are `0.0`
+/// until the first request completes — check `lat_samples > 0` before
+/// treating them as measurements (never NaN either way).
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     pub completed: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    /// Latency samples currently in the reservoir backing the percentiles
+    /// (0 ⇒ the p50/p95/p99 fields are placeholders, not measurements).
+    pub lat_samples: usize,
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
@@ -148,7 +167,12 @@ impl Server {
     /// Start the router over any serving backend (`LutEngine`,
     /// `NetlistEngine`, ...).
     pub fn start<B: Backend>(engine: Arc<B>, cfg: ServerConfig) -> Server {
-        let engine: Arc<dyn Backend> = engine;
+        Server::start_dyn(engine as Arc<dyn Backend>, cfg)
+    }
+
+    /// [`Server::start`] for an already-erased backend — what the
+    /// multi-model zoo server uses, since its engines are heterogeneous.
+    pub fn start_dyn(engine: Arc<dyn Backend>, cfg: ServerConfig) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let stats = Arc::new(StatsInner::default());
         // Batcher thread: coalesce, then fan batches to workers round-robin.
@@ -189,14 +213,19 @@ impl Server {
 
     pub fn stats(&self) -> ServerStats {
         let mut lats = self.stats.lat.snapshot();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| percentile(&lats, p);
+        // IEEE total order: measured latencies are always finite, but a
+        // NaN in the reservoir must never abort a stats read (the old
+        // partial_cmp().unwrap() here was the same panic family PR 3
+        // fixed in pareto_frontier).
+        lats.sort_by(f64::total_cmp);
+        let pct = |p: f64| percentile(&lats, p).unwrap_or(0.0);
         let batches = self.stats.batches.load(Ordering::Relaxed);
         let fill = self.stats.batch_fill.load(Ordering::Relaxed);
         ServerStats {
             completed: self.stats.completed.load(Ordering::Relaxed),
             batches,
             mean_batch: if batches == 0 { 0.0 } else { fill as f64 / batches as f64 },
+            lat_samples: lats.len(),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
@@ -290,6 +319,233 @@ fn worker_loop(
             stats.lat.offer(lat, &mut rng);
             stats.completed.fetch_add(1, Ordering::Relaxed);
             let _ = req.resp.send(class);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Budget-routed multi-model serving (the DSE→serving handoff)
+// ---------------------------------------------------------------------------
+
+/// Metadata a model registers with the budget router: its serving cost
+/// axes (mapped LUTs, BRAMs, *calibrated* p50/p99 request latency) and its
+/// quality.  Routing decisions read only this — never live latency — so a
+/// given (zoo, budget) pair always routes to the same model.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    /// Mapped (synthesized, optimized) LUT count of the served netlist.
+    pub luts: u64,
+    pub brams: usize,
+    /// Higher is better (100 × avg AUC).
+    pub quality: f64,
+    /// Calibrated single-request latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// Optional per-request budget.  `None` axes are unconstrained; a fully
+/// unconstrained budget routes to the best-quality model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Budget {
+    /// Max acceptable p99 latency (µs), compared against the calibrated
+    /// `ModelMeta::p99_us`.
+    pub max_latency_us: Option<f64>,
+    /// Max acceptable mapped-LUT cost.
+    pub max_luts: Option<u64>,
+}
+
+impl Budget {
+    pub fn none() -> Budget {
+        Budget::default()
+    }
+
+    pub fn latency_us(us: f64) -> Budget {
+        Budget { max_latency_us: Some(us), max_luts: None }
+    }
+
+    pub fn luts(luts: u64) -> Budget {
+        Budget { max_latency_us: None, max_luts: Some(luts) }
+    }
+
+    pub fn is_unbounded(&self) -> bool {
+        self.max_latency_us.is_none() && self.max_luts.is_none()
+    }
+
+    /// Does `m` fit this budget?  Unset axes always admit.
+    pub fn admits(&self, m: &ModelMeta) -> bool {
+        self.max_latency_us.map_or(true, |lim| m.p99_us <= lim)
+            && self.max_luts.map_or(true, |lim| m.luts <= lim)
+    }
+}
+
+struct ZooModel {
+    meta: ModelMeta,
+    server: Server,
+    /// Requests this model was chosen for (routing decisions, not
+    /// completions — completions live in the per-model `ServerStats`).
+    routed: AtomicU64,
+}
+
+/// Per-model stats snapshot from a [`ZooServer`].
+#[derive(Debug, Clone)]
+pub struct ZooModelStats {
+    pub name: String,
+    pub luts: u64,
+    pub quality: f64,
+    /// Calibrated p99 the router budgets against (not the live p99 —
+    /// that's in `stats`).
+    pub budget_p99_us: f64,
+    pub routed: u64,
+    pub stats: ServerStats,
+}
+
+/// Multi-model budget router: every registered model runs behind its own
+/// [`Server`] (private worker pool, queue and latency reservoir), and each
+/// request carries an optional [`Budget`].  Dispatch rule:
+///
+/// * budgeted request → the **cheapest** (fewest mapped LUTs, ties to the
+///   better quality) model whose calibrated metadata satisfies the budget;
+///   if *no* model fits, fall back to the best-quality model and count the
+///   miss (`fallbacks`);
+/// * unbudgeted request → the best-quality model (ties to fewer LUTs).
+pub struct ZooServer {
+    /// Sorted cheapest-first (LUTs asc, quality desc, name asc), so budget
+    /// dispatch is a first-admitted scan.
+    models: Vec<ZooModel>,
+    /// Index of the best-quality model (the unbudgeted/fallback target).
+    best: usize,
+    fallbacks: AtomicU64,
+    pub in_features: usize,
+}
+
+impl ZooServer {
+    /// Start one [`Server`] per registered model.  All models must share
+    /// the input width (they serve the same request stream); quality and
+    /// latency metadata must be finite (a NaN would poison every routing
+    /// comparison) — the zoo manifest loader enforces the same invariant.
+    pub fn start(
+        entries: Vec<(ModelMeta, Arc<dyn Backend>)>,
+        cfg: &ServerConfig,
+    ) -> anyhow::Result<ZooServer> {
+        anyhow::ensure!(!entries.is_empty(), "zoo server needs at least one model");
+        let in_features = entries[0].1.in_features();
+        for (meta, engine) in &entries {
+            anyhow::ensure!(
+                engine.in_features() == in_features,
+                "model {} input width {} != {}",
+                meta.name,
+                engine.in_features(),
+                in_features
+            );
+            anyhow::ensure!(
+                meta.quality.is_finite() && meta.p50_us.is_finite() && meta.p99_us.is_finite(),
+                "model {} has non-finite routing metadata",
+                meta.name
+            );
+        }
+        let mut models: Vec<ZooModel> = entries
+            .into_iter()
+            .map(|(meta, engine)| ZooModel {
+                server: Server::start_dyn(engine, cfg.clone()),
+                meta,
+                routed: AtomicU64::new(0),
+            })
+            .collect();
+        models.sort_by(|a, b| {
+            a.meta
+                .luts
+                .cmp(&b.meta.luts)
+                .then(b.meta.quality.total_cmp(&a.meta.quality))
+                .then(a.meta.name.cmp(&b.meta.name))
+        });
+        let best = models
+            .iter()
+            .enumerate()
+            .max_by(|a, b| {
+                a.1.meta
+                    .quality
+                    .total_cmp(&b.1.meta.quality)
+                    // Quality ties break to the *cheaper* model.
+                    .then(b.1.meta.luts.cmp(&a.1.meta.luts))
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(ZooServer { models, best, fallbacks: AtomicU64::new(0), in_features })
+    }
+
+    /// Routing decision: `(model index, fallback?)` — fallback means no
+    /// model satisfied a bounded budget and the best-quality model stands
+    /// in.  Pure in the registered metadata.
+    fn dispatch(&self, budget: &Budget) -> (usize, bool) {
+        if !budget.is_unbounded() {
+            for (i, m) in self.models.iter().enumerate() {
+                if budget.admits(&m.meta) {
+                    return (i, false);
+                }
+            }
+            // Nothing satisfies the budget: serve the best model rather
+            // than failing the request.
+            return (self.best, true);
+        }
+        (self.best, false)
+    }
+
+    /// Index of the model a request with this budget is dispatched to
+    /// (deterministic in the registered metadata).  Pure inspection: does
+    /// not count toward `fallbacks` — only [`ZooServer::infer`] does.
+    pub fn route(&self, budget: &Budget) -> usize {
+        self.dispatch(budget).0
+    }
+
+    /// Blocking inference routed by `budget`; returns the predicted class
+    /// and the name of the model that served it.
+    pub fn infer(&self, x: Vec<f32>, budget: &Budget) -> Option<(usize, &str)> {
+        let (i, fallback) = self.dispatch(budget);
+        if fallback {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        let m = &self.models[i];
+        m.routed.fetch_add(1, Ordering::Relaxed);
+        let class = m.server.infer(x)?;
+        Some((class, m.meta.name.as_str()))
+    }
+
+    /// Registered models, cheapest-first.
+    pub fn models(&self) -> Vec<&ModelMeta> {
+        self.models.iter().map(|m| &m.meta).collect()
+    }
+
+    /// Name of the model unbudgeted requests go to.
+    pub fn best_model(&self) -> &str {
+        self.models[self.best].meta.name.as_str()
+    }
+
+    /// Budgeted requests no model could satisfy (served by the best-quality
+    /// fallback).
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Per-model statistics, cheapest-first.
+    pub fn stats(&self) -> Vec<ZooModelStats> {
+        self.models
+            .iter()
+            .map(|m| ZooModelStats {
+                name: m.meta.name.clone(),
+                luts: m.meta.luts,
+                quality: m.meta.quality,
+                budget_p99_us: m.meta.p99_us,
+                routed: m.routed.load(Ordering::Relaxed),
+                stats: m.server.stats(),
+            })
+            .collect()
+    }
+
+    /// Shut down every per-model server.
+    pub fn shutdown(self) {
+        for m in self.models {
+            m.server.shutdown();
         }
     }
 }
@@ -401,15 +657,37 @@ mod tests {
 
     #[test]
     fn percentiles_interpolate_between_ranks() {
-        assert_eq!(percentile(&[], 0.5), 0.0);
-        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        // An empty sample has no percentiles — None, never a fake 0.0 a
+        // calibration pass could record as a real latency.
+        assert_eq!(percentile(&[], 0.5), None);
+        assert_eq!(percentile(&[], 0.99), None);
+        assert_eq!(percentile(&[7.0], 0.99), Some(7.0));
         let two = [0.0, 10.0];
-        assert!((percentile(&two, 0.5) - 5.0).abs() < 1e-12);
-        assert!((percentile(&two, 0.95) - 9.5).abs() < 1e-12);
+        assert!((percentile(&two, 0.5).unwrap() - 5.0).abs() < 1e-12);
+        assert!((percentile(&two, 0.95).unwrap() - 9.5).abs() < 1e-12);
         // The old truncating nearest-rank collapsed p99 onto p50 here.
-        assert!(percentile(&two, 0.99) > percentile(&two, 0.5));
+        assert!(percentile(&two, 0.99).unwrap() > percentile(&two, 0.5).unwrap());
         let many: Vec<f64> = (0..101).map(|i| i as f64).collect();
-        assert!((percentile(&many, 0.95) - 95.0).abs() < 1e-12);
+        assert!((percentile(&many, 0.95).unwrap() - 95.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_before_any_request_are_flagged_not_faked() {
+        // Regression (zoo-calibration hazard): a server that has completed
+        // nothing must say so (lat_samples == 0) instead of reporting
+        // percentiles of an empty reservoir as real 0.0 latencies.
+        let server = Server::start(engine(), ServerConfig::default());
+        let st = server.stats();
+        assert_eq!(st.completed, 0);
+        assert_eq!(st.lat_samples, 0);
+        assert!(st.p50_us == 0.0 && st.p95_us == 0.0 && st.p99_us == 0.0);
+        assert!(!st.p50_us.is_nan() && !st.p99_us.is_nan());
+        // After one request the percentiles are measurements.
+        assert!(server.infer(vec![0.1; 6]).is_some());
+        let st = server.stats();
+        assert_eq!(st.lat_samples, 1);
+        assert!(st.p50_us > 0.0);
+        server.shutdown();
     }
 
     #[test]
@@ -418,6 +696,79 @@ mod tests {
         assert!(server.infer(vec![0.0; 3]).is_none());
         assert_eq!(server.stats().rejected, 1);
         server.shutdown();
+    }
+
+    fn meta(name: &str, luts: u64, quality: f64, p99_us: f64) -> ModelMeta {
+        ModelMeta { name: name.into(), luts, brams: 0, quality, p50_us: p99_us / 2.0, p99_us }
+    }
+
+    #[test]
+    fn zoo_routes_by_budget_and_falls_back() {
+        let eng = engine();
+        let cheap = meta("cheap", 100, 60.0, 50.0);
+        let best = meta("best", 1000, 90.0, 500.0);
+        // Registration order must not matter: insert best first.
+        let zoo = ZooServer::start(
+            vec![
+                (best, engine() as Arc<dyn Backend>),
+                (cheap, engine() as Arc<dyn Backend>),
+            ],
+            &ServerConfig { workers: 1, max_batch: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(zoo.in_features, 6);
+        assert_eq!(zoo.best_model(), "best");
+        let x: Vec<f32> = (0..6).map(|i| i as f32 / 6.0).collect();
+        let direct = eng.infer_batch(&x)[0];
+
+        // Unbudgeted -> best-quality model.
+        let (class, m) = zoo.infer(x.clone(), &Budget::none()).unwrap();
+        assert_eq!((class, m), (direct, "best"));
+        // Latency budget between the two calibrated p99s -> cheapest
+        // admitted model.
+        let (class, m) = zoo.infer(x.clone(), &Budget::latency_us(100.0)).unwrap();
+        assert_eq!((class, m), (direct, "cheap"));
+        // A budget both models satisfy still picks the cheapest.
+        assert_eq!(zoo.route(&Budget::latency_us(10_000.0)), 0);
+        // LUT budget excluding `best` -> cheap.
+        let (_, m) = zoo.infer(x.clone(), &Budget::luts(100)).unwrap();
+        assert_eq!(m, "cheap");
+        // Unsatisfiable budget -> best-quality fallback, counted.
+        assert_eq!(zoo.fallbacks(), 0);
+        let (_, m) = zoo.infer(x.clone(), &Budget::latency_us(1.0)).unwrap();
+        assert_eq!(m, "best");
+        assert_eq!(zoo.fallbacks(), 1);
+
+        // Per-model stats, cheapest-first, with routing counts.
+        let st = zoo.stats();
+        assert_eq!(st.len(), 2);
+        assert_eq!(st[0].name, "cheap");
+        assert_eq!(st[1].name, "best");
+        assert_eq!(st[0].routed, 2);
+        assert_eq!(st[1].routed, 2);
+        assert_eq!(st[0].stats.completed, 2);
+        assert_eq!(st[1].stats.completed, 2);
+        assert!(st[0].stats.lat_samples > 0);
+        zoo.shutdown();
+    }
+
+    #[test]
+    fn zoo_rejects_bad_registrations() {
+        // NaN routing metadata would poison every dispatch comparison.
+        let bad = ModelMeta {
+            name: "nan".into(),
+            luts: 10,
+            brams: 0,
+            quality: f64::NAN,
+            p50_us: 1.0,
+            p99_us: 2.0,
+        };
+        assert!(ZooServer::start(
+            vec![(bad, engine() as Arc<dyn Backend>)],
+            &ServerConfig::default()
+        )
+        .is_err());
+        assert!(ZooServer::start(Vec::new(), &ServerConfig::default()).is_err());
     }
 
     #[test]

@@ -1,0 +1,359 @@
+//! Model zoo: the DSE→serving handoff.
+//!
+//! `dse::search::run_search` with `emit_zoo` writes a `zoo.json` manifest
+//! next to its archive: one entry per emitted frontier netlist, carrying
+//! everything needed to rebuild the servable engine (topology axes +
+//! checkpoint path) plus the calibrated routing metadata (mapped LUTs,
+//! BRAMs, measured p50/p99 request latency, quality).  The emitted set is
+//! the true multi-objective frontier: every entry is non-dominated under
+//! the 3-D (LUTs ↓, quality ↑, latency ↓) check (`dse::pareto_frontier_3d`).
+//!
+//! This module loads such a manifest back into a running
+//! [`ZooServer`](crate::serve::router::ZooServer): each entry's checkpoint
+//! is re-exported, synthesized with the full optimization pipeline,
+//! machine-verified against its truth tables, and registered behind its
+//! own worker pool — so `logicnets serve --zoo reports/dse/zoo.json` turns
+//! a finished search directly into budget-aware serving.
+
+use crate::dse::ZooPoint;
+use crate::luts::ModelTables;
+use crate::nn::ExportedModel;
+use crate::runtime::Manifest;
+use crate::serve::engine::{Backend, NetlistEngine};
+use crate::serve::router::{percentile, ModelMeta, ServerConfig, ZooServer};
+use crate::synth::{synthesize, verify_netlist, OptLevel, SynthOpts};
+use crate::train::checkpoint;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Single-request inferences per model during latency calibration —
+/// enough for a stable p99 at a few tens of µs per call.
+pub const CALIBRATION_ITERS: usize = 256;
+
+/// One registered model in the zoo manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ZooEntry {
+    pub name: String,
+    pub dataset: String,
+    pub in_features: usize,
+    pub classes: usize,
+    /// Topology axes, enough to rebuild the `Manifest`
+    /// (`Manifest::synthetic_mlp`).
+    pub hidden: Vec<usize>,
+    pub fanin: usize,
+    pub bw: usize,
+    /// Trained-state checkpoint, relative to the manifest's directory.
+    pub checkpoint: String,
+    /// Mapped (synthesized, `OptLevel::Full`) LUT count — the routing
+    /// cost axis.
+    pub luts: u64,
+    /// BRAM blocks at the candidate's deployment threshold (the serving
+    /// netlist itself is BRAM-free).
+    pub brams: usize,
+    /// 100 × avg AUC at the deepest completed rung.
+    pub quality: f64,
+    /// Netlist-backed accuracy on the search's test split.
+    pub netlist_accuracy: f64,
+    /// Calibrated single-request latency percentiles (µs) through
+    /// `NetlistEngine`.
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl ZooEntry {
+    /// Routing metadata for the budget router.
+    pub fn meta(&self) -> ModelMeta {
+        ModelMeta {
+            name: self.name.clone(),
+            luts: self.luts,
+            brams: self.brams,
+            quality: self.quality,
+            p50_us: self.p50_us,
+            p99_us: self.p99_us,
+        }
+    }
+
+    /// This entry as a 3-D frontier point (p99 is the latency axis).
+    pub fn point(&self) -> ZooPoint {
+        ZooPoint {
+            name: self.name.clone(),
+            luts: self.luts,
+            quality: self.quality,
+            latency_us: self.p99_us,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("dataset", Json::str(&self.dataset)),
+            ("in_features", Json::num(self.in_features as f64)),
+            ("classes", Json::num(self.classes as f64)),
+            (
+                "hidden",
+                Json::Arr(self.hidden.iter().map(|&h| Json::Num(h as f64)).collect()),
+            ),
+            ("fanin", Json::num(self.fanin as f64)),
+            ("bw", Json::num(self.bw as f64)),
+            ("checkpoint", Json::str(&self.checkpoint)),
+            // String like the DSE archive's u64s: f64 JSON numbers round
+            // above 2^53.
+            ("luts", Json::str(&self.luts.to_string())),
+            ("brams", Json::num(self.brams as f64)),
+            ("quality", Json::num(self.quality)),
+            ("netlist_accuracy", Json::num(self.netlist_accuracy)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p99_us", Json::num(self.p99_us)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ZooEntry> {
+        // Strict like every other field: a malformed hidden list must fail
+        // here with a manifest error, not later as a checkpoint/manifest
+        // shape mismatch.
+        let arr = j
+            .req("hidden")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("zoo entry hidden: not an array"))?;
+        let mut hidden = Vec::with_capacity(arr.len());
+        for v in arr {
+            hidden.push(
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("zoo entry hidden: non-integer element"))?,
+            );
+        }
+        Ok(ZooEntry {
+            name: j.req_str("name")?.to_string(),
+            dataset: j.req_str("dataset")?.to_string(),
+            in_features: j.req_usize("in_features")?,
+            classes: j.req_usize("classes")?,
+            hidden,
+            fanin: j.req_usize("fanin")?,
+            bw: j.req_usize("bw")?,
+            checkpoint: j.req_str("checkpoint")?.to_string(),
+            luts: j
+                .req_str("luts")?
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("zoo entry luts: {e}"))?,
+            brams: j.req_usize("brams")?,
+            quality: j.req_f64("quality")?,
+            netlist_accuracy: j.req_f64("netlist_accuracy")?,
+            p50_us: j.req_f64("p50_us")?,
+            p99_us: j.req_f64("p99_us")?,
+        })
+    }
+}
+
+/// The on-disk zoo manifest (`zoo.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ZooManifest {
+    pub dataset: String,
+    pub entries: Vec<ZooEntry>,
+}
+
+impl ZooManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("dataset", Json::str(&self.dataset)),
+            ("entries", Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load and validate: calibrated latencies must be finite, positive
+    /// measurements (a pre-traffic 0.0 or a NaN would corrupt every
+    /// routing decision), quality finite.
+    pub fn load(path: &Path) -> Result<ZooManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let version = j.req_usize("version")?;
+        ensure!(version == 1, "zoo manifest version {version} != 1");
+        let mut entries = Vec::new();
+        for e in j.req("entries")?.as_arr().unwrap_or(&[]) {
+            let entry = ZooEntry::from_json(e)?;
+            ensure!(
+                entry.quality.is_finite(),
+                "zoo entry {} has non-finite quality",
+                entry.name
+            );
+            ensure!(
+                entry.p50_us.is_finite()
+                    && entry.p99_us.is_finite()
+                    && entry.p50_us > 0.0
+                    && entry.p99_us > 0.0,
+                "zoo entry {} has uncalibrated latency (p50 {}, p99 {})",
+                entry.name,
+                entry.p50_us,
+                entry.p99_us
+            );
+            entries.push(entry);
+        }
+        Ok(ZooManifest {
+            dataset: j.req_str("dataset")?.to_string(),
+            entries,
+        })
+    }
+
+    /// All entries as 3-D frontier points.
+    pub fn points(&self) -> Vec<ZooPoint> {
+        self.entries.iter().map(|e| e.point()).collect()
+    }
+}
+
+/// Rebuild the servable engine for one zoo entry: checkpoint → export →
+/// truth tables → `synthesize` (`OptLevel::Full`, BRAM-free) →
+/// machine-verify → [`NetlistEngine`].  `zoo_dir` is the directory the
+/// manifest lives in (checkpoint paths are relative to it).
+pub fn build_engine(entry: &ZooEntry, zoo_dir: &Path) -> Result<NetlistEngine> {
+    let man = Manifest::synthetic_mlp(
+        &entry.name,
+        &entry.dataset,
+        entry.in_features,
+        entry.classes,
+        &entry.hidden,
+        entry.fanin,
+        entry.bw,
+    );
+    let ck = zoo_dir.join(&entry.checkpoint);
+    let state = checkpoint::load(&ck)
+        .with_context(|| format!("zoo model {}: checkpoint {}", entry.name, ck.display()))?;
+    ensure!(
+        state.num_layers() == man.num_layers(),
+        "zoo model {}: checkpoint/manifest shape mismatch",
+        entry.name
+    );
+    let ex = ExportedModel::from_state(&man, &state);
+    let tables = ModelTables::generate(&ex)?;
+    let (netlist, _) = synthesize(
+        &ex,
+        &tables,
+        SynthOpts { registers: false, bram_min_bits: 0, opt: OptLevel::Full, ..SynthOpts::default() },
+    )?;
+    let mism = verify_netlist(&ex, &tables, &netlist, 1024, 0x500)?;
+    ensure!(mism == 0, "zoo model {}: {mism} netlist/table mismatches", entry.name);
+    NetlistEngine::from_netlist(&ex, &tables, netlist)
+}
+
+/// Measure single-request serving latency percentiles of a backend:
+/// `iters` one-sample `infer_batch` calls (the router's per-request
+/// shape), cycling through the rows of `xs`, each wall-clocked.  Returns
+/// `(p50_us, p99_us)`.  A short warm-up is excluded so cold caches don't
+/// land in the percentiles.
+pub fn calibrate_latency<B: Backend + ?Sized>(
+    engine: &B,
+    xs: &[f32],
+    iters: usize,
+) -> (f64, f64) {
+    let d = engine.in_features();
+    assert!(d > 0 && xs.len() >= d, "need at least one calibration row");
+    assert!(iters > 0, "need at least one calibration iteration");
+    let n = xs.len() / d;
+    for i in 0..8usize.min(iters) {
+        let row = &xs[(i % n) * d..(i % n) * d + d];
+        std::hint::black_box(engine.infer_batch(row));
+    }
+    let mut lats = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let row = &xs[(i % n) * d..(i % n) * d + d];
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(engine.infer_batch(row));
+        lats.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    lats.sort_by(f64::total_cmp);
+    // `lats` is non-empty by the iters assert, so the percentiles exist.
+    (
+        percentile(&lats, 0.50).expect("non-empty"),
+        percentile(&lats, 0.99).expect("non-empty"),
+    )
+}
+
+/// Start the budget-routed multi-model server from an already-loaded
+/// manifest whose checkpoint paths are relative to `dir`: one verified
+/// `NetlistEngine` + worker pool per entry.
+pub fn serve_manifest(zoo: &ZooManifest, dir: &Path, cfg: &ServerConfig) -> Result<ZooServer> {
+    ensure!(!zoo.entries.is_empty(), "zoo manifest has no entries");
+    let mut models: Vec<(ModelMeta, Arc<dyn Backend>)> = Vec::with_capacity(zoo.entries.len());
+    for e in &zoo.entries {
+        let engine = build_engine(e, dir)?;
+        models.push((e.meta(), Arc::new(engine) as Arc<dyn Backend>));
+    }
+    ZooServer::start(models, cfg)
+}
+
+/// [`serve_manifest`] straight from a `zoo.json` path.
+pub fn serve_zoo(path: &Path, cfg: &ServerConfig) -> Result<ZooServer> {
+    let zoo = ZooManifest::load(path)?;
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty()).unwrap_or(Path::new("."));
+    serve_manifest(&zoo, dir, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, luts: u64, quality: f64, p99: f64) -> ZooEntry {
+        ZooEntry {
+            name: name.into(),
+            dataset: "jets".into(),
+            in_features: 16,
+            classes: 5,
+            hidden: vec![16, 16],
+            fanin: 3,
+            bw: 2,
+            checkpoint: format!("ckpt/{name}.r2.bin"),
+            luts,
+            brams: 0,
+            quality,
+            netlist_accuracy: 0.6,
+            p50_us: p99 / 2.0,
+            p99_us: p99,
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_json() {
+        let zoo = ZooManifest {
+            dataset: "jets".into(),
+            entries: vec![entry("a", 120, 61.5, 40.0), entry("b", u64::MAX - 1, 90.0, 250.0)],
+        };
+        let dir = std::env::temp_dir().join("lnck_zoo_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zoo.json");
+        zoo.save(&path).unwrap();
+        let back = ZooManifest::load(&path).unwrap();
+        assert_eq!(back, zoo);
+        // u64 LUT counts survive beyond f64 precision (string-encoded).
+        assert_eq!(back.entries[1].luts, u64::MAX - 1);
+    }
+
+    #[test]
+    fn load_rejects_uncalibrated_or_nan_entries() {
+        let dir = std::env::temp_dir().join("lnck_zoo_reject_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // p99 == 0.0 is the empty-reservoir sentinel the percentile fix
+        // exists to keep out of manifests; loading must refuse it.
+        let mut zoo = ZooManifest { dataset: "jets".into(), entries: vec![entry("z", 10, 50.0, 40.0)] };
+        zoo.entries[0].p99_us = 0.0;
+        let path = dir.join("zoo_zero.json");
+        zoo.save(&path).unwrap();
+        assert!(ZooManifest::load(&path).is_err());
+        // NaN quality likewise.
+        let mut zoo = ZooManifest { dataset: "jets".into(), entries: vec![entry("n", 10, 50.0, 40.0)] };
+        zoo.entries[0].quality = f64::NAN;
+        let path = dir.join("zoo_nan.json");
+        zoo.save(&path).unwrap();
+        assert!(ZooManifest::load(&path).is_err());
+    }
+}

@@ -102,6 +102,19 @@ impl Pruner {
     }
 }
 
+/// Magnitude-ranking score: |w|, with a NaN weight (a diverged run)
+/// demoted below every real magnitude so it is always pruned first and
+/// never kept or regrown.  Keeps every ranking sort total-ordered — the
+/// old `partial_cmp().unwrap()` sorts aborted training on the first NaN.
+fn rank_mag(v: f32) -> f32 {
+    let m = v.abs();
+    if m.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        m
+    }
+}
+
 /// Keep the `allowed` largest-|w| connections of each neuron; drop the rest.
 pub fn magnitude_prune(w: &[f32], mask: &mut Mask, allowed: usize) -> bool {
     let mut changed = false;
@@ -111,8 +124,8 @@ pub fn magnitude_prune(w: &[f32], mask: &mut Mask, allowed: usize) -> bool {
             continue;
         }
         let mut scored: Vec<(f32, usize)> =
-            row.iter().map(|&i| (w[o * in_f + i].abs(), i)).collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            row.iter().map(|&i| (rank_mag(w[o * in_f + i]), i)).collect();
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         scored.truncate(allowed);
         let mut keep: Vec<usize> = scored.into_iter().map(|(_, i)| i).collect();
         keep.sort_unstable();
@@ -142,19 +155,21 @@ pub fn momentum_prune_regrow(
         if k == 0 {
             continue;
         }
-        // Prune: k smallest |w| inside the mask.
+        // Prune: k smallest |w| inside the mask (NaN ranks smallest, so a
+        // diverged weight is pruned first).
         let mut scored: Vec<(f32, usize)> =
-            row.iter().map(|&i| (w[o * in_f + i].abs(), i)).collect();
-        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            row.iter().map(|&i| (rank_mag(w[o * in_f + i]), i)).collect();
+        scored.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let pruned: Vec<usize> = scored.iter().take(k).map(|&(_, i)| i).collect();
         let kept: Vec<usize> = scored.iter().skip(k).map(|&(_, i)| i).collect();
         // Regrow: k largest |momentum| outside the mask (and not just pruned).
         let in_mask: std::collections::BTreeSet<usize> = row.iter().copied().collect();
         let mut free: Vec<(f32, usize)> = (0..in_f)
             .filter(|i| !in_mask.contains(i))
-            .map(|i| (momentum[o * in_f + i].abs(), i))
+            .map(|i| (rank_mag(momentum[o * in_f + i]), i))
             .collect();
-        free.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        // NaN momentum ranks smallest: a diverged gradient never regrows.
+        free.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         let mut new_row = kept;
         new_row.extend(free.iter().take(k).map(|&(_, i)| i));
         // If there were not enough free positions, keep some pruned ones so
@@ -219,6 +234,49 @@ mod tests {
         assert!(changed);
         assert!(mask.rows.iter().all(|r| r.len() == fanin), "fan-in preserved");
         assert_ne!(before, mask);
+    }
+
+    #[test]
+    fn magnitude_prune_survives_nan_weights() {
+        // Regression: the ranking sort's partial_cmp().unwrap() aborted on
+        // the first NaN weight.  Documented ordering: NaN magnitudes rank
+        // smallest, so they are pruned first and never kept.
+        let mut mask = Mask::dense(1, 6);
+        let w = vec![0.1, f32::NAN, 0.3, f32::NAN, 0.7, 0.2];
+        assert!(magnitude_prune(&w, &mut mask, 3));
+        assert_eq!(mask.rows[0], vec![2, 4, 5]);
+        // All-NaN row: no panic, deterministic keep of the lowest indices.
+        let mut mask = Mask::dense(1, 4);
+        let w = vec![f32::NAN; 4];
+        assert!(magnitude_prune(&w, &mut mask, 2));
+        assert_eq!(mask.rows[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn momentum_prune_survives_nan_scores() {
+        // NaN weights prune first; NaN momentum never regrows; fan-in is
+        // preserved exactly and nothing panics.
+        let mut rng = Rng::new(17);
+        let (out_f, in_f, fanin) = (4, 16, 4);
+        let mut mask = Mask::random(out_f, in_f, fanin, &mut rng);
+        let mut w: Vec<f32> = (0..out_f * in_f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut m: Vec<f32> = (0..out_f * in_f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // Poison one masked weight per neuron and a handful of momenta.
+        for o in 0..out_f {
+            let i = mask.rows[o][0];
+            w[o * in_f + i] = f32::NAN;
+            m[o * in_f + (i + 1) % in_f] = f32::NAN;
+        }
+        let poisoned: Vec<usize> = (0..out_f).map(|o| mask.rows[o][0]).collect();
+        let changed = momentum_prune_regrow(&w, &m, &mut mask, fanin, 0.25);
+        assert!(changed);
+        assert!(mask.rows.iter().all(|r| r.len() == fanin), "fan-in preserved");
+        // ceil(0.25 * 4) = 1 prune per neuron: the NaN weight is the one
+        // pruned (unless it had to be kept back for lack of free slots,
+        // impossible here with in_f >> fanin).
+        for (o, &i) in poisoned.iter().enumerate() {
+            assert!(!mask.rows[o].contains(&i), "NaN weight survived in neuron {o}");
+        }
     }
 
     #[test]

@@ -149,6 +149,7 @@ fn tiny_opts(dir: &str, seed: u64) -> SearchOpts {
         out_dir,
         resume: false,
         emit: 0,
+        emit_zoo: false,
     }
 }
 

@@ -1,0 +1,195 @@
+//! Zoo-serving integration suite (ISSUE 4): budget dispatch across a
+//! multi-model zoo, manifest validation, the 3-D non-domination invariant
+//! of an emitted zoo, and the end-to-end explore → `zoo.json` →
+//! budget-routed serving handoff.
+
+use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask};
+use logicnets::dse::{dominates_3d, pareto_frontier_3d};
+use logicnets::luts::ModelTables;
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::serve::router::{Budget, ModelMeta, ZooServer};
+use logicnets::serve::zoo::{build_engine, serve_zoo, ZooEntry, ZooManifest};
+use logicnets::serve::{Backend, LutEngine, ServerConfig};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::util::rng::Rng;
+use std::sync::Arc;
+
+fn tiny_model(seed: u64) -> (ExportedModel, ModelTables) {
+    let mut rng = Rng::new(seed);
+    let neurons = (0..8)
+        .map(|_| {
+            let inputs = rng.choose_k(6, 3);
+            Neuron {
+                inputs: inputs.clone(),
+                weights: inputs.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                bias: 0.0,
+                g: 1.0,
+                h: 0.0,
+            }
+        })
+        .collect();
+    let model = ExportedModel {
+        layers: vec![ExportedLayer::uniform(
+            neurons,
+            6,
+            QuantSpec::new(2, 1.0),
+            QuantSpec::new(2, 2.0),
+            true,
+        )],
+        in_features: 6,
+        classes: 8,
+        skips: 0,
+        act_widths: vec![6],
+    };
+    let tables = ModelTables::generate(&model).unwrap();
+    (model, tables)
+}
+
+fn meta(name: &str, luts: u64, quality: f64, p99_us: f64) -> ModelMeta {
+    ModelMeta { name: name.into(), luts, brams: 0, quality, p50_us: p99_us / 2.0, p99_us }
+}
+
+#[test]
+fn mixed_budget_traffic_splits_across_models_with_correct_answers() {
+    // Two distinct models behind one budget router: every response must
+    // come from the engine the router claims served it.
+    let (m1, t1) = tiny_model(1);
+    let (m2, t2) = tiny_model(2);
+    let cheap_eng = Arc::new(LutEngine::build(&m1, &t1).unwrap());
+    let best_eng = Arc::new(LutEngine::build(&m2, &t2).unwrap());
+    let zoo = ZooServer::start(
+        vec![
+            (meta("cheap", 50, 55.0, 40.0), cheap_eng.clone() as Arc<dyn Backend>),
+            (meta("best", 400, 85.0, 300.0), best_eng.clone() as Arc<dyn Backend>),
+        ],
+        &ServerConfig { workers: 2, max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    let strict = Budget::latency_us(100.0);
+    let mut rng = Rng::new(77);
+    for k in 0..200 {
+        let x: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+        let budget = if k % 2 == 0 { Budget::none() } else { strict };
+        let (class, served_by) = zoo.infer(x.clone(), &budget).expect("response");
+        let expect_eng: &LutEngine = if k % 2 == 0 { &best_eng } else { &cheap_eng };
+        assert_eq!(served_by, if k % 2 == 0 { "best" } else { "cheap" });
+        assert_eq!(class, expect_eng.infer_batch(&x)[0], "k={k}");
+    }
+    let st = zoo.stats();
+    assert_eq!(st.len(), 2);
+    assert_eq!(st[0].name, "cheap");
+    assert_eq!(st[0].routed, 100);
+    assert_eq!(st[1].routed, 100);
+    assert_eq!(st[0].stats.completed + st[1].stats.completed, 200);
+    assert_eq!(zoo.fallbacks(), 0);
+    // An unsatisfiable budget falls back to best quality and is counted.
+    let x: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+    let (_, served_by) = zoo.infer(x, &Budget::latency_us(0.001)).unwrap();
+    assert_eq!(served_by, "best");
+    assert_eq!(zoo.fallbacks(), 1);
+    zoo.shutdown();
+}
+
+#[test]
+fn zoo_engine_rebuild_requires_checkpoint() {
+    let entry = ZooEntry {
+        name: "ghost".into(),
+        dataset: "jets".into(),
+        in_features: 16,
+        classes: 5,
+        hidden: vec![8],
+        fanin: 2,
+        bw: 1,
+        checkpoint: "ckpt/ghost.r2.bin".into(),
+        luts: 100,
+        brams: 0,
+        quality: 50.0,
+        netlist_accuracy: 0.5,
+        p50_us: 10.0,
+        p99_us: 20.0,
+    };
+    let err = build_engine(&entry, std::path::Path::new("/nonexistent-zoo-dir"))
+        .expect_err("missing checkpoint must fail");
+    assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+}
+
+#[test]
+fn explore_emits_budget_servable_zoo() {
+    // End to end: tiny search → emit → calibrate → zoo.json → serve_zoo
+    // routes budgeted and unbudgeted requests (debug-build sized).
+    let out_dir = std::env::temp_dir().join("lnck_zoo_e2e_test");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let task = SearchTask::jets_small(600, 21);
+    let axes = SearchAxes {
+        widths: vec![8, 12],
+        depths: vec![1],
+        fanins: vec![2],
+        bws: vec![1, 2],
+        methods: vec![PruneMethod::APriori],
+        bram_min_bits: vec![13],
+    };
+    let opts = SearchOpts {
+        budget_luts: 5_000,
+        rungs: 2,
+        base_steps: 6,
+        eta: 2,
+        seed: 21,
+        max_candidates: 4,
+        out_dir: out_dir.clone(),
+        resume: false,
+        emit: 2,
+        emit_zoo: true,
+    };
+    let out = run_search(&task, &axes, &opts).unwrap();
+    let zoo_path = out.zoo_path.expect("zoo.json written");
+    assert!(zoo_path.exists());
+    let zoo = ZooManifest::load(&zoo_path).unwrap();
+    assert!(!zoo.entries.is_empty());
+    assert_eq!(zoo.dataset, "jets");
+
+    // Acceptance: every registered entry is non-dominated under the 3-D
+    // (LUTs, quality, latency) check.
+    let pts = zoo.points();
+    for p in &pts {
+        for q in &pts {
+            assert!(!dominates_3d(q, p), "{} dominated by {}", p.name, q.name);
+        }
+    }
+    assert_eq!(pareto_frontier_3d(&pts).len(), pts.len());
+
+    // Latencies are calibrated measurements, never the empty-reservoir
+    // 0.0 sentinel; percentile ordering holds.
+    for e in &zoo.entries {
+        assert!(e.p50_us > 0.0 && e.p99_us >= e.p50_us, "{}: {e:?}", e.name);
+        assert!(e.luts > 0 && e.quality.is_finite());
+    }
+
+    // Serve the manifest: every entry rebuilds from its checkpoint into a
+    // machine-verified netlist engine behind its own worker pool.
+    let server = serve_zoo(
+        &zoo_path,
+        &ServerConfig { workers: 1, max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(server.in_features, task.in_features);
+    let x = task.test.x[..task.test.d].to_vec();
+    let (_, free_model) = server.infer(x.clone(), &Budget::none()).expect("response");
+    assert_eq!(free_model, server.best_model());
+    // A strict latency budget equal to the cheapest model's calibrated
+    // p99 deterministically routes to that model.
+    let cheapest: ModelMeta = server.models()[0].clone();
+    let (_, strict_model) =
+        server.infer(x, &Budget::latency_us(cheapest.p99_us)).expect("response");
+    assert_eq!(strict_model, cheapest.name);
+    // When the zoo holds distinct cheap/best models, the two requests hit
+    // two different registered models (the CI smoke gate asserts this
+    // unconditionally on a larger search).
+    let free_model = free_model.to_string();
+    let strict_model = strict_model.to_string();
+    if server.models().len() >= 2 && cheapest.name != server.best_model() {
+        assert_ne!(free_model, strict_model);
+    }
+    let st = server.stats();
+    assert_eq!(st.iter().map(|m| m.routed).sum::<u64>(), 2);
+    server.shutdown();
+}
