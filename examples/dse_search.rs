@@ -5,7 +5,9 @@
 //! (non-zero exit) if any stage regresses:
 //!
 //! * the archive must be written and non-empty,
-//! * the frontier must be non-empty and strictly non-dominated,
+//! * the frontier must be non-empty and strictly non-dominated, and must
+//!   contain at least one `skips > 0` or non-uniform-width (pyramid)
+//!   candidate — the region the skip/shape axes unlock,
 //! * at least one frontier model must synthesize, machine-verify against
 //!   its truth tables, and serve through the netlist backend,
 //! * re-running with `resume` must perform **zero** retraining,
@@ -15,7 +17,7 @@
 
 use logicnets::dse::search::{
     gate_screen_rate, generate, run_search, CostGate, SearchAxes, SearchOpts, SearchTask,
-    GATE_RATE_FLOOR,
+    WidthShape, GATE_RATE_FLOOR,
 };
 use logicnets::sparsity::prune::PruneMethod;
 
@@ -25,13 +27,19 @@ fn main() -> anyhow::Result<()> {
     let _ = std::fs::remove_dir_all(&out_dir);
 
     let task = SearchTask::jets_small(4_000, 11);
+    // Depth-2 pool over both new axes.  The globally cheapest candidate is
+    // a taper (pyramid) topology — tapering strictly narrows later layers
+    // and the head — so with the whole pool admitted and trained, the
+    // frontier deterministically carries a non-uniform-width point.
     let axes = SearchAxes {
         widths: vec![16, 32],
-        depths: vec![1, 2],
+        depths: vec![2],
         fanins: vec![2, 3],
         bws: vec![1, 2],
         methods: vec![PruneMethod::APriori],
         bram_min_bits: vec![13],
+        skips: vec![0, 1],
+        shapes: vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }],
     };
     let opts = SearchOpts {
         budget_luts: 8_000,
@@ -39,7 +47,9 @@ fn main() -> anyhow::Result<()> {
         base_steps: 20,
         eta: 2,
         seed: 11,
-        max_candidates: 8,
+        // Above the 32-candidate pool, so the whole product trains and the
+        // cheapest (taper) topology is guaranteed in.
+        max_candidates: 64,
         out_dir: out_dir.clone(),
         resume: false,
         emit: 1,
@@ -73,6 +83,19 @@ fn main() -> anyhow::Result<()> {
             (w[1].luts, w[1].quality)
         );
     }
+    // Gate 2b: the new axes reach the frontier — at least one frontier
+    // point is a skip-wired or pyramid (non-uniform-width) topology.
+    let novel = out
+        .frontier
+        .iter()
+        .filter_map(|p| archive.entries.get(&p.name))
+        .filter(|e| e.skips > 0 || e.hidden.windows(2).any(|w| w[0] != w[1]))
+        .count();
+    println!("frontier: {} point(s), {novel} skip/pyramid", out.frontier.len());
+    anyhow::ensure!(
+        novel > 0,
+        "no skip or pyramid candidate reached the Pareto frontier"
+    );
 
     // Gate 3: a frontier model ended as a verified, servable netlist.
     anyhow::ensure!(!out.emitted.is_empty(), "no frontier model emitted");

@@ -13,11 +13,11 @@
 //!
 //! CI runs this; locally: `cargo run --release --example zoo_serve`.
 
-use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask};
+use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask, WidthShape};
 use logicnets::dse::{dominates_3d, pareto_frontier_3d};
 use logicnets::serve::router::Budget;
-use logicnets::serve::zoo::{serve_zoo, ZooManifest};
-use logicnets::serve::ServerConfig;
+use logicnets::serve::zoo::{build_engine, serve_zoo, ZooManifest};
+use logicnets::serve::{batch_accuracy, ServerConfig};
 use logicnets::sparsity::prune::PruneMethod;
 use logicnets::util::rng::Rng;
 
@@ -36,6 +36,8 @@ fn main() -> anyhow::Result<()> {
         bws: vec![1, 2],
         methods: vec![PruneMethod::APriori],
         bram_min_bits: vec![13],
+        skips: vec![0, 1],
+        shapes: vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }],
     };
     let opts = SearchOpts {
         budget_luts: 60_000,
@@ -91,6 +93,20 @@ fn main() -> anyhow::Result<()> {
         }
     }
     anyhow::ensure!(pareto_frontier_3d(&pts).len() == pts.len(), "zoo is not its own frontier");
+
+    // Gate 3b: the zoo round-trips — rebuilding every entry's engine from
+    // its checkpoint (the exact `serve --zoo` path, skip wiring included)
+    // reproduces the netlist-verified accuracy the search recorded.
+    for e in &zoo.entries {
+        let engine = build_engine(e, &out_dir)?;
+        let acc = batch_accuracy(&engine, &task.test.x, &task.test.y);
+        anyhow::ensure!(
+            (acc - e.netlist_accuracy).abs() < 1e-12,
+            "{}: rebuilt accuracy {acc} != recorded {}",
+            e.name,
+            e.netlist_accuracy
+        );
+    }
 
     // Gate 4: the manifest serves — every entry rebuilds from its
     // checkpoint into a verified netlist engine behind its own pool.

@@ -11,17 +11,30 @@ use logicnets::util::bench::bench;
 use std::time::Duration;
 
 fn main() {
+    // The default grid now sweeps the skip-connection and pyramid-taper
+    // axes too — skip-widened `in_f` pricing is part of the measured loop.
     let axes = SearchAxes::jets_default();
     let n = axes.num_candidates();
+    // Generated once: the list is deterministic, so it doubles as the
+    // pool-size source and the gate-loop input below.
+    let cands = generate(&axes, 1, usize::MAX);
+    let pool = cands.len();
 
-    // Generator alone: full cross product + deterministic shuffle.
+    // Generator alone: full cross product + dedup + deterministic shuffle.
     let r = bench("dse generate (full axis product)", Duration::from_millis(300), || {
         std::hint::black_box(generate(&axes, 1, usize::MAX));
     });
-    r.report_throughput(n as f64, "candidates");
+    r.report_throughput(pool as f64, "candidates");
 
     // Gate alone over a pre-generated list (the steady-state screen loop).
-    let cands = generate(&axes, 1, usize::MAX);
+    let n_skip = cands.iter().filter(|c| c.skips > 0).count();
+    let n_taper =
+        cands.iter().filter(|c| c.hidden.windows(2).any(|w| w[0] != w[1])).count();
+    println!(
+        "pool: {} candidates ({n_skip} skip-wired, {n_taper} pyramid) from a {n}-point product",
+        cands.len()
+    );
+    assert!(n_skip > 0 && n_taper > 0, "new axes must be in the benched pool");
     let gate = CostGate { budget_luts: 30_000 };
     let r = bench("dse cost gate (price + admit)", Duration::from_millis(300), || {
         let mut admitted = 0usize;
@@ -44,7 +57,7 @@ fn main() {
         }
         std::hint::black_box(admitted);
     });
-    r.report_throughput(n as f64, "candidates");
+    r.report_throughput(pool as f64, "candidates");
 
     // The ISSUE-level floor, asserted so `cargo bench` runs double as a
     // regression check (same measurement the CI smoke gate uses).

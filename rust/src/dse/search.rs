@@ -30,6 +30,13 @@
 //! pure-Rust trainer (`train::native`), so a search works offline with no
 //! HLO artifact, and a finished search ends with servable, LUT-priced
 //! netlists.
+//!
+//! The searched space covers the whole MLP layer-graph family the paper
+//! explored: besides width/depth/fan-in/bits/method/BRAM threshold, the
+//! generator sweeps **skip-connection counts** and **pyramid width
+//! schedules** ([`WidthShape`]), whose candidates train through the
+//! skip-concat forward/backward and serve as skip netlists end to end
+//! (DESIGN.md §10).
 
 use super::{marginal_cost, pareto_frontier, pareto_frontier_3d, DesignPoint};
 use crate::cost;
@@ -55,8 +62,66 @@ use std::path::{Path, PathBuf};
 // Axes and candidates
 // ---------------------------------------------------------------------------
 
+/// Hidden-width schedule of a candidate: how a base width maps to the
+/// per-layer width vector at a given depth.  The paper's best topologies
+/// taper ("pyramid") their hidden layers instead of keeping a rectangle;
+/// this is that choice as a first-class search axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WidthShape {
+    /// Uniform base width at every depth (the original rectangle family).
+    Rect,
+    /// Pyramid taper: each layer is `pct`% of the previous one, floored at
+    /// [`MIN_TAPER_WIDTH`].
+    Taper { pct: usize },
+}
+
+/// Narrowest layer a taper schedule may produce (below this the layer
+/// stops being a useful feature bottleneck and fan-in clamps dominate).
+pub const MIN_TAPER_WIDTH: usize = 4;
+
+impl WidthShape {
+    /// Per-layer widths for base width `w` at `depth` layers.
+    pub fn widths(&self, w: usize, depth: usize) -> Vec<usize> {
+        match *self {
+            WidthShape::Rect => vec![w; depth],
+            WidthShape::Taper { pct } => {
+                let mut out = Vec::with_capacity(depth);
+                let mut cur = w;
+                for _ in 0..depth {
+                    out.push(cur);
+                    cur = (cur * pct / 100).max(MIN_TAPER_WIDTH);
+                }
+                out
+            }
+        }
+    }
+
+    /// Stable axis-key / CLI token.
+    pub fn name(&self) -> String {
+        match *self {
+            WidthShape::Rect => "rect".to_string(),
+            WidthShape::Taper { pct } => format!("taper{pct}"),
+        }
+    }
+
+    /// Parse a CLI token: `rect` or `taper<PCT>` (e.g. `taper50`).
+    pub fn parse(s: &str) -> Option<WidthShape> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("rect") {
+            return Some(WidthShape::Rect);
+        }
+        let pct = s.strip_prefix("taper")?.parse::<usize>().ok()?;
+        if (1..=100).contains(&pct) {
+            Some(WidthShape::Taper { pct })
+        } else {
+            None
+        }
+    }
+}
+
 /// The search space: one choice per axis of the paper's exploration
-/// chapter — hidden width/depth, per-layer fan-in γ, activation bits β,
+/// chapter — hidden width/depth, width schedule (rectangle vs pyramid
+/// taper), skip-connection count, per-layer fan-in γ, activation bits β,
 /// sparsity method, and the BRAM-spill threshold used when the winner is
 /// synthesized.
 #[derive(Debug, Clone)]
@@ -67,12 +132,17 @@ pub struct SearchAxes {
     pub bws: Vec<usize>,
     pub methods: Vec<PruneMethod>,
     pub bram_min_bits: Vec<usize>,
+    /// Newest-first skip-concat counts (`0` = plain feed-forward).
+    pub skips: Vec<usize>,
+    /// Hidden-width schedules applied to each (width, depth) pair.
+    pub shapes: Vec<WidthShape>,
 }
 
 impl SearchAxes {
     /// Default grid for the jet-substructure task: brackets the paper's
     /// hand-enumerated figure-6.7 sweep (bw 1–3, fan-in 2–4) with width
-    /// and depth choices around the hep_a…e family.
+    /// and depth choices around the hep_a…e family, plus the skip and
+    /// pyramid-taper axes the paper's best topologies use.
     pub fn jets_default() -> SearchAxes {
         SearchAxes {
             widths: vec![16, 32, 64],
@@ -81,10 +151,13 @@ impl SearchAxes {
             bws: vec![1, 2, 3],
             methods: vec![PruneMethod::APriori],
             bram_min_bits: vec![13],
+            skips: vec![0, 1],
+            shapes: vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }],
         }
     }
 
-    /// Size of the full cross product.
+    /// Size of the full cross product (before duplicate-topology pruning
+    /// in [`generate`]: e.g. rectangle and taper coincide at depth 1).
     pub fn num_candidates(&self) -> usize {
         self.widths.len()
             * self.depths.len()
@@ -92,18 +165,23 @@ impl SearchAxes {
             * self.bws.len()
             * self.methods.len()
             * self.bram_min_bits.len()
+            * self.skips.len()
+            * self.shapes.len()
     }
 
     /// Compact fingerprint of the whole search space.  Stored in the
     /// archive and compared on `--resume`: two runs over different axes
     /// generate different candidate pools, so replaying one against the
     /// other's archive would silently break the zero-retraining contract.
+    /// The skip/shape sections are appended only when non-default, so
+    /// archives written before those axes existed keep their key and stay
+    /// resumable with the defaults.
     pub fn key(&self) -> String {
         let join = |v: &[usize]| {
             v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("-")
         };
         let methods: Vec<&str> = self.methods.iter().map(|m| m.name()).collect();
-        format!(
+        let mut k = format!(
             "w{}_d{}_f{}_b{}_m{}_r{}",
             join(&self.widths),
             join(&self.depths),
@@ -111,11 +189,21 @@ impl SearchAxes {
             join(&self.bws),
             methods.join("-"),
             join(&self.bram_min_bits),
-        )
+        );
+        if self.skips != [0] {
+            k.push_str(&format!("_s{}", join(&self.skips)));
+        }
+        if self.shapes != [WidthShape::Rect] {
+            let shapes: Vec<String> = self.shapes.iter().map(|s| s.name()).collect();
+            k.push_str(&format!("_y{}", shapes.join("-")));
+        }
+        k
     }
 }
 
 /// One topology candidate: everything needed to build its `Manifest`.
+/// `hidden` carries the realized per-layer widths (so pyramid schedules
+/// need no extra state) and `skips` the newest-first skip-concat count.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
     pub hidden: Vec<usize>,
@@ -123,11 +211,14 @@ pub struct Candidate {
     pub bw: usize,
     pub method: PruneMethod,
     pub bram_min_bits: usize,
+    pub skips: usize,
 }
 
 impl Candidate {
     /// Stable identifier: axes only, so the same point re-identifies
-    /// itself across runs (the archive is keyed by this).
+    /// itself across runs (the archive is keyed by this).  Skip-free
+    /// candidates keep their pre-skip-axis names, so old archives
+    /// re-identify the same points.
     pub fn name(&self) -> String {
         let hl: Vec<String> = self.hidden.iter().map(|h| h.to_string()).collect();
         let tag = match self.method {
@@ -136,6 +227,9 @@ impl Candidate {
             PruneMethod::Momentum { .. } => "mo",
         };
         let mut n = format!("dse_h{}_f{}_b{}_{}", hl.join("-"), self.fanin, self.bw, tag);
+        if self.skips != 0 {
+            n.push_str(&format!("_s{}", self.skips));
+        }
         if self.bram_min_bits != 13 {
             n.push_str(&format!("_r{}", self.bram_min_bits));
         }
@@ -144,7 +238,7 @@ impl Candidate {
 
     /// Full manifest for this candidate on the given task shape.
     pub fn manifest(&self, dataset: &str, in_features: usize, classes: usize) -> Manifest {
-        Manifest::synthetic_mlp(
+        Manifest::synthetic_topology(
             &self.name(),
             dataset,
             in_features,
@@ -152,6 +246,7 @@ impl Candidate {
             &self.hidden,
             self.fanin,
             self.bw,
+            self.skips,
         )
     }
 
@@ -159,48 +254,75 @@ impl Candidate {
     /// Must agree exactly with `cost::total_luts(cost::manifest_cost(m))`
     /// for this candidate's manifest (property-tested in
     /// `tests/dse_search.rs`): sparse hidden layers at eq. 2.3, dense
-    /// head at eq. 4.1.
+    /// head at eq. 4.1, every layer priced at its skip-widened `in_f`
+    /// (shared with the manifest via `Manifest::skip_in_widths`, so gate
+    /// and exact pricing cannot diverge).
     pub fn analytical_luts(&self, in_features: usize, classes: usize) -> u64 {
-        let mut total = self.sparse_prefix_luts(in_features);
-        let prev = self.hidden.last().copied().unwrap_or(in_features);
-        total = total
-            .saturating_add(cost::dense_layer_cost(classes, prev, self.bw, cost::DENSE_BW_WT));
-        total
+        let in_widths = Manifest::skip_in_widths(in_features, &self.hidden, self.skips);
+        self.sparse_prefix_luts_with(&in_widths).saturating_add(cost::dense_layer_cost(
+            classes,
+            in_widths[self.hidden.len()],
+            self.bw,
+            cost::DENSE_BW_WT,
+        ))
     }
 
     /// Analytical cost of the sparse (table-mapped) prefix only — what
     /// `synthesize` reports as `analytical_luts` for this model.
     pub fn sparse_prefix_luts(&self, in_features: usize) -> u64 {
+        self.sparse_prefix_luts_with(&Manifest::skip_in_widths(
+            in_features,
+            &self.hidden,
+            self.skips,
+        ))
+    }
+
+    /// Prefix pricing over precomputed skip-widened input widths, so the
+    /// gate's whole-model price builds the width vector once.
+    fn sparse_prefix_luts_with(&self, in_widths: &[usize]) -> u64 {
         let mut total = 0u64;
-        let mut prev = in_features;
-        for &h in &self.hidden {
-            let f = self.fanin.min(prev);
+        for (&h, &inw) in self.hidden.iter().zip(in_widths) {
+            let f = self.fanin.min(inw);
             total = total.saturating_add(cost::sparse_layer_cost(h, f, self.bw, self.bw));
-            prev = h;
         }
         total
     }
 }
 
 /// Deterministic candidate generator: the full axis cross product in a
-/// fixed order, seed-shuffled, truncated to `max`.  Same (axes, seed,
-/// max) → same candidate list, which is what makes whole searches
-/// replayable.
+/// fixed order, duplicate topologies dropped (rectangle and taper
+/// schedules coincide at depth 1, and `skips` clamps at the depth — a
+/// skips-2 single-hidden-layer model IS the skips-1 model), seed-shuffled,
+/// truncated to `max`.  Same (axes, seed, max) → same candidate list,
+/// which is what makes whole searches replayable.
 pub fn generate(axes: &SearchAxes, seed: u64, max: usize) -> Vec<Candidate> {
     let mut out = Vec::with_capacity(axes.num_candidates());
+    let mut seen = std::collections::BTreeSet::new();
     for &d in &axes.depths {
-        for &w in &axes.widths {
-            for &f in &axes.fanins {
-                for &bw in &axes.bws {
-                    for &m in &axes.methods {
-                        for &bram in &axes.bram_min_bits {
-                            out.push(Candidate {
-                                hidden: vec![w; d],
-                                fanin: f,
-                                bw,
-                                method: m,
-                                bram_min_bits: bram,
-                            });
+        for &shape in &axes.shapes {
+            for &w in &axes.widths {
+                for &f in &axes.fanins {
+                    for &bw in &axes.bws {
+                        for &m in &axes.methods {
+                            for &bram in &axes.bram_min_bits {
+                                for &s in &axes.skips {
+                                    let c = Candidate {
+                                        hidden: shape.widths(w, d),
+                                        fanin: f,
+                                        bw,
+                                        method: m,
+                                        bram_min_bits: bram,
+                                        // Every layer clamps its history at
+                                        // min(skips, i), so skips > depth
+                                        // duplicates the clamped topology;
+                                        // canonicalize so dedup catches it.
+                                        skips: s.min(d),
+                                    };
+                                    if seen.insert(c.name()) {
+                                        out.push(c);
+                                    }
+                                }
+                            }
                         }
                     }
                 }
@@ -361,6 +483,9 @@ pub struct ArchiveEntry {
     pub bw: usize,
     pub method: String,
     pub bram_min_bits: usize,
+    /// Newest-first skip-concat count (0 = plain feed-forward; archives
+    /// written before this axis existed load as 0).
+    pub skips: usize,
     /// Analytical whole-model LUT cost (the frontier's cost axis).
     pub luts: u64,
     /// "gated" (rejected before training) or "trained".
@@ -385,6 +510,7 @@ impl ArchiveEntry {
             bw: c.bw,
             method: c.method.name().to_string(),
             bram_min_bits: c.bram_min_bits,
+            skips: c.skips,
             luts,
             status: status.to_string(),
             qualities: Vec::new(),
@@ -482,6 +608,7 @@ impl Archive {
                     ("bw", Json::num(e.bw as f64)),
                     ("method", Json::str(&e.method)),
                     ("bram_min_bits", Json::num(e.bram_min_bits as f64)),
+                    ("skips", Json::num(e.skips as f64)),
                     // String like the top-level u64s: gated entries can
                     // carry saturated (u64::MAX) costs that f64 would round.
                     ("luts", Json::str(&e.luts.to_string())),
@@ -545,6 +672,9 @@ impl Archive {
                 bw: e.req_usize("bw")?,
                 method: e.req_str("method")?.to_string(),
                 bram_min_bits: e.req_usize("bram_min_bits")?,
+                // Absent in archives written before the skip axis existed:
+                // those points were all skip-free.
+                skips: e.opt_usize("skips").unwrap_or(0),
                 luts: e
                     .req_str("luts")?
                     .parse::<u64>()
@@ -1004,6 +1134,7 @@ fn build_zoo(
             hidden: e.hidden.clone(),
             fanin: e.fanin,
             bw: e.bw,
+            skips: e.skips,
             checkpoint,
             luts: res.mapped_luts as u64,
             brams: res.brams,
@@ -1061,6 +1192,7 @@ fn emit_model(
         bw: entry.bw,
         method: method_from_name(&entry.method),
         bram_min_bits: entry.bram_min_bits,
+        skips: entry.skips,
     };
     let man = cand.manifest(&task.dataset, task.in_features, task.classes);
     let state = match state {
@@ -1167,7 +1299,11 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.len(), 10);
         let full = generate(&axes, 7, usize::MAX);
-        assert_eq!(full.len(), axes.num_candidates());
+        // Duplicate topologies (rect vs taper at depth 1) are pruned, so
+        // the pool is bounded by — and here strictly under — the raw
+        // cross product.
+        assert!(full.len() <= axes.num_candidates());
+        assert!(full.len() > axes.num_candidates() / 2);
         // Different seed, different order.
         let c = generate(&axes, 8, 10);
         assert_ne!(a, c);
@@ -1175,6 +1311,40 @@ mod tests {
         let names: std::collections::BTreeSet<String> =
             full.iter().map(|c| c.name()).collect();
         assert_eq!(names.len(), full.len());
+        // The new axes are really in the pool: skip and tapered candidates
+        // both appear.
+        assert!(full.iter().any(|c| c.skips > 0));
+        assert!(full.iter().any(|c| c.hidden.windows(2).any(|w| w[0] != w[1])));
+    }
+
+    #[test]
+    fn width_shapes_schedule_and_parse() {
+        assert_eq!(WidthShape::Rect.widths(32, 3), vec![32, 32, 32]);
+        assert_eq!(WidthShape::Taper { pct: 50 }.widths(32, 3), vec![32, 16, 8]);
+        // Floor: tapers never go below MIN_TAPER_WIDTH.
+        assert_eq!(WidthShape::Taper { pct: 25 }.widths(16, 3), vec![16, 4, 4]);
+        assert_eq!(WidthShape::parse("rect"), Some(WidthShape::Rect));
+        assert_eq!(WidthShape::parse("taper50"), Some(WidthShape::Taper { pct: 50 }));
+        assert_eq!(WidthShape::parse(" taper75 "), Some(WidthShape::Taper { pct: 75 }));
+        assert_eq!(WidthShape::parse("taper0"), None);
+        assert_eq!(WidthShape::parse("taper101"), None);
+        assert_eq!(WidthShape::parse("cone"), None);
+    }
+
+    #[test]
+    fn axes_key_is_backward_compatible_for_default_new_axes() {
+        // With the pre-skip defaults the key must be byte-identical to the
+        // pre-skip format, so old archives stay resumable.
+        let mut axes = SearchAxes::jets_default();
+        axes.skips = vec![0];
+        axes.shapes = vec![WidthShape::Rect];
+        assert_eq!(axes.key(), "w16-32-64_d1-2_f2-3-4_b1-2-3_ma-priori_r13");
+        // Non-default new axes extend the key (and so trip the resume
+        // compatibility check against old archives).
+        axes.skips = vec![0, 1];
+        assert!(axes.key().ends_with("_s0-1"));
+        axes.shapes = vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }];
+        assert!(axes.key().ends_with("_s0-1_yrect-taper50"));
     }
 
     #[test]
@@ -1194,11 +1364,12 @@ mod tests {
         let axes = SearchAxes::jets_default();
         let mut a = Archive::new(&task, &axes, &opts);
         let c = Candidate {
-            hidden: vec![32, 32],
+            hidden: vec![32, 16],
             fanin: 3,
             bw: 2,
             method: PruneMethod::APriori,
             bram_min_bits: 13,
+            skips: 1,
         };
         let mut e = ArchiveEntry::from_candidate(&c, 1234, "trained");
         e.qualities = vec![55.5, 60.25];
@@ -1216,7 +1387,8 @@ mod tests {
         let back = Archive::load(&path).unwrap();
         assert_eq!(back.entries.len(), 2);
         let be = &back.entries[&c.name()];
-        assert_eq!(be.hidden, vec![32, 32]);
+        assert_eq!(be.hidden, vec![32, 16]);
+        assert_eq!(be.skips, 1, "skip axis must round-trip");
         assert_eq!(be.qualities, vec![55.5, 60.25]);
         assert_eq!(be.luts, 1234);
         assert_eq!(be.mapped_luts, Some(321));
@@ -1259,6 +1431,7 @@ mod tests {
             bw: 1,
             method: PruneMethod::APriori,
             bram_min_bits: 13,
+            skips: 0,
         };
         a.entries
             .insert(c.name(), ArchiveEntry::from_candidate(&c, u64::MAX, "gated"));

@@ -22,6 +22,13 @@
 //!   resumable Pareto archive and emits its frontier as verified,
 //!   servable netlists (`logicnets explore`).
 
+// Clippy policy: CI runs `cargo clippy --all-targets -- -D warnings`.
+// The style lints this crate opts out of (index-based loops over several
+// parallel slices, wide constructor argument lists, wide cost tuples) are
+// allowed centrally in Cargo.toml's `[lints.clippy]` table so every
+// target (lib, bin, tests, benches, examples) shares one policy;
+// correctness lints stay enabled everywhere.
+
 pub mod cost;
 pub mod data;
 pub mod dse;

@@ -94,6 +94,7 @@ fn print_help() {
     println!("          [--candidates C] [--steps B] [--eta E] [--emit K] [--dataset jets]");
     println!("          [--emit-zoo]   calibrate emitted netlists + write zoo.json for serve --zoo");
     println!("          [--widths 16,32,64] [--depths 1,2] [--fanins 2,3,4] [--bws 1,2,3]");
+    println!("          [--skips 0,1] [--shapes rect,taper50]   skip-concat + pyramid axes");
     println!("          [--methods a-priori,iterative] [--out reports/dse]");
     println!("tables : {}", experiments::ALL_TABLES.join(" "));
     println!("figures: {}", experiments::ALL_FIGURES.join(" "));
@@ -564,7 +565,7 @@ fn parse_usize_list(s: &str) -> Vec<usize> {
 /// persist a resumable Pareto archive whose frontier is synthesized,
 /// verified and scored through the netlist serving backend.
 fn cmd_explore(args: &Args) -> Result<()> {
-    use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask};
+    use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask, WidthShape};
     fn axis(args: &Args, key: &str, slot: &mut Vec<usize>) {
         if let Some(s) = args.get(key) {
             let v = parse_usize_list(s);
@@ -587,6 +588,19 @@ fn cmd_explore(args: &Args) -> Result<()> {
     axis(args, "fanins", &mut axes.fanins);
     axis(args, "bws", &mut axes.bws);
     axis(args, "bram-min-bits", &mut axes.bram_min_bits);
+    axis(args, "skips", &mut axes.skips);
+    if let Some(s) = args.get("shapes") {
+        let mut shapes = Vec::new();
+        for t in s.split(',') {
+            match WidthShape::parse(t) {
+                Some(w) => shapes.push(w),
+                None => bail!("unknown width shape {t:?} (expected rect or taper<1-100>)"),
+            }
+        }
+        if !shapes.is_empty() {
+            axes.shapes = shapes;
+        }
+    }
     if let Some(s) = args.get("methods") {
         let mut ms = Vec::new();
         for t in s.split(',') {

@@ -15,7 +15,7 @@ pub struct QuantSpec {
 
 impl QuantSpec {
     pub fn new(bw: usize, maxv: f32) -> QuantSpec {
-        assert!(bw >= 1 && bw <= 16, "bw {bw}");
+        assert!((1..=16).contains(&bw), "bw {bw}");
         QuantSpec { bw, maxv }
     }
 

@@ -120,13 +120,30 @@ impl Manifest {
         Manifest::parse(&text)
     }
 
-    /// Build an in-memory MLP manifest with the repo's standard quantizer
-    /// scales (maxv 1.0 / 2.0 / 4.0, as every hep/mnist config uses) — the
-    /// entry point for *generated* models that have no artifact on disk.
-    /// The design-space exploration engine (`crate::dse::search`) produces
-    /// these, trains them through `train::native`, and feeds them into the
-    /// exact same export → tables → synth → serve pipeline as artifact
-    /// models.  Sparse hidden layers at `fanin`, dense classifier head.
+    /// Per-layer input widths of a skip-concat topology: layer `i`'s input
+    /// is the newest-first concatenation of the last `min(skips, i) + 1`
+    /// activations (`act_0` = the raw input, `act_j` = hidden layer `j-1`'s
+    /// output), exactly the wiring `nn::export`, `luts::forward_codes` and
+    /// `serve::engine` execute.  Returns one width per layer (hidden layers
+    /// first, classifier head last).  This is the single source of truth
+    /// for skip-widened `in_f`, shared by [`Manifest::synthetic_topology`]
+    /// and the DSE cost gate so analytical pricing can never diverge from
+    /// the manifest a candidate actually builds.
+    pub fn skip_in_widths(in_features: usize, hidden: &[usize], skips: usize) -> Vec<usize> {
+        let mut act_widths = Vec::with_capacity(hidden.len() + 1);
+        act_widths.push(in_features);
+        act_widths.extend_from_slice(hidden);
+        (0..=hidden.len())
+            .map(|i| {
+                let lo = i.saturating_sub(skips);
+                act_widths[lo..=i].iter().sum()
+            })
+            .collect()
+    }
+
+    /// [`Manifest::synthetic_topology`] without skip connections — the
+    /// original uniform entry point, kept for callers that only speak the
+    /// rectangle family.
     pub fn synthetic_mlp(
         name: &str,
         dataset: &str,
@@ -136,20 +153,45 @@ impl Manifest {
         fanin: usize,
         bw: usize,
     ) -> Manifest {
+        Self::synthetic_topology(name, dataset, in_features, classes, hidden, fanin, bw, 0)
+    }
+
+    /// Build an in-memory MLP manifest with the repo's standard quantizer
+    /// scales (maxv 1.0 / 2.0 / 4.0, as every hep/mnist config uses) — the
+    /// entry point for *generated* models that have no artifact on disk.
+    /// The design-space exploration engine (`crate::dse::search`) produces
+    /// these, trains them through `train::native`, and feeds them into the
+    /// exact same export → tables → synth → serve pipeline as artifact
+    /// models.  Sparse hidden layers at `fanin`, dense classifier head.
+    ///
+    /// `hidden` may be any per-layer width schedule (rectangle, pyramid
+    /// taper, …) and `skips` wires newest-first skip concatenation: each
+    /// layer's `in_f` is widened by the earlier activations it consumes
+    /// ([`Manifest::skip_in_widths`]), which is what `cost::manifest_cost`
+    /// prices and `ModelState::init` allocates.
+    pub fn synthetic_topology(
+        name: &str,
+        dataset: &str,
+        in_features: usize,
+        classes: usize,
+        hidden: &[usize],
+        fanin: usize,
+        bw: usize,
+        skips: usize,
+    ) -> Manifest {
+        let in_widths = Self::skip_in_widths(in_features, hidden, skips);
         let mut layers = Vec::with_capacity(hidden.len() + 1);
-        let mut prev = in_features;
         for (i, &h) in hidden.iter().enumerate() {
             layers.push(LayerSpec {
-                in_f: prev,
+                in_f: in_widths[i],
                 out_f: h,
-                fanin: Some(fanin.min(prev)),
+                fanin: Some(fanin.min(in_widths[i])),
                 bw_in: bw,
                 maxv_in: if i == 0 { 1.0 } else { 2.0 },
             });
-            prev = h;
         }
         layers.push(LayerSpec {
-            in_f: prev,
+            in_f: in_widths[hidden.len()],
             out_f: classes,
             fanin: None,
             bw_in: bw,
@@ -166,7 +208,7 @@ impl Manifest {
             bw_out: bw,
             fanin,
             fanin_fc: None,
-            skips: 0,
+            skips,
             batch: 64,
             eval_batch: 256,
             maxv_in: 1.0,
@@ -225,6 +267,38 @@ mod tests {
         // Fan-in never exceeds the layer's input width.
         let wide = Manifest::synthetic_mlp("w", "jets", 4, 2, &[8], 7, 1);
         assert_eq!(wide.layers[0].fanin, Some(4));
+    }
+
+    #[test]
+    fn synthetic_topology_skip_widened_wiring() {
+        // skips=1, pyramid widths: layer 1 consumes [h0, input], the head
+        // [h1, h0] — newest-first concat widths, matching nn::export.
+        let m = Manifest::synthetic_topology("s", "jets", 16, 5, &[32, 16], 3, 2, 1);
+        assert_eq!(m.skips, 1);
+        assert_eq!(m.hidden, vec![32, 16]);
+        assert_eq!(m.layers[0].in_f, 16);
+        assert_eq!(m.layers[1].in_f, 32 + 16);
+        assert_eq!(m.layers[2].in_f, 16 + 32);
+        assert_eq!(m.layers[2].fanin, None);
+        // skips larger than the depth clamps at the full history.
+        let deep = Manifest::synthetic_topology("d", "jets", 8, 3, &[6, 4], 2, 1, 9);
+        assert_eq!(deep.layers[1].in_f, 6 + 8);
+        assert_eq!(deep.layers[2].in_f, 4 + 6 + 8);
+        // skips=0 reduces to the plain constructor exactly.
+        let a = Manifest::synthetic_topology("a", "jets", 16, 5, &[32, 24], 3, 2, 0);
+        let b = Manifest::synthetic_mlp("a", "jets", 16, 5, &[32, 24], 3, 2);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!((la.in_f, la.out_f, la.fanin), (lb.in_f, lb.out_f, lb.fanin));
+        }
+        assert_eq!(b.skips, 0);
+    }
+
+    #[test]
+    fn skip_in_widths_sums_newest_history() {
+        assert_eq!(Manifest::skip_in_widths(16, &[32, 24], 0), vec![16, 32, 24]);
+        assert_eq!(Manifest::skip_in_widths(16, &[32, 24], 1), vec![16, 48, 56]);
+        assert_eq!(Manifest::skip_in_widths(16, &[32, 24], 2), vec![16, 48, 72]);
+        assert_eq!(Manifest::skip_in_widths(10, &[], 3), vec![10]);
     }
 
     #[test]

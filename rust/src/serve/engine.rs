@@ -348,10 +348,11 @@ impl NetlistEngine {
         tables: &ModelTables,
         netlist: Netlist,
     ) -> Result<NetlistEngine> {
-        // Shared executable-netlist preconditions (no BRAM, no skip wiring,
-        // emitted layers present) live in synth::verify_plan; serving
-        // additionally needs the prefix to start at layer 0 so the
-        // netlist's input bus is the model input bus.
+        // Shared executable-netlist preconditions (no BRAM, emitted layers
+        // present, uniform-width contiguous prefix for skip wiring) live in
+        // synth::verify_plan; serving additionally needs the prefix to
+        // start at layer 0 so the netlist's input bus is the model input
+        // bus.
         let (emitted, lt_first, out_bw) = crate::synth::verify_plan(model, tables, &netlist)?;
         ensure!(
             emitted.iter().enumerate().all(|(k, &li)| k == li),
@@ -366,10 +367,30 @@ impl NetlistEngine {
             model.layers[0].in_f
         );
         ensure!(out_bw <= 8, "engine supports <=8-bit codes");
-        let net_outs = model.layers[last].neurons.len();
+        if model.skips > 0 && last + 1 < model.num_layers() {
+            ensure!(
+                last + 2 == model.num_layers(),
+                "skip wiring supports a single dense head after the netlist"
+            );
+        }
+        // The output bus follows `synth::output_bus_acts` — the dense
+        // head's full newest-first concat input with skip wiring, the last
+        // sparse layer's codes otherwise — and the dense tail consumes it
+        // verbatim.  Act slot 0 is the raw input; slot j is layer j-1's
+        // output (slot == act index: the prefix is contiguous from 0).
+        let net_outs: usize = crate::synth::output_bus_acts(model, &emitted)
+            .iter()
+            .map(|&j| {
+                if j == 0 {
+                    model.layers[0].in_f
+                } else {
+                    model.layers[j - 1].neurons.len()
+                }
+            })
+            .sum();
         ensure!(
             netlist.outputs.len() == net_outs * out_bw,
-            "netlist output bus {} != neurons {net_outs} * bw {out_bw}",
+            "netlist output bus {} != codes {net_outs} * bw {out_bw}",
             netlist.outputs.len()
         );
         let dense_tail: Vec<DenseStage> =
@@ -664,6 +685,29 @@ mod tests {
             let mut rng = Rng::new(31);
             for n in [1usize, 63, 64, 65, 200] {
                 let xs: Vec<f32> = (0..12 * n).map(|_| rng.f32()).collect();
+                assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs), "{opt:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_engine_serves_skip_topologies() {
+        // A skip/pyramid manifest end to end: the netlist output bus is the
+        // dense head's concat input, and the served predictions must be
+        // bit-identical to the table engine at every optimization level.
+        use crate::runtime::Manifest;
+        use crate::sparsity::prune::PruneMethod;
+        let man = Manifest::synthetic_topology("eng_skip", "jets", 8, 3, &[12, 6], 3, 2, 1);
+        let st = crate::train::ModelState::init(&man, 9, PruneMethod::APriori);
+        let model = crate::nn::ExportedModel::from_state(&man, &st);
+        let tables = ModelTables::generate(&model).unwrap();
+        let lut = LutEngine::build(&model, &tables).unwrap();
+        let mut rng = Rng::new(15);
+        for opt in [OptLevel::None, OptLevel::Full] {
+            let net = NetlistEngine::build_opt(&model, &tables, opt).unwrap();
+            assert_eq!(Backend::classes(&net), 3);
+            for n in [1usize, 63, 64, 65, 128] {
+                let xs: Vec<f32> = (0..8 * n).map(|_| rng.f32()).collect();
                 assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs), "{opt:?} n={n}");
             }
         }

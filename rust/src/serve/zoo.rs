@@ -40,10 +40,15 @@ pub struct ZooEntry {
     pub in_features: usize,
     pub classes: usize,
     /// Topology axes, enough to rebuild the `Manifest`
-    /// (`Manifest::synthetic_mlp`).
+    /// (`Manifest::synthetic_topology`): per-layer hidden widths (pyramid
+    /// schedules included), fan-in, activation bits, and the newest-first
+    /// skip-concat count.
     pub hidden: Vec<usize>,
     pub fanin: usize,
     pub bw: usize,
+    /// Skip-connection count (manifests written before this axis existed
+    /// load as 0).
+    pub skips: usize,
     /// Trained-state checkpoint, relative to the manifest's directory.
     pub checkpoint: String,
     /// Mapped (synthesized, `OptLevel::Full`) LUT count — the routing
@@ -97,6 +102,7 @@ impl ZooEntry {
             ),
             ("fanin", Json::num(self.fanin as f64)),
             ("bw", Json::num(self.bw as f64)),
+            ("skips", Json::num(self.skips as f64)),
             ("checkpoint", Json::str(&self.checkpoint)),
             // String like the DSE archive's u64s: f64 JSON numbers round
             // above 2^53.
@@ -132,6 +138,7 @@ impl ZooEntry {
             hidden,
             fanin: j.req_usize("fanin")?,
             bw: j.req_usize("bw")?,
+            skips: j.opt_usize("skips").unwrap_or(0),
             checkpoint: j.req_str("checkpoint")?.to_string(),
             luts: j
                 .req_str("luts")?
@@ -217,7 +224,7 @@ impl ZooManifest {
 /// machine-verify → [`NetlistEngine`].  `zoo_dir` is the directory the
 /// manifest lives in (checkpoint paths are relative to it).
 pub fn build_engine(entry: &ZooEntry, zoo_dir: &Path) -> Result<NetlistEngine> {
-    let man = Manifest::synthetic_mlp(
+    let man = Manifest::synthetic_topology(
         &entry.name,
         &entry.dataset,
         entry.in_features,
@@ -225,6 +232,7 @@ pub fn build_engine(entry: &ZooEntry, zoo_dir: &Path) -> Result<NetlistEngine> {
         &entry.hidden,
         entry.fanin,
         entry.bw,
+        entry.skips,
     );
     let ck = zoo_dir.join(&entry.checkpoint);
     let state = checkpoint::load(&ck)
@@ -312,6 +320,7 @@ mod tests {
             hidden: vec![16, 16],
             fanin: 3,
             bw: 2,
+            skips: 0,
             checkpoint: format!("ckpt/{name}.r2.bin"),
             luts,
             brams: 0,
@@ -324,10 +333,13 @@ mod tests {
 
     #[test]
     fn manifest_roundtrips_through_json() {
-        let zoo = ZooManifest {
+        let mut zoo = ZooManifest {
             dataset: "jets".into(),
             entries: vec![entry("a", 120, 61.5, 40.0), entry("b", u64::MAX - 1, 90.0, 250.0)],
         };
+        // Skip/pyramid topology axes must survive the round trip.
+        zoo.entries[1].skips = 1;
+        zoo.entries[1].hidden = vec![32, 16];
         let dir = std::env::temp_dir().join("lnck_zoo_manifest_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("zoo.json");
@@ -336,6 +348,16 @@ mod tests {
         assert_eq!(back, zoo);
         // u64 LUT counts survive beyond f64 precision (string-encoded).
         assert_eq!(back.entries[1].luts, u64::MAX - 1);
+        assert_eq!(back.entries[1].skips, 1);
+        // A manifest written before the skip axis existed (no "skips"
+        // field) loads as skip-free.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let legacy = text.replace(",\"skips\":1", "").replace(",\"skips\":0", "");
+        assert!(!legacy.contains("skips"), "field must be stripped: {legacy}");
+        let lpath = dir.join("zoo_legacy.json");
+        std::fs::write(&lpath, legacy).unwrap();
+        let old = ZooManifest::load(&lpath).unwrap();
+        assert!(old.entries.iter().all(|e| e.skips == 0));
     }
 
     #[test]

@@ -87,6 +87,15 @@ pub fn synthesize(
         .map(|(i, _)| i)
         .collect();
     ensure!(!emitted.is_empty(), "no sparse layers to synthesize");
+    // Skip wiring re-consumes earlier activations by *act index*, so the
+    // emitted layers must be the contiguous prefix starting at layer 0
+    // (which every skip manifest's sparse-hidden + dense-head layout is).
+    if model.skips > 0 {
+        ensure!(
+            emitted.iter().enumerate().all(|(k, &li)| k == li),
+            "skip wiring requires a contiguous table-mapped prefix from layer 0"
+        );
+    }
     // Bit-level nets of each activation (input + each emitted layer).
     let first = emitted[0];
     let in_bw = tables.layers[first].as_ref().unwrap().quant_in.bw;
@@ -97,8 +106,6 @@ pub fn synthesize(
         vec![(0..in_bus as u32).map(Net::Input).collect()];
     let mut layer_depths: Vec<u32> = Vec::new();
     let mut analytical: u64 = 0;
-    let mut ff_bits = if opts.registers { in_bus } else { 0 };
-    let mut outputs: Vec<Net> = Vec::new();
 
     // Reachable-code tracking for don't-care pruning (OptLevel::Full).
     // `acts_masks` parallels `acts_nets`: one producible-code bitmask per
@@ -242,15 +249,37 @@ pub fn synthesize(
             .max()
             .unwrap_or(base_level);
         layer_depths.push(out_level.saturating_sub(base_level));
-        if k + 1 < emitted.len() {
-            if opts.registers {
-                ff_bits += layer_out.len();
-            }
-            acts_nets.push(layer_out);
-            acts_masks.push(out_masks);
-        } else {
-            outputs = layer_out;
-        }
+        acts_nets.push(layer_out);
+        acts_masks.push(out_masks);
+    }
+
+    // Registered-flow FF model (Fig. 5.1): activation slot j is registered
+    // at the entry of every stage that consumes it — stages
+    // j ..= min(j + skips, S-1) — so a skip-consumed activation is
+    // re-registered once per extra stage it rides through the pipeline.
+    // With skips == 0 this reduces to the classic count: the input bus
+    // plus each intermediate layer output once (the last stage's output
+    // leaves the netlist combinationally, as does the output bus's
+    // earlier-activation share for skip models).
+    let ff_bits: usize = if opts.registers {
+        let s_last = emitted.len() - 1;
+        acts_nets[..emitted.len()]
+            .iter()
+            .enumerate()
+            .map(|(j, nets)| ((j + model.skips).min(s_last) - j + 1) * nets.len())
+            .sum()
+    } else {
+        0
+    };
+
+    // Output bus: the last emitted layer's codes — or, with skip wiring
+    // feeding a later (dense) layer, the full newest-first concat bus that
+    // layer consumes (`output_bus_acts`), so every downstream surface
+    // (verifiers, `serve::NetlistEngine`) can evaluate the model end to
+    // end without re-entering the netlist for earlier activations.
+    let mut outputs: Vec<Net> = Vec::new();
+    for &j in &output_bus_acts(model, &emitted) {
+        outputs.extend_from_slice(&acts_nets[j]);
     }
 
     mapper.netlist.outputs = outputs;
@@ -269,20 +298,18 @@ pub fn synthesize(
             opt::netlists_equivalent(&pre_netlist, &optimized, 0x0D0C_5EED),
             "netlist optimization changed circuit behavior"
         );
-        // And match the truth-table forward pass whenever the table-side
-        // checkers support the layout (don't-care pruning is gated to
-        // skip-free models, so every pruned netlist lands here).
-        if model.skips == 0 {
-            let mism = if optimized.num_inputs <= 16 {
-                verify_netlist_exhaustive(model, tables, &optimized)?
-            } else {
-                verify_netlist(model, tables, &optimized, 2048, 0x0D0C_5EED)?
-            };
-            ensure!(
-                mism == 0,
-                "optimized netlist diverged from the truth tables ({mism} mismatches)"
-            );
-        }
+        // And match the truth-table forward pass (the checkers walk the
+        // same newest-first skip-concat wiring the mapper does, so skip
+        // models are covered too).
+        let mism = if optimized.num_inputs <= 16 {
+            verify_netlist_exhaustive(model, tables, &optimized)?
+        } else {
+            verify_netlist(model, tables, &optimized, 2048, 0x0D0C_5EED)?
+        };
+        ensure!(
+            mism == 0,
+            "optimized netlist diverged from the truth tables ({mism} mismatches)"
+        );
         (optimized, stats)
     } else {
         // Optimization off (or BRAM pseudo-ports present, which the
@@ -324,20 +351,40 @@ pub fn synthesize(
     Ok((netlist, report))
 }
 
+/// The single source of truth for the netlist's output-bus layout:
+/// activation slots to emit, newest first.  Without skip wiring (or when
+/// every layer is table-mapped) the bus is the last emitted layer's
+/// output — slot `emitted.len()`.  With skip wiring and a following
+/// (dense) layer, the bus is every activation that layer consumes —
+/// act indices `(head-skips ..= head)` newest-first, where
+/// `head = last+1` (valid because skip support requires the emitted
+/// prefix to be contiguous from layer 0, so slot and act index agree).
+/// `synthesize` wires the bus from this, the verifiers reproduce it from
+/// the truth tables, and `NetlistEngine` sizes its decode from it.
+pub(crate) fn output_bus_acts(model: &ExportedModel, emitted: &[usize]) -> Vec<usize> {
+    let last = *emitted.last().expect("at least one emitted layer");
+    if model.skips > 0 && last + 1 < model.num_layers() {
+        let head = last + 1;
+        let lo = head.saturating_sub(model.skips);
+        (lo..=head).rev().collect()
+    } else {
+        vec![emitted.len()]
+    }
+}
+
 /// Indices of the table-mapped (sparse) layers, plus the shared
 /// preconditions every netlist-executing surface needs (equivalence
-/// checkers here, `serve::NetlistEngine` for serving): no BRAM ports, no
-/// skip wiring, at least one emitted layer.  Returns the emitted layer
-/// indices, the first emitted layer's tables, and the output code width.
+/// checkers here, `serve::NetlistEngine` for serving): no BRAM ports, at
+/// least one emitted layer, and — for skip wiring — a contiguous prefix
+/// from layer 0 with one uniform code width (the bus the skip concat
+/// interleaves).  Returns the emitted layer indices, the first emitted
+/// layer's tables, and the output code width.
 pub(crate) fn verify_plan<'a>(
     model: &ExportedModel,
     tables: &'a ModelTables,
     netlist: &Netlist,
 ) -> Result<(Vec<usize>, &'a crate::luts::LayerTables, usize)> {
     ensure!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
-    // Only contiguous sparse prefixes ending the netlist are comparable in
-    // this helper (no skip wiring support here).
-    ensure!(model.skips == 0, "verify_netlist: skip wiring unsupported");
     let emitted: Vec<usize> = tables
         .layers
         .iter()
@@ -348,34 +395,70 @@ pub(crate) fn verify_plan<'a>(
     ensure!(!emitted.is_empty(), "no table-mapped layers to verify");
     let last = *emitted.last().unwrap();
     let out_bw = tables.layers[last].as_ref().unwrap().quant_out.bw;
+    if model.skips > 0 {
+        ensure!(
+            emitted.iter().enumerate().all(|(k, &li)| k == li),
+            "skip wiring requires a contiguous table-mapped prefix from layer 0"
+        );
+        for &li in &emitted {
+            let lt = tables.layers[li].as_ref().unwrap();
+            ensure!(
+                lt.quant_in.bw == out_bw && lt.quant_out.bw == out_bw,
+                "skip wiring requires a uniform code width (layer {li})"
+            );
+        }
+    }
     let lt_first = tables.layers[emitted[0]].as_ref().unwrap();
     Ok((emitted, lt_first, out_bw))
 }
 
 /// Table-path reference: propagate one sample's input codes through the
-/// emitted sparse layers.  All buffers are caller-owned and reused across
-/// samples; the result lands in `cur`.
+/// emitted sparse layers with newest-first skip-concat wiring, producing
+/// the codes of the netlist's output bus — the last emitted layer's codes,
+/// or, with skip wiring and a following dense layer, the concat bus that
+/// layer consumes (mirroring `synthesize`'s output-bus rule).  All buffers
+/// are caller-owned and reused across samples; the result lands in `out`.
 fn table_forward_codes(
     model: &ExportedModel,
     tables: &ModelTables,
     emitted: &[usize],
     input: &[u32],
-    cur: &mut Vec<u32>,
-    next: &mut Vec<u32>,
+    acts: &mut Vec<Vec<u32>>,
+    concat: &mut Vec<u32>,
     gathered: &mut Vec<u32>,
+    out: &mut Vec<u32>,
 ) {
-    cur.clear();
-    cur.extend_from_slice(input);
-    for &li in emitted {
+    if acts.len() < emitted.len() + 1 {
+        acts.resize_with(emitted.len() + 1, Vec::new);
+    }
+    acts[0].clear();
+    acts[0].extend_from_slice(input);
+    for (k, &li) in emitted.iter().enumerate() {
         let lt = tables.layers[li].as_ref().unwrap();
+        // With skips > 0 the emitted prefix is contiguous (verify_plan), so
+        // position k equals act index li and history indexing is direct.
+        concat.clear();
+        if li == 0 || model.skips == 0 {
+            concat.extend_from_slice(&acts[k]);
+        } else {
+            let lo = li.saturating_sub(model.skips);
+            for j in (lo..=li).rev() {
+                concat.extend_from_slice(&acts[j]);
+            }
+        }
+        let mut next = std::mem::take(&mut acts[k + 1]);
         next.clear();
         for (nj, t) in lt.tables.iter().enumerate() {
             let nr = &model.layers[li].neurons[nj];
             gathered.clear();
-            gathered.extend(nr.inputs.iter().map(|&j| cur[j]));
+            gathered.extend(nr.inputs.iter().map(|&j| concat[j]));
             next.push(t.lookup(crate::util::bits::pack_index(gathered, lt.quant_in.bw)));
         }
-        std::mem::swap(cur, next);
+        acts[k + 1] = next;
+    }
+    out.clear();
+    for &j in &output_bus_acts(model, emitted) {
+        out.extend_from_slice(&acts[j]);
     }
 }
 
@@ -410,7 +493,8 @@ pub fn verify_netlist(
         }
     }
     let out = crate::sim::eval_netlist(netlist, &inputs);
-    let (mut cur, mut next, mut gathered) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut acts, mut concat, mut gathered, mut expect) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
     let mut mismatches = 0usize;
     for s in 0..samples {
         table_forward_codes(
@@ -418,11 +502,13 @@ pub fn verify_netlist(
             tables,
             &emitted,
             &codes[s * in_f..(s + 1) * in_f],
-            &mut cur,
-            &mut next,
+            &mut acts,
+            &mut concat,
             &mut gathered,
+            &mut expect,
         );
-        let ok = cur
+        debug_assert_eq!(expect.len() * out_bw, netlist.outputs.len());
+        let ok = expect
             .iter()
             .enumerate()
             .all(|(k, &c)| out.get_code(k * out_bw, out_bw, s) == c);
@@ -447,7 +533,8 @@ pub fn verify_netlist_scalar(
     let bw_in = lt_first.quant_in.bw;
     let in_f = model.layers[emitted[0]].in_f;
     let mut rng = crate::util::rng::Rng::new(seed);
-    let (mut cur, mut next, mut gathered) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut acts, mut concat, mut gathered, mut expect) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
     let mut mismatches = 0usize;
     for _ in 0..samples {
         // Random input codes.
@@ -460,9 +547,18 @@ pub fn verify_netlist_scalar(
             }
         }
         let net_out = netlist.eval(&bits);
-        table_forward_codes(model, tables, &emitted, &codes, &mut cur, &mut next, &mut gathered);
-        let mut expect_bits = Vec::with_capacity(cur.len() * out_bw);
-        for &c in &cur {
+        table_forward_codes(
+            model,
+            tables,
+            &emitted,
+            &codes,
+            &mut acts,
+            &mut concat,
+            &mut gathered,
+            &mut expect,
+        );
+        let mut expect_bits = Vec::with_capacity(expect.len() * out_bw);
+        for &c in &expect {
             for b in 0..out_bw {
                 expect_bits.push((c >> b) & 1 == 1);
             }
@@ -493,12 +589,22 @@ pub fn verify_netlist_exhaustive(
     let inputs = crate::sim::BitMatrix::all_patterns(in_bits);
     let out = crate::sim::eval_netlist(netlist, &inputs);
     let mut in_codes = vec![0u32; in_f];
-    let (mut cur, mut next, mut gathered) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut acts, mut concat, mut gathered, mut expect) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
     let mut mismatches = 0usize;
     for idx in 0..(1usize << in_bits) {
         crate::util::bits::unpack_index(idx, bw_in, in_f, &mut in_codes);
-        table_forward_codes(model, tables, &emitted, &in_codes, &mut cur, &mut next, &mut gathered);
-        let ok = cur
+        table_forward_codes(
+            model,
+            tables,
+            &emitted,
+            &in_codes,
+            &mut acts,
+            &mut concat,
+            &mut gathered,
+            &mut expect,
+        );
+        let ok = expect
             .iter()
             .enumerate()
             .all(|(k, &c)| out.get_code(k * out_bw, out_bw, idx) == c);
@@ -704,6 +810,33 @@ mod tests {
         assert_eq!(rep.pre_opt_luts, rep.luts);
         assert!((rep.opt_reduction - 1.0).abs() < 1e-12);
         assert_eq!(rep.opt_rounds, 0);
+    }
+
+    #[test]
+    fn skip_model_netlist_round_trip() {
+        // A trained-shape skip topology (skips=1, pyramid widths): the
+        // netlist's output bus is the dense head's newest-first concat
+        // input, and every checker (sampled, scalar, exhaustive) agrees
+        // with the truth-table path.
+        use crate::runtime::Manifest;
+        use crate::sparsity::prune::PruneMethod;
+        let man = Manifest::synthetic_topology("synth_skip", "jets", 8, 3, &[10, 6], 3, 2, 1);
+        let st = crate::train::ModelState::init(&man, 3, PruneMethod::APriori);
+        let ex = crate::nn::ExportedModel::from_state(&man, &st);
+        let tables = crate::luts::ModelTables::generate(&ex).unwrap();
+        let base = SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() };
+        let (netlist, rep) = synthesize(&ex, &tables, base).unwrap();
+        // Head input = [act_2 (6 wide), act_1 (10 wide)] at 2 bits/code.
+        assert_eq!(netlist.outputs.len(), (6 + 10) * 2);
+        assert_eq!(verify_netlist(&ex, &tables, &netlist, 300, 5).unwrap(), 0);
+        assert_eq!(verify_netlist_scalar(&ex, &tables, &netlist, 300, 5).unwrap(), 0);
+        assert_eq!(verify_netlist_exhaustive(&ex, &tables, &netlist).unwrap(), 0);
+        // The optimization pipeline re-verifies internally and must still
+        // hold externally.
+        let (onet, orep) =
+            synthesize(&ex, &tables, SynthOpts { opt: OptLevel::Full, ..base }).unwrap();
+        assert!(orep.luts <= rep.luts);
+        assert_eq!(verify_netlist_exhaustive(&ex, &tables, &onet).unwrap(), 0);
     }
 
     /// A model whose first layer saturates to the two extreme codes

@@ -10,6 +10,13 @@
 //! * quantized forward pass with **batch** batch-norm statistics
 //!   (training mode), activation quantizers applied through a
 //!   straight-through estimator (STE) in the backward pass,
+//! * newest-first **skip-concat wiring** (`skips > 0`): layer `i`'s input
+//!   is the concatenation of the last `min(skips, i) + 1` quantized
+//!   activations, newest first — exactly the order `luts::forward_codes`,
+//!   `serve::engine` and `nn::export::skip_input` execute — and the
+//!   backward pass routes the concatenated input gradient back into every
+//!   segment, so one activation accumulates gradient from every layer
+//!   that consumes it before its own quantizer STE fires,
 //! * softmax cross-entropy on the *quantized* logits (the manifests'
 //!   `train_softmax` convention),
 //! * SGD with classical momentum and the same linear learning-rate decay
@@ -37,7 +44,8 @@ const GRAD_CLIP: f32 = 5.0;
 /// One layer's forward tape (everything the backward pass needs; the raw
 /// pre-BN response is not kept — BN backward runs on `zhat`).
 struct Tape {
-    /// Layer input values `[b, in_f]` (dequantized activation values).
+    /// Layer input values `[b, in_f]`: the (skip-concatenated, quantized)
+    /// activation values this layer consumed.
     a_in: Vec<f32>,
     /// Batch mean / biased variance per neuron.
     mu: Vec<f32>,
@@ -91,8 +99,9 @@ struct LayerGrads {
 
 /// Run `opts.steps` native optimizer steps of the manifest's model on
 /// `train_set`.  Same contract as [`super::train`]: mutates `state` in
-/// place and returns the log.  Supports the MLP family (`skips == 0`);
-/// conv manifests must go through the HLO path.
+/// place and returns the log.  Supports the whole MLP layer-graph family —
+/// any per-layer width schedule and newest-first skip concatenation
+/// (`skips >= 0`); conv manifests must go through the HLO path.
 pub fn train_native(
     man: &Manifest,
     state: &mut ModelState,
@@ -101,10 +110,27 @@ pub fn train_native(
 ) -> Result<TrainLog> {
     ensure!(train_set.d == man.in_features, "dataset width mismatch");
     ensure!(train_set.classes == man.classes, "dataset class mismatch");
-    ensure!(man.skips == 0, "native trainer supports skip-free MLPs only");
     ensure!(man.kind == "mlp", "native trainer supports kind=mlp only (got {})", man.kind);
     let n = man.num_layers();
     ensure!(state.num_layers() == n, "state/manifest layer count mismatch");
+    // Activation widths `[in_features, hidden...]` for skip concatenation
+    // (act_0 = quantized input, act_{i+1} = layer i's quantized output),
+    // validated against the canonical skip-widened rule
+    // (`Manifest::skip_in_widths` — the same widths the DSE gate prices
+    // and `ModelState::init` allocates).
+    let act_widths: Vec<usize> = std::iter::once(man.in_features)
+        .chain(man.layers.iter().take(n - 1).map(|l| l.out_f))
+        .collect();
+    let want = Manifest::skip_in_widths(man.in_features, &act_widths[1..], man.skips);
+    for (i, l) in man.layers.iter().enumerate() {
+        ensure!(
+            l.in_f == want[i],
+            "layer {i}: in_f {} != skip-concat width {} (skips {})",
+            l.in_f,
+            want[i],
+            man.skips
+        );
+    }
     let b = man.batch.max(1);
     let mut rng = Rng::new(opts.seed ^ 0x6e617469); // "nati"
     let pruners: Vec<Pruner> =
@@ -121,10 +147,37 @@ pub fn train_native(
         let mut tapes: Vec<Tape> = Vec::with_capacity(n);
         // Input quantizer of layer 0 (values domain, like nn::export).
         let q0 = crate::nn::QuantSpec::new(man.layers[0].bw_in, man.layers[0].maxv_in);
-        let mut act: Vec<f32> = bx.iter().map(|&v| q0.quantize(v)).collect();
+        // acts[j] = activation j (quantized values, `[b, act_widths[j]]`);
+        // kept for the whole step so skip layers can re-consume them.
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n);
+        acts.push(bx.iter().map(|&v| q0.quantize(v)).collect());
+        // Final-layer quantized logits (`[b, classes]`).
+        let mut logits: Vec<f32> = Vec::new();
         for i in 0..n {
             let l = &man.layers[i];
             let (out_f, in_f) = (l.out_f, l.in_f);
+            // Layer input: newest-first concat of the last
+            // `min(skips, i) + 1` activations (matches `luts::mod.rs` /
+            // `serve/engine.rs` / `nn::export::skip_input` exactly).
+            // Skip-free layers consume their activation exactly once, so
+            // move it into the tape (no per-step clone on the old path);
+            // with skips > 0 later layers re-read `acts`, and the concat
+            // is a fresh buffer anyway.
+            let act: Vec<f32> = if man.skips == 0 {
+                std::mem::take(&mut acts[i])
+            } else if i == 0 {
+                acts[i].clone()
+            } else {
+                let lo = i.saturating_sub(man.skips);
+                let mut v = Vec::with_capacity(b * in_f);
+                for s in 0..b {
+                    for j in (lo..=i).rev() {
+                        let w = act_widths[j];
+                        v.extend_from_slice(&acts[j][s * w..(s + 1) * w]);
+                    }
+                }
+                v
+            };
             debug_assert_eq!(act.len(), b * in_f, "layer {i} input width");
             let w = &state.ws[i];
             let mut z = vec![0f32; b * out_f];
@@ -173,8 +226,12 @@ pub fn train_native(
             }
             let q = quant_out_of(man, i);
             let next: Vec<f32> = y.iter().map(|&v| q.quantize(v)).collect();
-            tapes.push(Tape { a_in: std::mem::take(&mut act), mu, var, zhat, y });
-            act = next;
+            tapes.push(Tape { a_in: act, mu, var, zhat, y });
+            if i + 1 < n {
+                acts.push(next);
+            } else {
+                logits = next;
+            }
         }
 
         // ---------------- loss on quantized logits -------------------------
@@ -184,14 +241,14 @@ pub fn train_native(
         // changing the argmax), or MSE against maxv_out-scaled one-hot
         // targets when the manifest disables the softmax head.
         let c = man.classes;
-        debug_assert_eq!(act.len(), b * c);
+        debug_assert_eq!(logits.len(), b * c);
         let mut loss = 0f32;
         // dL/d(quantized logits), mean-reduced over the batch.
         let mut grad: Vec<f32> = vec![0.0; b * c];
         if man.train_softmax {
             let temp = 8.0 / man.maxv_out;
             for s in 0..b {
-                let row = &act[s * c..(s + 1) * c];
+                let row = &logits[s * c..(s + 1) * c];
                 let scaled: Vec<f32> = row.iter().map(|v| v * temp).collect();
                 let m = scaled.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                 let exps: Vec<f32> = scaled.iter().map(|v| (v - m).exp()).collect();
@@ -205,7 +262,7 @@ pub fn train_native(
             }
         } else {
             for s in 0..b {
-                let row = &act[s * c..(s + 1) * c];
+                let row = &logits[s * c..(s + 1) * c];
                 let t = by[s] as usize;
                 for k in 0..c {
                     let target = if k == t { man.maxv_out } else { 0.0 };
@@ -219,14 +276,20 @@ pub fn train_native(
 
         // ---------------- backward ----------------------------------------
         let mut grads: Vec<Option<LayerGrads>> = (0..n).map(|_| None).collect();
-        // `grad` holds dL/d(layer i's quantized output) entering iteration i.
+        // douts[i] accumulates dL/d(layer i's quantized output).  With skip
+        // wiring one activation feeds several later layers; every consumer
+        // sits at a higher index, so by the time layer i runs backward its
+        // output gradient is fully accumulated.
+        let mut douts: Vec<Vec<f32>> =
+            man.layers[..n - 1].iter().map(|l| vec![0f32; b * l.out_f]).collect();
+        douts.push(grad);
         for i in (0..n).rev() {
             let l = &man.layers[i];
             let (out_f, in_f) = (l.out_f, l.in_f);
             let tape = &tapes[i];
             let q = quant_out_of(man, i);
             // STE through the activation quantizer.
-            let mut dy = grad;
+            let mut dy = std::mem::take(&mut douts[i]);
             for (g, &yv) in dy.iter_mut().zip(&tape.y) {
                 *g *= ste_gate(q.bw, q.maxv, yv);
             }
@@ -291,9 +354,27 @@ pub fn train_native(
                 }
             }
             grads[i] = Some(LayerGrads { w: dw, b: db, gamma: dgamma, beta: dbeta });
-            // Gradient w.r.t. this layer's input values becomes the next
-            // iteration's output gradient (layer i-1's quantizer output).
-            grad = dx;
+            // Route the concatenated-input gradient back into each source
+            // activation (same newest-first segment order as the forward
+            // concat).  Segment j > 0 is layer j-1's quantized output;
+            // segment 0 is the raw input, whose gradient is discarded.
+            let lo = i.saturating_sub(man.skips);
+            let mut off = 0usize;
+            for j in (lo..=i).rev() {
+                let w = act_widths[j];
+                if j >= 1 {
+                    let d = &mut douts[j - 1];
+                    for s in 0..b {
+                        for (t, &dv) in
+                            dx[s * in_f + off..s * in_f + off + w].iter().enumerate()
+                        {
+                            d[s * w + t] += dv;
+                        }
+                    }
+                }
+                off += w;
+            }
+            debug_assert_eq!(off, in_f, "layer {i} segment split");
         }
 
         // ---------------- SGD + momentum update ---------------------------
@@ -392,6 +473,12 @@ mod tests {
         crate::runtime::Manifest::synthetic_mlp("native_t", "jets", 16, 5, hidden, fanin, bw)
     }
 
+    fn man_skip(hidden: &[usize], fanin: usize, bw: usize, skips: usize) -> Manifest {
+        crate::runtime::Manifest::synthetic_topology(
+            "native_s", "jets", 16, 5, hidden, fanin, bw, skips,
+        )
+    }
+
     #[test]
     fn loss_decreases_on_jets() {
         let man = man(&[32], 3, 2);
@@ -450,6 +537,68 @@ mod tests {
         };
         assert_eq!(run(3), run(3));
         assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn skip_pyramid_training_learns() {
+        // skips=1 over tapered widths: the region the paper's best
+        // topologies live in.  The trainer must converge and beat chance
+        // through the exact export path serving uses.
+        let man = man_skip(&[32, 16], 3, 2, 1);
+        assert_eq!(man.layers[1].in_f, 32 + 16, "skip-widened hidden input");
+        let ds = crate::hep::jets(2_000, 23);
+        let mut st = ModelState::init(&man, 23, PruneMethod::APriori);
+        let mut opts = TrainOpts::from_manifest(&man);
+        opts.steps = 120;
+        opts.log_every = 10;
+        let log = train_native(&man, &mut st, &ds, &opts).unwrap();
+        let first = log.losses.first().unwrap().1;
+        assert!(
+            log.final_loss < first,
+            "skip loss should drop: {first} -> {}",
+            log.final_loss
+        );
+        assert!(log.final_loss.is_finite());
+        let logits = evaluate_native(&man, &st, &ds);
+        let acc = metrics::accuracy(&logits, &ds.y, man.classes);
+        assert!(acc > 0.30, "skip-trained accuracy {acc} is not above chance");
+    }
+
+    #[test]
+    fn skip_training_deterministic_and_mask_respecting() {
+        let man = man_skip(&[16, 8], 2, 2, 2);
+        let ds = crate::hep::jets(400, 11);
+        let run = |seed: u64| {
+            let mut st = ModelState::init(&man, seed, PruneMethod::APriori);
+            let mut opts = TrainOpts::from_manifest(&man);
+            opts.steps = 25;
+            opts.seed = seed;
+            train_native(&man, &mut st, &ds, &opts).unwrap();
+            st
+        };
+        let a = run(6);
+        assert_eq!(a.ws, run(6).ws);
+        assert_ne!(a.ws, run(7).ws);
+        for i in 0..a.num_layers() {
+            let dense = a.masks[i].to_dense_f32();
+            for (w, m) in a.ws[i].iter().zip(&dense) {
+                if *m == 0.0 {
+                    assert_eq!(*w, 0.0, "off-mask weight updated in layer {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_manifest_with_stale_skip_widths() {
+        // A manifest claiming skips=1 but carrying skip-free in_f must be
+        // refused, not silently mis-wired.
+        let mut man = man_skip(&[16, 16], 2, 2, 1);
+        man.layers[1].in_f = 16;
+        let ds = crate::hep::jets(100, 3);
+        let mut st = ModelState::init(&man, 3, PruneMethod::APriori);
+        let opts = TrainOpts::from_manifest(&man);
+        assert!(train_native(&man, &mut st, &ds, &opts).is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub struct PackedCodes {
 
 impl PackedCodes {
     pub fn new(len: usize, width: usize) -> PackedCodes {
-        assert!(width >= 1 && width <= 32, "width {width}");
+        assert!((1..=32).contains(&width), "width {width}");
         let bits = len * width;
         PackedCodes { words: vec![0; bits.div_ceil(64)], width, len }
     }

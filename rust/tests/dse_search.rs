@@ -4,7 +4,7 @@
 
 use logicnets::cost;
 use logicnets::dse::search::{
-    generate, run_search, Archive, CostGate, SearchAxes, SearchOpts, SearchTask,
+    generate, run_search, Archive, CostGate, SearchAxes, SearchOpts, SearchTask, WidthShape,
 };
 use logicnets::dse::{pareto_frontier, DesignPoint};
 use logicnets::luts::ModelTables;
@@ -90,8 +90,9 @@ fn prop_frontier_monotone_under_insertion() {
 
 #[test]
 fn gate_agrees_with_exact_synthesize_pricing() {
-    // Small but full axis product; every candidate is cross-checked
-    // against the real Manifest pricing and a real synthesis run.
+    // Small but full axis product — including the skip and pyramid-taper
+    // axes; every candidate is cross-checked against the real Manifest
+    // pricing and a real synthesis run.
     let axes = SearchAxes {
         widths: vec![8, 12],
         depths: vec![1, 2],
@@ -99,10 +100,18 @@ fn gate_agrees_with_exact_synthesize_pricing() {
         bws: vec![1, 2],
         methods: vec![PruneMethod::APriori],
         bram_min_bits: vec![13],
+        skips: vec![0, 1, 2],
+        shapes: vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }],
     };
     let budget = 2_000u64;
     let gate = CostGate { budget_luts: budget };
-    for c in generate(&axes, 5, usize::MAX) {
+    let cands = generate(&axes, 5, usize::MAX);
+    assert!(cands.iter().any(|c| c.skips > 0), "skip candidates in the pool");
+    assert!(
+        cands.iter().any(|c| c.hidden.windows(2).any(|w| w[0] != w[1])),
+        "pyramid candidates in the pool"
+    );
+    for c in cands {
         let man = c.manifest("jets", 16, 5);
         let exact_total = cost::total_luts(&cost::manifest_cost(&man));
         // The gate's fast-path price IS the exact analytical price...
@@ -133,6 +142,8 @@ fn tiny_axes() -> SearchAxes {
         bws: vec![1, 2],
         methods: vec![PruneMethod::APriori],
         bram_min_bits: vec![13],
+        skips: vec![0],
+        shapes: vec![WidthShape::Rect],
     }
 }
 
@@ -191,7 +202,81 @@ fn resume_performs_zero_retraining_and_replays_the_frontier() {
     let archive = Archive::load(&fresh.archive_path).unwrap();
     assert!(!archive.entries.is_empty());
     // Changed parameters must refuse to resume rather than silently
-    // diverge.
+    // diverge — including the new skip and width-shape axes, which change
+    // the candidate pool just like any other axis.
+    let mut skip_axes = tiny_axes();
+    skip_axes.skips = vec![0, 1];
+    assert!(run_search(
+        &task,
+        &skip_axes,
+        &SearchOpts { resume: true, ..opts.clone() }
+    )
+    .is_err());
+    let mut taper_axes = tiny_axes();
+    taper_axes.shapes.push(WidthShape::Taper { pct: 50 });
+    assert!(run_search(
+        &task,
+        &taper_axes,
+        &SearchOpts { resume: true, ..opts.clone() }
+    )
+    .is_err());
     let incompatible = SearchOpts { resume: true, seed: 5, ..opts };
     assert!(run_search(&task, &tiny_axes(), &incompatible).is_err());
+}
+
+#[test]
+fn legacy_archive_without_skip_axes_loads_and_resumes() {
+    // An archive written before the skip/shape axes existed: entries carry
+    // no "skips" field and the axes key has no suffix sections.  It must
+    // load with skip-free / uniform-width defaults and replay under the
+    // new code with zero retraining.
+    let out_dir = std::env::temp_dir().join("lnck_dse_legacy_archive");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let entry = |name: &str, h: usize, bw: usize, luts: u64, q0: f64, q1: f64| {
+        format!(
+            "{{\"name\":\"{name}\",\"hidden\":[{h}],\"fanin\":2,\"bw\":{bw},\
+             \"method\":\"a-priori\",\"bram_min_bits\":13,\"luts\":\"{luts}\",\
+             \"status\":\"trained\",\"qualities\":[{q0},{q1}],\"accuracy\":0.5,\
+             \"trained_steps\":18}}"
+        )
+    };
+    let json = format!(
+        "{{\"version\":1,\"dataset\":\"jets\",\"budget_luts\":\"5000\",\"seed\":\"4\",\
+         \"rungs\":2,\"base_steps\":6,\"eta\":2,\"max_candidates\":4,\
+         \"axes_key\":\"w8-12_d1_f2_b1-2_ma-priori_r13\",\"entries\":[{},{},{},{}]}}",
+        entry("dse_h8_f2_b1_ap", 8, 1, 66, 51.0, 52.0),
+        entry("dse_h8_f2_b2_ap", 8, 2, 93, 55.0, 56.5),
+        entry("dse_h12_f2_b1_ap", 12, 1, 86, 53.0, 54.0),
+        entry("dse_h12_f2_b2_ap", 12, 2, 121, 57.0, 58.25),
+    );
+    let archive_path = out_dir.join("archive.json");
+    std::fs::write(&archive_path, json).unwrap();
+    let archive = Archive::load(&archive_path).unwrap();
+    assert_eq!(archive.entries.len(), 4);
+    assert!(archive.entries.values().all(|e| e.skips == 0), "legacy entries default to 0");
+    // Replays against the (pre-skip-default) tiny axes with zero
+    // retraining: the old key still matches.
+    let task = SearchTask::jets_small(600, 7);
+    let opts = SearchOpts {
+        budget_luts: 5_000,
+        rungs: 2,
+        base_steps: 6,
+        eta: 2,
+        seed: 4,
+        max_candidates: 4,
+        out_dir: out_dir.clone(),
+        resume: true,
+        emit: 0,
+        emit_zoo: false,
+    };
+    assert_eq!(tiny_axes().key(), "w8-12_d1_f2_b1-2_ma-priori_r13");
+    let resumed = run_search(&task, &tiny_axes(), &opts.clone()).unwrap();
+    assert_eq!(resumed.steps_trained, 0, "legacy archive must replay without retraining");
+    assert!(!resumed.frontier.is_empty());
+    // Resuming the same archive with the new axes enabled must refuse —
+    // the pool (and every promotion cut) would differ.
+    let mut skip_axes = tiny_axes();
+    skip_axes.skips = vec![0, 1];
+    assert!(run_search(&task, &skip_axes, &opts).is_err());
 }

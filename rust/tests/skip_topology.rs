@@ -1,0 +1,106 @@
+//! Cross-stack skip-topology equivalence suite (ISSUE 5 satellite).
+//!
+//! For random `skips > 0` / pyramid-width manifests, the native trainer's
+//! quantized eval-mode forward (the exported arithmetic mirror) must
+//! bit-match every downstream inference surface: the truth-table path
+//! (`luts::ModelTables`), the flattened serving engine (`LutEngine`) and
+//! the synthesized-netlist engine (`NetlistEngine`).  This pins the
+//! train/serve boundary against the two classic skip bugs — newest-first
+//! concat ordering and quantizer-domain (maxv 1.0 input vs 2.0 hidden)
+//! mismatches.
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::Manifest;
+use logicnets::serve::{LutEngine, NetlistEngine};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, verify_netlist, OptLevel, SynthOpts};
+use logicnets::train::{native, ModelState, TrainOpts};
+use logicnets::util::prop::forall;
+use logicnets::util::rng::Rng;
+
+/// Random skip/pyramid topology on the jets shape (16 features, 5
+/// classes): 1–3 hidden layers, optional taper between layers, skips 1–2.
+fn random_topology(rng: &mut Rng) -> Manifest {
+    let depth = 1 + rng.below(3);
+    let skips = 1 + rng.below(2);
+    let mut hidden = Vec::new();
+    let mut w = 6 + rng.below(8);
+    for _ in 0..depth {
+        hidden.push(w);
+        if rng.below(2) == 0 {
+            w = (w / 2).max(3);
+        }
+    }
+    let fanin = 2 + rng.below(2);
+    let bw = 1 + rng.below(2);
+    Manifest::synthetic_topology("skip_prop", "jets", 16, 5, &hidden, fanin, bw, skips)
+}
+
+#[test]
+fn prop_trained_skip_forward_matches_tables_and_engines() {
+    forall("skip-forward-equivalence", 0x5C1F, 10, |rng: &mut Rng| {
+        let man = random_topology(rng);
+        let seed = rng.next_u64();
+        let ds = logicnets::hep::jets(300, seed ^ 1);
+        let mut st = ModelState::init(&man, seed, PruneMethod::APriori);
+        let mut opts = TrainOpts::from_manifest(&man);
+        // A few real steps so BN running stats, weights and biases all
+        // move off their init values before the equivalence is checked.
+        opts.steps = 6;
+        opts.seed = seed;
+        native::train_native(&man, &mut st, &ds, &opts).unwrap();
+
+        // The trainer's eval-mode forward IS the exported mirror.
+        let ex = ExportedModel::from_state(&man, &st);
+        let logits = native::evaluate_native(&man, &st, &ds);
+        assert_eq!(logits, ex.forward_batch(&ds.x), "eval-mode forward != mirror");
+
+        // Mirror == truth tables on every sample (bit-exact codes; the
+        // table path evaluates the same un-folded neuron arithmetic, so
+        // this is an exact equality, not a tolerance check).
+        let tables = ModelTables::generate(&ex).unwrap();
+        assert_eq!(tables.verify(&ex, &ds.x), 0, "tables diverge from mirror");
+        let lut = LutEngine::build(&ex, &tables).unwrap();
+
+        // Synthesized netlist == truth tables (bit-exact over the whole
+        // skip-concat output bus), and the netlist-backed server returns
+        // the same predictions as the table engine (both share the folded
+        // dense tail, so prediction equality is exact too).
+        let (netlist, _) = synthesize(
+            &ex,
+            &tables,
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            verify_netlist(&ex, &tables, &netlist, 256, seed).unwrap(),
+            0,
+            "netlist diverges from tables"
+        );
+        let net = NetlistEngine::from_netlist(&ex, &tables, netlist).unwrap();
+        assert_eq!(
+            net.infer_batch(&ds.x),
+            lut.infer_batch(&ds.x),
+            "netlist engine diverges from table engine"
+        );
+    });
+}
+
+#[test]
+fn prop_optimized_skip_netlists_stay_equivalent() {
+    // The optimization pipeline (CSE + sweeps) over skip netlists: the
+    // machine check inside `synthesize` must pass and the served circuit
+    // must stay bit-identical to the table engine.
+    forall("skip-opt-equivalence", 0x5C2F, 6, |rng: &mut Rng| {
+        let man = random_topology(rng);
+        let seed = rng.next_u64();
+        let st = ModelState::init(&man, seed, PruneMethod::APriori);
+        let ex = ExportedModel::from_state(&man, &st);
+        let tables = ModelTables::generate(&ex).unwrap();
+        let lut = LutEngine::build(&ex, &tables).unwrap();
+        let net = NetlistEngine::build_opt(&ex, &tables, OptLevel::Full).unwrap();
+        let xs: Vec<f32> = (0..16 * 80).map(|_| rng.f32()).collect();
+        assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs));
+    });
+}

@@ -3,7 +3,7 @@
 //! of an emitted zoo, and the end-to-end explore → `zoo.json` →
 //! budget-routed serving handoff.
 
-use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask};
+use logicnets::dse::search::{run_search, SearchAxes, SearchOpts, SearchTask, WidthShape};
 use logicnets::dse::{dominates_3d, pareto_frontier_3d};
 use logicnets::luts::ModelTables;
 use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
@@ -100,6 +100,7 @@ fn zoo_engine_rebuild_requires_checkpoint() {
         hidden: vec![8],
         fanin: 2,
         bw: 1,
+        skips: 0,
         checkpoint: "ckpt/ghost.r2.bin".into(),
         luts: 100,
         brams: 0,
@@ -116,7 +117,10 @@ fn zoo_engine_rebuild_requires_checkpoint() {
 #[test]
 fn explore_emits_budget_servable_zoo() {
     // End to end: tiny search → emit → calibrate → zoo.json → serve_zoo
-    // routes budgeted and unbudgeted requests (debug-build sized).
+    // routes budgeted and unbudgeted requests (debug-build sized).  Every
+    // candidate is skip-wired (skips=1), so the whole handoff — archive,
+    // checkpoint, zoo manifest, rebuilt netlist engine — runs the
+    // skip-concat path the serving stack must reproduce bit-exactly.
     let out_dir = std::env::temp_dir().join("lnck_zoo_e2e_test");
     let _ = std::fs::remove_dir_all(&out_dir);
     let task = SearchTask::jets_small(600, 21);
@@ -127,6 +131,8 @@ fn explore_emits_budget_servable_zoo() {
         bws: vec![1, 2],
         methods: vec![PruneMethod::APriori],
         bram_min_bits: vec![13],
+        skips: vec![1],
+        shapes: vec![WidthShape::Rect],
     };
     let opts = SearchOpts {
         budget_luts: 5_000,
@@ -158,10 +164,22 @@ fn explore_emits_budget_servable_zoo() {
     assert_eq!(pareto_frontier_3d(&pts).len(), pts.len());
 
     // Latencies are calibrated measurements, never the empty-reservoir
-    // 0.0 sentinel; percentile ordering holds.
+    // 0.0 sentinel; percentile ordering holds.  Every entry carries its
+    // skip axis, and rebuilding the engine from the manifest (the exact
+    // `serve --zoo` path) reproduces the recorded netlist-verified
+    // accuracy bit for bit.
     for e in &zoo.entries {
         assert!(e.p50_us > 0.0 && e.p99_us >= e.p50_us, "{}: {e:?}", e.name);
         assert!(e.luts > 0 && e.quality.is_finite());
+        assert_eq!(e.skips, 1, "{}: skip axis must reach the zoo manifest", e.name);
+        let engine = build_engine(e, &out_dir).unwrap();
+        let acc = logicnets::serve::batch_accuracy(&engine, &task.test.x, &task.test.y);
+        assert!(
+            (acc - e.netlist_accuracy).abs() < 1e-12,
+            "{}: rebuilt accuracy {acc} != recorded {}",
+            e.name,
+            e.netlist_accuracy
+        );
     }
 
     // Serve the manifest: every entry rebuilds from its checkpoint into a

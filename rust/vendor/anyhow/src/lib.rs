@@ -3,6 +3,9 @@
 //! extension trait.  The API mirrors upstream closely enough that swapping
 //! in the real crate requires no source changes in this repository.
 
+// Vendored offline shim: exempt from the workspace clippy gate.
+#![allow(clippy::all)]
+
 use std::fmt;
 
 /// A context-chained error.  Each `.context(...)` layer wraps the previous
