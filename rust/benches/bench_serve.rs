@@ -2,6 +2,10 @@
 //! extreme-throughput claim scaled to this testbed (POLYBiNN reports 100M
 //! MNIST FPS on FPGA; our CPU software model targets >=1M inf/s on
 //! HEP-sized nets, single core).
+//!
+//! Emits `BENCH_serve.json` (throughput per scenario, router latency
+//! percentiles) via `util::bench::BenchReport`; see that module for the
+//! `BENCH_OUT` / `BENCH_BASELINE` / `BENCH_QUICK` environment contract.
 
 use logicnets::luts::ModelTables;
 use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
@@ -9,7 +13,8 @@ use logicnets::serve::engine::InferScratch;
 use logicnets::serve::router::{Budget, ModelMeta, ZooServer};
 use logicnets::serve::zoo::calibrate_latency;
 use logicnets::serve::{Backend, LutEngine, NetlistEngine, Server, ServerConfig};
-use logicnets::util::bench::bench;
+use logicnets::util::bench::{bench, BenchReport};
+use logicnets::util::json::Json;
 use logicnets::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Duration;
@@ -64,7 +69,30 @@ fn hep_like_model(seed: u64) -> ExportedModel {
     hep_like_model_widths(seed, &[64, 64, 64])
 }
 
+/// Router percentile stats as a report scenario (plus throughput so the
+/// regression gate covers the router path too).
+fn add_router_stats(
+    report: &mut BenchReport,
+    name: &str,
+    st: &logicnets::serve::ServerStats,
+    throughput: f64,
+) {
+    report.add_with(
+        name,
+        vec![
+            ("throughput_per_s", Json::num(throughput)),
+            ("p50_us", Json::num(st.p50_us)),
+            ("p95_us", Json::num(st.p95_us)),
+            ("p99_us", Json::num(st.p99_us)),
+            ("mean_batch", Json::num(st.mean_batch)),
+        ],
+    );
+}
+
 fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let ms = |full: u64| Duration::from_millis(if quick { full / 4 } else { full });
+    let mut report = BenchReport::new("serve");
     let model = hep_like_model(1);
     let tables = ModelTables::generate(&model).unwrap();
     let engine = Arc::new(LutEngine::build(&model, &tables).unwrap());
@@ -74,28 +102,43 @@ fn main() {
 
     let mut scratch = InferScratch::default();
     let one: Vec<f32> = xs[..16].to_vec();
-    bench("engine single inference (hep_e-like)", Duration::from_millis(500), || {
+    let r = bench("engine-single/hep_e-like", ms(500), || {
         std::hint::black_box(engine.infer(&one, &mut scratch));
-    })
-    .report_throughput(1.0, "inf");
+    });
+    r.report_throughput(1.0, "inf");
+    report.add(&r, 1.0, "inf");
 
-    bench("engine batch 1024 (single core)", Duration::from_millis(800), || {
+    let r = bench("engine-batch-1core/hep_e-like", ms(800), || {
         std::hint::black_box(engine.infer_batch(&xs));
-    })
-    .report_throughput(batch as f64, "inf");
+    });
+    r.report_throughput(batch as f64, "inf");
+    report.add(&r, batch as f64, "inf");
 
-    bench("engine batch 1024 (all cores)", Duration::from_millis(800), || {
+    let r = bench("engine-batch-par/hep_e-like", ms(800), || {
         std::hint::black_box(engine.infer_batch_par(&xs));
-    })
-    .report_throughput(batch as f64, "inf");
+    });
+    r.report_throughput(batch as f64, "inf");
+    report.add(&r, batch as f64, "inf");
 
-    // Second backend: the synthesized netlist itself, bitsliced 64-way.
+    // Second backend: the synthesized netlist itself through the fused
+    // wide-plane pass (plus the pre-fusion 64-way path as baseline).
     let netlist = Arc::new(NetlistEngine::build(&model, &tables).unwrap());
     println!("netlist backend: {} mapped LUTs", netlist.num_luts());
-    bench("netlist batch 1024 (bitsliced)", Duration::from_millis(800), || {
+    let unfused = bench("netlist-batch-unfused/hep_e-like", ms(800), || {
+        std::hint::black_box(netlist.infer_batch_unfused(&xs));
+    });
+    unfused.report_throughput(batch as f64, "inf");
+    report.add(&unfused, batch as f64, "inf");
+    let fused = bench("netlist-batch/hep_e-like", ms(800), || {
         std::hint::black_box(netlist.infer_batch(&xs));
-    })
-    .report_throughput(batch as f64, "inf");
+    });
+    fused.report_throughput(batch as f64, "inf");
+    report.add(&fused, batch as f64, "inf");
+    println!(
+        "{:<44} fused decode speedup over unfused: {:.2}x",
+        "",
+        unfused.median_ns / fused.median_ns
+    );
 
     // Optimized netlist backend: serving throughput scales with LUT count,
     // so the pass pipeline translates directly into inferences/s.
@@ -107,18 +150,16 @@ fn main() {
         opt_netlist.num_luts(),
         netlist.num_luts()
     );
-    bench("netlist(opt) batch 1024 (bitsliced)", Duration::from_millis(800), || {
+    let r = bench("netlist-opt-batch/hep_e-like", ms(800), || {
         std::hint::black_box(opt_netlist.infer_batch(&xs));
-    })
-    .report_throughput(batch as f64, "inf");
+    });
+    r.report_throughput(batch as f64, "inf");
+    report.add(&r, batch as f64, "inf");
 
     // Router path with 8 concurrent clients.
-    let server = Server::start(
-        engine.clone(),
-        ServerConfig { workers: 4, max_batch: 64, ..Default::default() },
-    );
-    let per = 4000usize;
-    let r = bench("router 8 clients x 4000 req", Duration::from_millis(1200), || {
+    let server = Server::start(engine.clone(), ServerConfig { workers: 4, ..Default::default() });
+    let per = if quick { 1000usize } else { 4000 };
+    let r = bench("router-8-clients/tables", ms(1200), || {
         std::thread::scope(|s| {
             for t in 0..8usize {
                 let server = &server;
@@ -139,14 +180,12 @@ fn main() {
         "{:<44} p50 {:.0}us p95 {:.0}us p99 {:.0}us fill {:.1}",
         "", st.p50_us, st.p95_us, st.p99_us, st.mean_batch
     );
+    add_router_stats(&mut report, "router-8-clients/tables", &st, per as f64 / (r.median_ns / 1e9));
     server.shutdown();
 
     // Same router, netlist backend selected.
-    let server = Server::start(
-        netlist,
-        ServerConfig { workers: 4, max_batch: 64, ..Default::default() },
-    );
-    let r = bench("router (netlist) 8 clients x 4000 req", Duration::from_millis(1200), || {
+    let server = Server::start(netlist, ServerConfig { workers: 4, ..Default::default() });
+    let r = bench("router-8-clients/netlist", ms(1200), || {
         std::thread::scope(|s| {
             for t in 0..8usize {
                 let server = &server;
@@ -167,6 +206,7 @@ fn main() {
         "{:<44} p50 {:.0}us p95 {:.0}us p99 {:.0}us fill {:.1}",
         "", st.p50_us, st.p95_us, st.p99_us, st.mean_batch
     );
+    add_router_stats(&mut report, "router-8-clients/netlist", &st, per as f64 / (r.median_ns / 1e9));
     server.shutdown();
 
     // Zoo scenario: budget routing across a cheap and an expensive
@@ -213,11 +253,11 @@ fn main() {
                 big.clone() as Arc<dyn Backend>,
             ),
         ],
-        &ServerConfig { workers: 2, max_batch: 64, ..Default::default() },
+        &ServerConfig { workers: 2, ..Default::default() },
     )
     .unwrap();
     let strict = Budget::latency_us(s99);
-    let r = bench("zoo router 8 clients x 4000 req (50% budgeted)", Duration::from_millis(1200), || {
+    let r = bench("zoo-router-8-clients/50pct-budgeted", ms(1200), || {
         std::thread::scope(|s| {
             for t in 0..8usize {
                 let zoo = &zoo;
@@ -235,6 +275,10 @@ fn main() {
         });
     });
     r.report_throughput(per as f64, "inf");
+    report.add_with(
+        "zoo-router-8-clients/50pct-budgeted",
+        vec![("throughput_per_s", Json::num(per as f64 / (r.median_ns / 1e9)))],
+    );
     for m in zoo.stats() {
         println!(
             "{:<12} routed {:>8}  completed {:>8}  p50 {:.0}us p99 {:.0}us fill {:.1}",
@@ -243,4 +287,5 @@ fn main() {
     }
     println!("zoo fallbacks: {}", zoo.fallbacks());
     zoo.shutdown();
+    report.finish();
 }

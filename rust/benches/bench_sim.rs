@@ -1,103 +1,178 @@
-//! Bench: bitsliced netlist simulation vs the scalar `Netlist::eval` path
-//! on a 1024-sample batch (the acceptance gate for the `sim` subsystem:
-//! bitsliced must be >= 10x scalar), plus the parallel word-block scaling.
+//! Bench: netlist simulation throughput across the three evaluator tiers —
+//! scalar `Netlist::eval`, the 64-way word path (`eval_netlist_64`, the
+//! pre-wide-plane baseline), and the 256-way levelized plan
+//! (`eval_plan`) — plus the fused vs unfused `NetlistEngine` serving pass
+//! and the scratch-reuse (allocation) win.
+//!
+//! Primary subject is the jets-default synthesized model (16 features, 5
+//! classes, hidden [64, 32], fan-in 3, 2-bit codes — the
+//! `SearchAxes::jets_default` center point); a deeper hep_e-like circuit
+//! rides along as a stress shape.  Emits `BENCH_sim.json` via
+//! `util::bench::BenchReport` (see that module for the `BENCH_OUT` /
+//! `BENCH_BASELINE` / `BENCH_QUICK` contract).
 
 use logicnets::luts::ModelTables;
-use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
-use logicnets::sim::{eval_netlist, BitMatrix};
-use logicnets::synth::{synthesize, SynthOpts};
-use logicnets::util::bench::bench_n;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::Manifest;
+use logicnets::serve::NetlistEngine;
+use logicnets::sim::{eval_netlist_64, eval_plan, BitMatrix, EvalPlan, SimScratch};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, Netlist, SynthOpts};
+use logicnets::train::ModelState;
+use logicnets::util::bench::{bench_n, BenchReport};
 use logicnets::util::rng::Rng;
 
-fn model(widths: &[usize], in_f: usize, fanin: usize, bw: usize, seed: u64) -> ExportedModel {
-    let mut rng = Rng::new(seed);
-    let mut layers = Vec::new();
-    let mut prev = in_f;
-    for (k, &w) in widths.iter().enumerate() {
-        let qi = QuantSpec::new(bw, if k == 0 { 1.0 } else { 2.0 });
-        let neurons = (0..w)
-            .map(|_| {
-                let inputs = rng.choose_k(prev, fanin);
-                Neuron {
-                    inputs: inputs.clone(),
-                    weights: inputs.iter().map(|_| rng.normal_f32(0.0, 0.8)).collect(),
-                    bias: rng.normal_f32(0.0, 0.1),
-                    g: 1.0,
-                    h: 0.0,
-                }
-            })
-            .collect();
-        layers.push(ExportedLayer::uniform(neurons, prev, qi, QuantSpec::new(bw, 2.0), true));
-        prev = w;
-    }
-    ExportedModel {
-        layers,
-        in_features: in_f,
-        classes: *widths.last().unwrap(),
-        skips: 0,
-        act_widths: std::iter::once(in_f).chain(widths.iter().copied()).collect(),
-    }
+fn synthesized(
+    name: &str,
+    in_f: usize,
+    classes: usize,
+    hidden: &[usize],
+    fanin: usize,
+    bw: usize,
+) -> (ExportedModel, ModelTables, Netlist) {
+    let man = Manifest::synthetic_topology(name, "jets", in_f, classes, hidden, fanin, bw, 0);
+    let st = ModelState::init(&man, 7, PruneMethod::APriori);
+    let model = ExportedModel::from_state(&man, &st);
+    let tables = ModelTables::generate(&model).unwrap();
+    let (netlist, _) = synthesize(
+        &model,
+        &tables,
+        SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
+    )
+    .unwrap();
+    (model, tables, netlist)
 }
 
-fn main() {
-    let batch = 1024usize;
-    for (label, widths, fanin, bw) in [
-        ("hep_c-like (64,32,32) X3 BW2", vec![64usize, 32, 32], 3usize, 2usize),
-        ("hep_e-like (64,64,64) X4 BW2", vec![64, 64, 64], 4, 2),
-    ] {
-        let m = model(&widths, 16, fanin, bw, 7);
-        let tables = ModelTables::generate(&m).unwrap();
-        let (netlist, rep) = synthesize(
-            &m,
-            &tables,
-            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
-        )
-        .unwrap();
-        println!(
-            "{label}: {} LUTs over {} inputs, depth {}",
-            rep.luts, netlist.num_inputs, rep.depth
-        );
+fn random_planes(netlist: &Netlist, batch: usize, seed: u64) -> (BitMatrix, Vec<Vec<bool>>) {
+    let mut rng = Rng::new(seed);
+    let mut planes = BitMatrix::new(netlist.num_inputs, batch);
+    let rows: Vec<Vec<bool>> = (0..batch)
+        .map(|s| {
+            let bits: Vec<bool> = (0..netlist.num_inputs).map(|_| rng.f64() < 0.5).collect();
+            planes.set_column(s, &bits);
+            bits
+        })
+        .collect();
+    (planes, rows)
+}
 
-        // Prepare both input representations up front so only evaluation is
-        // timed.
-        let mut rng = Rng::new(11);
-        let mut planes = BitMatrix::new(netlist.num_inputs, batch);
-        let rows: Vec<Vec<bool>> = (0..batch)
-            .map(|s| {
-                let bits: Vec<bool> =
-                    (0..netlist.num_inputs).map(|_| rng.f64() < 0.5).collect();
-                planes.set_column(s, &bits);
-                bits
-            })
-            .collect();
+/// Throughput tiers of one netlist: scalar (primary model only), 64-way
+/// baseline, 256-way plan (reused + fresh scratch, all-core + 1-core).
+/// Scenario names are batch-independent so the regression gate matches
+/// them across quick/full runs.
+fn sim_scenarios(
+    report: &mut BenchReport,
+    label: &str,
+    netlist: &Netlist,
+    batch: usize,
+    iters: usize,
+    with_scalar: bool,
+) {
+    let (planes, rows) = random_planes(netlist, batch, 11);
+    let plan = EvalPlan::compile(netlist);
+    let b = batch as f64;
 
-        let scalar = bench_n(&format!("scalar eval x{batch}"), 5, || {
+    if with_scalar {
+        let scalar = bench_n(&format!("scalar/{label}"), 3.max(iters / 10), || {
             for row in &rows {
                 std::hint::black_box(netlist.eval(row));
             }
         });
-        scalar.report_throughput(batch as f64, "inf");
-
-        let sliced = bench_n(&format!("bitsliced eval batch {batch}"), 30, || {
-            std::hint::black_box(eval_netlist(&netlist, &planes));
-        });
-        sliced.report_throughput(batch as f64, "inf");
-
-        let single = {
-            std::env::set_var("LOGICNETS_THREADS", "1");
-            let r = bench_n(&format!("bitsliced eval batch {batch} (1 core)"), 30, || {
-                std::hint::black_box(eval_netlist(&netlist, &planes));
-            });
-            std::env::remove_var("LOGICNETS_THREADS");
-            r
-        };
-        single.report_throughput(batch as f64, "inf");
-
-        println!(
-            "{:<44} speedup over scalar: {:.1}x all-cores, {:.1}x single-core (target >= 10x)\n",
-            "",
-            scalar.median_ns / sliced.median_ns,
-            scalar.median_ns / single.median_ns
-        );
+        scalar.report_throughput(b, "inf");
+        report.add(&scalar, b, "inf");
     }
+
+    let base64 = bench_n(&format!("sim64/{label}"), iters, || {
+        std::hint::black_box(eval_netlist_64(netlist, &planes));
+    });
+    base64.report_throughput(b, "inf");
+    report.add(&base64, b, "inf");
+
+    let mut scratch = SimScratch::default();
+    let wide = bench_n(&format!("sim256/{label}"), iters, || {
+        std::hint::black_box(eval_plan(&plan, &planes, &mut scratch));
+    });
+    wide.report_throughput(b, "inf");
+    report.add(&wide, b, "inf");
+
+    // Satellite: the allocation win from reusing scratch across calls.
+    let fresh = bench_n(&format!("sim256-fresh-scratch/{label}"), iters, || {
+        std::hint::black_box(eval_plan(&plan, &planes, &mut SimScratch::default()));
+    });
+    fresh.report_throughput(b, "inf");
+    report.add(&fresh, b, "inf");
+
+    std::env::set_var("LOGICNETS_THREADS", "1");
+    let base64_1 = bench_n(&format!("sim64-1core/{label}"), iters, || {
+        std::hint::black_box(eval_netlist_64(netlist, &planes));
+    });
+    let mut scratch1 = SimScratch::default();
+    let wide_1 = bench_n(&format!("sim256-1core/{label}"), iters, || {
+        std::hint::black_box(eval_plan(&plan, &planes, &mut scratch1));
+    });
+    std::env::remove_var("LOGICNETS_THREADS");
+    base64_1.report_throughput(b, "inf");
+    report.add(&base64_1, b, "inf");
+    wide_1.report_throughput(b, "inf");
+    report.add(&wide_1, b, "inf");
+
+    println!(
+        "{:<44} wide-plane speedup over 64-way: {:.2}x all-cores, {:.2}x single-core \
+         (acceptance target >= 3x); scratch reuse saves {:.1}% per call\n",
+        "",
+        base64.median_ns / wide.median_ns,
+        base64_1.median_ns / wide_1.median_ns,
+        (1.0 - wide.median_ns / fresh.median_ns) * 100.0
+    );
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (batch, iters) = if quick { (1024usize, 10usize) } else { (8192, 30) };
+    let mut report = BenchReport::new("sim");
+
+    // Primary: the jets-default config (acceptance gate subject).
+    let (model, tables, netlist) =
+        synthesized("bench_jets_default", 16, 5, &[64, 32], 3, 2);
+    println!(
+        "jets-default: {} LUTs over {} inputs, depth {} (batch {batch})",
+        netlist.num_luts(),
+        netlist.num_inputs,
+        netlist.depth()
+    );
+    sim_scenarios(&mut report, "jets-default", &netlist, batch, iters, true);
+
+    // Fused vs unfused serving pass on the same model (end-to-end
+    // quantize → netlist → dense head → argmax).
+    let engine = NetlistEngine::build(&model, &tables).unwrap();
+    let mut rng = Rng::new(9);
+    let xs: Vec<f32> = (0..batch * 16).map(|_| rng.f32()).collect();
+    let b = batch as f64;
+    let unfused = bench_n("netlist-unfused/jets-default", iters, || {
+        std::hint::black_box(engine.infer_batch_unfused(&xs));
+    });
+    unfused.report_throughput(b, "inf");
+    report.add(&unfused, b, "inf");
+    let fused = bench_n("netlist-fused/jets-default", iters, || {
+        std::hint::black_box(engine.infer_batch(&xs));
+    });
+    fused.report_throughput(b, "inf");
+    report.add(&fused, b, "inf");
+    println!(
+        "{:<44} fused decode speedup over unfused: {:.2}x\n",
+        "",
+        unfused.median_ns / fused.median_ns
+    );
+
+    // Stress shape: deeper/wider hep_e-like circuit, no scalar pass.
+    let (_, _, hep) = synthesized("bench_hep_e_like", 16, 5, &[64, 64, 64], 4, 2);
+    println!(
+        "hep_e-like: {} LUTs over {} inputs, depth {} (batch {batch})",
+        hep.num_luts(),
+        hep.num_inputs,
+        hep.depth()
+    );
+    sim_scenarios(&mut report, "hep_e-like", &hep, batch, iters, false);
+
+    report.finish();
 }

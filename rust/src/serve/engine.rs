@@ -2,8 +2,10 @@
 //!
 //! [`LutEngine`] is flattened, allocation-free inference over truth tables;
 //! [`NetlistEngine`] serves the *synthesized LUT netlist* itself through
-//! the bitsliced simulator (`crate::sim`), 64 samples per word.  Both
-//! implement [`Backend`], so `serve::router::Server` can batch over either.
+//! the wide-plane bitsliced simulator (`crate::sim::plan`, 256 samples per
+//! chunk) with the code-decode + dequant + dense-head pass fused into the
+//! chunk sweep (DESIGN.md §11).  Both implement [`Backend`], so
+//! `serve::router::Server` can batch over either.
 //!
 //! Layout decisions (this is the measured hot path of `bench_serve`):
 //! * per layer, all neuron fan-in indices live in one contiguous `Vec<u32>`
@@ -15,9 +17,13 @@
 
 use crate::luts::ModelTables;
 use crate::nn::{ExportedLayer, ExportedModel, QuantSpec};
-use crate::sim::BitMatrix;
+use crate::sim::{BitMatrix, Chunk, EvalPlan, LANES};
 use crate::synth::{synthesize, Netlist, OptLevel, SynthOpts};
 use anyhow::{ensure, Result};
+use std::sync::Mutex;
+
+/// Samples per evaluation chunk of the wide simulator.
+const CHUNK_SAMPLES: usize = 64 * LANES;
 
 enum Stage {
     /// Table-mapped sparse layer.
@@ -293,13 +299,21 @@ pub fn batch_accuracy<B: Backend + ?Sized>(backend: &B, xs: &[f32], ys: &[i32]) 
 }
 
 /// Serving backend that executes the *synthesized LUT netlist* itself:
-/// quantize → encode input bit-planes → one bitsliced netlist pass (64
-/// samples per word, word-blocks across the worker pool) → decode output
-/// codes → dense tail → argmax.  This is the software model of serving
+/// quantize → encode input bit-planes → fused chunk sweep (one
+/// 256-sample-wide netlist pass per chunk, with code decode + dequant +
+/// dense head + argmax run on each chunk's outputs while they are still in
+/// cache) → predicted classes.  This is the software model of serving
 /// straight from the mapped circuit, and a third functional-verification
-/// surface: its predictions must match `LutEngine` exactly.
+/// surface: its predictions must match `LutEngine` exactly (and the
+/// unfused 64-way oracle path, [`NetlistEngine::infer_batch_unfused`]).
 pub struct NetlistEngine {
     netlist: Netlist,
+    /// Level-ordered arena schedule of `netlist`, compiled once at build.
+    plan: EvalPlan,
+    /// Pool of reusable fused-pass scratch sets (`infer_batch` takes
+    /// `&self`, so concurrent callers each pop their own set; steady-state
+    /// serving allocates nothing per batch).
+    scratch: Mutex<Vec<FusedScratch>>,
     /// Arithmetic layers after the synthesized prefix (classifier head).
     dense_tail: Vec<DenseStage>,
     in_quant: QuantSpec,
@@ -311,6 +325,25 @@ pub struct NetlistEngine {
     out_bw: usize,
     /// Netlist output neurons (= output planes / out_bw).
     net_outs: usize,
+}
+
+/// All mutable state of one fused `infer_batch` call: the quantized input
+/// planes plus per-worker buffers, reused across batches via the engine's
+/// scratch pool.
+#[derive(Default)]
+struct FusedScratch {
+    inputs: BitMatrix,
+    workers: Vec<FusedWorker>,
+}
+
+/// Per-worker fused-pass buffers: the wide value array for one chunk and
+/// the dense-tail ping/pong code + logit vectors.
+#[derive(Default)]
+struct FusedWorker {
+    vals: Vec<Chunk>,
+    codes: Vec<u8>,
+    next: Vec<u8>,
+    logits: Vec<f32>,
 }
 
 impl NetlistEngine {
@@ -395,8 +428,11 @@ impl NetlistEngine {
         );
         let dense_tail: Vec<DenseStage> =
             model.layers[last + 1..].iter().map(DenseStage::build).collect();
+        let plan = netlist.compile_plan();
         Ok(NetlistEngine {
             netlist,
+            plan,
+            scratch: Mutex::new(Vec::new()),
             dense_tail,
             in_quant: model.layers[0].quant_in,
             in_features: model.in_features,
@@ -438,12 +474,11 @@ impl NetlistEngine {
         }
     }
 
-    /// Batch classify: one bitsliced pass over the whole batch, then the
-    /// dense tail + argmax.  Router-sized batches decode serially (the
-    /// per-sample work is sub-microsecond, so thread spawn/join would
-    /// dominate); large offline batches split into disjoint per-worker
-    /// output slices.
-    pub fn infer_batch(&self, xs: &[f32]) -> Vec<usize> {
+    /// The pre-fusion serving path, kept as the oracle and `bench_serve`
+    /// baseline: one 64-way bitsliced pass over the whole batch
+    /// ([`crate::sim::eval_netlist_64`]), then per-sample bit extraction +
+    /// dense tail + argmax over the materialized output matrix.
+    pub fn infer_batch_unfused(&self, xs: &[f32]) -> Vec<usize> {
         const PAR_DECODE_MIN: usize = 512;
         let d = self.in_features;
         assert_eq!(xs.len() % d, 0);
@@ -457,7 +492,7 @@ impl NetlistEngine {
                 inputs.set_code(j * self.bw_in, self.bw_in, s, self.in_quant.code(v));
             }
         }
-        let out = crate::sim::eval_netlist(&self.netlist, &inputs);
+        let out = crate::sim::eval_netlist_64(&self.netlist, &inputs);
         let mut preds = vec![0usize; n];
         if n < PAR_DECODE_MIN {
             self.decode_range(&out, 0, &mut preds);
@@ -466,6 +501,100 @@ impl NetlistEngine {
                 self.decode_range(&out, start, chunk)
             });
         }
+        preds
+    }
+
+    /// Fused sweep over a chunk-aligned sample range: evaluate one
+    /// 256-sample chunk of the plan, then immediately decode that chunk's
+    /// output codes out of the wide value array, run the dense tail and
+    /// argmax — the netlist outputs never leave cache as a whole-batch
+    /// `BitMatrix`.  `start` (the global index of `preds[0]`) must be a
+    /// multiple of `CHUNK_SAMPLES`.
+    fn fused_range(
+        &self,
+        inputs: &BitMatrix,
+        start: usize,
+        preds: &mut [usize],
+        ws: &mut FusedWorker,
+    ) {
+        debug_assert_eq!(start % CHUNK_SAMPLES, 0);
+        ws.vals.resize(self.plan.vals_len(), [0u64; LANES]);
+        let out_slots = self.plan.output_slots();
+        let mut done = 0usize;
+        while done < preds.len() {
+            let w0 = (start + done) / 64;
+            self.plan.eval_chunk(inputs, w0, &mut ws.vals);
+            let in_chunk = CHUNK_SAMPLES.min(preds.len() - done);
+            for k in 0..in_chunk {
+                let (lane, bit) = (k / 64, k % 64);
+                ws.codes.clear();
+                for o in 0..self.net_outs {
+                    let mut c = 0u8;
+                    for b in 0..self.out_bw {
+                        let v = &ws.vals[out_slots[o * self.out_bw + b] as usize];
+                        c |= (((v[lane] >> bit) & 1) as u8) << b;
+                    }
+                    ws.codes.push(c);
+                }
+                for stage in &self.dense_tail {
+                    ws.next.clear();
+                    stage.eval(&ws.codes, &mut ws.next, &mut ws.logits);
+                    std::mem::swap(&mut ws.codes, &mut ws.next);
+                }
+                // Same argmax (and tie-break) as `LutEngine::infer`.
+                preds[done + k] = ws
+                    .codes
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(_, &c)| c)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+            }
+            done += in_chunk;
+        }
+    }
+
+    /// Batch classify through the fused wide path: quantize into reused
+    /// input planes, then chunk-aligned sample ranges across the worker
+    /// pool, each running [`Self::fused_range`].  Router-sized batches (one
+    /// range) run inline — no thread spawn; all buffers come from the
+    /// engine's scratch pool, so steady-state serving allocates only the
+    /// returned prediction vector.
+    pub fn infer_batch(&self, xs: &[f32]) -> Vec<usize> {
+        let d = self.in_features;
+        assert_eq!(xs.len() % d, 0);
+        let n = xs.len() / d;
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut fs = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        fs.inputs.reset(self.netlist.num_inputs, n);
+        for (s, row) in xs.chunks(d).enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                fs.inputs.set_code(j * self.bw_in, self.bw_in, s, self.in_quant.code(v));
+            }
+        }
+        let mut preds = vec![0usize; n];
+        let nchunks = n.div_ceil(CHUNK_SAMPLES);
+        let workers = crate::util::pool::num_threads().min(nchunks).max(1);
+        let per = nchunks.div_ceil(workers) * CHUNK_SAMPLES;
+        let nranges = n.div_ceil(per);
+        if fs.workers.len() < nranges {
+            fs.workers.resize_with(nranges, FusedWorker::default);
+        }
+        // Destructure so the threads borrow disjoint fields.
+        let FusedScratch { inputs, workers: wss } = &mut fs;
+        if nranges == 1 {
+            self.fused_range(inputs, 0, &mut preds, &mut wss[0]);
+        } else {
+            std::thread::scope(|s| {
+                for (r, (chunk, ws)) in preds.chunks_mut(per).zip(wss.iter_mut()).enumerate() {
+                    let inputs = &*inputs;
+                    s.spawn(move || self.fused_range(inputs, r * per, chunk, ws));
+                }
+            });
+        }
+        self.scratch.lock().unwrap().push(fs);
         preds
     }
 }
@@ -665,10 +794,28 @@ mod tests {
         assert!(net.num_luts() > 0);
         assert_eq!(Backend::classes(&net), Backend::classes(&lut));
         let mut rng = Rng::new(77);
-        for n in [1usize, 63, 64, 65, 200] {
+        for n in [1usize, 63, 64, 65, 200, 255, 256, 257, 600] {
             let xs: Vec<f32> = (0..12 * n).map(|_| rng.f32()).collect();
-            assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs), "n={n}");
+            let expect = lut.infer_batch(&xs);
+            assert_eq!(net.infer_batch(&xs), expect, "fused n={n}");
+            assert_eq!(net.infer_batch_unfused(&xs), expect, "unfused n={n}");
         }
+    }
+
+    #[test]
+    fn fused_scratch_pool_reuses_and_stays_exact() {
+        // Repeated batches of varying size through one engine must keep
+        // agreeing with the oracle path — exercises `BitMatrix::reset`
+        // reuse and the scratch pool handoff.
+        let model = random_model(8);
+        let tables = ModelTables::generate(&model).unwrap();
+        let net = NetlistEngine::build(&model, &tables).unwrap();
+        let mut rng = Rng::new(21);
+        for n in [600usize, 1, 256, 64, 513, 2] {
+            let xs: Vec<f32> = (0..12 * n).map(|_| rng.f32()).collect();
+            assert_eq!(net.infer_batch(&xs), net.infer_batch_unfused(&xs), "n={n}");
+        }
+        assert!(net.scratch.lock().unwrap().len() <= 1, "pool must recycle one scratch set");
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! to `max_batch` requests (or whatever arrived within `batch_timeout`) and
 //! hands the batch to a worker pool; each worker re-packs its batch into
 //! one contiguous buffer and runs a single `Backend::infer_batch` call, so
-//! backends that are batch-native (the bitsliced `NetlistEngine` computes
-//! 64 samples per word) get full batches, and the table engine keeps its
+//! backends that are batch-native (the wide-plane `NetlistEngine` computes
+//! 256 samples per chunk) get full batches, and the table engine keeps its
 //! allocation-free scratch reuse internally.  The backend is selected at
 //! `Server::start` — any `Arc<impl Backend>` works.  Latency is tracked per
 //! request (enqueue -> response) in a fixed-size reservoir for percentile
@@ -37,7 +37,10 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             workers: crate::util::pool::num_threads().min(8),
-            max_batch: 64,
+            // One full evaluation chunk of the wide-plane simulator (256
+            // samples): a maximal batch fills every lane of one chunk
+            // instead of leaving 3/4 of the wide pass masked off.
+            max_batch: 256,
             batch_timeout: Duration::from_micros(50),
             queue_depth: 4096,
         }

@@ -1,12 +1,22 @@
-//! Bitsliced 64-way netlist simulation (DESIGN.md §Bitsliced-Simulation).
+//! Bitsliced wide-plane netlist simulation (DESIGN.md §Bitsliced-Simulation
+//! and §11 Levelized-Wide-Plane-Plan).
 //!
 //! The scalar `Netlist::eval` walks one sample at a time through `Vec<bool>`
 //! — fine for spot checks, hopeless for equivalence sweeps and for serving
 //! from the synthesized circuit.  This module stores a batch of samples as
-//! *bit-planes* (one `u64` word holds the same bit of 64 samples) and
-//! evaluates every `LutNode` over whole words: a 6-input LUT becomes a
-//! short Shannon expansion of AND/OR/NOT word ops, so one pass computes 64
-//! samples per core, parallelized over word-blocks via `util::pool`.
+//! *bit-planes* and evaluates every `LutNode` over whole machine words: a
+//! 6-input LUT becomes a short Shannon expansion of AND/OR/NOT word ops.
+//! Two widths exist:
+//!
+//! - the 64-way path ([`lut_word`], [`eval_netlist_64`]) — one `u64` per
+//!   net, recursive expansion; kept as the bit-exact oracle and the
+//!   `bench_sim` baseline;
+//! - the 256-way path ([`lut_chunk`], [`plan::EvalPlan`] /
+//!   [`plan::eval_plan`]) — one `[u64; LANES]` chunk per net, the Shannon
+//!   recursion unrolled into an iterative mask-select fold over the chunk
+//!   lanes so the autovectorizer lifts it to SIMD.  [`eval_netlist`]
+//!   compiles a plan on the fly and runs this path; hot callers (serving,
+//!   verification sweeps) compile once and reuse a [`plan::SimScratch`].
 //!
 //! Layout: [`BitMatrix`] is plane-major — plane `p` (one named bit: a
 //! primary input, or one output bit) owns `words_per_plane` consecutive
@@ -15,14 +25,28 @@
 //! (enforced by every constructor and by [`eval_netlist`]), so whole-word
 //! comparisons between matrices are exact.
 //!
-//! The evaluation schedule is levelized implicitly: `Mapper` only ever
-//! appends nodes whose inputs already exist, so node order is a topological
-//! order and a single forward sweep per word suffices (checked by a
-//! debug assertion).
+//! The evaluation schedule is levelized *explicitly*: [`plan::EvalPlan`]
+//! recomputes each node's topological level from the wiring and stores the
+//! records level-ordered in a flat arena (the old "levelized implicitly —
+//! node order is topological" note only survives in [`eval_netlist_64`],
+//! which still sweeps nodes in list order under a debug assertion).
+
+pub mod plan;
+
+pub use plan::{eval_plan, EvalPlan, SimScratch};
 
 use crate::synth::netlist::{Net, Netlist};
 use crate::util::bits::var_word;
 use crate::util::pool;
+
+/// `u64` lanes per chunk in the wide path: 4 lanes = 256 samples evaluated
+/// per LUT record.  Chosen to match one 256-bit vector register (AVX2 /
+/// NEON pairs) while keeping the per-worker value array small enough to
+/// stay cache-resident for real netlists (see DESIGN.md §11).
+pub const LANES: usize = 4;
+
+/// One wide-plane value: the same named bit of `64 * LANES` samples.
+pub type Chunk = [u64; LANES];
 
 /// A batch of bit-vectors stored as bit-planes, 64 samples per word.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -61,8 +85,19 @@ impl BitMatrix {
         &mut self.words[p * self.wpp..(p + 1) * self.wpp]
     }
 
+    /// Clear and reshape in place, keeping the allocation (the scratch
+    /// pattern: serving engines reuse one input matrix across batches).
+    pub fn reset(&mut self, planes: usize, samples: usize) {
+        let wpp = samples.div_ceil(64);
+        self.planes = planes;
+        self.samples = samples;
+        self.wpp = wpp;
+        self.words.clear();
+        self.words.resize(planes * wpp, 0);
+    }
+
     /// Valid-bit mask of the last word of every plane.
-    fn tail_mask(&self) -> u64 {
+    pub(crate) fn tail_mask(&self) -> u64 {
         let rem = self.samples % 64;
         if rem == 0 {
             u64::MAX
@@ -145,18 +180,58 @@ impl BitMatrix {
     }
 }
 
-/// Word-level evaluation of one K<=6-input LUT by Shannon expansion of its
-/// packed truth table: `xs[j]` holds input `j` of 64 samples, the result
-/// holds the LUT output of the same 64 samples.
-#[inline]
-pub fn lut_word(tt: u64, xs: &[u64]) -> u64 {
-    let k = xs.len();
-    debug_assert!(k <= 6, "LUT arity {k} > 6");
-    let mask = if k >= 6 { u64::MAX } else { (1u64 << (1usize << k)) - 1 };
-    lut_word_rec(tt & mask, xs, mask)
+impl Default for BitMatrix {
+    fn default() -> BitMatrix {
+        BitMatrix::new(0, 0)
+    }
 }
 
-fn lut_word_rec(tt: u64, xs: &[u64], mask: u64) -> u64 {
+/// Word-level evaluation of one K<=6-input LUT by Shannon expansion of its
+/// packed truth table: `xs[j]` holds input `j` of 64 samples, the result
+/// holds the LUT output of the same 64 samples.  k∈{0,1,2} take direct
+/// mask-select fast paths (no recursion); wider LUTs fall back to
+/// [`lut_word_rec`].
+#[inline]
+pub fn lut_word(tt: u64, xs: &[u64]) -> u64 {
+    match xs.len() {
+        0 => {
+            if tt & 1 == 1 {
+                u64::MAX
+            } else {
+                0
+            }
+        }
+        1 => pair_mux(tt, xs[0]),
+        2 => {
+            let f0 = pair_mux(tt, xs[0]);
+            let f1 = pair_mux(tt >> 2, xs[0]);
+            (xs[1] & f1) | (!xs[1] & f0)
+        }
+        k => {
+            debug_assert!(k <= 6, "LUT arity {k} > 6");
+            let mask = if k >= 6 { u64::MAX } else { (1u64 << (1usize << k)) - 1 };
+            lut_word_rec(tt & mask, xs, mask)
+        }
+    }
+}
+
+/// Evaluate a 1-input LUT (the two low truth-table bits) over a word:
+/// 00 → 0, 11 → 1, 10 → x, 01 → !x.
+#[inline]
+fn pair_mux(tt: u64, x: u64) -> u64 {
+    match tt & 0b11 {
+        0b00 => 0,
+        0b11 => u64::MAX,
+        0b10 => x,
+        _ => !x,
+    }
+}
+
+/// Recursive Shannon-expansion reference form of [`lut_word`].  `mask`
+/// must be the valid-bit mask of `tt` for the current arity
+/// (`(1 << (1 << k)) - 1`, saturating to all-ones at k=6) and `tt` must be
+/// pre-masked.  Public so tests can pin the fast paths against it.
+pub fn lut_word_rec(tt: u64, xs: &[u64], mask: u64) -> u64 {
     // Constant cofactors terminate most branches early: sparse and
     // saturated truth tables (the common LogicNets case) cost far fewer
     // than the worst-case 2^k word ops.
@@ -174,6 +249,89 @@ fn lut_word_rec(tt: u64, xs: &[u64], mask: u64) -> u64 {
     let f0 = lut_word_rec(tt & lo_mask, &xs[..k - 1], lo_mask);
     let f1 = lut_word_rec((tt >> half) & lo_mask, &xs[..k - 1], lo_mask);
     (x & f1) | (!x & f0)
+}
+
+/// Per-lane mux: `x ? a1 : a0` on every lane.  The straight-line loop over
+/// a fixed-size array is what the autovectorizer turns into vector
+/// `and/andnot/or` — keep it branch-free.
+#[inline(always)]
+fn chunk_mux(x: &Chunk, a1: &Chunk, a0: &Chunk) -> Chunk {
+    let mut r = [0u64; LANES];
+    for l in 0..LANES {
+        r[l] = (x[l] & a1[l]) | (!x[l] & a0[l]);
+    }
+    r
+}
+
+/// Evaluate a 1-input LUT (two low tt bits) over a chunk; the lane loop in
+/// each arm vectorizes, and the constant arms splat without touching `x`.
+#[inline(always)]
+fn chunk_pair_mux(tt: u64, x: &Chunk) -> Chunk {
+    match tt & 0b11 {
+        0b00 => [0u64; LANES],
+        0b11 => [u64::MAX; LANES],
+        0b10 => *x,
+        _ => {
+            let mut r = [0u64; LANES];
+            for l in 0..LANES {
+                r[l] = !x[l];
+            }
+            r
+        }
+    }
+}
+
+/// Iterative wide-plane LUT evaluation: seed `HALF` 1-input cofactors from
+/// the truth-table bit pairs, then fold the remaining variables with
+/// [`chunk_mux`] — the Shannon recursion unrolled into `HALF - 1` muxes of
+/// straight-line lane loops, no call tree.
+#[inline(always)]
+fn lut_chunk_wide<const HALF: usize>(tt: u64, xs: &[Chunk]) -> Chunk {
+    debug_assert_eq!(HALF, 1usize << (xs.len() - 1));
+    let mut cof = [[0u64; LANES]; HALF];
+    for (i, c) in cof.iter_mut().enumerate() {
+        *c = chunk_pair_mux(tt >> (2 * i), &xs[0]);
+    }
+    let mut width = HALF;
+    let mut v = 1;
+    while width > 1 {
+        width /= 2;
+        for i in 0..width {
+            cof[i] = chunk_mux(&xs[v], &cof[2 * i + 1], &cof[2 * i]);
+        }
+        v += 1;
+    }
+    cof[0]
+}
+
+/// Chunk-level evaluation of one K<=6-input LUT: `xs[j]` holds input `j`
+/// of `64 * LANES` samples, the result holds the LUT output of the same
+/// samples.  Semantics match [`lut_word`] lane-by-lane; constant truth
+/// tables short-circuit as in the recursive form.
+#[inline]
+pub fn lut_chunk(tt: u64, xs: &[Chunk]) -> Chunk {
+    let k = xs.len();
+    debug_assert!(k <= 6, "LUT arity {k} > 6");
+    let mask = if k >= 6 { u64::MAX } else { (1u64 << (1usize << k)) - 1 };
+    let tt = tt & mask;
+    if tt == 0 {
+        return [0u64; LANES];
+    }
+    if tt == mask {
+        return [u64::MAX; LANES];
+    }
+    match k {
+        1 => chunk_pair_mux(tt, &xs[0]),
+        2 => {
+            let f0 = chunk_pair_mux(tt, &xs[0]);
+            let f1 = chunk_pair_mux(tt >> 2, &xs[0]);
+            chunk_mux(&xs[1], &f1, &f0)
+        }
+        3 => lut_chunk_wide::<4>(tt, xs),
+        4 => lut_chunk_wide::<8>(tt, xs),
+        5 => lut_chunk_wide::<16>(tt, xs),
+        _ => lut_chunk_wide::<32>(tt, xs),
+    }
 }
 
 #[inline]
@@ -212,10 +370,22 @@ fn eval_block(netlist: &Netlist, inputs: &BitMatrix, range: std::ops::Range<usiz
 }
 
 /// Bitsliced batch evaluation of a netlist: `inputs` holds one plane per
-/// primary input, the result one plane per output net.  Word-blocks are
-/// distributed over the worker pool; each worker owns its value buffer and
-/// writes a disjoint slice of the result, so the sweep is lock-free.
+/// primary input, the result one plane per output net.  Runs the wide
+/// 256-way path by compiling an [`EvalPlan`] on the fly — the convenience
+/// entry point for one-shot callers (synthesis verification, equivalence
+/// sweeps).  Hot paths should compile the plan once and call
+/// [`eval_plan`] with a reused [`SimScratch`].
 pub fn eval_netlist(netlist: &Netlist, inputs: &BitMatrix) -> BitMatrix {
+    assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+    let plan = EvalPlan::compile(netlist);
+    eval_plan(&plan, inputs, &mut SimScratch::default())
+}
+
+/// The original 64-way bitsliced evaluator: one `u64` word per net,
+/// recursive Shannon expansion, nodes swept in list order (topological by
+/// construction, checked by a debug assertion).  Kept as the bit-exact
+/// oracle for the wide path and as the `bench_sim` speedup baseline.
+pub fn eval_netlist_64(netlist: &Netlist, inputs: &BitMatrix) -> BitMatrix {
     assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
     assert_eq!(inputs.planes(), netlist.num_inputs, "input plane count");
     #[cfg(debug_assertions)]
@@ -343,6 +513,78 @@ mod tests {
         }
     }
 
+    /// Satellite: the k∈{0,1,2} fast paths in `lut_word` must agree with
+    /// the recursive reference form for EVERY truth table at those widths.
+    #[test]
+    fn lut_word_fast_paths_pin_against_recursive_form() {
+        let mut rng = Rng::new(11);
+        let xs_pool: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        for k in 0..=2usize {
+            let mask = (1u64 << (1usize << k)) - 1;
+            for tt in 0..=mask {
+                for trial in 0..4 {
+                    let xs: Vec<u64> =
+                        (0..k).map(|j| xs_pool[(trial * 2 + j) % xs_pool.len()]).collect();
+                    assert_eq!(
+                        lut_word(tt, &xs),
+                        lut_word_rec(tt, &xs, mask),
+                        "k={k} tt={tt:#b} trial={trial}"
+                    );
+                    // High junk bits in tt must be ignored by the fast path
+                    // exactly as lut_word always masked them.
+                    let junk = tt | (rng.next_u64() & !mask);
+                    assert_eq!(lut_word(junk, &xs), lut_word_rec(tt, &xs, mask));
+                }
+            }
+        }
+    }
+
+    /// Every lane of `lut_chunk` must equal `lut_word` on the same words,
+    /// for all arities and for all truth tables at k<=2 / random ones above.
+    #[test]
+    fn lut_chunk_lanes_match_lut_word() {
+        let mut rng = Rng::new(13);
+        for k in 0..=6usize {
+            let exhaustive = k <= 2;
+            let mask = if k >= 6 { u64::MAX } else { (1u64 << (1usize << k)) - 1 };
+            let tts: Vec<u64> = if exhaustive {
+                (0..=mask).collect()
+            } else {
+                (0..40).map(|_| rng.next_u64()).collect()
+            };
+            for tt in tts {
+                let xs: Vec<Chunk> = (0..k)
+                    .map(|_| {
+                        let mut c = [0u64; LANES];
+                        for l in &mut c {
+                            *l = rng.next_u64();
+                        }
+                        c
+                    })
+                    .collect();
+                let wide = lut_chunk(tt, &xs);
+                for l in 0..LANES {
+                    let lane_xs: Vec<u64> = xs.iter().map(|c| c[l]).collect();
+                    assert_eq!(wide[l], lut_word(tt, &lane_xs), "k={k} tt={tt:#x} lane={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitmatrix_reset_keeps_invariants() {
+        let mut m = BitMatrix::new(3, 130);
+        m.set(2, 129, true);
+        m.reset(5, 70);
+        assert_eq!((m.planes(), m.samples(), m.words_per_plane()), (5, 70, 2));
+        for p in 0..5 {
+            assert!(m.plane(p).iter().all(|&w| w == 0), "plane {p} not cleared");
+        }
+        m.set(4, 69, true);
+        m.reset(1, 0);
+        assert_eq!(m.words_per_plane(), 0);
+    }
+
     #[test]
     fn eval_matches_scalar_on_mixed_outputs() {
         let nl = and_or_netlist();
@@ -388,5 +630,23 @@ mod tests {
         no_out.outputs.clear();
         let out = eval_netlist(&no_out, &BitMatrix::new(3, 100));
         assert_eq!(out.planes(), 0);
+        let out = eval_netlist_64(&no_out, &BitMatrix::new(3, 100));
+        assert_eq!(out.planes(), 0);
+    }
+
+    /// Wide path vs 64-way oracle: whole-`BitMatrix` equality (the tail
+    /// invariant makes `==` exact) across chunk-straddling batch sizes.
+    #[test]
+    fn wide_path_equals_64_way_oracle() {
+        let nl = and_or_netlist();
+        for samples in [1usize, 64, 129, 255, 256, 257, 300] {
+            let mut rng = Rng::new(samples as u64 ^ 0xabc);
+            let mut inputs = BitMatrix::new(3, samples);
+            for s in 0..samples {
+                let bits: Vec<bool> = (0..3).map(|_| rng.f64() < 0.5).collect();
+                inputs.set_column(s, &bits);
+            }
+            assert_eq!(eval_netlist(&nl, &inputs), eval_netlist_64(&nl, &inputs), "{samples}");
+        }
     }
 }

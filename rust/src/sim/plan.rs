@@ -1,0 +1,353 @@
+//! Levelized arena evaluation plan for the wide-plane simulator
+//! (DESIGN.md §11).
+//!
+//! `eval_netlist` used to walk `Netlist::nodes` directly: per LUT it
+//! matched every fan-in `Net` enum (branchy), chased node indices through
+//! one buffer and input planes through another, and re-did all of that for
+//! every word.  [`EvalPlan`] compiles a `Netlist` once into a flat arena —
+//! per record one truth table plus pre-resolved *value-array slots* for its
+//! fan-ins — so the inner loop is a branch-free sweep over contiguous
+//! `(tt, slots)` records.  The value array is unified: slot 0/1 are the
+//! constants, slots `2..2+num_inputs` are the primary-input chunks (loaded
+//! once per chunk, hoisting the plane reads out of the per-LUT loop), and
+//! the node records follow.  Records are stored in level order (levels are
+//! recomputed from the wiring, so plans stay correct even if an
+//! optimization pass left stale `LutNode::level` fields), which groups
+//! same-depth LUTs contiguously for cache locality.
+//!
+//! Evaluation is chunk-at-a-time: one [`super::Chunk`] (`LANES` × `u64` =
+//! 256 samples) per net, with all scratch owned by a caller-passed
+//! [`SimScratch`] so repeated evaluations (serving, verification sweeps)
+//! allocate nothing after warmup.
+
+use super::{lut_chunk, BitMatrix, Chunk, LANES};
+use crate::synth::netlist::{Net, Netlist};
+use crate::util::pool;
+
+/// A `Netlist` compiled to a level-ordered arena schedule.
+#[derive(Debug, Clone)]
+pub struct EvalPlan {
+    num_inputs: usize,
+    /// Truth table per record, in level order.
+    tts: Vec<u64>,
+    /// Flat fan-in arena: record `r` reads `slots[off[r]..off[r+1]]`.
+    slots: Vec<u32>,
+    off: Vec<u32>,
+    /// Value-array slots of the netlist's output nets.
+    out_slots: Vec<u32>,
+    /// Exclusive record end index of each topological level (level `l`'s
+    /// records are `level_ends[l-1]..level_ends[l]`, `level_ends[-1]` = 0).
+    level_ends: Vec<u32>,
+}
+
+impl EvalPlan {
+    /// Compile a netlist into the arena schedule.  Panics if the node list
+    /// is not topologically ordered (every constructor in `synth` keeps it
+    /// so).  BRAM ports are rejected at evaluation time, as before.
+    pub fn compile(netlist: &Netlist) -> EvalPlan {
+        assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+        let nn = netlist.nodes.len();
+        let base = (2 + netlist.num_inputs) as u32;
+        // Levels recomputed from the wiring; also validates topo order.
+        let mut level = vec![0u32; nn];
+        let mut max_level = 0u32;
+        for (i, node) in netlist.nodes.iter().enumerate() {
+            let mut lv = 1u32;
+            for &inp in &node.inputs {
+                if let Net::Node(j) = inp {
+                    assert!((j as usize) < i, "node {i} not in topological order");
+                    lv = lv.max(level[j as usize] + 1);
+                }
+            }
+            level[i] = lv;
+            max_level = max_level.max(lv);
+        }
+        // Counting sort into level order (stable: within a level, records
+        // keep netlist order).  `pos[i]` = record index of original node i.
+        let mut counts = vec![0u32; max_level as usize + 1];
+        for &lv in &level {
+            counts[lv as usize] += 1;
+        }
+        let mut starts = vec![0u32; max_level as usize + 1];
+        let mut acc = 0u32;
+        let mut level_ends = Vec::with_capacity(max_level as usize);
+        for lv in 1..=max_level as usize {
+            starts[lv] = acc;
+            acc += counts[lv];
+            level_ends.push(acc);
+        }
+        let mut pos = vec![0u32; nn];
+        for (i, &lv) in level.iter().enumerate() {
+            pos[i] = starts[lv as usize];
+            starts[lv as usize] += 1;
+        }
+        let slot_of = |net: Net| -> u32 {
+            match net {
+                Net::Const0 => 0,
+                Net::Const1 => 1,
+                Net::Input(i) => 2 + i,
+                Net::Node(i) => base + pos[i as usize],
+            }
+        };
+        let mut tts = vec![0u64; nn];
+        let mut arity = vec![0u32; nn];
+        for (i, node) in netlist.nodes.iter().enumerate() {
+            let r = pos[i] as usize;
+            tts[r] = node.tt;
+            arity[r] = node.inputs.len() as u32;
+        }
+        let mut off = Vec::with_capacity(nn + 1);
+        off.push(0u32);
+        for &a in &arity {
+            off.push(off.last().unwrap() + a);
+        }
+        let mut slots = vec![0u32; *off.last().unwrap() as usize];
+        for (i, node) in netlist.nodes.iter().enumerate() {
+            let r = pos[i] as usize;
+            for (j, &inp) in node.inputs.iter().enumerate() {
+                slots[off[r] as usize + j] = slot_of(inp);
+            }
+        }
+        let out_slots = netlist.outputs.iter().map(|&o| slot_of(o)).collect();
+        EvalPlan { num_inputs: netlist.num_inputs, tts, slots, off, out_slots, level_ends }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.out_slots.len()
+    }
+
+    pub fn num_luts(&self) -> usize {
+        self.tts.len()
+    }
+
+    /// Topological depth of the schedule (number of levels).
+    pub fn num_levels(&self) -> usize {
+        self.level_ends.len()
+    }
+
+    /// Record count per level, cumulative (exclusive end indices).
+    pub fn level_ends(&self) -> &[u32] {
+        &self.level_ends
+    }
+
+    /// Value-array slots of the netlist outputs: after [`Self::eval_chunk`],
+    /// output `o`'s chunk is `vals[out_slots[o]]`.
+    pub fn output_slots(&self) -> &[u32] {
+        &self.out_slots
+    }
+
+    /// Length of the value array [`Self::eval_chunk`] requires:
+    /// 2 constants + one slot per primary input + one per record.
+    pub fn vals_len(&self) -> usize {
+        2 + self.num_inputs + self.tts.len()
+    }
+
+    /// Evaluate every net over the words `w0 .. min(w0+LANES, wpp)` of the
+    /// input planes.  On return `vals[slot]` holds each net's chunk —
+    /// constants, hoisted primary-input reads, and all node records.  Lanes
+    /// at or beyond the plane end read as zero and produce don't-care
+    /// values (callers mask via `BitMatrix` tail handling).
+    pub fn eval_chunk(&self, inputs: &BitMatrix, w0: usize, vals: &mut [Chunk]) {
+        debug_assert_eq!(inputs.planes(), self.num_inputs, "input plane count");
+        debug_assert_eq!(vals.len(), self.vals_len(), "value array length");
+        let wpp = inputs.words_per_plane();
+        let n = LANES.min(wpp - w0);
+        vals[0] = [0u64; LANES];
+        vals[1] = [u64::MAX; LANES];
+        for i in 0..self.num_inputs {
+            let plane = inputs.plane(i);
+            let mut c = [0u64; LANES];
+            c[..n].copy_from_slice(&plane[w0..w0 + n]);
+            vals[2 + i] = c;
+        }
+        let base = 2 + self.num_inputs;
+        let mut xs = [[0u64; LANES]; 6];
+        for r in 0..self.tts.len() {
+            let (s, e) = (self.off[r] as usize, self.off[r + 1] as usize);
+            for (j, &sl) in self.slots[s..e].iter().enumerate() {
+                xs[j] = vals[sl as usize];
+            }
+            vals[base + r] = lut_chunk(self.tts[r], &xs[..e - s]);
+        }
+    }
+
+    /// Serial sweep over one chunk-aligned word range, writing the output
+    /// planes into `ws.block` laid out `[output][word_in_range]`.
+    fn eval_range(&self, inputs: &BitMatrix, range: std::ops::Range<usize>, ws: &mut WorkerScratch) {
+        let len = range.len();
+        ws.vals.resize(self.vals_len(), [0u64; LANES]);
+        ws.block.resize(self.num_outputs() * len, 0);
+        let mut w0 = range.start;
+        while w0 < range.end {
+            self.eval_chunk(inputs, w0, &mut ws.vals);
+            let n = LANES.min(range.end - w0);
+            for (o, &sl) in self.out_slots.iter().enumerate() {
+                let v = &ws.vals[sl as usize];
+                let dst = o * len + (w0 - range.start);
+                ws.block[dst..dst + n].copy_from_slice(&v[..n]);
+            }
+            w0 += LANES;
+        }
+    }
+}
+
+/// Reusable evaluation scratch: per-worker value buffers and output
+/// blocks, grown on demand and reused across [`eval_plan`] calls (the
+/// `ForwardScratch` pattern — repeated evaluations allocate nothing after
+/// the first call).
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    workers: Vec<WorkerScratch>,
+}
+
+#[derive(Debug, Default)]
+struct WorkerScratch {
+    vals: Vec<Chunk>,
+    block: Vec<u64>,
+}
+
+/// Wide-plane bitsliced evaluation of a compiled plan: 256 samples per
+/// chunk per record, chunk-aligned word ranges distributed over the worker
+/// pool (a single-range batch runs inline — no thread spawn for
+/// router-sized batches).  All buffers live in `scratch` and are reused
+/// across calls.
+pub fn eval_plan(plan: &EvalPlan, inputs: &BitMatrix, scratch: &mut SimScratch) -> BitMatrix {
+    assert_eq!(inputs.planes(), plan.num_inputs(), "input plane count");
+    let samples = inputs.samples();
+    let mut out = BitMatrix::new(plan.num_outputs(), samples);
+    let wpp = inputs.words_per_plane();
+    if wpp == 0 || plan.num_outputs() == 0 {
+        return out;
+    }
+    let nchunks = wpp.div_ceil(LANES);
+    let workers = pool::num_threads().min(nchunks).max(1);
+    let per = nchunks.div_ceil(workers) * LANES;
+    let ranges: Vec<std::ops::Range<usize>> =
+        (0..wpp).step_by(per).map(|lo| lo..(lo + per).min(wpp)).collect();
+    if scratch.workers.len() < ranges.len() {
+        scratch.workers.resize_with(ranges.len(), WorkerScratch::default);
+    }
+    if ranges.len() == 1 {
+        plan.eval_range(inputs, ranges[0].clone(), &mut scratch.workers[0]);
+    } else {
+        std::thread::scope(|s| {
+            for (range, ws) in ranges.iter().zip(scratch.workers.iter_mut()) {
+                let range = range.clone();
+                s.spawn(move || plan.eval_range(inputs, range, ws));
+            }
+        });
+    }
+    let tail = out.tail_mask();
+    for (range, ws) in ranges.iter().zip(&scratch.workers) {
+        let len = range.len();
+        for o in 0..plan.num_outputs() {
+            let plane = out.plane_mut(o);
+            for (k, w) in range.clone().enumerate() {
+                let mut word = ws.block[o * len + k];
+                if w + 1 == wpp {
+                    word &= tail;
+                }
+                plane[w] = word;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::netlist::LutNode;
+    use crate::util::rng::Rng;
+
+    fn and_or_netlist() -> Netlist {
+        Netlist {
+            num_inputs: 3,
+            nodes: vec![
+                LutNode { inputs: vec![Net::Input(0), Net::Input(1)], tt: 0b1000, level: 1 },
+                LutNode { inputs: vec![Net::Node(0), Net::Input(2)], tt: 0b1110, level: 2 },
+            ],
+            outputs: vec![Net::Node(1), Net::Const1, Net::Const0, Net::Input(2), Net::Node(0)],
+            brams: vec![],
+            layer_depths: vec![2],
+        }
+    }
+
+    #[test]
+    fn compile_levelizes_and_maps_outputs() {
+        let nl = and_or_netlist();
+        let plan = EvalPlan::compile(&nl);
+        assert_eq!(plan.num_inputs(), 3);
+        assert_eq!(plan.num_luts(), 2);
+        assert_eq!(plan.num_outputs(), 5);
+        assert_eq!(plan.num_levels(), 2);
+        assert_eq!(plan.level_ends(), &[1, 2]);
+        // Slots: const0=0, const1=1, inputs 2..5, records 5..7.
+        assert_eq!(plan.output_slots(), &[6, 1, 0, 4, 5]);
+        assert_eq!(plan.vals_len(), 2 + 3 + 2);
+    }
+
+    #[test]
+    fn stale_level_fields_are_recomputed() {
+        // An optimization pass may leave wrong `level` fields; the plan
+        // must order by the real wiring, not the stored numbers.
+        let mut nl = and_or_netlist();
+        nl.nodes[0].level = 7;
+        nl.nodes[1].level = 1;
+        let plan = EvalPlan::compile(&nl);
+        assert_eq!(plan.num_levels(), 2);
+        assert_eq!(plan.level_ends(), &[1, 2]);
+        // Behavior unchanged.
+        let inputs = BitMatrix::all_patterns(3);
+        let out = eval_plan(&plan, &inputs, &mut SimScratch::default());
+        for idx in 0..8usize {
+            let bits: Vec<bool> = (0..3).map(|v| (idx >> v) & 1 == 1).collect();
+            assert_eq!(out.column(idx), nl.eval(&bits), "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn plan_eval_matches_scalar_across_chunk_boundaries() {
+        let nl = and_or_netlist();
+        let plan = EvalPlan::compile(&nl);
+        let mut scratch = SimScratch::default();
+        for samples in [1usize, 63, 64, 65, 255, 256, 257, 300, 512] {
+            let mut rng = Rng::new(samples as u64);
+            let mut inputs = BitMatrix::new(3, samples);
+            let rows: Vec<Vec<bool>> = (0..samples)
+                .map(|s| {
+                    let bits: Vec<bool> = (0..3).map(|_| rng.f64() < 0.5).collect();
+                    inputs.set_column(s, &bits);
+                    bits
+                })
+                .collect();
+            let out = eval_plan(&plan, &inputs, &mut scratch);
+            for (s, bits) in rows.iter().enumerate() {
+                assert_eq!(out.column(s), nl.eval(bits), "samples={samples} s={s}");
+            }
+            // Tail invariant holds on every plane.
+            let tail = out.tail_mask();
+            for p in 0..out.planes() {
+                assert_eq!(out.plane(p)[out.words_per_plane() - 1] & !tail, 0, "plane {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_empty_outputs() {
+        let nl = and_or_netlist();
+        let plan = EvalPlan::compile(&nl);
+        let out = eval_plan(&plan, &BitMatrix::new(3, 0), &mut SimScratch::default());
+        assert_eq!(out.samples(), 0);
+        let mut no_out = nl.clone();
+        no_out.outputs.clear();
+        let plan = EvalPlan::compile(&no_out);
+        let out = eval_plan(&plan, &BitMatrix::new(3, 300), &mut SimScratch::default());
+        assert_eq!(out.planes(), 0);
+        assert_eq!(out.samples(), 300);
+    }
+}

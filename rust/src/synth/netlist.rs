@@ -74,11 +74,20 @@ impl Netlist {
         self.outputs.iter().map(|&o| self.level_of(o)).max().unwrap_or(0)
     }
 
+    /// Compile this netlist into a level-ordered arena evaluation plan for
+    /// the wide-plane simulator (`crate::sim::plan`).  Hot callers compile
+    /// once and reuse the plan (plus a `SimScratch`) across batches.
+    pub fn compile_plan(&self) -> crate::sim::EvalPlan {
+        crate::sim::EvalPlan::compile(self)
+    }
+
     /// Scalar reference evaluation on one primary-input bit vector.  Batch
     /// workloads (equivalence sweeps, accuracy scoring, netlist-backed
     /// serving) should use the bitsliced simulator instead —
-    /// `crate::sim::eval_netlist` computes 64 samples per word per core and
-    /// is cross-checked against this implementation by property tests.
+    /// `crate::sim::eval_netlist` evaluates 256 samples per chunk per core
+    /// over a levelized plan and is cross-checked against this
+    /// implementation (and the 64-way `eval_netlist_64` oracle) by
+    /// property tests.
     pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
         assert_eq!(inputs.len(), self.num_inputs);
         let mut values = vec![false; self.nodes.len()];

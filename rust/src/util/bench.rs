@@ -2,10 +2,27 @@
 //!
 //! `cargo bench` targets use `harness = false` and call [`bench`] /
 //! [`bench_n`]: warmup, then timed iterations until a wall-clock budget is
-//! reached, reporting min / median / mean / p95 per-iteration times and
-//! optional throughput.  Deliberately simple but stable enough for the
+//! reached, reporting min / median / mean / p95 / p99 per-iteration times
+//! and optional throughput.  Deliberately simple but stable enough for the
 //! §Perf before/after logs in EXPERIMENTS.md.
+//!
+//! [`BenchReport`] adds the machine-readable side: bench targets collect
+//! scenarios into one report and `finish()` writes `BENCH_<name>.json`
+//! (CI uploads these as artifacts, so the perf trajectory is trackable
+//! across PRs) and enforces the regression gate against a checked-in
+//! baseline.  Environment contract:
+//!
+//! * `BENCH_OUT` — output directory for `BENCH_<name>.json` (default `.`);
+//! * `BENCH_BASELINE` — path to a baseline JSON; when set, any scenario
+//!   whose `throughput_per_s` drops more than `BENCH_MAX_REGRESS`
+//!   (default 0.20) below the baseline's same-named scenario fails the
+//!   process (exit code 1).  Scenarios absent from the baseline are
+//!   skipped, so new benches never block on an old baseline;
+//! * `BENCH_QUICK` — bench targets shrink batch sizes / budgets so CI
+//!   runs in seconds (the numbers are noisier; the gate is deliberately
+//!   loose).
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -16,18 +33,20 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub mean_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
 }
 
 impl BenchResult {
     pub fn report(&self) {
         println!(
-            "{:<44} {:>10} iters  min {:>12}  median {:>12}  mean {:>12}  p95 {:>12}",
+            "{:<44} {:>10} iters  min {:>12}  median {:>12}  mean {:>12}  p95 {:>12}  p99 {:>12}",
             self.name,
             self.iters,
             fmt_ns(self.min_ns),
             fmt_ns(self.median_ns),
             fmt_ns(self.mean_ns),
             fmt_ns(self.p95_ns),
+            fmt_ns(self.p99_ns),
         );
     }
 
@@ -101,7 +120,116 @@ fn summarize(name: &str, mut samples_ns: Vec<f64>) -> BenchResult {
         median_ns: samples_ns[n / 2],
         mean_ns: mean,
         p95_ns: samples_ns[(n as f64 * 0.95) as usize % n.max(1)],
+        p99_ns: samples_ns[(n as f64 * 0.99) as usize % n.max(1)],
     }
+}
+
+/// Collected machine-readable results of one bench target.
+pub struct BenchReport {
+    name: String,
+    scenarios: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), scenarios: Vec::new() }
+    }
+
+    /// Record one timed scenario; `items_per_iter` turns the median time
+    /// into `throughput_per_s` (the quantity the regression gate tracks).
+    pub fn add(&mut self, r: &BenchResult, items_per_iter: f64, unit: &str) {
+        let throughput = items_per_iter / (r.median_ns / 1e9);
+        self.scenarios.push(Json::obj(vec![
+            ("name", Json::str(&r.name)),
+            ("iters", Json::num(r.iters as f64)),
+            ("min_ns", Json::num(r.min_ns)),
+            ("p50_ns", Json::num(r.median_ns)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("p95_ns", Json::num(r.p95_ns)),
+            ("p99_ns", Json::num(r.p99_ns)),
+            ("items_per_iter", Json::num(items_per_iter)),
+            ("unit", Json::str(unit)),
+            ("throughput_per_s", Json::num(throughput)),
+        ]));
+    }
+
+    /// Record a scenario from externally measured fields (router latency
+    /// percentiles etc.).  Include a `throughput_per_s` field to opt the
+    /// scenario into the regression gate.
+    pub fn add_with(&mut self, name: &str, mut fields: Vec<(&str, Json)>) {
+        fields.insert(0, ("name", Json::str(name)));
+        self.scenarios.push(Json::obj(fields));
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(&self.name)),
+            ("scenarios", Json::Arr(self.scenarios.clone())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `$BENCH_OUT` (default `.`) and, if
+    /// `$BENCH_BASELINE` is set, enforce the throughput regression gate —
+    /// printing every comparison and exiting non-zero on failure.
+    pub fn finish(&self) {
+        let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+        let path = format!("{dir}/BENCH_{}.json", self.name);
+        std::fs::write(&path, self.to_json().to_string()).expect("write bench json");
+        println!("wrote {path}");
+        if let Ok(baseline_path) = std::env::var("BENCH_BASELINE") {
+            let max_regress = std::env::var("BENCH_MAX_REGRESS")
+                .ok()
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(0.20);
+            let text = std::fs::read_to_string(&baseline_path)
+                .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+            let baseline = Json::parse(&text).expect("parse baseline json");
+            let failures = check_regressions(&self.to_json(), &baseline, max_regress);
+            if !failures.is_empty() {
+                for f in &failures {
+                    eprintln!("PERF REGRESSION: {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Compare `report` against `baseline` (both in the `BENCH_*.json` shape;
+/// the baseline may also be a flat union of several benches' scenarios).
+/// Returns one message per scenario whose `throughput_per_s` fell more
+/// than `max_regress` (fraction) below the baseline value.  Scenarios
+/// missing from the baseline — or carrying no throughput on either side —
+/// are skipped.
+pub fn check_regressions(report: &Json, baseline: &Json, max_regress: f64) -> Vec<String> {
+    let empty: Vec<Json> = Vec::new();
+    let base_scenarios = baseline.get("scenarios").and_then(|s| s.as_arr()).unwrap_or(&empty);
+    let base_of = |name: &str| -> Option<f64> {
+        base_scenarios
+            .iter()
+            .find(|s| s.get("name").and_then(|n| n.as_str()) == Some(name))
+            .and_then(|s| s.get("throughput_per_s"))
+            .and_then(|t| t.as_f64())
+    };
+    let mut failures = Vec::new();
+    for sc in report.get("scenarios").and_then(|s| s.as_arr()).unwrap_or(&empty) {
+        let Some(name) = sc.get("name").and_then(|n| n.as_str()) else { continue };
+        let Some(got) = sc.get("throughput_per_s").and_then(|t| t.as_f64()) else { continue };
+        let Some(base) = base_of(name) else { continue };
+        if base > 0.0 && got < base * (1.0 - max_regress) {
+            failures.push(format!(
+                "{name}: {got:.3e}/s vs baseline {base:.3e}/s ({:.1}% drop > {:.0}% allowed)",
+                (1.0 - got / base) * 100.0,
+                max_regress * 100.0
+            ));
+        } else {
+            println!(
+                "gate ok  {name}: {got:.3e}/s vs baseline {base:.3e}/s ({:+.1}%)",
+                (got / base - 1.0) * 100.0
+            );
+        }
+    }
+    failures
 }
 
 #[cfg(test)]
@@ -115,6 +243,42 @@ mod tests {
         });
         assert_eq!(r.iters, 50);
         assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p95_ns);
+        assert!(r.p95_ns <= r.p99_ns);
+    }
+
+    fn report_json(scenarios: Vec<(&str, f64)>) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("t")),
+            (
+                "scenarios",
+                Json::Arr(
+                    scenarios
+                        .into_iter()
+                        .map(|(n, t)| {
+                            Json::obj(vec![
+                                ("name", Json::str(n)),
+                                ("throughput_per_s", Json::num(t)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn regression_gate_flags_only_real_drops() {
+        let baseline = report_json(vec![("a", 1000.0), ("b", 1000.0), ("c", 1000.0)]);
+        // a: 10% drop (ok at 20%), b: 30% drop (fails), d: not in baseline.
+        let report = report_json(vec![("a", 900.0), ("b", 700.0), ("d", 5.0)]);
+        let failures = check_regressions(&report, &baseline, 0.20);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].starts_with("b:"), "{failures:?}");
+        // Tighter gate catches both drops.
+        assert_eq!(check_regressions(&report, &baseline, 0.05).len(), 2);
+        // Improvements never fail.
+        let report = report_json(vec![("a", 2000.0)]);
+        assert!(check_regressions(&report, &baseline, 0.20).is_empty());
     }
 
     #[test]

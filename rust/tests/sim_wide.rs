@@ -1,0 +1,190 @@
+//! Wide-plane simulation equivalence suite (ISSUE 6 tentpole + satellites).
+//!
+//! The 256-way levelized-plan evaluator (`sim::plan`) must be bit-exact
+//! against both the 64-way word path (`eval_netlist_64`) and the scalar
+//! `Netlist::eval` reference — on random synthesized netlists, on *trained*
+//! skip/pyramid manifests (PR 5 topologies), and across the wide-plane edge
+//! cases: batch sizes off the 256-sample chunk boundary, single-sample
+//! batches, empty batches and empty-output netlists.  The fused
+//! `NetlistEngine` serving pass is pinned against its unfused oracle and
+//! `LutEngine` on the same manifests.
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::Manifest;
+use logicnets::serve::{LutEngine, NetlistEngine};
+use logicnets::sim::{eval_netlist, eval_netlist_64, eval_plan, BitMatrix, EvalPlan, SimScratch};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, Netlist, SynthOpts};
+use logicnets::train::{native, ModelState, TrainOpts};
+use logicnets::util::prop::forall;
+use logicnets::util::rng::Rng;
+
+/// Random skip/pyramid topology on the jets shape — the PR 5 manifold the
+/// wide path must not regress.
+fn random_topology(rng: &mut Rng) -> Manifest {
+    let depth = 1 + rng.below(3);
+    let skips = 1 + rng.below(2);
+    let mut hidden = Vec::new();
+    let mut w = 6 + rng.below(8);
+    for _ in 0..depth {
+        hidden.push(w);
+        if rng.below(2) == 0 {
+            w = (w / 2).max(3);
+        }
+    }
+    let fanin = 2 + rng.below(2);
+    let bw = 1 + rng.below(2);
+    Manifest::synthetic_topology("sim_wide_prop", "jets", 16, 5, &hidden, fanin, bw, skips)
+}
+
+fn synthesized(man: &Manifest, seed: u64, train: bool) -> (ExportedModel, ModelTables, Netlist) {
+    let mut st = ModelState::init(man, seed, PruneMethod::APriori);
+    if train {
+        let ds = logicnets::hep::jets(300, seed ^ 1);
+        let mut opts = TrainOpts::from_manifest(man);
+        opts.steps = 6;
+        opts.seed = seed;
+        native::train_native(man, &mut st, &ds, &opts).unwrap();
+    }
+    let ex = ExportedModel::from_state(man, &st);
+    let tables = ModelTables::generate(&ex).unwrap();
+    let (netlist, _) = synthesize(
+        &ex,
+        &tables,
+        SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
+    )
+    .unwrap();
+    (ex, tables, netlist)
+}
+
+fn random_inputs(netlist: &Netlist, samples: usize, seed: u64) -> (BitMatrix, Vec<Vec<bool>>) {
+    let mut rng = Rng::new(seed);
+    let mut inputs = BitMatrix::new(netlist.num_inputs, samples);
+    let rows: Vec<Vec<bool>> = (0..samples)
+        .map(|s| {
+            let bits: Vec<bool> = (0..netlist.num_inputs).map(|_| rng.f64() < 0.5).collect();
+            inputs.set_column(s, &bits);
+            bits
+        })
+        .collect();
+    (inputs, rows)
+}
+
+/// 256-way ≡ 64-way ≡ scalar on one netlist/batch, plus the whole-matrix
+/// tail invariant (bits at or beyond `samples` stay zero on every plane).
+fn check_all_paths(netlist: &Netlist, plan: &EvalPlan, scratch: &mut SimScratch, samples: usize) {
+    let (inputs, rows) = random_inputs(netlist, samples, samples as u64 ^ 0x51de);
+    let wide = eval_plan(plan, &inputs, scratch);
+    let word = eval_netlist_64(netlist, &inputs);
+    assert_eq!(wide, word, "wide != 64-way at samples={samples}");
+    for (s, bits) in rows.iter().enumerate() {
+        assert_eq!(wide.column(s), netlist.eval(bits), "wide != scalar at sample {s}");
+    }
+    if wide.words_per_plane() > 0 {
+        let rem = samples % 64;
+        let tail = if rem == 0 { u64::MAX } else { (1u64 << rem) - 1 };
+        for p in 0..wide.planes() {
+            assert_eq!(
+                wide.plane(p)[wide.words_per_plane() - 1] & !tail,
+                0,
+                "tail bits set on plane {p} at samples={samples}"
+            );
+        }
+    }
+}
+
+/// Chunk-boundary sweep on random *untrained* synthesized skip manifests
+/// (fast; covers the structural space broadly).
+#[test]
+fn prop_wide_equals_64_and_scalar_on_synthesized_netlists() {
+    forall("wide-vs-64-vs-scalar", 0x61, 8, |rng: &mut Rng| {
+        let man = random_topology(rng);
+        let (_, _, netlist) = synthesized(&man, rng.next_u64(), false);
+        let plan = netlist.compile_plan();
+        let mut scratch = SimScratch::default();
+        let samples = [1usize, 63, 64, 65, 255, 256, 257, 300][rng.below(8)];
+        check_all_paths(&netlist, &plan, &mut scratch, samples);
+    });
+}
+
+/// Full edge-case sweep (every boundary size incl. 256 multiples and the
+/// empty batch) on one trained skip topology — trained weights give
+/// non-degenerate truth tables, exercising the non-constant chunk kernels.
+#[test]
+fn trained_skip_manifest_edge_case_sweep() {
+    let man = Manifest::synthetic_topology("sim_wide_train", "jets", 16, 5, &[12, 6], 3, 2, 1);
+    let (_, _, netlist) = synthesized(&man, 0x7ea1, true);
+    let plan = netlist.compile_plan();
+    let mut scratch = SimScratch::default();
+    for samples in [1usize, 2, 63, 64, 65, 127, 128, 255, 256, 257, 300, 511, 512, 513, 1000] {
+        check_all_paths(&netlist, &plan, &mut scratch, samples);
+    }
+    // Empty batch through both paths.
+    let empty = BitMatrix::new(netlist.num_inputs, 0);
+    assert_eq!(eval_plan(&plan, &empty, &mut scratch).samples(), 0);
+    assert_eq!(eval_netlist_64(&netlist, &empty).samples(), 0);
+}
+
+/// Trained pyramid topologies (skips >= 1, tapering widths): property-test
+/// the three evaluation tiers plus the convenience `eval_netlist` wrapper.
+#[test]
+fn prop_trained_pyramid_wide_equivalence() {
+    forall("trained-pyramid-wide", 0x62, 4, |rng: &mut Rng| {
+        let man = random_topology(rng);
+        let (_, _, netlist) = synthesized(&man, rng.next_u64(), true);
+        let plan = netlist.compile_plan();
+        let mut scratch = SimScratch::default();
+        let samples = [1usize, 65, 256, 300][rng.below(4)];
+        check_all_paths(&netlist, &plan, &mut scratch, samples);
+        // The wrapper (compile-on-the-fly) must agree with the reused-plan
+        // path bit for bit.
+        let (inputs, _) = random_inputs(&netlist, samples, 0xfeed);
+        assert_eq!(
+            eval_netlist(&netlist, &inputs),
+            eval_plan(&plan, &inputs, &mut scratch),
+            "wrapper != reused plan"
+        );
+    });
+}
+
+/// Empty-output netlists through the wide path at chunk-straddling sizes.
+#[test]
+fn empty_output_netlist_wide_path() {
+    let man = Manifest::synthetic_topology("sim_wide_noout", "jets", 16, 5, &[8], 3, 2, 0);
+    let (_, _, mut netlist) = synthesized(&man, 5, false);
+    netlist.outputs.clear();
+    let plan = netlist.compile_plan();
+    let mut scratch = SimScratch::default();
+    for samples in [1usize, 256, 300] {
+        let (inputs, _) = random_inputs(&netlist, samples, 3);
+        let out = eval_plan(&plan, &inputs, &mut scratch);
+        assert_eq!((out.planes(), out.samples()), (0, samples));
+    }
+}
+
+/// Fused serving pass ≡ unfused oracle ≡ LutEngine on trained skip
+/// manifests, across chunk-boundary batch sizes.
+#[test]
+fn fused_engine_matches_unfused_and_lut_on_trained_skip_manifest() {
+    let man = Manifest::synthetic_topology("sim_wide_fused", "jets", 16, 5, &[16, 8], 3, 2, 1);
+    let mut st = ModelState::init(&man, 0xbeef, PruneMethod::APriori);
+    let ds = logicnets::hep::jets(300, 0xbeef);
+    let mut opts = TrainOpts::from_manifest(&man);
+    opts.steps = 6;
+    opts.seed = 0xbeef;
+    native::train_native(&man, &mut st, &ds, &opts).unwrap();
+    let ex = ExportedModel::from_state(&man, &st);
+    let tables = ModelTables::generate(&ex).unwrap();
+    let lut = LutEngine::build(&ex, &tables).unwrap();
+    let net = NetlistEngine::build(&ex, &tables).unwrap();
+    let mut rng = Rng::new(0x99);
+    for n in [1usize, 63, 64, 65, 255, 256, 257, 600] {
+        let xs: Vec<f32> = (0..16 * n).map(|_| rng.f32()).collect();
+        let expect = lut.infer_batch(&xs);
+        assert_eq!(net.infer_batch(&xs), expect, "fused != tables at n={n}");
+        assert_eq!(net.infer_batch_unfused(&xs), expect, "unfused != tables at n={n}");
+    }
+    // Real-data batch (the full jets slice) for good measure.
+    assert_eq!(net.infer_batch(&ds.x), lut.infer_batch(&ds.x));
+}

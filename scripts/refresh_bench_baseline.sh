@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Re-measure the perf baseline (BENCH_baseline.json) on the current machine.
+#
+# Runs both bench targets in full (non-quick) mode with no gate active,
+# then merges their scenario lists into BENCH_baseline.json at the repo
+# root.  Run on a quiet machine: the CI gate fails any scenario whose
+# throughput drops more than BENCH_MAX_REGRESS (default 20%) below these
+# numbers.  Commit the refreshed file together with the change that
+# shifted the numbers.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="$(mktemp -d)"
+trap 'rm -rf "$out"' EXIT
+
+(cd rust && BENCH_OUT="$out" cargo bench --bench bench_sim)
+(cd rust && BENCH_OUT="$out" cargo bench --bench bench_serve)
+
+python3 - "$out" > BENCH_baseline.json <<'PY'
+import json, sys, glob, datetime
+scenarios = []
+for path in sorted(glob.glob(sys.argv[1] + "/BENCH_*.json")):
+    with open(path) as f:
+        scenarios.extend(json.load(f)["scenarios"])
+print(json.dumps({
+    "bench": "baseline",
+    "note": "Measured baseline (full mode) recorded by scripts/refresh_bench_baseline.sh on "
+            + datetime.date.today().isoformat() + ".",
+    "scenarios": scenarios,
+}, indent=2))
+PY
+echo "wrote BENCH_baseline.json ($(python3 -c 'import json;print(len(json.load(open("BENCH_baseline.json"))["scenarios"]))') scenarios)"
