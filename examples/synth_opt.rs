@@ -10,7 +10,7 @@
 use logicnets::luts::ModelTables;
 use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
 use logicnets::serve::{batch_accuracy, LutEngine, NetlistEngine};
-use logicnets::synth::{synthesize, verify_netlist, OptLevel, SynthOpts};
+use logicnets::synth::{lint_netlist, synthesize, verify_netlist, LintOptions, OptLevel, SynthOpts};
 use logicnets::util::rng::Rng;
 
 /// The bundled example model: jet-trigger shaped (16 features, 5-class
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let tables = ModelTables::generate(&model)?;
     let base = SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() };
 
-    let (_, plain) = synthesize(&model, &tables, base)?;
+    let (plain_netlist, plain) = synthesize(&model, &tables, base)?;
     let t0 = std::time::Instant::now();
     let (netlist, opt) =
         synthesize(&model, &tables, SynthOpts { opt: OptLevel::Full, ..base })?;
@@ -80,7 +80,17 @@ fn main() -> anyhow::Result<()> {
     let mism = verify_netlist(&model, &tables, &netlist, 4096, 0xE6)?;
     anyhow::ensure!(mism == 0, "{mism} mismatches vs the truth-table forward pass");
 
-    // Gate 3: serving the optimized circuit is bit-identical to the table
+    // Gate 3: design-rule lint (deny-warn semantics) on both circuits —
+    // unoptimized judged at None (dead LUTs are legal pre-opt), optimized
+    // judged at Full, where any surviving finding means a pass regressed.
+    for (label, nl, at) in
+        [("unoptimized", &plain_netlist, OptLevel::None), ("optimized", &netlist, OptLevel::Full)]
+    {
+        let report = lint_netlist(nl, &LintOptions { opt: at });
+        anyhow::ensure!(report.is_clean(), "{label} netlist fails lint:\n{}", report.render());
+    }
+
+    // Gate 4: serving the optimized circuit is bit-identical to the table
     // engine on a realistic workload.
     let ds = logicnets::hep::jets(4096, 0xE6);
     let lut = LutEngine::build(&model, &tables)?;

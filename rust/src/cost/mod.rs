@@ -149,7 +149,7 @@ pub fn conv_pw_cost(out_pix: usize, o_bits: usize, n_ofm: usize, fanin_pw: usize
 // Whole-model cost breakdown
 // ---------------------------------------------------------------------------
 
-/// Cost description of one layer for [`model_cost`].
+/// Cost description of one layer for [`mlp_cost`] / [`manifest_cost`].
 #[derive(Debug, Clone)]
 pub struct LayerCost {
     pub name: String,

@@ -1226,6 +1226,17 @@ fn emit_model(
     let (netlist, srep) = synthesize(&ex, &tables, serve_opts)?;
     let mism = verify_netlist(&ex, &tables, &netlist, 2048, opts.seed)?;
     ensure!(mism == 0, "{mism} netlist/table mismatches on {}", entry.name);
+    // Structural complement to the functional check above: an emitted
+    // frontier artifact is `Full`-optimized, so any finding at all
+    // (deny-warn) means the pipeline shipped redundancy or bad metadata.
+    let lint_report =
+        crate::synth::lint_netlist(&netlist, &crate::synth::LintOptions { opt: OptLevel::Full });
+    ensure!(
+        lint_report.is_clean(),
+        "frontier model {} fails design-rule lint:\n{}",
+        entry.name,
+        lint_report.render()
+    );
     let engine = NetlistEngine::from_netlist(&ex, &tables, netlist)?;
     let acc = batch_accuracy(&engine, &task.test.x, &task.test.y);
     println!(

@@ -6,6 +6,7 @@
 //! logicnets table   <id>|all   [--full] [--retrain]     regenerate a paper table
 //! logicnets figure  <id>|all   [--full] [--retrain]     regenerate a paper figure
 //! logicnets synth   --model NAME [--no-registers] [--clock NS]
+//! logicnets lint    --model NAME | --zoo PATH [--json] [--deny-warn]
 //! logicnets verilog --model NAME --out DIR
 //! logicnets verify  --model NAME [--samples N]   tables vs arithmetic mirror
 //! logicnets serve   --model NAME [--requests N] [--workers W]
@@ -57,6 +58,7 @@ fn main() -> Result<()> {
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "synth" => cmd_synth(&args),
+        "lint" => cmd_lint(&args),
         "verilog" => cmd_verilog(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
@@ -80,6 +82,9 @@ fn print_help() {
     println!("  figure  <id>|all  [--full] [--retrain] regenerate a paper figure");
     println!("  synth   --model NAME [--no-registers] [--clock NS] [--bram-min-bits B] [--score]");
     println!("          [--opt [none|structural|full]]   netlist optimization pipeline");
+    println!("  lint    --model NAME [--opt L] [--bram-min-bits B] [--json] [--deny-warn]");
+    println!("  lint    --zoo reports/dse/zoo.json [--json] [--deny-warn]");
+    println!("          netlist design-rule checker (structural static analysis)");
     println!("  verilog --model NAME [--out DIR] [--no-registers] [--opt]");
     println!("  verify  --model NAME [--samples N]");
     println!("  serve   --model NAME [--requests N] [--workers W] [--backend tables|netlist]");
@@ -232,6 +237,87 @@ fn cmd_synth(args: &Args) -> Result<()> {
             }
             Err(e) => println!("  netlist scoring unavailable: {e}"),
         }
+    }
+    Ok(())
+}
+
+/// `lint` — run the netlist design-rule checker (`synth::lint`) over a
+/// freshly synthesized model netlist or over every circuit a zoo manifest
+/// would serve.  Exits non-zero on any Error finding, and on Warn findings
+/// under `--deny-warn`.  Note the producers already gate on Errors, so a
+/// synthesizable model reports at most warnings here; `--zoo` circuits are
+/// `Full`-optimized and expected to be completely clean.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use logicnets::synth::{lint_netlist, LintOptions, Netlist};
+    use logicnets::util::json::Json;
+    let as_json = args.has_flag("json");
+    let deny_warn = args.has_flag("deny-warn");
+    // (label, effective opt level, netlist) per circuit to check.
+    let mut circuits: Vec<(String, OptLevel, Netlist)> = Vec::new();
+    if let Some(zoo) = args.get("zoo") {
+        use logicnets::serve::zoo::{rebuild_netlist, ZooManifest};
+        let zoo_path = std::path::Path::new(zoo);
+        let manifest = ZooManifest::load(zoo_path)?;
+        let dir = zoo_path
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .unwrap_or(std::path::Path::new("."));
+        for e in &manifest.entries {
+            let (_, _, netlist) = rebuild_netlist(e, dir)?;
+            circuits.push((e.name.clone(), OptLevel::Full, netlist));
+        }
+    } else {
+        let name = args.get("model").context("--model (or --zoo) required")?.to_string();
+        let mut ctx = ctx_from(args)?;
+        let tr = ctx.trained(&name, parse_method(args.get_or("method", "a-priori"))?)?;
+        let ex = tr.export();
+        let tables = ModelTables::generate(&ex)?;
+        let opts = SynthOpts {
+            registers: !args.has_flag("no-registers"),
+            clock_ns: args.get_f64("clock", 5.0),
+            bram_min_bits: args.get_usize("bram-min-bits", 13),
+            opt: parse_opt(args)?,
+        };
+        let (netlist, _) = synthesize(&ex, &tables, opts)?;
+        // BRAM-carrying netlists skip the opt pipeline, so redundancy
+        // rules judge them at `None` (mirrors the gate in `synthesize`).
+        let eff = if opts.opt.structural() && netlist.brams.is_empty() {
+            opts.opt
+        } else {
+            OptLevel::None
+        };
+        circuits.push((name, eff, netlist));
+    }
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    let mut results = Vec::new();
+    for (label, opt, netlist) in &circuits {
+        let report = lint_netlist(netlist, &LintOptions { opt: *opt });
+        errors += report.errors();
+        warnings += report.warnings();
+        if as_json {
+            results.push(Json::obj(vec![
+                ("model", Json::str(label)),
+                ("opt", Json::str(opt.name())),
+                ("lint", report.to_json()),
+            ]));
+        } else {
+            println!(
+                "lint {label} ({} LUTs, {} BRAM, opt {}):",
+                netlist.num_luts(),
+                netlist.num_brams(),
+                opt.name()
+            );
+            for line in report.render().lines() {
+                println!("  {line}");
+            }
+        }
+    }
+    if as_json {
+        println!("{}", Json::Arr(results).to_string());
+    }
+    anyhow::ensure!(errors == 0, "lint: {errors} Error-severity finding(s)");
+    if deny_warn {
+        anyhow::ensure!(warnings == 0, "lint: {warnings} Warn-severity finding(s) (--deny-warn)");
     }
     Ok(())
 }

@@ -375,7 +375,7 @@ impl NetlistEngine {
     /// Build from an already-synthesized netlist.  The table-mapped layers
     /// must form a contiguous prefix starting at layer 0 (so the netlist's
     /// input bus is the model input bus); every later layer stays
-    /// arithmetic via [`DenseStage`].
+    /// arithmetic via the internal `DenseStage`.
     pub fn from_netlist(
         model: &ExportedModel,
         tables: &ModelTables,
@@ -556,7 +556,7 @@ impl NetlistEngine {
 
     /// Batch classify through the fused wide path: quantize into reused
     /// input planes, then chunk-aligned sample ranges across the worker
-    /// pool, each running [`Self::fused_range`].  Router-sized batches (one
+    /// pool, each running `fused_range`.  Router-sized batches (one
     /// range) run inline — no thread spawn; all buffers come from the
     /// engine's scratch pool, so steady-state serving allocates only the
     /// returned prediction vector.

@@ -21,7 +21,9 @@ use crate::nn::ExportedModel;
 use crate::runtime::Manifest;
 use crate::serve::engine::{Backend, NetlistEngine};
 use crate::serve::router::{percentile, ModelMeta, ServerConfig, ZooServer};
-use crate::synth::{synthesize, verify_netlist, OptLevel, SynthOpts};
+use crate::synth::{
+    lint_netlist, synthesize, verify_netlist, LintOptions, Netlist, OptLevel, SynthOpts,
+};
 use crate::train::checkpoint;
 use crate::util::json::Json;
 use anyhow::{ensure, Context, Result};
@@ -219,11 +221,15 @@ impl ZooManifest {
     }
 }
 
-/// Rebuild the servable engine for one zoo entry: checkpoint → export →
-/// truth tables → `synthesize` (`OptLevel::Full`, BRAM-free) →
-/// machine-verify → [`NetlistEngine`].  `zoo_dir` is the directory the
-/// manifest lives in (checkpoint paths are relative to it).
-pub fn build_engine(entry: &ZooEntry, zoo_dir: &Path) -> Result<NetlistEngine> {
+/// Rebuild one zoo entry's circuit: checkpoint → export → truth tables →
+/// `synthesize` (`OptLevel::Full`, BRAM-free).  `zoo_dir` is the directory
+/// the manifest lives in (checkpoint paths are relative to it).  Split out
+/// of [`build_engine`] so diagnostics (the `lint` CLI) can inspect the
+/// exact netlist serving would load without constructing an engine.
+pub fn rebuild_netlist(
+    entry: &ZooEntry,
+    zoo_dir: &Path,
+) -> Result<(ExportedModel, ModelTables, Netlist)> {
     let man = Manifest::synthetic_topology(
         &entry.name,
         &entry.dataset,
@@ -249,8 +255,24 @@ pub fn build_engine(entry: &ZooEntry, zoo_dir: &Path) -> Result<NetlistEngine> {
         &tables,
         SynthOpts { registers: false, bram_min_bits: 0, opt: OptLevel::Full, ..SynthOpts::default() },
     )?;
+    Ok((ex, tables, netlist))
+}
+
+/// Rebuild the servable engine for one zoo entry: [`rebuild_netlist`] →
+/// machine-verify (functional) → design-rule lint (structural, deny-warn:
+/// a `Full`-optimized serving netlist must be completely clean) →
+/// [`NetlistEngine`].
+pub fn build_engine(entry: &ZooEntry, zoo_dir: &Path) -> Result<NetlistEngine> {
+    let (ex, tables, netlist) = rebuild_netlist(entry, zoo_dir)?;
     let mism = verify_netlist(&ex, &tables, &netlist, 1024, 0x500)?;
     ensure!(mism == 0, "zoo model {}: {mism} netlist/table mismatches", entry.name);
+    let report = lint_netlist(&netlist, &LintOptions { opt: OptLevel::Full });
+    ensure!(
+        report.is_clean(),
+        "zoo model {}: serving netlist fails design-rule lint:\n{}",
+        entry.name,
+        report.render()
+    );
     NetlistEngine::from_netlist(&ex, &tables, netlist)
 }
 

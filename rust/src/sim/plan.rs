@@ -41,21 +41,31 @@ pub struct EvalPlan {
 }
 
 impl EvalPlan {
-    /// Compile a netlist into the arena schedule.  Panics if the node list
-    /// is not topologically ordered (every constructor in `synth` keeps it
-    /// so).  BRAM ports are rejected at evaluation time, as before.
+    /// Compile a netlist into the arena schedule.  The structural
+    /// preconditions (topological node order, in-range references, K<=6
+    /// fan-in) are checked via `synth::lint::evaluability_errors` — the
+    /// same rule set every `synthesize`/`opt` gate enforces — so a violation
+    /// panics here with the full finding list instead of an ad-hoc assert.
+    /// BRAM ports are rejected at evaluation time, as before.
     pub fn compile(netlist: &Netlist) -> EvalPlan {
         assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+        let errs = crate::synth::lint::evaluability_errors(netlist);
+        assert!(
+            errs.is_empty(),
+            "netlist is not evaluable; design-rule findings:\n{}",
+            crate::synth::lint::LintReport { findings: errs }.render()
+        );
         let nn = netlist.nodes.len();
         let base = (2 + netlist.num_inputs) as u32;
-        // Levels recomputed from the wiring; also validates topo order.
+        // Levels recomputed from the wiring (stored `LutNode::level` fields
+        // may be stale); topo order was validated above.
         let mut level = vec![0u32; nn];
         let mut max_level = 0u32;
         for (i, node) in netlist.nodes.iter().enumerate() {
             let mut lv = 1u32;
             for &inp in &node.inputs {
                 if let Net::Node(j) = inp {
-                    assert!((j as usize) < i, "node {i} not in topological order");
+                    debug_assert!((j as usize) < i);
                     lv = lv.max(level[j as usize] + 1);
                 }
             }
@@ -335,6 +345,14 @@ mod tests {
                 assert_eq!(out.plane(p)[out.words_per_plane() - 1] & !tail, 0, "plane {p}");
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "not evaluable")]
+    fn compile_rejects_forward_references() {
+        let mut nl = and_or_netlist();
+        nl.nodes[0].inputs[0] = Net::Node(1);
+        let _ = EvalPlan::compile(&nl);
     }
 
     #[test]

@@ -1,0 +1,695 @@
+//! Netlist design-rule checker: structural static analysis over mapped
+//! [`Netlist`]s (DESIGN.md §12).
+//!
+//! The functional safety net (`verify_netlist`, `netlists_equivalent`)
+//! samples behavior; it cannot see structural rot that happens to evaluate
+//! correctly today — stale `LutNode::level` annotations, truth-table bits
+//! above `2^k`, degenerate LUTs inflating the counts the DSE and zoo
+//! router price against, or forward references that the scalar evaluator
+//! used to read as `false`.  This module is the complementary *structural*
+//! check: a fixed catalogue of machine-checked rules ([`RULES`]), each
+//! with a stable id and severity, producing a [`LintReport`] with a
+//! machine-readable JSON form.
+//!
+//! Severity policy:
+//! - **Error**: the netlist is not evaluable (dangling/forward references,
+//!   fan-in beyond the 6-LUT kernel) or not a shippable artifact
+//!   (no outputs, inconsistent BRAM accounting).  Every producer gates on
+//!   these: `synthesize`, each `synth/opt` pass (tests/debug builds),
+//!   `sim::plan::EvalPlan::compile`, zoo load, DSE frontier emit.
+//! - **Warn**: evaluable but structurally dirty — redundancy the optimizer
+//!   is expected to have removed, or metadata (levels, layer depths) that
+//!   misreports timing.  `OptLevel::Full` artifacts must be warning-free
+//!   (the zoo/DSE gates deny warnings); intermediate pass outputs may
+//!   legitimately carry them (CSE exposes duplicate fan-ins for Sweep).
+//! - **Info**: notable but not wrong (BRAM-mapped neurons make a netlist
+//!   non-simulable by design).
+//!
+//! Rules that need to *walk* node references (level recomputation,
+//! reachability) only run once the reference-validity rules passed, so
+//! [`lint_netlist`] never panics, even on maximally corrupt inputs.
+
+use super::boolfn::BoolFn;
+use super::netlist::Netlist;
+use super::opt::OptLevel;
+use crate::synth::netlist::Net;
+use crate::util::json::Json;
+
+/// Fan-in bound of the LUT kernel (`sim::lut_chunk` unpacks at most 6).
+pub const MAX_FANIN: usize = 6;
+
+/// Bits per BRAM block the synthesizer's spill heuristic assumes.
+pub const BRAM_BLOCK_BITS: u128 = 18 * 1024;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+
+    fn rank(self) -> u8 {
+        match self {
+            Severity::Info => 0,
+            Severity::Warn => 1,
+            Severity::Error => 2,
+        }
+    }
+}
+
+// Hand-written ordering (see `Net` in `netlist.rs`): the crate bans raw
+// `partial_cmp` call sites via clippy's disallowed-methods and derive
+// expansions are not exempt.
+impl Ord for Severity {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.rank().cmp(&other.rank())
+    }
+}
+
+impl PartialOrd for Severity {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One design rule: stable id, fixed severity, human description.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rule {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub desc: &'static str,
+}
+
+pub const INPUT_OUT_OF_RANGE: Rule = Rule {
+    id: "input-out-of-range",
+    severity: Severity::Error,
+    desc: "a Net::Input index is >= num_inputs",
+};
+pub const NODE_OUT_OF_RANGE: Rule = Rule {
+    id: "node-out-of-range",
+    severity: Severity::Error,
+    desc: "a Net::Node index is >= the node count",
+};
+pub const FORWARD_REFERENCE: Rule = Rule {
+    id: "forward-reference",
+    severity: Severity::Error,
+    desc: "node i reads Node(j) with j >= i (topological order violated)",
+};
+pub const FANIN_TOO_WIDE: Rule = Rule {
+    id: "fanin-too-wide",
+    severity: Severity::Error,
+    desc: "LUT fan-in exceeds the K=6 kernel bound",
+};
+pub const EMPTY_OUTPUTS: Rule = Rule {
+    id: "empty-outputs",
+    severity: Severity::Error,
+    desc: "netlist has live nodes but no outputs",
+};
+pub const BRAM_SHAPE: Rule = Rule {
+    id: "bram-shape",
+    severity: Severity::Error,
+    desc: "BRAM port bits are degenerate or blocks != ceil(2^in_bits * out_bits / 18Kb)",
+};
+pub const TT_GARBAGE: Rule = Rule {
+    id: "tt-garbage",
+    severity: Severity::Warn,
+    desc: "truth-table bits set at or above 2^k for a k-input LUT",
+};
+pub const STALE_LEVEL: Rule = Rule {
+    id: "stale-level",
+    severity: Severity::Warn,
+    desc: "stored LutNode::level disagrees with the level recomputed from the wiring",
+};
+pub const DUPLICATE_INPUT: Rule = Rule {
+    id: "duplicate-input",
+    severity: Severity::Warn,
+    desc: "one net appears twice in a LUT's fan-in",
+};
+pub const CONST_LUT: Rule = Rule {
+    id: "const-lut",
+    severity: Severity::Warn,
+    desc: "truth table is constant over its 2^k entries",
+};
+pub const WIRE_LUT: Rule = Rule {
+    id: "wire-lut",
+    severity: Severity::Warn,
+    desc: "1-input LUT is a positive passthrough of its fan-in net",
+};
+pub const VACUOUS_INPUT: Rule = Rule {
+    id: "vacuous-input",
+    severity: Severity::Warn,
+    desc: "truth table ignores at least one fan-in variable",
+};
+pub const LAYER_DEPTHS_UNDERSTATE: Rule = Rule {
+    id: "layer-depths-understate",
+    severity: Severity::Warn,
+    desc: "recomputed combinational depth exceeds the sum of layer_depths",
+};
+pub const DEAD_LUT: Rule = Rule {
+    id: "dead-lut",
+    severity: Severity::Warn,
+    desc: "node unreachable from every output survived a structural opt level",
+};
+pub const BRAM_PORTS: Rule = Rule {
+    id: "bram-ports",
+    severity: Severity::Info,
+    desc: "netlist carries BRAM-mapped neurons and is not simulator-evaluable",
+};
+
+/// The complete rule catalogue, in severity-then-pipeline order.
+pub const RULES: &[Rule] = &[
+    INPUT_OUT_OF_RANGE,
+    NODE_OUT_OF_RANGE,
+    FORWARD_REFERENCE,
+    FANIN_TOO_WIDE,
+    EMPTY_OUTPUTS,
+    BRAM_SHAPE,
+    TT_GARBAGE,
+    STALE_LEVEL,
+    DUPLICATE_INPUT,
+    CONST_LUT,
+    WIRE_LUT,
+    VACUOUS_INPUT,
+    LAYER_DEPTHS_UNDERSTATE,
+    DEAD_LUT,
+    BRAM_PORTS,
+];
+
+/// Where a finding points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Span {
+    Node(usize),
+    Output(usize),
+    Bram(usize),
+    Netlist,
+}
+
+impl Span {
+    fn render(&self) -> String {
+        match self {
+            Span::Node(i) => format!("node {i}"),
+            Span::Output(i) => format!("output {i}"),
+            Span::Bram(i) => format!("bram {i}"),
+            Span::Netlist => "netlist".to_string(),
+        }
+    }
+}
+
+/// One rule violation at one span.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    pub span: Span,
+    pub message: String,
+}
+
+/// Context the linter needs beyond the netlist itself: the opt level the
+/// producer claims to have applied.  Redundancy-elimination rules
+/// (currently [`DEAD_LUT`]) only fire when that level promises the
+/// redundancy is gone — unused cone outputs are legitimate at
+/// `OptLevel::None`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LintOptions {
+    pub opt: OptLevel,
+}
+
+impl LintOptions {
+    pub fn at(opt: OptLevel) -> LintOptions {
+        LintOptions { opt }
+    }
+}
+
+/// The analyzer's result: every finding, in node/output/bram scan order.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    fn count(&self, s: Severity) -> usize {
+        self.findings.iter().filter(|f| f.rule.severity == s).count()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    pub fn infos(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    /// No findings at any severity.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable form (`lint --json`).
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let (kind, idx) = match f.span {
+                    Span::Node(i) => ("node", Some(i)),
+                    Span::Output(i) => ("output", Some(i)),
+                    Span::Bram(i) => ("bram", Some(i)),
+                    Span::Netlist => ("netlist", None),
+                };
+                let mut pairs = vec![
+                    ("rule", Json::str(f.rule.id)),
+                    ("severity", Json::str(f.rule.severity.name())),
+                    ("span", Json::str(kind)),
+                    ("message", Json::str(&f.message)),
+                ];
+                if let Some(i) = idx {
+                    pairs.push(("index", Json::num(i as f64)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("errors", Json::num(self.errors() as f64)),
+            ("warnings", Json::num(self.warnings() as f64)),
+            ("infos", Json::num(self.infos() as f64)),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+
+    /// Human-readable multi-line form (gate failure messages, CLI).
+    pub fn render(&self) -> String {
+        if self.findings.is_empty() {
+            return "clean: no findings".to_string();
+        }
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!(
+                "{}[{}] {}: {}\n",
+                f.rule.severity.name(),
+                f.rule.id,
+                f.span.render(),
+                f.message
+            ));
+        }
+        s.push_str(&format!(
+            "{} error(s), {} warning(s), {} info(s)",
+            self.errors(),
+            self.warnings(),
+            self.infos()
+        ));
+        s
+    }
+}
+
+fn finding(rule: Rule, span: Span, message: String) -> Finding {
+    Finding { rule, span, message }
+}
+
+fn check_net(nl: &Netlist, net: Net, span: Span, self_idx: Option<usize>, out: &mut Vec<Finding>) {
+    match net {
+        Net::Const0 | Net::Const1 => {}
+        Net::Input(i) => {
+            if i as usize >= nl.num_inputs {
+                out.push(finding(
+                    INPUT_OUT_OF_RANGE,
+                    span,
+                    format!("reads Input({i}) but the netlist has {} inputs", nl.num_inputs),
+                ));
+            }
+        }
+        Net::Node(j) => {
+            if j as usize >= nl.nodes.len() {
+                out.push(finding(
+                    NODE_OUT_OF_RANGE,
+                    span,
+                    format!("reads Node({j}) but the netlist has {} nodes", nl.nodes.len()),
+                ));
+            } else if let Some(i) = self_idx {
+                if j as usize >= i {
+                    out.push(finding(
+                        FORWARD_REFERENCE,
+                        span,
+                        format!("node {i} reads Node({j}); topological order requires {j} < {i}"),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// The reference/shape rules a netlist must pass to be *evaluable* at all
+/// — exactly the preconditions `sim::plan::EvalPlan::compile` (and
+/// `Netlist::eval`) assume: in-range input and node references,
+/// topological node order, and fan-in within the LUT kernel.  A netlist
+/// can fail other Error rules (e.g. [`EMPTY_OUTPUTS`]) and still be
+/// evaluable, so the plan compiler gates on this subset, not on
+/// [`lint_netlist`].
+pub fn evaluability_errors(nl: &Netlist) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, node) in nl.nodes.iter().enumerate() {
+        if node.inputs.len() > MAX_FANIN {
+            out.push(finding(
+                FANIN_TOO_WIDE,
+                Span::Node(i),
+                format!("{} fan-ins exceed the K={MAX_FANIN} LUT kernel", node.inputs.len()),
+            ));
+        }
+        for &inp in &node.inputs {
+            check_net(nl, inp, Span::Node(i), Some(i), &mut out);
+        }
+    }
+    for (o, &net) in nl.outputs.iter().enumerate() {
+        check_net(nl, net, Span::Output(o), None, &mut out);
+    }
+    out
+}
+
+/// Run the full rule catalogue.  Never panics: rules that must chase node
+/// references (level recomputation, reachability) are skipped when any
+/// reference-validity Error fired.
+pub fn lint_netlist(nl: &Netlist, opts: &LintOptions) -> LintReport {
+    let mut findings = evaluability_errors(nl);
+
+    // Per-node truth-table hygiene — pure tt/fan-in checks, safe on any
+    // input.
+    for (i, node) in nl.nodes.iter().enumerate() {
+        let k = node.inputs.len();
+        if let Some(dup) = first_duplicate(&node.inputs) {
+            findings.push(finding(
+                DUPLICATE_INPUT,
+                Span::Node(i),
+                format!("fan-in positions {} and {} read the same net", dup.0, dup.1),
+            ));
+        }
+        if k > MAX_FANIN {
+            continue; // tt checks are meaningless past the kernel bound
+        }
+        let mask = if k == MAX_FANIN { u64::MAX } else { (1u64 << (1usize << k)) - 1 };
+        if node.tt & !mask != 0 {
+            findings.push(finding(
+                TT_GARBAGE,
+                Span::Node(i),
+                format!("tt {:#x} has bits set at or above 2^{k} entries", node.tt),
+            ));
+        }
+        let f = BoolFn::from_tt6(k, node.tt & mask);
+        if let Some(c) = f.is_const() {
+            findings.push(finding(
+                CONST_LUT,
+                Span::Node(i),
+                format!("truth table is constant {}", c as u8),
+            ));
+        } else if k == 1 && node.tt & mask == 0b10 {
+            findings.push(finding(
+                WIRE_LUT,
+                Span::Node(i),
+                "1-input LUT is a positive wire to its fan-in".to_string(),
+            ));
+        } else if f.support().len() < k {
+            findings.push(finding(
+                VACUOUS_INPUT,
+                Span::Node(i),
+                format!("truth table depends on only {} of {k} fan-ins", f.support().len()),
+            ));
+        }
+    }
+
+    if nl.outputs.is_empty() && !nl.nodes.is_empty() {
+        findings.push(finding(
+            EMPTY_OUTPUTS,
+            Span::Netlist,
+            format!("{} live nodes but no outputs", nl.nodes.len()),
+        ));
+    }
+
+    for (bi, b) in nl.brams.iter().enumerate() {
+        if b.in_bits == 0 || b.out_bits == 0 || b.in_bits >= 64 {
+            findings.push(finding(
+                BRAM_SHAPE,
+                Span::Bram(bi),
+                format!("degenerate port shape {}x{}", b.in_bits, b.out_bits),
+            ));
+        } else {
+            let bits = (1u128 << b.in_bits) * b.out_bits as u128;
+            let expect = bits.div_ceil(BRAM_BLOCK_BITS);
+            if b.blocks as u128 != expect {
+                findings.push(finding(
+                    BRAM_SHAPE,
+                    Span::Bram(bi),
+                    format!(
+                        "{} blocks recorded, {expect} required for a {}x{} port",
+                        b.blocks, b.in_bits, b.out_bits
+                    ),
+                ));
+            }
+        }
+    }
+    if !nl.brams.is_empty() {
+        findings.push(finding(
+            BRAM_PORTS,
+            Span::Netlist,
+            format!("{} BRAM-mapped neurons; logic simulation unavailable", nl.brams.len()),
+        ));
+    }
+
+    // Reference-chasing rules only run on reference-valid netlists.
+    if !findings.iter().any(|f| f.rule.severity == Severity::Error) {
+        let levels = nl.recomputed_levels();
+        for (i, node) in nl.nodes.iter().enumerate() {
+            if node.level != levels[i] {
+                findings.push(finding(
+                    STALE_LEVEL,
+                    Span::Node(i),
+                    format!("stored level {} but the wiring gives {}", node.level, levels[i]),
+                ));
+            }
+        }
+        let depth = nl
+            .outputs
+            .iter()
+            .map(|&o| match o {
+                Net::Node(j) => levels[j as usize],
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0);
+        let budget: u64 = nl.layer_depths.iter().map(|&d| d as u64).sum();
+        if depth as u64 > budget {
+            findings.push(finding(
+                LAYER_DEPTHS_UNDERSTATE,
+                Span::Netlist,
+                format!("recomputed depth {depth} exceeds sum(layer_depths) = {budget}"),
+            ));
+        }
+        if opts.opt.structural() {
+            let reach = super::opt::reachable(nl);
+            for (i, &r) in reach.iter().enumerate() {
+                if !r {
+                    findings.push(finding(
+                        DEAD_LUT,
+                        Span::Node(i),
+                        format!("unreachable from every output at opt level {}", opts.opt.name()),
+                    ));
+                }
+            }
+        }
+    }
+
+    LintReport { findings }
+}
+
+fn first_duplicate(inputs: &[Net]) -> Option<(usize, usize)> {
+    for (a, &na) in inputs.iter().enumerate() {
+        for (boff, &nb) in inputs[a + 1..].iter().enumerate() {
+            if na == nb {
+                return Some((a, a + 1 + boff));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::netlist::{BramNeuron, LutNode};
+
+    fn clean_netlist() -> Netlist {
+        // n0 = AND(in0, in1); n1 = OR(n0, in2); all metadata truthful.
+        Netlist {
+            num_inputs: 3,
+            nodes: vec![
+                LutNode { inputs: vec![Net::Input(0), Net::Input(1)], tt: 0b1000, level: 1 },
+                LutNode { inputs: vec![Net::Node(0), Net::Input(2)], tt: 0b1110, level: 2 },
+            ],
+            outputs: vec![Net::Node(1)],
+            brams: vec![],
+            layer_depths: vec![2],
+        }
+    }
+
+    fn ids(report: &LintReport) -> Vec<&'static str> {
+        report.findings.iter().map(|f| f.rule.id).collect()
+    }
+
+    #[test]
+    fn registry_is_consistent() {
+        assert_eq!(RULES.len(), 15);
+        for (i, r) in RULES.iter().enumerate() {
+            assert!(!r.id.is_empty() && !r.desc.is_empty(), "rule {i}");
+            assert!(r.id.chars().all(|c| c.is_ascii_lowercase() || c == '-'), "{}", r.id);
+            for other in &RULES[i + 1..] {
+                assert_ne!(r.id, other.id, "duplicate rule id");
+            }
+        }
+        assert!(Severity::Info < Severity::Warn && Severity::Warn < Severity::Error);
+    }
+
+    #[test]
+    fn clean_netlist_has_no_findings() {
+        for opt in [OptLevel::None, OptLevel::Structural, OptLevel::Full] {
+            let report = lint_netlist(&clean_netlist(), &LintOptions::at(opt));
+            assert!(report.is_clean(), "opt {}: {}", opt.name(), report.render());
+        }
+        assert!(evaluability_errors(&clean_netlist()).is_empty());
+    }
+
+    #[test]
+    fn reference_rules_fire() {
+        let mut nl = clean_netlist();
+        nl.nodes[0].inputs[0] = Net::Input(99);
+        nl.nodes[1].inputs[0] = Net::Node(1); // self-reference
+        nl.outputs.push(Net::Node(42));
+        let report = lint_netlist(&nl, &LintOptions::default());
+        let got = ids(&report);
+        assert!(got.contains(&"input-out-of-range"), "{got:?}");
+        assert!(got.contains(&"forward-reference"), "{got:?}");
+        assert!(got.contains(&"node-out-of-range"), "{got:?}");
+        // Same three findings are the evaluability preconditions.
+        assert_eq!(evaluability_errors(&nl).len(), 3);
+        // Reference-chasing rules must have been skipped, not panicked.
+        assert!(!got.contains(&"stale-level"));
+    }
+
+    #[test]
+    fn fanin_and_tt_rules_fire() {
+        let mut nl = clean_netlist();
+        nl.nodes[0].inputs = vec![Net::Input(0); 7];
+        let report = lint_netlist(&nl, &LintOptions::default());
+        let got = ids(&report);
+        assert!(got.contains(&"fanin-too-wide"), "{got:?}");
+        assert!(got.contains(&"duplicate-input"), "{got:?}");
+
+        let mut nl = clean_netlist();
+        nl.nodes[0].tt |= 1u64 << 4; // k=2 => entries end at bit 3
+        let report = lint_netlist(&nl, &LintOptions::default());
+        assert!(ids(&report).contains(&"tt-garbage"), "{}", report.render());
+        // Garbage bits are a Warn: the netlist still evaluates.
+        assert_eq!(report.errors(), 0);
+        assert!(evaluability_errors(&nl).is_empty());
+    }
+
+    #[test]
+    fn degenerate_lut_rules_fire() {
+        let mut nl = clean_netlist();
+        nl.nodes[1].tt = 0; // const 0
+        let report = lint_netlist(&nl, &LintOptions::default());
+        assert!(ids(&report).contains(&"const-lut"), "{}", report.render());
+
+        let mut nl = clean_netlist();
+        nl.nodes[1] = LutNode { inputs: vec![Net::Node(0)], tt: 0b10, level: 2 };
+        let report = lint_netlist(&nl, &LintOptions::default());
+        assert!(ids(&report).contains(&"wire-lut"), "{}", report.render());
+
+        let mut nl = clean_netlist();
+        nl.nodes[1].tt = 0b1010; // depends only on fan-in 0
+        let report = lint_netlist(&nl, &LintOptions::default());
+        assert!(ids(&report).contains(&"vacuous-input"), "{}", report.render());
+    }
+
+    #[test]
+    fn metadata_rules_fire() {
+        let mut nl = clean_netlist();
+        nl.nodes[0].level = 5;
+        let report = lint_netlist(&nl, &LintOptions::default());
+        assert!(ids(&report).contains(&"stale-level"), "{}", report.render());
+
+        let mut nl = clean_netlist();
+        nl.layer_depths = vec![1];
+        let report = lint_netlist(&nl, &LintOptions::default());
+        assert!(ids(&report).contains(&"layer-depths-understate"), "{}", report.render());
+
+        let mut nl = clean_netlist();
+        nl.outputs.clear();
+        let report = lint_netlist(&nl, &LintOptions::default());
+        assert!(ids(&report).contains(&"empty-outputs"), "{}", report.render());
+        assert_eq!(report.errors(), 1);
+        // ... but an empty-output netlist is still evaluable (sim tests
+        // rely on compiling one).
+        assert!(evaluability_errors(&nl).is_empty());
+    }
+
+    #[test]
+    fn dead_lut_gated_on_opt_level() {
+        let mut nl = clean_netlist();
+        nl.nodes.push(LutNode { inputs: vec![Net::Input(2)], tt: 0b01, level: 1 });
+        let relaxed = lint_netlist(&nl, &LintOptions::at(OptLevel::None));
+        assert!(!ids(&relaxed).contains(&"dead-lut"), "{}", relaxed.render());
+        for opt in [OptLevel::Structural, OptLevel::Full] {
+            let strict = lint_netlist(&nl, &LintOptions::at(opt));
+            assert!(ids(&strict).contains(&"dead-lut"), "{}", strict.render());
+        }
+    }
+
+    #[test]
+    fn bram_rules_fire() {
+        let mut nl = clean_netlist();
+        // 14x2 bits = 32768 bits = 2 blocks of 18Kb, not 1.
+        nl.brams.push(BramNeuron { in_bits: 14, out_bits: 2, blocks: 1 });
+        let report = lint_netlist(&nl, &LintOptions::default());
+        let got = ids(&report);
+        assert!(got.contains(&"bram-shape"), "{got:?}");
+        assert!(got.contains(&"bram-ports"), "{got:?}");
+        assert_eq!(report.infos(), 1);
+
+        let mut nl = clean_netlist();
+        nl.brams.push(BramNeuron { in_bits: 14, out_bits: 2, blocks: 2 });
+        let report = lint_netlist(&nl, &LintOptions::default());
+        assert!(!ids(&report).contains(&"bram-shape"), "{}", report.render());
+        assert_eq!(report.errors(), 0);
+        assert_eq!(report.infos(), 1);
+    }
+
+    #[test]
+    fn json_emit_round_trips() {
+        let mut nl = clean_netlist();
+        nl.nodes[0].level = 9;
+        nl.outputs.push(Net::Node(42));
+        let report = lint_netlist(&nl, &LintOptions::default());
+        let text = report.to_json().to_string();
+        let parsed = Json::parse(&text).expect("lint JSON must parse");
+        assert_eq!(parsed.req_usize("errors").unwrap(), report.errors());
+        assert_eq!(parsed.req_usize("warnings").unwrap(), report.warnings());
+        let arr = parsed.req("findings").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), report.findings.len());
+        for (j, f) in arr.iter().zip(&report.findings) {
+            assert_eq!(j.req_str("rule").unwrap(), f.rule.id);
+            assert_eq!(j.req_str("severity").unwrap(), f.rule.severity.name());
+        }
+        // Render names every finding and the summary line.
+        let rendered = report.render();
+        assert!(rendered.contains("node-out-of-range") && rendered.contains("error(s)"));
+    }
+}

@@ -13,6 +13,7 @@
 pub mod boolfn;
 pub mod complexity;
 pub mod cover;
+pub mod lint;
 pub mod mapper;
 pub mod netlist;
 pub mod opt;
@@ -21,6 +22,7 @@ use crate::luts::ModelTables;
 use crate::nn::ExportedModel;
 use anyhow::{ensure, Result};
 pub use boolfn::BoolFn;
+pub use lint::{lint_netlist, LintOptions, LintReport};
 pub use mapper::Mapper;
 pub use netlist::{BramNeuron, LutNode, Net, Netlist, period_for_depth};
 pub use opt::OptLevel;
@@ -321,6 +323,26 @@ pub fn synthesize(
         };
         (pre_netlist, stats)
     };
+
+    // Structural design-rule gate: no synthesized netlist ships with an
+    // Error-severity finding (dangling/forward references, wide fan-in,
+    // missing outputs, inconsistent BRAM accounting).  The effective opt
+    // level tells lint whether redundancy rules like dead-LUT apply —
+    // BRAM-carrying netlists skip the pipeline above, so they are judged
+    // at `None` regardless of what the caller asked for.
+    let lint_opts = lint::LintOptions {
+        opt: if opts.opt.structural() && netlist.brams.is_empty() {
+            opts.opt
+        } else {
+            OptLevel::None
+        },
+    };
+    let lint_report = lint::lint_netlist(&netlist, &lint_opts);
+    ensure!(
+        lint_report.errors() == 0,
+        "synthesized netlist fails structural design rules:\n{}",
+        lint_report.render()
+    );
 
     // Per-layer depths are measured during mapping; optimization can only
     // shorten cones, so for registered timing they are a (tight in

@@ -3,12 +3,41 @@
 //! are tracked separately (the paper observed Vivado spilling wide-fan-in
 //! neurons into BRAMs, §5.4).
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Net {
     Const0,
     Const1,
     Input(u32),
     Node(u32),
+}
+
+// Hand-written ordering with the exact semantics the derive produced
+// (variant order, then index) — the mapper's `canonical_order` sorts
+// fan-in nets with it, so changing it would renumber every emitted
+// netlist.  Written out because clippy's disallowed-methods bans raw
+// `partial_cmp` call sites crate-wide and derive expansions are not
+// exempt.
+impl Ord for Net {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        fn rank(n: &Net) -> u8 {
+            match n {
+                Net::Const0 => 0,
+                Net::Const1 => 1,
+                Net::Input(_) => 2,
+                Net::Node(_) => 3,
+            }
+        }
+        match (self, other) {
+            (Net::Input(a), Net::Input(b)) | (Net::Node(a), Net::Node(b)) => a.cmp(b),
+            _ => rank(self).cmp(&rank(other)),
+        }
+    }
+}
+
+impl PartialOrd for Net {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
 }
 
 impl Net {
@@ -48,8 +77,10 @@ pub struct Netlist {
     pub nodes: Vec<LutNode>,
     pub outputs: Vec<Net>,
     pub brams: Vec<BramNeuron>,
-    /// Output nets grouped per layer (for registered-timing analysis);
-    /// `layer_bounds[i]` = node count when layer i finished mapping.
+    /// Per-layer combinational depth (for registered-timing analysis):
+    /// `layer_depths[i]` = LUT levels layer i added while mapping, so the
+    /// total [`Self::depth`] never exceeds their sum (`synth::lint`
+    /// enforces this).
     pub layer_depths: Vec<u32>,
 }
 
@@ -62,10 +93,44 @@ impl Netlist {
         self.brams.iter().map(|b| b.blocks).sum()
     }
 
+    /// Stored logic level of a net.  Out-of-range `Node` ids report level
+    /// 0 instead of panicking — `synth::lint` flags them as structural
+    /// errors, and depth queries must stay usable on netlists being
+    /// diagnosed.
     pub fn level_of(&self, net: Net) -> u32 {
         match net {
-            Net::Node(i) => self.nodes[i as usize].level,
+            Net::Node(i) => self.nodes.get(i as usize).map_or(0, |n| n.level),
             _ => 0,
+        }
+    }
+
+    /// Node levels recomputed from the wiring alone (1 + max level over
+    /// `Node` fan-ins, ignoring any fan-in that is not a valid backward
+    /// reference) — the ground truth the stored `LutNode::level` fields
+    /// are checked against.
+    pub fn recomputed_levels(&self) -> Vec<u32> {
+        let mut levels = vec![0u32; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            let mut lv = 1u32;
+            for &inp in &node.inputs {
+                if let Net::Node(j) = inp {
+                    if (j as usize) < i {
+                        lv = lv.max(levels[j as usize] + 1);
+                    }
+                }
+            }
+            levels[i] = lv;
+        }
+        levels
+    }
+
+    /// Overwrite every stored `LutNode::level` with its recomputed value,
+    /// so [`Self::depth`] and `period_for_depth` report the real wiring.
+    /// `synth::opt::optimize` calls this after its fixed point.
+    pub fn relevel(&mut self) {
+        let levels = self.recomputed_levels();
+        for (node, lv) in self.nodes.iter_mut().zip(levels) {
+            node.level = lv;
         }
     }
 
@@ -90,25 +155,42 @@ impl Netlist {
     /// property tests.
     pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
         assert_eq!(inputs.len(), self.num_inputs);
-        let mut values = vec![false; self.nodes.len()];
-        let get = |values: &Vec<bool>, net: Net| -> bool {
+        // A structurally invalid reference is a hard error, never a silent
+        // `false`: a forward `Node` reference used to read the not-yet-
+        // computed default and corrupt results without failing.  The same
+        // rules are statically checkable via `lint::evaluability_errors`.
+        let get = |values: &[bool], net: Net, site: usize| -> bool {
             match net {
                 Net::Const0 => false,
                 Net::Const1 => true,
-                Net::Input(i) => inputs[i as usize],
-                Net::Node(i) => values[i as usize],
+                Net::Input(i) => {
+                    assert!(
+                        (i as usize) < self.num_inputs,
+                        "net at node/output {site} reads out-of-range Input({i})"
+                    );
+                    inputs[i as usize]
+                }
+                Net::Node(i) => {
+                    assert!(
+                        (i as usize) < values.len(),
+                        "net at node/output {site} reads Node({i}) before it is computed \
+                         (forward or out-of-range reference)"
+                    );
+                    values[i as usize]
+                }
             }
         };
+        let mut values = Vec::with_capacity(self.nodes.len());
         for (i, node) in self.nodes.iter().enumerate() {
             let mut idx = 0usize;
             for (j, &inp) in node.inputs.iter().enumerate() {
-                if get(&values, inp) {
+                if get(&values, inp, i) {
                     idx |= 1 << j;
                 }
             }
-            values[i] = (node.tt >> idx) & 1 == 1;
+            values.push((node.tt >> idx) & 1 == 1);
         }
-        self.outputs.iter().map(|&o| get(&values, o)).collect()
+        self.outputs.iter().enumerate().map(|(o, &net)| get(&values, net, o)).collect()
     }
 }
 
@@ -150,5 +232,75 @@ mod tests {
     fn period_grows_with_depth() {
         assert!(period_for_depth(1) < period_for_depth(3));
         assert!((period_for_depth(1) - 0.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_ordering_matches_the_old_derive() {
+        let mut v = vec![
+            Net::Node(1),
+            Net::Input(7),
+            Net::Const1,
+            Net::Node(0),
+            Net::Input(0),
+            Net::Const0,
+        ];
+        v.sort();
+        assert_eq!(
+            v,
+            vec![
+                Net::Const0,
+                Net::Const1,
+                Net::Input(0),
+                Net::Input(7),
+                Net::Node(0),
+                Net::Node(1),
+            ]
+        );
+        assert!(Net::Input(u32::MAX) < Net::Node(0), "variant order beats index");
+    }
+
+    #[test]
+    fn level_of_tolerates_out_of_range_nodes() {
+        let netlist = Netlist { num_inputs: 1, ..Netlist::default() };
+        assert_eq!(netlist.level_of(Net::Node(12345)), 0);
+        assert_eq!(netlist.level_of(Net::Input(99)), 0);
+        assert_eq!(netlist.depth(), 0);
+    }
+
+    #[test]
+    fn eval_rejects_forward_references() {
+        // n0 reads n1: silently false before, now a structural panic.
+        let netlist = Netlist {
+            num_inputs: 1,
+            nodes: vec![
+                LutNode { inputs: vec![Net::Node(1)], tt: 0b10, level: 1 },
+                LutNode { inputs: vec![Net::Input(0)], tt: 0b10, level: 1 },
+            ],
+            outputs: vec![Net::Node(0)],
+            brams: vec![],
+            layer_depths: vec![1],
+        };
+        let err = std::panic::catch_unwind(move || netlist.eval(&[true])).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("Node(1)"), "{msg}");
+    }
+
+    #[test]
+    fn relevel_restores_wiring_truth() {
+        let mut netlist = Netlist {
+            num_inputs: 2,
+            nodes: vec![
+                LutNode { inputs: vec![Net::Input(0), Net::Input(1)], tt: 0b1000, level: 9 },
+                LutNode { inputs: vec![Net::Node(0), Net::Input(1)], tt: 0b0110, level: 1 },
+            ],
+            outputs: vec![Net::Node(1)],
+            brams: vec![],
+            layer_depths: vec![2],
+        };
+        assert_eq!(netlist.recomputed_levels(), vec![1, 2]);
+        netlist.relevel();
+        assert_eq!(netlist.nodes[0].level, 1);
+        assert_eq!(netlist.nodes[1].level, 2);
+        assert_eq!(netlist.depth(), 2);
     }
 }

@@ -127,6 +127,11 @@ pub fn optimize(netlist: &Netlist, level: OptLevel) -> (Netlist, OptStats) {
             break;
         }
     }
+    // Pin post-opt levels to the wiring so `Netlist::depth` /
+    // `period_for_depth` report the optimized truth (the passes already
+    // recompute levels while rebuilding; this keeps that an invariant
+    // rather than an accident, and `lint`'s stale-level rule enforces it).
+    cur.relevel();
     stats.post_luts = cur.num_luts();
     (cur, stats)
 }
@@ -158,6 +163,22 @@ pub fn run_pass(nl: &Netlist, pass: Pass) -> Netlist {
         };
     }
     out.outputs = nl.outputs.iter().map(|&n| resolve(&map, n)).collect();
+    // Every pass output must be structurally evaluable; in tests and debug
+    // builds the full Error rule set gates here, so any future pass (e.g.
+    // a rewrite engine) inherits the design-rule check for free.  Warns
+    // are legal mid-pipeline: CSE exposes duplicate fan-ins that only the
+    // following Sweep folds.
+    #[cfg(any(test, debug_assertions))]
+    {
+        let report = super::lint::lint_netlist(&out, &super::lint::LintOptions::default());
+        assert_eq!(
+            report.errors(),
+            0,
+            "{:?} pass emitted a structurally invalid netlist:\n{}",
+            pass,
+            report.render()
+        );
+    }
     out
 }
 
@@ -168,8 +189,9 @@ fn resolve(map: &[Net], n: Net) -> Net {
     }
 }
 
-/// Nodes reachable from the output nets.
-fn reachable(nl: &Netlist) -> Vec<bool> {
+/// Nodes reachable from the output nets (also used by `lint`'s dead-LUT
+/// rule; requires in-range node references).
+pub(crate) fn reachable(nl: &Netlist) -> Vec<bool> {
     let mut reach = vec![false; nl.nodes.len()];
     let mut stack: Vec<usize> = nl
         .outputs

@@ -110,7 +110,10 @@ pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
 }
 
 fn summarize(name: &str, mut samples_ns: Vec<f64>) -> BenchResult {
-    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): elapsed-time samples are never
+    // NaN, but a timing summary must not be able to abort a bench run
+    // (clippy's disallowed-methods bans the panicking form crate-wide).
+    samples_ns.sort_by(f64::total_cmp);
     let n = samples_ns.len();
     let mean = samples_ns.iter().sum::<f64>() / n as f64;
     BenchResult {

@@ -1,0 +1,198 @@
+//! Mutation corpus for the netlist design-rule checker (ISSUE 7).
+//!
+//! Two directions, on real trained circuits (jets rect / skip-concat /
+//! pyramid topologies through the native trainer):
+//!
+//! 1. **Soundness of the clean path**: every shipped netlist — unoptimized,
+//!    `Structural`, `Full`, and each individual `synth/opt` pass output —
+//!    must produce zero findings (Errors for intermediates, zero findings
+//!    at any severity for final artifacts).
+//! 2. **Sensitivity**: seeding each corruption class into a trained
+//!    netlist must be flagged by exactly the rule built for it, at
+//!    Error/Warn severity — structural rot that sampling-based functional
+//!    verification can miss entirely.
+
+use logicnets::hep;
+use logicnets::luts::ModelTables;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::Manifest;
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::lint::{evaluability_errors, lint_netlist, LintOptions, LintReport};
+use logicnets::synth::opt::{optimize, run_pass, Pass};
+use logicnets::synth::{synthesize, BramNeuron, LutNode, Net, Netlist, OptLevel, SynthOpts};
+use logicnets::train::{native, ModelState, TrainOpts};
+
+/// Train one small jets-shaped topology and synthesize it at `opt`.
+/// fanin 2 × bw 2 keeps every LUT at k <= 4, so the truth-table rules
+/// (which need k < 6 headroom) always have a target.
+fn trained_netlist(name: &str, hidden: &[usize], skips: usize, opt: OptLevel) -> Netlist {
+    let man = Manifest::synthetic_topology(name, "jets", 16, 5, hidden, 2, 2, skips);
+    let seed = 0x11A7 ^ hidden.len() as u64 ^ (skips as u64) << 8;
+    let ds = hep::jets(300, seed);
+    let mut st = ModelState::init(&man, seed, PruneMethod::APriori);
+    let mut topts = TrainOpts::from_manifest(&man);
+    topts.steps = 4;
+    topts.seed = seed;
+    native::train_native(&man, &mut st, &ds, &topts).unwrap();
+    let ex = ExportedModel::from_state(&man, &st);
+    let tables = ModelTables::generate(&ex).unwrap();
+    let (netlist, _) = synthesize(
+        &ex,
+        &tables,
+        SynthOpts { registers: false, bram_min_bits: 0, opt, ..SynthOpts::default() },
+    )
+    .unwrap();
+    netlist
+}
+
+const TOPOLOGIES: &[(&str, &[usize], usize)] = &[
+    ("lint_rect", &[8, 6], 0),
+    ("lint_skip", &[8, 6], 1),
+    ("lint_pyramid", &[10, 5], 0),
+];
+
+fn has_rule(report: &LintReport, id: &str) -> bool {
+    report.findings.iter().any(|f| f.rule.id == id)
+}
+
+/// Every clean trained netlist, at every opt level, has zero findings at
+/// any severity — the deny-warn serving gates rely on exactly this.
+#[test]
+fn clean_trained_netlists_have_zero_findings() {
+    for &(name, hidden, skips) in TOPOLOGIES {
+        for opt in [OptLevel::None, OptLevel::Structural, OptLevel::Full] {
+            let nl = trained_netlist(name, hidden, skips, opt);
+            let report = lint_netlist(&nl, &LintOptions { opt });
+            assert!(
+                report.is_clean(),
+                "{name} at opt {} must be clean:\n{}",
+                opt.name(),
+                report.render()
+            );
+            assert!(evaluability_errors(&nl).is_empty(), "{name} at opt {}", opt.name());
+        }
+    }
+}
+
+/// Each individual optimizer pass output is Error-free (intermediates may
+/// carry Warns: CSE exposes duplicate fan-ins that Sweep folds), and the
+/// `Full` fixed point is completely clean even through one more round.
+#[test]
+fn per_pass_outputs_are_lint_clean() {
+    let plain = trained_netlist("lint_rect", &[8, 6], 0, OptLevel::None);
+    let a = run_pass(&plain, Pass::Cse);
+    let b = run_pass(&a, Pass::Sweep);
+    for (label, nl) in [("cse", &a), ("sweep", &b)] {
+        let report = lint_netlist(nl, &LintOptions::default());
+        assert_eq!(report.errors(), 0, "{label} pass:\n{}", report.render());
+    }
+    // At the fixed point the passes are identities, so their outputs must
+    // be warning-free too, judged at the strictest level.
+    let full = trained_netlist("lint_rect", &[8, 6], 0, OptLevel::Full);
+    for pass in [Pass::Cse, Pass::Sweep] {
+        let out = run_pass(&full, pass);
+        let report = lint_netlist(&out, &LintOptions { opt: OptLevel::Full });
+        assert!(report.is_clean(), "{pass:?} on fixed point:\n{}", report.render());
+    }
+}
+
+/// Seed every corruption class into a trained, fully-optimized netlist and
+/// assert the matching rule fires.  Functional sampling cannot see most of
+/// these (they evaluate correctly or only corrupt metadata).
+#[test]
+fn mutation_corpus_is_caught() {
+    let clean = trained_netlist("lint_rect", &[8, 6], 0, OptLevel::Full);
+    let strict = LintOptions { opt: OptLevel::Full };
+    let lint = |nl: &Netlist| lint_netlist(nl, &strict);
+
+    // Stale stored level (the PR 6 workaround class).
+    let mut nl = clean.clone();
+    nl.nodes[0].level += 3;
+    assert!(has_rule(&lint(&nl), "stale-level"), "{}", lint(&nl).render());
+
+    // Forward (here: self) reference — `eval` used to read silent false.
+    let mut nl = clean.clone();
+    nl.nodes[0].inputs[0] = Net::Node(0);
+    let report = lint(&nl);
+    assert!(has_rule(&report, "forward-reference"), "{}", report.render());
+    assert!(!evaluability_errors(&nl).is_empty());
+
+    // Dangling references, in a node and in an output.
+    let mut nl = clean.clone();
+    nl.nodes[0].inputs[0] = Net::Input(u32::MAX);
+    assert!(has_rule(&lint(&nl), "input-out-of-range"), "{}", lint(&nl).render());
+    let mut nl = clean.clone();
+    nl.outputs[0] = Net::Node(999_999);
+    assert!(has_rule(&lint(&nl), "node-out-of-range"), "{}", lint(&nl).render());
+
+    // Truth-table garbage above 2^k: invisible to evaluation (the packed
+    // index never reaches those bits) — structural analysis only.
+    let mut nl = clean.clone();
+    let k = nl.nodes[0].inputs.len();
+    assert!(k < 6, "fanin 2 x bw 2 keeps k <= 4");
+    nl.nodes[0].tt |= 1u64 << (1usize << k);
+    let report = lint(&nl);
+    assert!(has_rule(&report, "tt-garbage"), "{}", report.render());
+    assert_eq!(report.errors(), 0, "garbage bits still evaluate:\n{}", report.render());
+    nl.compile_plan(); // ... and must not block plan compilation.
+
+    // Duplicate fan-in net.
+    let mut nl = clean.clone();
+    let i = nl
+        .nodes
+        .iter()
+        .position(|n| n.inputs.len() >= 2)
+        .expect("a multi-input LUT exists");
+    nl.nodes[i].inputs[1] = nl.nodes[i].inputs[0];
+    assert!(has_rule(&lint(&nl), "duplicate-input"), "{}", lint(&nl).render());
+
+    // Dead LUT: flagged at the optimized levels, legitimate at None.
+    let mut nl = clean.clone();
+    nl.nodes.push(LutNode { inputs: vec![Net::Input(0)], tt: 0b01, level: 1 });
+    assert!(has_rule(&lint(&nl), "dead-lut"), "{}", lint(&nl).render());
+    let relaxed = lint_netlist(&nl, &LintOptions { opt: OptLevel::None });
+    assert!(relaxed.is_clean(), "dead LUTs are legal pre-opt:\n{}", relaxed.render());
+
+    // Fan-in past the K=6 kernel.
+    let mut nl = clean.clone();
+    nl.nodes[0].inputs = vec![Net::Input(0); 7];
+    assert!(has_rule(&lint(&nl), "fanin-too-wide"), "{}", lint(&nl).render());
+
+    // Constant LUT the sweep should have folded.
+    let mut nl = clean.clone();
+    nl.nodes[0].tt = 0;
+    assert!(has_rule(&lint(&nl), "const-lut"), "{}", lint(&nl).render());
+
+    // Layer depths that understate the real combinational depth would
+    // corrupt registered-timing reports.
+    let mut nl = clean.clone();
+    nl.layer_depths = vec![0; nl.layer_depths.len()];
+    assert!(has_rule(&lint(&nl), "layer-depths-understate"), "{}", lint(&nl).render());
+
+    // Outputs dropped but logic left behind.
+    let mut nl = clean.clone();
+    nl.outputs.clear();
+    assert!(has_rule(&lint(&nl), "empty-outputs"), "{}", lint(&nl).render());
+
+    // BRAM block accounting: 2^14 x 2 bits needs 2 x 18Kb blocks, not 1.
+    let mut nl = clean.clone();
+    nl.brams.push(BramNeuron { in_bits: 14, out_bits: 2, blocks: 1 });
+    assert!(has_rule(&lint(&nl), "bram-shape"), "{}", lint(&nl).render());
+}
+
+/// Satellite: `optimize` re-levels at its fixed point, so even a netlist
+/// whose stored levels were corrupted upstream comes out with truthful
+/// depth metadata — and the stale-level rule pins that.
+#[test]
+fn optimize_relevels_corrupted_inputs() {
+    let plain = trained_netlist("lint_skip", &[8, 6], 1, OptLevel::None);
+    let mut corrupted = plain.clone();
+    for node in &mut corrupted.nodes {
+        node.level += 7;
+    }
+    let (fixed, _) = optimize(&corrupted, OptLevel::Structural);
+    let report = lint_netlist(&fixed, &LintOptions { opt: OptLevel::Structural });
+    assert!(report.is_clean(), "{}", report.render());
+    // depth() now agrees with the schedule the simulator actually builds.
+    assert_eq!(fixed.depth() as usize, fixed.compile_plan().num_levels());
+}
