@@ -1,0 +1,233 @@
+//! Telemetry smoke gate (no artifacts needed): exercise the crate-wide
+//! observability layer (`logicnets::obs`) against a live zoo server and
+//! FAIL (non-zero exit) if the accounting is inconsistent:
+//!
+//! * with telemetry disabled, observational counters and spans must record
+//!   nothing — and must not even register their metrics;
+//! * mixed-budget traffic over two models must leave every request-phase
+//!   histogram (queue-wait / eval / fused-tail / latency) holding exactly
+//!   one sample per routed request, with routed == completed in total;
+//! * the exact-histogram latency percentiles must land within one log2
+//!   bucket of the reservoir cross-check;
+//! * the global snapshot must expose the per-model `serve.*` metrics,
+//!   round-trip through its JSON form byte-stably, and be written as
+//!   `OBS_serve.json` (`$OBS_OUT`, default `.`) for CI to upload next to
+//!   the `BENCH_*.json` artifacts.
+//!
+//! CI runs this; locally: `cargo run --release --example obs_snapshot`.
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::{ExportedLayer, ExportedModel, Neuron, QuantSpec};
+use logicnets::obs;
+use logicnets::serve::{Backend, Budget, LutEngine, ModelMeta, ServerConfig, ZooServer};
+use logicnets::util::rng::Rng;
+use std::sync::Arc;
+
+/// Small single-layer model served straight from its truth tables — the
+/// gate is about telemetry accounting, not model quality.
+fn engine(seed: u64) -> anyhow::Result<Arc<dyn Backend>> {
+    let mut rng = Rng::new(seed);
+    let neurons: Vec<Neuron> = (0..8)
+        .map(|_| {
+            let inputs = rng.choose_k(6, 3);
+            Neuron {
+                inputs: inputs.clone(),
+                weights: inputs.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                bias: 0.0,
+                g: 1.0,
+                h: 0.0,
+            }
+        })
+        .collect();
+    let model = ExportedModel {
+        layers: vec![ExportedLayer::uniform(
+            neurons,
+            6,
+            QuantSpec::new(2, 1.0),
+            QuantSpec::new(2, 2.0),
+            true,
+        )],
+        in_features: 6,
+        classes: 8,
+        skips: 0,
+        act_widths: vec![6],
+    };
+    let tables = ModelTables::generate(&model)?;
+    Ok(Arc::new(LutEngine::build(&model, &tables)?))
+}
+
+fn main() -> anyhow::Result<()> {
+    // Gate 0: disabled telemetry is inert.  Safe to toggle here (own
+    // process); in-crate tests never touch the global flag.
+    obs::set_enabled(false);
+    anyhow::ensure!(!obs::enabled());
+    obs::inc("gate.disabled.count");
+    obs::add("gate.disabled.add.count", 5);
+    {
+        let sp = obs::Span::named("gate.disabled.ns");
+        anyhow::ensure!(!sp.is_live(), "span must be inert while telemetry is off");
+    }
+    anyhow::ensure!(
+        obs::snapshot().is_empty(),
+        "disabled telemetry must leave the registry empty"
+    );
+    obs::set_enabled(true);
+
+    // Two models with separated routing metadata: a strict 50us budget
+    // admits only "cheap"; unbudgeted requests go to "best".
+    let cheap = ModelMeta {
+        name: "cheap".to_string(),
+        luts: 100,
+        brams: 0,
+        quality: 80.0,
+        p50_us: 20.0,
+        p99_us: 50.0,
+    };
+    let best = ModelMeta {
+        name: "best".to_string(),
+        luts: 4_000,
+        brams: 0,
+        quality: 95.0,
+        p50_us: 200.0,
+        p99_us: 500.0,
+    };
+    let zoo = ZooServer::start(
+        vec![(cheap, engine(3)?), (best, engine(4)?)],
+        &ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            obs_prefix: Some("serve".to_string()),
+            ..Default::default()
+        },
+    )?;
+
+    // Mixed-budget traffic from four client threads.
+    let n_req = 400usize;
+    let strict = Budget::latency_us(50.0);
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let zoo = &zoo;
+            s.spawn(move || {
+                let mut rng = Rng::new(t as u64);
+                for k in 0..n_req / 4 {
+                    let x: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+                    let budget = if k % 2 == 0 { Budget::none() } else { strict };
+                    assert!(zoo.infer(x, &budget).is_some(), "request {k} failed");
+                }
+            });
+        }
+    });
+
+    // Gate 1: routed-count totals are consistent end to end.
+    let stats = zoo.stats();
+    let routed_total: u64 = stats.iter().map(|m| m.routed).sum();
+    let completed_total: u64 = stats.iter().map(|m| m.stats.completed).sum();
+    anyhow::ensure!(routed_total == n_req as u64, "routed {routed_total} != {n_req}");
+    anyhow::ensure!(completed_total == n_req as u64, "completed {completed_total} != {n_req}");
+    anyhow::ensure!(zoo.fallbacks() == 0, "unexpected budget fallbacks");
+
+    // Gate 2: every phase histogram holds exactly one sample per routed
+    // request — the queue-wait / eval / fused-tail breakdown never loses
+    // or double-counts a request.
+    for (name, m) in zoo.model_metrics() {
+        let routed = stats.iter().find(|s| s.name == name).map(|s| s.routed).unwrap_or(0);
+        anyhow::ensure!(routed > 0, "model {name} received no traffic");
+        for (phase, h) in [
+            ("queue_wait", &m.queue_wait_ns),
+            ("eval", &m.eval_ns),
+            ("tail", &m.tail_ns),
+            ("latency", &m.latency_ns),
+        ] {
+            anyhow::ensure!(
+                h.count() == routed,
+                "{name}.{phase}: {} samples != {routed} routed",
+                h.count()
+            );
+        }
+        anyhow::ensure!(m.queue_depth.get() == 0, "{name}: queue gauge did not drain");
+        anyhow::ensure!(m.batch_fill.count() > 0, "{name}: no batch-fill samples");
+    }
+
+    // Gate 3: exact-histogram percentiles within one log2 bucket of the
+    // reservoir cross-check (the reservoir held the full stream here).
+    for ms in &stats {
+        anyhow::ensure!(
+            ms.stats.lat_samples as u64 == ms.stats.completed,
+            "{}: reservoir lost samples under capacity",
+            ms.name
+        );
+        for (which, hist, res) in [
+            ("p50", ms.stats.p50_us, ms.stats.res_p50_us),
+            ("p99", ms.stats.p99_us, ms.stats.res_p99_us),
+        ] {
+            let d = obs::bucket_index((hist * 1e3) as u64) as i64
+                - obs::bucket_index((res * 1e3) as u64) as i64;
+            anyhow::ensure!(
+                d.abs() <= 1,
+                "{} {which}: histogram {hist:.1}us vs reservoir {res:.1}us, {d} buckets apart",
+                ms.name
+            );
+        }
+        println!(
+            "  {}: routed {} p50 {:.1}us (res {:.1}) p99 {:.1}us (res {:.1})",
+            ms.name, ms.routed, ms.stats.p50_us, ms.stats.res_p50_us, ms.stats.p99_us,
+            ms.stats.res_p99_us
+        );
+    }
+
+    // Gate 4: the global registry snapshot carries the published serve.*
+    // metrics and agrees with the handles.
+    let snap = obs::snapshot();
+    for ms in &stats {
+        for phase in ["queue_wait", "eval", "tail"] {
+            let key = format!("serve.{}.{phase}.ns", ms.name);
+            let h = snap
+                .histogram(&key)
+                .ok_or_else(|| anyhow::anyhow!("{key} missing from snapshot"))?;
+            anyhow::ensure!(h.count() == ms.routed, "{key}: {} != {}", h.count(), ms.routed);
+        }
+        let key = format!("serve.{}.routed.count", ms.name);
+        anyhow::ensure!(
+            snap.counter(&key) == Some(ms.routed),
+            "{key}: {:?} != {}",
+            snap.counter(&key),
+            ms.routed
+        );
+    }
+    anyhow::ensure!(snap.counter("serve.fallbacks.count") == Some(0), "fallback counter");
+
+    // Gate 5: snapshot JSON round-trips byte-stably and ships as the CI
+    // telemetry artifact.
+    let js = snap.to_json();
+    let back = obs::SnapshotReport::from_json(&js)?;
+    anyhow::ensure!(
+        back.to_json().to_string() == js.to_string(),
+        "snapshot JSON is not byte-stable"
+    );
+    let dir = std::env::var("OBS_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = format!("{dir}/OBS_serve.json");
+    std::fs::write(&path, js.to_string())?;
+    println!("wrote {path}");
+
+    // Gate 6: the `serve --zoo --json` payload is self-consistent.
+    let sj = zoo.stats_json();
+    anyhow::ensure!(sj.get("zoo").and_then(|v| v.as_str()) == Some("stats"), "zoo marker");
+    let models = sj
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("stats_json has no models array"))?;
+    anyhow::ensure!(models.len() == 2, "expected 2 models, got {}", models.len());
+    for mj in models {
+        let routed = mj.get("routed").and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        let completed = mj.get("completed").and_then(|v| v.as_f64()).unwrap_or(-2.0);
+        anyhow::ensure!(routed == completed, "stats_json routed {routed} != completed {completed}");
+        anyhow::ensure!(
+            mj.get("queue_wait_p99_us").and_then(|v| v.as_f64()).unwrap_or(-1.0) >= 0.0,
+            "missing phase breakdown in stats_json"
+        );
+    }
+
+    zoo.shutdown();
+    println!("obs-snapshot gate: OK");
+    Ok(())
+}

@@ -44,6 +44,7 @@ use crate::data::DataSet;
 use crate::luts::ModelTables;
 use crate::metrics;
 use crate::nn::ExportedModel;
+use crate::obs;
 use crate::runtime::Manifest;
 use crate::serve::zoo::{calibrate_latency, ZooEntry, ZooManifest, CALIBRATION_ITERS};
 use crate::serve::{batch_accuracy, NetlistEngine};
@@ -812,6 +813,7 @@ fn advance_runner(
         // Accuracy is "latest known" — keep the archived value on replay
         // so intermediate rungs never clobber it with a zero.
         ru.accuracy = ru.archived_accuracy;
+        obs::inc("dse.archive.replay_hits.count");
         return Ok((ru, 0));
     }
     let mut trained_now = 0usize;
@@ -946,6 +948,9 @@ pub fn run_search(
         admitted.len(),
         opts.budget_luts
     );
+    obs::add("dse.candidates.generated.count", generated as u64);
+    obs::add("dse.candidates.gated.count", gated as u64);
+    obs::add("dse.candidates.admitted.count", admitted.len() as u64);
 
     // ---- successive halving ----------------------------------------------
     let mut survivors: Vec<Runner> = admitted
@@ -977,6 +982,7 @@ pub fn run_search(
 
     let mut steps_trained = 0usize;
     for rung in 0..opts.rungs {
+        let rung_span = obs::Span::named("dse.rung.ns");
         let results: Vec<Result<(Runner, usize)>> =
             pool::par_map(&survivors, |_, ru| advance_runner(task, opts, ru, rung));
         let mut next: Vec<Runner> = Vec::with_capacity(results.len());
@@ -986,6 +992,9 @@ pub fn run_search(
             rung_steps += steps;
             next.push(ru);
         }
+        drop(rung_span);
+        obs::inc("dse.rungs.count");
+        obs::add("dse.steps_trained.count", rung_steps as u64);
         steps_trained += rung_steps;
         // Record this rung into the archive.
         for ru in &next {

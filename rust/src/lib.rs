@@ -38,6 +38,7 @@ pub mod luts;
 pub mod metrics;
 pub mod mnist;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

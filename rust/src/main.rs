@@ -10,6 +10,7 @@
 //! logicnets verilog --model NAME --out DIR
 //! logicnets verify  --model NAME [--samples N]   tables vs arithmetic mirror
 //! logicnets serve   --model NAME [--requests N] [--workers W]
+//! logicnets stats   <snapshot.json>            pretty-print a telemetry snapshot
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -45,6 +46,81 @@ fn parse_opt(args: &Args) -> Result<OptLevel> {
     }
 }
 
+/// Telemetry hookup for `serve`: an optional periodic snapshot emitter
+/// (`--stats-interval SECS`) plus a final snapshot on shutdown, optionally
+/// written as JSON (`--stats-json PATH`, readable back via `stats`).
+struct ObsSession {
+    emitter: Option<(std::sync::Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>)>,
+    json_path: Option<String>,
+    print_final: bool,
+}
+
+impl ObsSession {
+    fn from_args(args: &Args) -> ObsSession {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let interval = args.get_f64("stats-interval", 0.0);
+        let json_path = args.get("stats-json").map(str::to_string);
+        let emitter = (interval > 0.0).then(|| {
+            let stop = std::sync::Arc::new(AtomicBool::new(false));
+            let flag = stop.clone();
+            let h = std::thread::spawn(move || {
+                // Sleep in short ticks so shutdown never waits a full period.
+                let tick = std::time::Duration::from_millis(100);
+                let period = std::time::Duration::from_secs_f64(interval.max(0.1));
+                let mut since = std::time::Duration::ZERO;
+                while !flag.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    since += tick;
+                    if since >= period {
+                        since = std::time::Duration::ZERO;
+                        let snap = logicnets::obs::snapshot();
+                        if !snap.is_empty() {
+                            println!("--- telemetry snapshot ---");
+                            print!("{}", snap.render());
+                        }
+                    }
+                }
+            });
+            (stop, h)
+        });
+        ObsSession { emitter, json_path, print_final: interval > 0.0 }
+    }
+
+    /// Stop the emitter and emit the final snapshot (stdout and/or JSON).
+    fn finish(self) -> Result<()> {
+        if let Some((stop, h)) = self.emitter {
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            let _ = h.join();
+        }
+        let snap = logicnets::obs::snapshot();
+        if self.print_final {
+            println!("--- final telemetry snapshot ---");
+            print!("{}", snap.render());
+        }
+        if let Some(p) = self.json_path {
+            std::fs::write(&p, snap.to_json().to_string()).with_context(|| p.clone())?;
+            println!("telemetry snapshot written to {p}");
+        }
+        Ok(())
+    }
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .context("snapshot JSON path required (produce one with `serve --stats-json PATH`)")?;
+    let text = std::fs::read_to_string(path).with_context(|| path.clone())?;
+    let j = logicnets::util::json::Json::parse(&text)?;
+    let snap = logicnets::obs::SnapshotReport::from_json(&j)?;
+    if snap.is_empty() {
+        println!("{path}: empty telemetry snapshot");
+    } else {
+        print!("{}", snap.render());
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
@@ -62,6 +138,7 @@ fn main() -> Result<()> {
         "verilog" => cmd_verilog(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "score" => cmd_score(&args),
         "complexity" => cmd_complexity(&args),
         "pareto" => cmd_pareto(&args),
@@ -90,7 +167,11 @@ fn print_help() {
     println!("  serve   --model NAME [--requests N] [--workers W] [--backend tables|netlist]");
     println!("          [--opt]   optimize the served netlist (netlist backend only)");
     println!("  serve   --zoo reports/dse/zoo.json [--requests N] [--workers W] [--budget-us US]");
+    println!("          [--json]  per-model stats (routed/fallback/reject + latency) as JSON");
     println!("          budget-routed multi-model serving from an explore-emitted zoo");
+    println!("  serve   ... [--stats-interval SECS] [--stats-json PATH]");
+    println!("          periodic telemetry snapshots; final snapshot written to PATH");
+    println!("  stats   <snapshot.json>            pretty-print a `--stats-json` snapshot");
     println!("  score   --models NAME[,NAME...] [--opt]  accuracy parity: mirror vs tables vs netlist");
     println!("  complexity --model NAME            minimized-logic heuristic (paper 5.5.1)");
     println!("  pareto  --csv reports/figure_6_7.csv   Pareto frontier of a sweep");
@@ -415,13 +496,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 );
             }
             let engine = std::sync::Arc::new(LutEngine::build(&ex, &tables)?);
-            serve_backend(engine, &ds, requests, workers)
+            serve_backend(engine, &ds, requests, workers, args)
         }
         "netlist" => {
             let opt = parse_opt(args)?;
             let engine = std::sync::Arc::new(NetlistEngine::build_opt(&ex, &tables, opt)?);
             println!("netlist backend ({} opt): {} LUTs", opt.name(), engine.num_luts());
-            serve_backend(engine, &ds, requests, workers)
+            serve_backend(engine, &ds, requests, workers, args)
         }
         other => bail!("unknown backend {other} (expected tables|netlist)"),
     }
@@ -456,8 +537,12 @@ fn cmd_serve_zoo(path: &str, args: &Args) -> Result<()> {
         .parent()
         .filter(|p| !p.as_os_str().is_empty())
         .unwrap_or(std::path::Path::new("."));
-    let server =
-        serve_manifest(&manifest, zoo_dir, &ServerConfig { workers, ..Default::default() })?;
+    let obs = ObsSession::from_args(args);
+    let server = serve_manifest(
+        &manifest,
+        zoo_dir,
+        &ServerConfig { workers, obs_prefix: Some("serve".to_string()), ..Default::default() },
+    )?;
     let ds = match manifest.dataset.as_str() {
         "jets" => logicnets::hep::jets(4096, 7),
         "mnist" => logicnets::mnist::synth_digits(1024, 7),
@@ -506,18 +591,26 @@ fn cmd_serve_zoo(path: &str, args: &Args) -> Result<()> {
     });
     let elapsed = t0.elapsed().as_secs_f64();
     let mut completed = 0u64;
-    println!("per-model stats (cheapest first):");
     for ms in server.stats() {
         completed += ms.stats.completed;
-        println!(
-            "  {:<28} routed {:>8}  completed {:>8}  live p50 {:>7.1}us  p99 {:>7.1}us  fill {:>5.1}",
-            ms.name,
-            ms.routed,
-            ms.stats.completed,
-            ms.stats.p50_us,
-            ms.stats.p99_us,
-            ms.stats.mean_batch
-        );
+    }
+    if args.has_flag("json") {
+        // Machine-readable per-model stats: routed/fallback/reject counters
+        // plus exact-histogram latency and phase percentiles.
+        println!("{}", server.stats_json().to_string());
+    } else {
+        println!("per-model stats (cheapest first):");
+        for ms in server.stats() {
+            println!(
+                "  {:<28} routed {:>8}  completed {:>8}  live p50 {:>7.1}us  p99 {:>7.1}us  fill {:>5.1}",
+                ms.name,
+                ms.routed,
+                ms.stats.completed,
+                ms.stats.p50_us,
+                ms.stats.p99_us,
+                ms.stats.mean_batch
+            );
+        }
     }
     println!(
         "zoo throughput        : {:.0} inferences/s across {} model(s); {} fallback(s)",
@@ -526,7 +619,7 @@ fn cmd_serve_zoo(path: &str, args: &Args) -> Result<()> {
         server.fallbacks()
     );
     server.shutdown();
-    Ok(())
+    obs.finish()
 }
 
 fn serve_backend<B: Backend>(
@@ -534,7 +627,9 @@ fn serve_backend<B: Backend>(
     ds: &logicnets::data::DataSet,
     requests: usize,
     workers: usize,
+    args: &Args,
 ) -> Result<()> {
+    let obs = ObsSession::from_args(args);
     println!("serving backend       : {}", engine.name());
     println!(
         "eval-set accuracy     : {:.3} ({} samples)",
@@ -554,7 +649,12 @@ fn serve_backend<B: Backend>(
 
     let server = Server::start(
         engine,
-        ServerConfig { workers, max_batch: 64, ..Default::default() },
+        ServerConfig {
+            workers,
+            max_batch: 64,
+            obs_prefix: Some("serve".to_string()),
+            ..Default::default()
+        },
     );
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
@@ -584,7 +684,7 @@ fn serve_backend<B: Backend>(
     );
     println!("mean batch fill       : {:.1}", stats.mean_batch);
     server.shutdown();
-    Ok(())
+    obs.finish()
 }
 
 fn cmd_score(args: &Args) -> Result<()> {

@@ -1,0 +1,834 @@
+//! Crate-wide telemetry: counters, gauges, latency histograms, span timers.
+//!
+//! The paper's pitch is deterministic sub-microsecond inference, and the
+//! trigger literature it leans on treats latency accounting as a
+//! first-class deliverable — so the serving/sim/synth/DSE stack needs to
+//! be able to observe itself without pulling in a metrics crate (the
+//! build is fully offline).  This module is that substrate:
+//!
+//! * [`Counter`] — monotonically increasing, sharded across cache-line
+//!   padded atomics so concurrent workers never contend on one line;
+//! * [`Gauge`] — a signed instantaneous level (queue depth, pool size);
+//! * [`Histogram`] — log2-bucketed value distribution with a fixed
+//!   64-bucket layout.  Counts are **exact** (every sample lands in
+//!   exactly one bucket); values are bucketed to a power-of-two range, so
+//!   any percentile estimate is off by at most one bucket boundary.
+//!   Snapshots ([`HistogramSnapshot`]) are plain data and merge
+//!   associatively, so per-worker or per-model histograms can be summed.
+//!   This replaces the serving router's lossy latency reservoir as the
+//!   *primary* percentile source (the reservoir stays as a cross-check:
+//!   exact values, sampled stream — vs exact stream, bucketed values);
+//! * [`Span`] — RAII timer recording into a histogram on drop, a no-op
+//!   (not even a clock read) when telemetry is disabled;
+//! * a process-wide [`Registry`] mapping `subsystem.metric.unit` names to
+//!   metric handles, snapshotted into a [`SnapshotReport`] with a human
+//!   `render()` and a stable JSON form (same conventions as
+//!   `util::bench::BenchReport`: BTreeMap-ordered keys, integers emitted
+//!   without a decimal point).
+//!
+//! Naming convention: `subsystem.metric.unit`, e.g. `serve.queue_wait.ns`
+//! (histogram of nanoseconds), `sim.chunks_evaluated.count` (counter),
+//! `serve.queue.depth` (gauge).  Histograms of durations record
+//! **nanoseconds** — at sub-microsecond serving latencies, microsecond
+//! resolution would collapse the interesting buckets.
+//!
+//! Overhead budget: a counter bump is one relaxed `fetch_add` on a
+//! thread-private cache line; a histogram record is five relaxed atomics;
+//! a span adds two `Instant::now()` reads.  Instrumentation on per-chunk
+//! or coarser paths (≥ 256 samples of work per record) stays well under
+//! the 5% throughput budget enforced by the `sim256/jets-default` bench
+//! gate.  Purely observational sites additionally check [`enabled`] so a
+//! scenario can switch telemetry off; stats-bearing metrics the serving
+//! API reports from (request latency, completion counts) record
+//! unconditionally.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Enable flag
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Is telemetry recording enabled?  Purely observational instrumentation
+/// sites (span timers, pipeline counters) check this before recording;
+/// stats-bearing metrics (the serving router's latency histogram and
+/// completion counters, which back `ServerStats`) do not.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Globally enable/disable observational telemetry.  Affects every thread;
+/// intended for scenario setup (CLI flag, bench harness), not for toggling
+/// around individual operations.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Counter / Gauge
+// ---------------------------------------------------------------------------
+
+const COUNTER_SHARDS: usize = 16;
+
+#[repr(align(64))]
+#[derive(Default)]
+struct Shard(AtomicU64);
+
+/// Each thread gets a sticky shard index from a round-robin dispenser, so
+/// steady-state increments from distinct threads hit distinct cache lines.
+fn shard_id() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    SHARD.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed) % COUNTER_SHARDS;
+            c.set(v);
+        }
+        v
+    })
+}
+
+/// Monotonic event counter, sharded to keep concurrent writers off a
+/// shared cache line.  Reads sum the shards (exact, but not a point-in-time
+/// atomic snapshot across concurrent writers — fine for telemetry).
+#[derive(Default)]
+pub struct Counter {
+    shards: [Shard; COUNTER_SHARDS],
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.shards[shard_id()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Signed instantaneous level (queue depth, pool occupancy).
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// Fixed bucket count of the log2 layout.  Bucket 0 holds the value 0,
+/// bucket `i` (1 ≤ i < 63) holds `[2^(i-1), 2^i)`, and the last bucket
+/// holds everything from `2^62` up.  For nanosecond durations that spans
+/// 1 ns .. ~146 years, so no realistic latency ever clips.
+pub const BUCKETS: usize = 64;
+
+/// Bucket a value lands in: 0 for 0, else its bit length, clamped to the
+/// top bucket.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// `[lo, hi)` value range of bucket `i` (the top bucket is closed at
+/// `u64::MAX`).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    match i {
+        0 => (0, 1),
+        _ if i < BUCKETS - 1 => (1u64 << (i - 1), 1u64 << i),
+        _ => (1u64 << (BUCKETS - 2), u64::MAX),
+    }
+}
+
+/// Log2-bucketed distribution with exact counts.  Thread-safe and
+/// lock-free: `record` is four relaxed atomic RMWs.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    /// `u64::MAX` while empty.
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds (the unit all `*.ns` histograms
+    /// use).
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Total samples recorded (exact).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Plain-data copy for merging / percentile math / serialization.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Percentile estimate of the recorded distribution; `None` when
+    /// empty.  See [`HistogramSnapshot::percentile`].
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        self.snapshot().percentile(p)
+    }
+}
+
+/// Immutable copy of a [`Histogram`]: mergeable, serializable, and the
+/// place percentile math lives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub sum: u64,
+    /// `u64::MAX` when empty.
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { buckets: [0; BUCKETS], sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Pointwise sum of two snapshots.  Associative and commutative, so
+    /// per-worker / per-model histograms can be folded in any order.
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i] + other.buckets[i]),
+            sum: self.sum + other.sum,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        match self.count() {
+            0 => None,
+            n => Some(self.sum as f64 / n as f64),
+        }
+    }
+
+    /// Percentile estimate: finds the bucket holding the rank-`p` sample
+    /// (counts are exact, so the bucket is exact) and interpolates
+    /// linearly inside it, with the bucket range clamped to the observed
+    /// global min/max.  The estimate is therefore always inside the
+    /// correct bucket — off by at most one power-of-two boundary from the
+    /// true value — and exact for single-valued distributions.
+    ///
+    /// An empty histogram has **no** percentiles: `None`, never a
+    /// fabricated 0.0 (same contract as `serve::router::percentile`).
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let p = p.clamp(0.0, 1.0);
+        // 1-based rank of the sample the percentile describes (nearest
+        // rank on the 0..n-1 index scale used by the reservoir path).
+        let target = (p * (n - 1) as f64).floor() as u64 + 1;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let lo = lo.max(self.min) as f64;
+                let hi = hi.min(self.max) as f64;
+                // Midpoint convention: the j-th of c samples in a bucket
+                // sits at fraction (j - 0.5)/c, so estimates stay strictly
+                // inside the bucket and a single-valued distribution
+                // (lo == hi after clamping) is reported exactly.
+                let frac = ((target - cum) as f64 - 0.5) / c as f64;
+                return Some(lo + (hi - lo).max(0.0) * frac);
+            }
+            cum += c;
+        }
+        Some(self.max as f64)
+    }
+
+    /// JSON form: exact fields plus derived percentiles for convenience
+    /// (`from_json` ignores the derived ones).  Buckets are emitted
+    /// sparsely as `[index, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::num(i as f64), Json::num(c as f64)]))
+            .collect();
+        let n = self.count();
+        let pct = |p: f64| self.percentile(p).unwrap_or(0.0);
+        Json::obj(vec![
+            ("count", Json::num(n as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("min", Json::num(if n == 0 { 0.0 } else { self.min as f64 })),
+            ("max", Json::num(self.max as f64)),
+            ("p50", Json::num(pct(0.50))),
+            ("p95", Json::num(pct(0.95))),
+            ("p99", Json::num(pct(0.99))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<HistogramSnapshot> {
+        let mut s = HistogramSnapshot {
+            sum: j.req_f64("sum")? as u64,
+            max: j.req_f64("max")? as u64,
+            ..HistogramSnapshot::default()
+        };
+        for pair in j.req("buckets")?.as_arr().unwrap_or(&[]) {
+            let p = pair.as_arr().filter(|p| p.len() == 2);
+            let p = p.ok_or_else(|| anyhow::anyhow!("histogram bucket not an [index,count] pair"))?;
+            let i = p[0].as_usize().ok_or_else(|| anyhow::anyhow!("bucket index not usize"))?;
+            anyhow::ensure!(i < BUCKETS, "bucket index {i} out of range");
+            s.buckets[i] = p[1].as_f64().unwrap_or(0.0) as u64;
+        }
+        if s.count() > 0 {
+            s.min = j.req_f64("min")? as u64;
+        }
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span
+// ---------------------------------------------------------------------------
+
+/// RAII timer: records the elapsed nanoseconds into a histogram when
+/// dropped.  Constructing one while telemetry is disabled is free — no
+/// clock read, no allocation, nothing recorded on drop.
+pub struct Span {
+    live: Option<(Instant, Arc<Histogram>)>,
+}
+
+impl Span {
+    /// Time into an owned histogram handle.
+    pub fn start(h: &Arc<Histogram>) -> Span {
+        if enabled() {
+            Span { live: Some((Instant::now(), h.clone())) }
+        } else {
+            Span { live: None }
+        }
+    }
+
+    /// Time into the global registry histogram `name` (created on first
+    /// use).  The registry lookup is skipped entirely when disabled.
+    pub fn named(name: &str) -> Span {
+        if enabled() {
+            Span { live: Some((Instant::now(), histogram(name))) }
+        } else {
+            Span { live: None }
+        }
+    }
+
+    /// A span that records nothing (for callers threading an optional
+    /// span through).
+    pub fn disabled() -> Span {
+        Span { live: None }
+    }
+
+    /// Will this span record on drop?
+    pub fn is_live(&self) -> bool {
+        self.live.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((t0, h)) = self.live.take() {
+            h.record_duration(t0.elapsed());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Name → metric map.  Registration is the cold path (mutex + BTreeMap);
+/// the returned `Arc` handles are the hot path and touch no lock.  Hot
+/// call sites should cache the handle (e.g. in a `OnceLock`) instead of
+/// re-looking-up per record.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a counter.  A name already registered as a different
+    /// metric kind is replaced (last writer wins — a kind clash is a
+    /// programmer error, and telemetry must never panic the process).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(Metric::Counter(c)) = m.get(name) {
+            return c.clone();
+        }
+        let c = Arc::new(Counter::new());
+        m.insert(name.to_string(), Metric::Counter(c.clone()));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(Metric::Gauge(g)) = m.get(name) {
+            return g.clone();
+        }
+        let g = Arc::new(Gauge::new());
+        m.insert(name.to_string(), Metric::Gauge(g.clone()));
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(Metric::Histogram(h)) = m.get(name) {
+            return h.clone();
+        }
+        let h = Arc::new(Histogram::new());
+        m.insert(name.to_string(), Metric::Histogram(h.clone()));
+        h
+    }
+
+    /// Publish an externally owned metric under `name` (replacing any
+    /// previous registration).  This is how the serving router exposes its
+    /// per-server histograms without giving up ownership.
+    pub fn publish_histogram(&self, name: &str, h: Arc<Histogram>) {
+        self.metrics.lock().unwrap().insert(name.to_string(), Metric::Histogram(h));
+    }
+
+    pub fn publish_counter(&self, name: &str, c: Arc<Counter>) {
+        self.metrics.lock().unwrap().insert(name.to_string(), Metric::Counter(c));
+    }
+
+    pub fn publish_gauge(&self, name: &str, g: Arc<Gauge>) {
+        self.metrics.lock().unwrap().insert(name.to_string(), Metric::Gauge(g));
+    }
+
+    /// Point-in-time copy of every registered metric, name-sorted.
+    pub fn snapshot(&self) -> SnapshotReport {
+        let m = self.metrics.lock().unwrap();
+        let mut r = SnapshotReport::default();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => r.counters.push((name.clone(), c.get())),
+                Metric::Gauge(g) => r.gauges.push((name.clone(), g.get())),
+                Metric::Histogram(h) => r.histograms.push((name.clone(), h.snapshot())),
+            }
+        }
+        r
+    }
+}
+
+fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Get-or-create a counter in the process-wide registry.
+pub fn counter(name: &str) -> Arc<Counter> {
+    global().counter(name)
+}
+
+/// Get-or-create a gauge in the process-wide registry.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    global().gauge(name)
+}
+
+/// Get-or-create a histogram in the process-wide registry.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    global().histogram(name)
+}
+
+/// Publish an externally owned histogram process-wide.
+pub fn publish_histogram(name: &str, h: Arc<Histogram>) {
+    global().publish_histogram(name, h);
+}
+
+/// Publish an externally owned counter process-wide.
+pub fn publish_counter(name: &str, c: Arc<Counter>) {
+    global().publish_counter(name, c);
+}
+
+/// Publish an externally owned gauge process-wide.
+pub fn publish_gauge(name: &str, g: Arc<Gauge>) {
+    global().publish_gauge(name, g);
+}
+
+/// Convenience: bump a registry counter by `n` if telemetry is enabled.
+/// Does a registry lookup per call — use only on coarse paths; hot paths
+/// cache the `Arc<Counter>` handle.
+#[inline]
+pub fn add(name: &str, n: u64) {
+    if enabled() {
+        counter(name).add(n);
+    }
+}
+
+/// `add(name, 1)`.
+#[inline]
+pub fn inc(name: &str) {
+    add(name, 1);
+}
+
+/// Snapshot of the process-wide registry.
+pub fn snapshot() -> SnapshotReport {
+    global().snapshot()
+}
+
+// ---------------------------------------------------------------------------
+// SnapshotReport
+// ---------------------------------------------------------------------------
+
+/// Point-in-time copy of a registry: what the `serve --stats-interval`
+/// emitter prints, what `logicnets stats` pretty-prints, and what CI
+/// uploads next to the bench reports.
+#[derive(Default, Debug, Clone)]
+pub struct SnapshotReport {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+impl SnapshotReport {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Histogram by exact name.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Counter value by exact name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Human-readable table.  Durations (histograms named `*.ns`) are
+    /// pretty-printed with time units; everything else is raw.
+    pub fn render(&self) -> String {
+        use crate::util::bench::fmt_ns;
+        let mut out = String::new();
+        out.push_str("== telemetry snapshot ==\n");
+        if self.is_empty() {
+            out.push_str("(no metrics registered)\n");
+            return out;
+        }
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            for (name, v) in &self.counters {
+                out.push_str(&format!("  {name:<44} {v:>14}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (name, v) in &self.gauges {
+                out.push_str(&format!("  {name:<44} {v:>14}\n"));
+            }
+        }
+        if !self.histograms.is_empty() {
+            out.push_str(&format!(
+                "histograms:\n  {:<44} {:>10} {:>12} {:>12} {:>12} {:>12}\n",
+                "name", "count", "mean", "p50", "p99", "max"
+            ));
+            for (name, h) in &self.histograms {
+                let n = h.count();
+                let is_ns = name.ends_with(".ns");
+                let f = |v: f64| if is_ns { fmt_ns(v) } else { format!("{v:.1}") };
+                if n == 0 {
+                    out.push_str(&format!("  {name:<44} {n:>10} {:>12}\n", "-"));
+                } else {
+                    out.push_str(&format!(
+                        "  {name:<44} {n:>10} {:>12} {:>12} {:>12} {:>12}\n",
+                        f(h.mean().unwrap_or(0.0)),
+                        f(h.percentile(0.50).unwrap_or(0.0)),
+                        f(h.percentile(0.99).unwrap_or(0.0)),
+                        f(h.max as f64),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Stable JSON: `{"obs":"snapshot","version":1,"counters":{...},
+    /// "gauges":{...},"histograms":{name:{count,sum,min,max,p50,p95,p99,
+    /// buckets:[[i,c],...]}}}`.  Object keys are BTreeMap-ordered, so the
+    /// output is byte-stable for a given snapshot.
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> =
+            self.counters.iter().map(|(n, v)| (n.clone(), Json::num(*v as f64))).collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(n, v)| (n.clone(), Json::num(*v as f64))).collect();
+        let histograms: BTreeMap<String, Json> =
+            self.histograms.iter().map(|(n, h)| (n.clone(), h.to_json())).collect();
+        Json::obj(vec![
+            ("obs", Json::str("snapshot")),
+            ("version", Json::num(1.0)),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+
+    /// Parse a snapshot previously emitted by [`SnapshotReport::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<SnapshotReport> {
+        anyhow::ensure!(
+            j.get("obs").and_then(|v| v.as_str()) == Some("snapshot"),
+            "not a telemetry snapshot (missing obs=snapshot marker)"
+        );
+        let mut r = SnapshotReport::default();
+        if let Some(Json::Obj(m)) = j.get("counters") {
+            for (n, v) in m {
+                r.counters.push((
+                    n.clone(),
+                    v.as_f64().ok_or_else(|| anyhow::anyhow!("counter {n} not a number"))? as u64,
+                ));
+            }
+        }
+        if let Some(Json::Obj(m)) = j.get("gauges") {
+            for (n, v) in m {
+                r.gauges.push((
+                    n.clone(),
+                    v.as_f64().ok_or_else(|| anyhow::anyhow!("gauge {n} not a number"))? as i64,
+                ));
+            }
+        }
+        if let Some(Json::Obj(m)) = j.get("histograms") {
+            for (n, v) in m {
+                r.histograms.push((n.clone(), HistogramSnapshot::from_json(v)?));
+            }
+        }
+        Ok(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let c = Arc::new(Counter::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn gauge_tracks_level() {
+        let g = Gauge::new();
+        g.add(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        g.set(-7);
+        assert_eq!(g.get(), -7);
+    }
+
+    #[test]
+    fn bucket_layout_is_log2_exact() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        for k in 1..62 {
+            // 2^k opens bucket k+1; 2^k - 1 still belongs to bucket k.
+            assert_eq!(bucket_index(1u64 << k), k + 1);
+            assert_eq!(bucket_index((1u64 << k) - 1), k);
+            let (lo, hi) = bucket_bounds(k + 1);
+            assert_eq!(lo, 1u64 << k);
+            assert_eq!(hi, 1u64 << (k + 1));
+        }
+        // Top bucket absorbs everything past 2^62.
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_bounds(BUCKETS - 1).1, u64::MAX);
+    }
+
+    #[test]
+    fn histogram_percentiles_and_merge() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.5), None, "empty histogram has no percentiles");
+        for v in [100u64, 200, 400, 800, 1600] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        let s = h.snapshot();
+        // Estimates always land inside the bucket holding the true rank
+        // sample, and are monotone in p.
+        let p0 = s.percentile(0.0).unwrap();
+        let p100 = s.percentile(1.0).unwrap();
+        assert!((100.0..128.0).contains(&p0), "p0 {p0} outside bucket of 100");
+        assert!((1024.0..=1600.0).contains(&p100), "p100 {p100} outside bucket of 1600");
+        let mut prev = p0;
+        for i in 1..=20 {
+            let v = s.percentile(i as f64 / 20.0).unwrap();
+            assert!(v >= prev, "percentile must be monotone in p");
+            prev = v;
+        }
+        // Merge is associative.
+        let a = s.clone();
+        let mut b = HistogramSnapshot::default();
+        b.buckets[3] = 7;
+        b.sum = 42;
+        b.min = 4;
+        b.max = 7;
+        let c = {
+            let h2 = Histogram::new();
+            h2.record(1 << 20);
+            h2.snapshot()
+        };
+        assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)));
+        assert_eq!(a.merge(&b).count(), 12);
+    }
+
+    #[test]
+    fn span_records_into_histogram() {
+        let h = Arc::new(Histogram::new());
+        {
+            let _sp = Span::start(&h);
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+        assert_eq!(h.count(), 1);
+        // One sample: the clamped-bucket estimate is exact, and sleep
+        // guarantees at least 100µs elapsed.
+        assert!(h.percentile(0.5).unwrap() >= 100_000.0);
+        // A statically disabled span records nothing.
+        {
+            let sp = Span::disabled();
+            assert!(!sp.is_live());
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn registry_reuses_handles_and_snapshots() {
+        let r = Registry::new();
+        let c1 = r.counter("t.a.count");
+        let c2 = r.counter("t.a.count");
+        c1.add(3);
+        c2.add(4);
+        assert_eq!(r.counter("t.a.count").get(), 7, "same name must share one counter");
+        r.gauge("t.b.depth").set(9);
+        r.histogram("t.c.ns").record(1000);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("t.a.count"), Some(7));
+        assert_eq!(snap.histogram("t.c.ns").unwrap().count(), 1);
+        assert!(snap.render().contains("t.b.depth"));
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip() {
+        let r = Registry::new();
+        r.counter("x.events.count").add(12);
+        r.gauge("x.depth").set(-3);
+        let h = r.histogram("x.lat.ns");
+        for v in [10u64, 1000, 100_000, 10_000_000] {
+            h.record(v);
+        }
+        let snap = r.snapshot();
+        let j = snap.to_json();
+        let text = j.to_string();
+        let back = SnapshotReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.counter("x.events.count"), Some(12));
+        assert_eq!(back.gauges, vec![("x.depth".to_string(), -3)]);
+        let orig = snap.histogram("x.lat.ns").unwrap();
+        let got = back.histogram("x.lat.ns").unwrap();
+        assert_eq!(orig, got, "histogram must survive the JSON roundtrip exactly");
+        // Stable output: re-serializing the parsed form is byte-identical.
+        assert_eq!(back.to_json().to_string(), text);
+    }
+}

@@ -567,7 +567,16 @@ impl NetlistEngine {
         if n == 0 {
             return Vec::new();
         }
-        let mut fs = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        let mut fs = match self.scratch.lock().unwrap().pop() {
+            Some(fs) => {
+                crate::obs::add("sim.scratch_pool.hits.count", 1);
+                fs
+            }
+            None => {
+                crate::obs::add("sim.scratch_pool.misses.count", 1);
+                FusedScratch::default()
+            }
+        };
         fs.inputs.reset(self.netlist.num_inputs, n);
         for (s, row) in xs.chunks(d).enumerate() {
             for (j, &v) in row.iter().enumerate() {

@@ -23,5 +23,7 @@ pub mod router;
 pub mod zoo;
 
 pub use engine::{batch_accuracy, Backend, LutEngine, NetlistEngine};
-pub use router::{Budget, ModelMeta, Server, ServerConfig, ServerStats, ZooServer};
+pub use router::{
+    Budget, ModelMeta, Server, ServerConfig, ServerMetrics, ServerStats, ZooServer,
+};
 pub use zoo::{ZooEntry, ZooManifest};

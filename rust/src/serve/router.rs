@@ -19,8 +19,10 @@
 //! `serve::zoo` builds one from a DSE-emitted `zoo.json` manifest.
 
 use super::engine::Backend;
+use crate::obs::{self, Counter, Gauge, Histogram};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -31,6 +33,13 @@ pub struct ServerConfig {
     pub max_batch: usize,
     pub batch_timeout: Duration,
     pub queue_depth: usize,
+    /// When set, the server publishes its telemetry (latency breakdown
+    /// histograms, queue gauge, completion counters) into the process-wide
+    /// `obs` registry under `<prefix>.<metric>.<unit>` names — e.g.
+    /// `serve.queue_wait.ns`.  `None` (the default) keeps the metrics
+    /// private to the [`Server`] handle, so tests and embedded servers
+    /// never collide in the global namespace.
+    pub obs_prefix: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -43,6 +52,7 @@ impl Default for ServerConfig {
             max_batch: 256,
             batch_timeout: Duration::from_micros(50),
             queue_depth: 4096,
+            obs_prefix: None,
         }
     }
 }
@@ -100,23 +110,67 @@ impl Reservoir {
     }
 }
 
+/// Exact per-server telemetry: the per-request latency breakdown, batch
+/// fill distribution and queue gauge.  All handles are `Arc`s shared with
+/// the batcher/worker threads — clone freely and read any time.  Every
+/// completed request records exactly one sample into each of
+/// `queue_wait_ns`, `eval_ns`, `tail_ns` and `latency_ns`, so the four
+/// counts always equal `ServerStats::completed` on a quiesced server.
+#[derive(Clone, Default)]
+pub struct ServerMetrics {
+    /// Enqueue → batch dequeue by a worker, per request (nanoseconds).
+    pub queue_wait_ns: Arc<Histogram>,
+    /// Backend `infer_batch` wall time, recorded once per request in the
+    /// batch — the eval cost each request in that batch experienced.
+    pub eval_ns: Arc<Histogram>,
+    /// Fused-tail segment: end of batch eval → this request's response
+    /// delivered (prediction unpack + fan-out), per request.
+    pub tail_ns: Arc<Histogram>,
+    /// Full enqueue → response latency per request: the exact-count
+    /// primary source behind the `ServerStats` percentiles.
+    pub latency_ns: Arc<Histogram>,
+    /// Requests per dispatched batch.
+    pub batch_fill: Arc<Histogram>,
+    /// Requests admitted to the ingress queue and not yet responded to.
+    pub queue_depth: Arc<Gauge>,
+}
+
 struct StatsInner {
     lat: Reservoir,
-    completed: AtomicU64,
-    batches: AtomicU64,
-    batch_fill: AtomicU64,
-    rejected: AtomicUsize,
+    completed: Arc<Counter>,
+    batches: Arc<Counter>,
+    batch_fill_sum: Arc<Counter>,
+    rejected: Arc<Counter>,
+    m: ServerMetrics,
 }
 
 impl Default for StatsInner {
     fn default() -> Self {
         StatsInner {
             lat: Reservoir::new(LATENCY_RESERVOIR),
-            completed: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batch_fill: AtomicU64::new(0),
-            rejected: AtomicUsize::new(0),
+            completed: Arc::new(Counter::new()),
+            batches: Arc::new(Counter::new()),
+            batch_fill_sum: Arc::new(Counter::new()),
+            rejected: Arc::new(Counter::new()),
+            m: ServerMetrics::default(),
         }
+    }
+}
+
+impl StatsInner {
+    /// Publish this server's metrics into the global registry under
+    /// `<prefix>.<metric>.<unit>` (replacing any previous registration of
+    /// the same names — a restarted server takes over its slot).
+    fn publish(&self, prefix: &str) {
+        obs::publish_histogram(&format!("{prefix}.queue_wait.ns"), self.m.queue_wait_ns.clone());
+        obs::publish_histogram(&format!("{prefix}.eval.ns"), self.m.eval_ns.clone());
+        obs::publish_histogram(&format!("{prefix}.tail.ns"), self.m.tail_ns.clone());
+        obs::publish_histogram(&format!("{prefix}.latency.ns"), self.m.latency_ns.clone());
+        obs::publish_histogram(&format!("{prefix}.batch_fill.samples"), self.m.batch_fill.clone());
+        obs::publish_gauge(&format!("{prefix}.queue.depth"), self.m.queue_depth.clone());
+        obs::publish_counter(&format!("{prefix}.completed.count"), self.completed.clone());
+        obs::publish_counter(&format!("{prefix}.batches.count"), self.batches.clone());
+        obs::publish_counter(&format!("{prefix}.rejected.count"), self.rejected.clone());
     }
 }
 
@@ -142,20 +196,30 @@ pub fn percentile(sorted: &[f64], p: f64) -> Option<f64> {
 
 /// Snapshot of server statistics.
 ///
-/// The percentile fields describe the latency reservoir and are `0.0`
-/// until the first request completes — check `lat_samples > 0` before
-/// treating them as measurements (never NaN either way).
+/// `p50_us`/`p95_us`/`p99_us` come from the **exact-count** log2
+/// histogram over every completed request (`ServerMetrics::latency_ns`);
+/// `res_*` are the Algorithm-R reservoir's estimates over a uniform
+/// sample of the same stream (exact values, sampled stream) and serve as
+/// a cross-check — the two should agree to within one log2 bucket.  All
+/// percentile fields are `0.0` until the first request completes — check
+/// `completed > 0` before treating them as measurements (never NaN
+/// either way).
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     pub completed: u64,
     pub batches: u64,
     pub mean_batch: f64,
-    /// Latency samples currently in the reservoir backing the percentiles
-    /// (0 ⇒ the p50/p95/p99 fields are placeholders, not measurements).
+    /// Latency samples currently in the reservoir backing the `res_*`
+    /// cross-check percentiles (0 ⇒ all percentile fields are
+    /// placeholders, not measurements).
     pub lat_samples: usize,
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
+    /// Reservoir cross-check percentiles (lossy sample, exact values).
+    pub res_p50_us: f64,
+    pub res_p95_us: f64,
+    pub res_p99_us: f64,
     pub rejected: usize,
 }
 
@@ -178,6 +242,9 @@ impl Server {
     pub fn start_dyn(engine: Arc<dyn Backend>, cfg: ServerConfig) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let stats = Arc::new(StatsInner::default());
+        if let Some(prefix) = &cfg.obs_prefix {
+            stats.publish(prefix);
+        }
         // Batcher thread: coalesce, then fan batches to workers round-robin.
         let mut worker_txs = Vec::new();
         let mut handles = Vec::new();
@@ -202,16 +269,23 @@ impl Server {
     pub fn infer(&self, x: Vec<f32>) -> Option<usize> {
         if x.len() != self.in_features {
             // Malformed request: never let it scramble a packed batch.
-            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            self.stats.rejected.inc();
             return None;
         }
         let (rtx, rrx) = sync_channel(1);
         let req = Request { x, enqueued: Instant::now(), resp: rtx };
         if self.tx.try_send(req).is_err() {
-            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            self.stats.rejected.inc();
             return None;
         }
+        self.stats.m.queue_depth.add(1);
         rrx.recv().ok()
+    }
+
+    /// Handles to this server's exact telemetry (latency breakdown
+    /// histograms, batch fill, queue gauge).
+    pub fn metrics(&self) -> ServerMetrics {
+        self.stats.m.clone()
     }
 
     pub fn stats(&self) -> ServerStats {
@@ -221,18 +295,25 @@ impl Server {
         // partial_cmp().unwrap() here was the same panic family PR 3
         // fixed in pareto_frontier).
         lats.sort_by(f64::total_cmp);
-        let pct = |p: f64| percentile(&lats, p).unwrap_or(0.0);
-        let batches = self.stats.batches.load(Ordering::Relaxed);
-        let fill = self.stats.batch_fill.load(Ordering::Relaxed);
+        let res = |p: f64| percentile(&lats, p).unwrap_or(0.0);
+        // Primary percentiles from the exact-count histogram: every
+        // completed request is in it, not just a 100k-sample reservoir.
+        let hist = self.stats.m.latency_ns.snapshot();
+        let pct = |p: f64| hist.percentile(p).map(|ns| ns / 1e3).unwrap_or(0.0);
+        let batches = self.stats.batches.get();
+        let fill = self.stats.batch_fill_sum.get();
         ServerStats {
-            completed: self.stats.completed.load(Ordering::Relaxed),
+            completed: self.stats.completed.get(),
             batches,
             mean_batch: if batches == 0 { 0.0 } else { fill as f64 / batches as f64 },
             lat_samples: lats.len(),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
-            rejected: self.stats.rejected.load(Ordering::Relaxed),
+            res_p50_us: res(0.50),
+            res_p95_us: res(0.95),
+            res_p99_us: res(0.99),
+            rejected: self.stats.rejected.get() as usize,
         }
     }
 
@@ -272,8 +353,9 @@ fn batcher_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.batch_fill.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        stats.batches.inc();
+        stats.batch_fill_sum.add(batch.len() as u64);
+        stats.m.batch_fill.record(batch.len() as u64);
         // Round-robin dispatch; if a worker queue is full, rotate.
         let mut sent = false;
         for k in 0..worker_txs.len() {
@@ -311,17 +393,33 @@ fn worker_loop(
     // contiguous [batch, d] matrix so the backend sees a single batch call.
     let mut xs: Vec<f32> = Vec::new();
     while let Ok(batch) = rx.recv() {
+        // Per-request latency decomposition: queue wait (enqueue → this
+        // dequeue), eval (the batch's infer_batch call — every request in
+        // the batch experienced that cost), and the fused tail (end of
+        // eval → this response delivered).  One sample per request in
+        // each histogram, so their counts all equal `completed`.
+        let t_dequeue = Instant::now();
         xs.clear();
         for req in &batch {
+            stats.m.queue_wait_ns.record_duration(t_dequeue.duration_since(req.enqueued));
             xs.extend_from_slice(&req.x);
         }
+        let t_eval0 = Instant::now();
         let preds = engine.infer_batch(&xs);
+        let t_eval_end = Instant::now();
+        let eval = t_eval_end.duration_since(t_eval0);
         debug_assert_eq!(preds.len(), batch.len());
         for (req, class) in batch.into_iter().zip(preds) {
+            stats.m.eval_ns.record_duration(eval);
             let lat = req.enqueued.elapsed().as_secs_f64() * 1e6;
+            // Same value into both latency trackers: the exact histogram
+            // (primary) and the reservoir (sampled cross-check).
+            stats.m.latency_ns.record((lat * 1e3) as u64);
             stats.lat.offer(lat, &mut rng);
-            stats.completed.fetch_add(1, Ordering::Relaxed);
+            stats.completed.inc();
             let _ = req.resp.send(class);
+            stats.m.tail_ns.record_duration(t_eval_end.elapsed());
+            stats.m.queue_depth.add(-1);
         }
     }
 }
@@ -387,7 +485,7 @@ struct ZooModel {
     server: Server,
     /// Requests this model was chosen for (routing decisions, not
     /// completions — completions live in the per-model `ServerStats`).
-    routed: AtomicU64,
+    routed: Arc<Counter>,
 }
 
 /// Per-model stats snapshot from a [`ZooServer`].
@@ -418,7 +516,7 @@ pub struct ZooServer {
     models: Vec<ZooModel>,
     /// Index of the best-quality model (the unbudgeted/fallback target).
     best: usize,
-    fallbacks: AtomicU64,
+    fallbacks: Arc<Counter>,
     pub in_features: usize,
 }
 
@@ -449,10 +547,18 @@ impl ZooServer {
         }
         let mut models: Vec<ZooModel> = entries
             .into_iter()
-            .map(|(meta, engine)| ZooModel {
-                server: Server::start_dyn(engine, cfg.clone()),
-                meta,
-                routed: AtomicU64::new(0),
+            .map(|(meta, engine)| {
+                // Per-model telemetry namespace: `serve` as the base
+                // prefix yields `serve.<model>.queue_wait.ns` etc.
+                let mut mcfg = cfg.clone();
+                if let Some(base) = &cfg.obs_prefix {
+                    mcfg.obs_prefix = Some(format!("{base}.{}", meta.name));
+                }
+                let routed = Arc::new(Counter::new());
+                if let Some(base) = &cfg.obs_prefix {
+                    obs::publish_counter(&format!("{base}.{}.routed.count", meta.name), routed.clone());
+                }
+                ZooModel { server: Server::start_dyn(engine, mcfg), meta, routed }
             })
             .collect();
         models.sort_by(|a, b| {
@@ -474,7 +580,11 @@ impl ZooServer {
             })
             .map(|(i, _)| i)
             .unwrap_or(0);
-        Ok(ZooServer { models, best, fallbacks: AtomicU64::new(0), in_features })
+        let fallbacks = Arc::new(Counter::new());
+        if let Some(base) = &cfg.obs_prefix {
+            obs::publish_counter(&format!("{base}.fallbacks.count"), fallbacks.clone());
+        }
+        Ok(ZooServer { models, best, fallbacks, in_features })
     }
 
     /// Routing decision: `(model index, fallback?)` — fallback means no
@@ -506,10 +616,10 @@ impl ZooServer {
     pub fn infer(&self, x: Vec<f32>, budget: &Budget) -> Option<(usize, &str)> {
         let (i, fallback) = self.dispatch(budget);
         if fallback {
-            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            self.fallbacks.inc();
         }
         let m = &self.models[i];
-        m.routed.fetch_add(1, Ordering::Relaxed);
+        m.routed.inc();
         let class = m.server.infer(x)?;
         Some((class, m.meta.name.as_str()))
     }
@@ -527,7 +637,7 @@ impl ZooServer {
     /// Budgeted requests no model could satisfy (served by the best-quality
     /// fallback).
     pub fn fallbacks(&self) -> u64 {
-        self.fallbacks.load(Ordering::Relaxed)
+        self.fallbacks.get()
     }
 
     /// Per-model statistics, cheapest-first.
@@ -539,10 +649,61 @@ impl ZooServer {
                 luts: m.meta.luts,
                 quality: m.meta.quality,
                 budget_p99_us: m.meta.p99_us,
-                routed: m.routed.load(Ordering::Relaxed),
+                routed: m.routed.get(),
                 stats: m.server.stats(),
             })
             .collect()
+    }
+
+    /// Telemetry handles per model, cheapest-first (name, metrics).
+    pub fn model_metrics(&self) -> Vec<(String, ServerMetrics)> {
+        self.models.iter().map(|m| (m.meta.name.clone(), m.server.metrics())).collect()
+    }
+
+    /// Full per-model statistics as stable JSON — the `serve --zoo
+    /// --json` payload.  Includes everything the human table shows plus
+    /// the fields it elides: routing metadata, fallback and reject
+    /// counts, the reservoir cross-check percentiles and the exact
+    /// queue-wait / eval / fused-tail p99 breakdown.
+    pub fn stats_json(&self) -> Json {
+        let pct_us = |h: &Arc<Histogram>, p: f64| h.percentile(p).map(|ns| ns / 1e3).unwrap_or(0.0);
+        let models: Vec<Json> = self
+            .models
+            .iter()
+            .map(|m| {
+                let st = m.server.stats();
+                let mm = m.server.metrics();
+                Json::obj(vec![
+                    ("name", Json::str(&m.meta.name)),
+                    ("luts", Json::num(m.meta.luts as f64)),
+                    ("brams", Json::num(m.meta.brams as f64)),
+                    ("quality", Json::num(m.meta.quality)),
+                    ("budget_p50_us", Json::num(m.meta.p50_us)),
+                    ("budget_p99_us", Json::num(m.meta.p99_us)),
+                    ("routed", Json::num(m.routed.get() as f64)),
+                    ("completed", Json::num(st.completed as f64)),
+                    ("batches", Json::num(st.batches as f64)),
+                    ("mean_batch", Json::num(st.mean_batch)),
+                    ("lat_samples", Json::num(st.lat_samples as f64)),
+                    ("p50_us", Json::num(st.p50_us)),
+                    ("p95_us", Json::num(st.p95_us)),
+                    ("p99_us", Json::num(st.p99_us)),
+                    ("res_p50_us", Json::num(st.res_p50_us)),
+                    ("res_p95_us", Json::num(st.res_p95_us)),
+                    ("res_p99_us", Json::num(st.res_p99_us)),
+                    ("queue_wait_p99_us", Json::num(pct_us(&mm.queue_wait_ns, 0.99))),
+                    ("eval_p99_us", Json::num(pct_us(&mm.eval_ns, 0.99))),
+                    ("tail_p99_us", Json::num(pct_us(&mm.tail_ns, 0.99))),
+                    ("rejected", Json::num(st.rejected as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("zoo", Json::str("stats")),
+            ("best_model", Json::str(self.best_model())),
+            ("fallbacks", Json::num(self.fallbacks() as f64)),
+            ("models", Json::Arr(models)),
+        ])
     }
 
     /// Shut down every per-model server.
@@ -608,7 +769,24 @@ mod tests {
         let stats = server.stats();
         assert_eq!(stats.completed, 100);
         assert!(stats.batches >= 1);
-        assert!(stats.p50_us >= 0.0 && stats.p99_us >= stats.p50_us);
+        assert!(stats.p50_us > 0.0 && stats.p99_us >= stats.p50_us);
+        // Exact breakdown: every completed request contributes one sample
+        // to each phase histogram.
+        let m = server.metrics();
+        assert_eq!(m.queue_wait_ns.count(), 100);
+        assert_eq!(m.eval_ns.count(), 100);
+        assert_eq!(m.tail_ns.count(), 100);
+        assert_eq!(m.latency_ns.count(), 100);
+        assert_eq!(m.queue_depth.get(), 0, "all admitted requests responded");
+        // Reservoir held the full stream here, so the exact-histogram
+        // percentiles and the reservoir cross-check must agree to within
+        // one log2 bucket.
+        assert_eq!(stats.lat_samples, 100);
+        for (hist, res) in [(stats.p50_us, stats.res_p50_us), (stats.p99_us, stats.res_p99_us)] {
+            let d = crate::obs::bucket_index((hist * 1e3) as u64) as i64
+                - crate::obs::bucket_index((res * 1e3) as u64) as i64;
+            assert!(d.abs() <= 1, "histogram {hist}us vs reservoir {res}us disagree by {d} buckets");
+        }
         server.shutdown();
     }
 
@@ -684,12 +862,15 @@ mod tests {
         assert_eq!(st.completed, 0);
         assert_eq!(st.lat_samples, 0);
         assert!(st.p50_us == 0.0 && st.p95_us == 0.0 && st.p99_us == 0.0);
+        assert!(st.res_p50_us == 0.0 && st.res_p99_us == 0.0);
         assert!(!st.p50_us.is_nan() && !st.p99_us.is_nan());
-        // After one request the percentiles are measurements.
+        // After one request the percentiles are measurements (both the
+        // exact histogram and the reservoir cross-check).
         assert!(server.infer(vec![0.1; 6]).is_some());
         let st = server.stats();
         assert_eq!(st.lat_samples, 1);
         assert!(st.p50_us > 0.0);
+        assert!(st.res_p50_us > 0.0);
         server.shutdown();
     }
 
@@ -752,6 +933,23 @@ mod tests {
         assert_eq!(st[0].stats.completed, 2);
         assert_eq!(st[1].stats.completed, 2);
         assert!(st[0].stats.lat_samples > 0);
+
+        // The --json payload carries the full per-model stats, including
+        // the fields the human table elides.
+        let j = zoo.stats_json();
+        assert_eq!(j.get("zoo").and_then(|v| v.as_str()), Some("stats"));
+        assert_eq!(j.req_f64("fallbacks").unwrap(), 1.0);
+        let models = j.get("models").and_then(|m| m.as_arr()).unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].req_str("name").unwrap(), "cheap");
+        assert_eq!(models[0].req_f64("routed").unwrap(), 2.0);
+        assert_eq!(models[0].req_f64("rejected").unwrap(), 0.0);
+        assert!(models[0].req_f64("p99_us").unwrap() > 0.0);
+        assert!(models[0].req_f64("res_p99_us").unwrap() > 0.0);
+        assert!(models[0].req_f64("queue_wait_p99_us").unwrap() >= 0.0);
+        // Round-trips through the JSON emitter/parser.
+        let text = j.to_string();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
         zoo.shutdown();
     }
 

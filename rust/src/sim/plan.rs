@@ -21,8 +21,18 @@
 //! allocate nothing after warmup.
 
 use super::{lut_chunk, BitMatrix, Chunk, LANES};
+use crate::obs;
 use crate::synth::netlist::{Net, Netlist};
 use crate::util::pool;
+use std::sync::{Arc, OnceLock};
+
+/// Chunks-evaluated counter handle, cached so the per-chunk hot path is
+/// one relaxed atomic add (no registry lookup).  One chunk = 256 samples
+/// of work, so the overhead is far below the sim bench's 5% budget.
+fn chunks_counter() -> &'static Arc<obs::Counter> {
+    static CHUNKS: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    CHUNKS.get_or_init(|| obs::counter("sim.chunks_evaluated.count"))
+}
 
 /// A `Netlist` compiled to a level-ordered arena schedule.
 #[derive(Debug, Clone)]
@@ -48,6 +58,7 @@ impl EvalPlan {
     /// panics here with the full finding list instead of an ad-hoc assert.
     /// BRAM ports are rejected at evaluation time, as before.
     pub fn compile(netlist: &Netlist) -> EvalPlan {
+        obs::inc("sim.plan_compiles.count");
         assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
         let errs = crate::synth::lint::evaluability_errors(netlist);
         assert!(
@@ -162,6 +173,9 @@ impl EvalPlan {
     /// at or beyond the plane end read as zero and produce don't-care
     /// values (callers mask via `BitMatrix` tail handling).
     pub fn eval_chunk(&self, inputs: &BitMatrix, w0: usize, vals: &mut [Chunk]) {
+        if obs::enabled() {
+            chunks_counter().inc();
+        }
         debug_assert_eq!(inputs.planes(), self.num_inputs, "input plane count");
         debug_assert_eq!(vals.len(), self.vals_len(), "value array length");
         let wpp = inputs.words_per_plane();

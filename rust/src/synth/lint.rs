@@ -507,7 +507,13 @@ pub fn lint_netlist(nl: &Netlist, opts: &LintOptions) -> LintReport {
         }
     }
 
-    LintReport { findings }
+    let report = LintReport { findings };
+    if crate::obs::enabled() {
+        crate::obs::add("synth.lint.errors.count", report.errors() as u64);
+        crate::obs::add("synth.lint.warns.count", report.warns() as u64);
+        crate::obs::add("synth.lint.infos.count", report.infos() as u64);
+    }
+    report
 }
 
 fn first_duplicate(inputs: &[Net]) -> Option<(usize, usize)> {

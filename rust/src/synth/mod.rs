@@ -20,6 +20,7 @@ pub mod opt;
 
 use crate::luts::ModelTables;
 use crate::nn::ExportedModel;
+use crate::obs;
 use anyhow::{ensure, Result};
 pub use boolfn::BoolFn;
 pub use lint::{lint_netlist, LintOptions, LintReport};
@@ -81,6 +82,8 @@ pub fn synthesize(
     tables: &ModelTables,
     opts: SynthOpts,
 ) -> Result<(Netlist, SynthReport)> {
+    let _span = obs::Span::named("synth.synthesize.ns");
+    obs::inc("synth.netlists.count");
     let emitted: Vec<usize> = tables
         .layers
         .iter()

@@ -32,8 +32,11 @@ use super::boolfn::BoolFn;
 use super::cover;
 use super::mapper::canonical_order;
 use super::netlist::{LutNode, Net, Netlist};
+use crate::obs;
 use crate::sim::{eval_netlist, BitMatrix};
 use std::collections::HashMap;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 /// How hard `synthesize` optimizes the mapped netlist.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -105,6 +108,17 @@ impl OptStats {
 /// strictly lowers the node count, so real inputs converge far earlier.
 const MAX_ROUNDS: usize = 64;
 
+/// Per-pass wall-time histogram, handle cached so the hot fixed-point loop
+/// never takes the registry lock.
+fn pass_hist(pass: Pass) -> &'static Arc<obs::Histogram> {
+    static CSE: OnceLock<Arc<obs::Histogram>> = OnceLock::new();
+    static SWEEP: OnceLock<Arc<obs::Histogram>> = OnceLock::new();
+    match pass {
+        Pass::Cse => CSE.get_or_init(|| obs::histogram("synth.pass.cse.ns")),
+        Pass::Sweep => SWEEP.get_or_init(|| obs::histogram("synth.pass.sweep.ns")),
+    }
+}
+
 /// Run the CSE+sweep pipeline to its fixed point.  Netlists with BRAM
 /// pseudo-ports are returned unchanged: their pseudo-input wiring cannot be
 /// re-verified by the simulator, and BRAM-mapped designs are never served.
@@ -116,9 +130,17 @@ pub fn optimize(netlist: &Netlist, level: OptLevel) -> (Netlist, OptStats) {
     }
     let mut cur = netlist.clone();
     loop {
+        let t_cse = Instant::now();
         let a = run_pass(&cur, Pass::Cse);
+        if obs::enabled() {
+            pass_hist(Pass::Cse).record_duration(t_cse.elapsed());
+        }
         stats.pass_luts.push(a.num_luts());
+        let t_sweep = Instant::now();
         let b = run_pass(&a, Pass::Sweep);
+        if obs::enabled() {
+            pass_hist(Pass::Sweep).record_duration(t_sweep.elapsed());
+        }
         stats.pass_luts.push(b.num_luts());
         stats.rounds += 1;
         let fixed = b == cur;
@@ -133,6 +155,13 @@ pub fn optimize(netlist: &Netlist, level: OptLevel) -> (Netlist, OptStats) {
     // rather than an accident, and `lint`'s stale-level rule enforces it).
     cur.relevel();
     stats.post_luts = cur.num_luts();
+    if obs::enabled() {
+        obs::add(
+            "synth.opt.luts_removed.count",
+            stats.pre_luts.saturating_sub(stats.post_luts) as u64,
+        );
+        obs::add("synth.opt.rounds.count", stats.rounds as u64);
+    }
     (cur, stats)
 }
 

@@ -167,6 +167,7 @@ impl BenchReport {
     fn to_json(&self) -> Json {
         Json::obj(vec![
             ("bench", Json::str(&self.name)),
+            ("meta", provenance_meta()),
             ("scenarios", Json::Arr(self.scenarios.clone())),
         ])
     }
@@ -196,6 +197,36 @@ impl BenchReport {
             }
         }
     }
+}
+
+/// Provenance block stamped into every `BENCH_*.json` under `"meta"`: two
+/// artifacts from different commits or machines stop being silently
+/// comparable.  The regression gate reads only `"scenarios"`, so baselines
+/// with or without a meta block keep working unchanged.
+pub fn provenance_meta() -> Json {
+    // CI exports GITHUB_SHA (checkouts can be detached or shallow); local
+    // runs ask git; neither available degrades to "unknown".
+    let git_sha = std::env::var("GITHUB_SHA")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .or_else(git_head_sha)
+        .unwrap_or_else(|| "unknown".to_string());
+    Json::obj(vec![
+        ("git_sha", Json::str(&git_sha)),
+        ("lanes", Json::num(crate::sim::LANES as f64)),
+        ("chunk_samples", Json::num((crate::sim::LANES * 64) as f64)),
+        ("threads", Json::num(crate::util::pool::num_threads() as f64)),
+        ("quick", Json::Bool(std::env::var("BENCH_QUICK").is_ok())),
+    ])
+}
+
+fn git_head_sha() -> Option<String> {
+    let out = std::process::Command::new("git").args(["rev-parse", "HEAD"]).output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let sha = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    (!sha.is_empty()).then_some(sha)
 }
 
 /// Compare `report` against `baseline` (both in the `BENCH_*.json` shape;
@@ -282,6 +313,20 @@ mod tests {
         // Improvements never fail.
         let report = report_json(vec![("a", 2000.0)]);
         assert!(check_regressions(&report, &baseline, 0.20).is_empty());
+    }
+
+    #[test]
+    fn provenance_meta_has_stable_shape() {
+        let m = provenance_meta();
+        assert!(m.get("git_sha").and_then(|v| v.as_str()).is_some());
+        assert_eq!(m.get("lanes").and_then(|v| v.as_f64()), Some(crate::sim::LANES as f64));
+        assert!(m.get("threads").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0);
+        assert!(m.get("quick").and_then(|v| v.as_bool()).is_some());
+        // The gate must keep reading reports that carry a meta block.
+        let mut rep = BenchReport::new("meta-shape");
+        rep.add_with("s", vec![("throughput_per_s", Json::num(100.0))]);
+        let baseline = report_json(vec![("s", 100.0)]);
+        assert!(check_regressions(&rep.to_json(), &baseline, 0.20).is_empty());
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! Telemetry-core integration tests (DESIGN.md §13): the log2-histogram
+//! contract that `ServerStats` percentiles rely on — exact bucket edges,
+//! mergeable snapshots, monotone percentiles, the empty-histogram `None`
+//! contract, and the property that the histogram's estimates stay within
+//! one bucket of the exact (reservoir-style) percentiles of the stream.
+
+use logicnets::obs::{
+    bucket_bounds, bucket_index, Histogram, HistogramSnapshot, SnapshotReport, Span, BUCKETS,
+};
+use logicnets::serve::router::percentile;
+use logicnets::util::rng::Rng;
+
+#[test]
+fn bucket_boundaries_are_exact_powers_of_two() {
+    assert_eq!(bucket_index(0), 0);
+    assert_eq!(bucket_index(1), 1);
+    for k in 1..63u32 {
+        let v = 1u64 << k;
+        // 2^k starts a new bucket; 2^k - 1 is the last value of the one below.
+        assert_eq!(bucket_index(v), ((k + 1) as usize).min(BUCKETS - 1), "2^{k}");
+        assert_eq!(bucket_index(v - 1), bucket_index(v) - 1, "2^{k} - 1");
+        let (lo, hi) = bucket_bounds(bucket_index(v));
+        assert!(lo <= v && (v < hi || bucket_index(v) == BUCKETS - 1), "2^{k} in [{lo},{hi})");
+    }
+    assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+}
+
+#[test]
+fn merge_is_associative_commutative_and_count_preserving() {
+    let mut rng = Rng::new(0xA11CE);
+    let hs: Vec<HistogramSnapshot> = (0..3)
+        .map(|_| {
+            let h = Histogram::new();
+            for _ in 0..500 {
+                h.record(rng.below(1 << 20) as u64);
+            }
+            h.snapshot()
+        })
+        .collect();
+    let left = hs[0].merge(&hs[1]).merge(&hs[2]);
+    let right = hs[0].merge(&hs[1].merge(&hs[2]));
+    assert_eq!(left, right);
+    assert_eq!(left.count(), 1500);
+    assert_eq!(hs[0].merge(&hs[1]), hs[1].merge(&hs[0]));
+}
+
+#[test]
+fn percentiles_are_monotone_and_empty_is_none() {
+    let empty = Histogram::new();
+    assert_eq!(empty.percentile(0.5), None);
+    assert_eq!(empty.snapshot().percentile(0.99), None);
+    assert_eq!(empty.snapshot().mean(), None);
+
+    let mut rng = Rng::new(7);
+    let h = Histogram::new();
+    for _ in 0..2000 {
+        h.record(1 + rng.below(1 << 24) as u64);
+    }
+    let s = h.snapshot();
+    let mut prev = 0.0f64;
+    for i in 0..=100 {
+        let v = s.percentile(i as f64 / 100.0).unwrap();
+        assert!(v >= prev, "p{i} = {v} went below {prev}");
+        prev = v;
+    }
+    assert!(s.percentile(0.0).unwrap() >= s.min as f64);
+    assert!(s.percentile(1.0).unwrap() <= s.max as f64);
+}
+
+/// Random latency streams: the histogram's p50/p99 must land within one
+/// log2 bucket of the exact interpolated percentile over the full sorted
+/// stream — which is also what the router's reservoir reports whenever the
+/// stream fits its capacity, so this is exactly the serve-path cross-check.
+#[test]
+fn prop_histogram_percentiles_bracket_exact_stream() {
+    for seed in [1u64, 7, 42, 0xBEEF] {
+        let mut rng = Rng::new(seed);
+        let h = Histogram::new();
+        let mut stream: Vec<f64> = Vec::new();
+        for _ in 0..3000 {
+            // Log-uniform latencies, ~1us .. ~16ms in ns.
+            let base = 1_000u64 << rng.below(14);
+            let ns = base + rng.below(base as usize) as u64;
+            h.record(ns);
+            stream.push(ns as f64);
+        }
+        stream.sort_by(f64::total_cmp);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 3000);
+        for p in [0.5, 0.9, 0.99] {
+            let exact = percentile(&stream, p).unwrap();
+            let est = s.percentile(p).unwrap();
+            let d =
+                (bucket_index(est as u64) as i64 - bucket_index(exact as u64) as i64).abs();
+            assert!(d <= 1, "seed {seed} p{p}: est {est} vs exact {exact}, {d} buckets apart");
+        }
+    }
+}
+
+#[test]
+fn span_and_registry_roundtrip_through_snapshot_json() {
+    let h = logicnets::obs::histogram("test.obs_telemetry.span.ns");
+    {
+        let _s = Span::start(&h);
+        std::thread::sleep(std::time::Duration::from_micros(50));
+    }
+    assert!(h.count() >= 1);
+    assert!(h.percentile(0.5).unwrap() >= 50_000.0, "span under the 50us sleep");
+
+    let snap = logicnets::obs::snapshot();
+    let js = snap.to_json();
+    let back = SnapshotReport::from_json(&js).unwrap();
+    assert_eq!(back.to_json().to_string(), js.to_string(), "snapshot JSON is byte-stable");
+    assert!(back.histogram("test.obs_telemetry.span.ns").unwrap().count() >= 1);
+    assert!(!back.render().is_empty());
+}

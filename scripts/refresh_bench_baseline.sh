@@ -18,14 +18,25 @@ trap 'rm -rf "$out"' EXIT
 
 python3 - "$out" > BENCH_baseline.json <<'PY'
 import json, sys, glob, datetime
-scenarios = []
+scenarios, meta = [], {}
 for path in sorted(glob.glob(sys.argv[1] + "/BENCH_*.json")):
     with open(path) as f:
-        scenarios.extend(json.load(f)["scenarios"])
+        rep = json.load(f)
+    scenarios.extend(rep["scenarios"])
+    # Every report stamps the same machine provenance (git sha, sim
+    # geometry, thread count); carry it into the baseline so the machine
+    # note no longer needs to be written by hand.
+    meta = rep.get("meta", meta)
+note = ("Measured baseline (full mode) recorded by scripts/refresh_bench_baseline.sh on "
+        + datetime.date.today().isoformat())
+if meta:
+    note += (" at commit %s (%s threads, %s lanes)"
+             % (str(meta.get("git_sha", "unknown"))[:12],
+                int(meta.get("threads", 0)), int(meta.get("lanes", 0))))
 print(json.dumps({
     "bench": "baseline",
-    "note": "Measured baseline (full mode) recorded by scripts/refresh_bench_baseline.sh on "
-            + datetime.date.today().isoformat() + ".",
+    "note": note + ".",
+    "meta": meta,
     "scenarios": scenarios,
 }, indent=2))
 PY
