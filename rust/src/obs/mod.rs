@@ -326,6 +326,14 @@ impl HistogramSnapshot {
     /// JSON form: exact fields plus derived percentiles for convenience
     /// (`from_json` ignores the derived ones).  Buckets are emitted
     /// sparsely as `[index, count]` pairs.
+    ///
+    /// Precision: `util::json::Json` numbers are f64, so integer fields
+    /// (counts, sums) round-trip exactly only up to 2^53.  Counts can't
+    /// realistically get there (2^53 events ≈ 285 years at 1M req/s), but
+    /// a nanosecond `sum` crosses it after ~104 cumulative days of
+    /// recorded time — past that, persisted snapshots round the sum (and
+    /// thus `mean()`) to the nearest representable f64; bucket counts,
+    /// and therefore percentiles, stay exact.
     pub fn to_json(&self) -> Json {
         let buckets: Vec<Json> = self
             .buckets
@@ -642,7 +650,9 @@ impl SnapshotReport {
     /// Stable JSON: `{"obs":"snapshot","version":1,"counters":{...},
     /// "gauges":{...},"histograms":{name:{count,sum,min,max,p50,p95,p99,
     /// buckets:[[i,c],...]}}}`.  Object keys are BTreeMap-ordered, so the
-    /// output is byte-stable for a given snapshot.
+    /// output is byte-stable for a given snapshot.  Integer fields are
+    /// carried as f64 JSON numbers and round-trip exactly up to 2^53 (see
+    /// [`HistogramSnapshot::to_json`]).
     pub fn to_json(&self) -> Json {
         let counters: BTreeMap<String, Json> =
             self.counters.iter().map(|(n, v)| (n.clone(), Json::num(*v as f64))).collect();

@@ -274,11 +274,15 @@ impl Server {
         }
         let (rtx, rrx) = sync_channel(1);
         let req = Request { x, enqueued: Instant::now(), resp: rtx };
+        // Gauge up before the request becomes visible to the batcher: if it
+        // went up after try_send, a fast worker could decrement first and a
+        // concurrent snapshot would read the gauge negative.
+        self.stats.m.queue_depth.add(1);
         if self.tx.try_send(req).is_err() {
+            self.stats.m.queue_depth.add(-1);
             self.stats.rejected.inc();
             return None;
         }
-        self.stats.m.queue_depth.add(1);
         rrx.recv().ok()
     }
 
@@ -417,9 +421,13 @@ fn worker_loop(
             stats.m.latency_ns.record((lat * 1e3) as u64);
             stats.lat.offer(lat, &mut rng);
             stats.completed.inc();
-            let _ = req.resp.send(class);
+            // All bookkeeping lands before the response is sent: once a
+            // client's infer() returns, the tail histogram already holds
+            // this request and the queue gauge is back down, so snapshots
+            // taken "after all calls returned" are exact, not racy.
             stats.m.tail_ns.record_duration(t_eval_end.elapsed());
             stats.m.queue_depth.add(-1);
+            let _ = req.resp.send(class);
         }
     }
 }

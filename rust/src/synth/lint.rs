@@ -510,7 +510,7 @@ pub fn lint_netlist(nl: &Netlist, opts: &LintOptions) -> LintReport {
     let report = LintReport { findings };
     if crate::obs::enabled() {
         crate::obs::add("synth.lint.errors.count", report.errors() as u64);
-        crate::obs::add("synth.lint.warns.count", report.warns() as u64);
+        crate::obs::add("synth.lint.warns.count", report.warnings() as u64);
         crate::obs::add("synth.lint.infos.count", report.infos() as u64);
     }
     report
