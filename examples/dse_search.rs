@@ -40,6 +40,9 @@ fn main() -> anyhow::Result<()> {
         bram_min_bits: vec![13],
         skips: vec![0, 1],
         shapes: vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }],
+        conv_modes: vec!["none".to_string()],
+        channels: vec![4],
+        kernels: vec![3],
     };
     let opts = SearchOpts {
         budget_luts: 8_000,

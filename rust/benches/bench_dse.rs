@@ -67,4 +67,36 @@ fn main() {
         screened >= GATE_RATE_FLOOR,
         "cost gate regressed below {GATE_RATE_FLOOR} candidates/sec: {screened:.0}"
     );
+
+    // Conv scenario: a pool swept over the conv axes (kept separate from
+    // the default pool above so BENCH_baseline.json stays comparable).
+    // Conv pricing walks the exact per-pixel window geometry, so it is
+    // orders of magnitude heavier than the closed-form MLP price — the
+    // same >= 10k/s floor still must hold for the gate to stay free.
+    let mut conv_axes = SearchAxes::jets_default();
+    conv_axes.conv_modes = vec!["none".into(), "dense".into(), "dw".into()];
+    conv_axes.channels = vec![2, 4];
+    let conv_cands = generate(&conv_axes, 1, usize::MAX);
+    let n_conv = conv_cands.iter().filter(|c| c.conv.is_some()).count();
+    println!("conv pool: {} candidates ({n_conv} conv-wired)", conv_cands.len());
+    assert!(n_conv > 0, "conv axes must be in the benched pool");
+    let r = bench("dse cost gate (conv axes)", Duration::from_millis(300), || {
+        let mut admitted = 0usize;
+        for c in &conv_cands {
+            if gate.admits(gate.price(c, 16, 5)) {
+                admitted += 1;
+            }
+        }
+        std::hint::black_box(admitted);
+    });
+    r.report_throughput(conv_cands.len() as f64, "candidates");
+    let conv_screened =
+        gate_screen_rate(&conv_cands, &gate, 16, 5, Duration::from_millis(200));
+    println!(
+        "conv gate screening rate: {conv_screened:.0} candidates/sec (floor {GATE_RATE_FLOOR})"
+    );
+    assert!(
+        conv_screened >= GATE_RATE_FLOOR,
+        "conv cost gate below {GATE_RATE_FLOOR} candidates/sec: {conv_screened:.0}"
+    );
 }

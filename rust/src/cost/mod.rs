@@ -173,19 +173,41 @@ pub fn mlp_cost(layers: &[(usize, Option<usize>, usize, usize, usize)]) -> Vec<L
         .collect()
 }
 
-/// Cost from a runtime manifest (the canonical entry point).
+/// Cost from a runtime manifest (the canonical entry point).  Layer
+/// classification goes through [`crate::runtime::Manifest::layer_kinds`]
+/// — the accounting shared with the DSE gate — so conv layers are priced
+/// by their exact per-neuron truncated windows ([`crate::runtime::ConvGeom::lut_cost`])
+/// and can never diverge from what `synth::synthesize` reports.
 pub fn manifest_cost(man: &crate::runtime::Manifest) -> Vec<LayerCost> {
+    use crate::runtime::LayerKind;
     let n = man.num_layers();
-    let layers: Vec<(usize, Option<usize>, usize, usize, usize)> = man
-        .layers
+    let kinds = match man.layer_kinds() {
+        Ok(k) => k,
+        // Inconsistent conv extras are rejected at parse/construction time;
+        // fall back to the fanin-based view rather than panicking here.
+        Err(_) => man
+            .layers
+            .iter()
+            .map(|l| match l.fanin {
+                Some(f) => LayerKind::Sparse { fanin: f.min(l.in_f) },
+                None => LayerKind::Dense,
+            })
+            .collect(),
+    };
+    man.layers
         .iter()
+        .zip(&kinds)
         .enumerate()
-        .map(|(i, l)| {
+        .map(|(i, (l, kind))| {
             let bw_out = if i + 1 == n { man.bw_out } else { man.bw };
-            (l.out_f, l.fanin, l.bw_in, bw_out, l.in_f)
+            let luts = match kind {
+                LayerKind::Sparse { fanin } => sparse_layer_cost(l.out_f, *fanin, l.bw_in, bw_out),
+                LayerKind::Dense => dense_layer_cost(l.out_f, l.in_f, l.bw_in, DENSE_BW_WT),
+                LayerKind::Conv(g) => g.lut_cost(l.bw_in, bw_out),
+            };
+            LayerCost { name: format!("L{}", i + 1), luts }
         })
-        .collect();
-    mlp_cost(&layers)
+        .collect()
 }
 
 /// Whole-model LUT total.  Saturating: a single saturated layer cost
@@ -313,6 +335,24 @@ mod tests {
             LayerCost { name: "b".into(), luts: 4 },
         ];
         assert_eq!(total_luts(&finite), 7);
+    }
+
+    #[test]
+    fn manifest_cost_prices_conv_by_exact_windows() {
+        let man = crate::runtime::Manifest::synthetic_conv(
+            "c", "jets", 6, 1, 5, &[3], 3, "dense", Some(4), None, &[8], 3, 2,
+        )
+        .unwrap();
+        let costs = manifest_cost(&man);
+        assert_eq!(costs.len(), 3);
+        let geoms = man.conv_geoms().unwrap();
+        assert_eq!(costs[0].luts, geoms[0].lut_cost(2, 2), "conv layer priced per-neuron");
+        assert_eq!(costs[1].luts, sparse_layer_cost(8, 3, 2, 2));
+        assert_eq!(costs[2].luts, dense_layer_cost(5, 8, 2, DENSE_BW_WT));
+        // border truncation makes the exact price strictly cheaper than the
+        // uniform full-fanin bound at bw where table size is fanin-sensitive
+        let uniform = sparse_layer_cost(geoms[0].out_f(), geoms[0].window_fanin, 2, 2);
+        assert!(costs[0].luts <= uniform);
     }
 
     #[test]

@@ -36,7 +36,10 @@
 //! generator sweeps **skip-connection counts** and **pyramid width
 //! schedules** ([`WidthShape`]), whose candidates train through the
 //! skip-concat forward/backward and serve as skip netlists end to end
-//! (DESIGN.md §10).
+//! (DESIGN.md §10), plus **conv front-ends** ([`ConvSpec`]): a stride-2
+//! conv stage on the task input viewed as a square image, lowered to
+//! per-pixel boolean neurons and priced with the exact per-window
+//! geometry (`ConvGeom::lut_cost`, DESIGN.md §14).
 
 use super::{marginal_cost, pareto_frontier, pareto_frontier_3d, DesignPoint};
 use crate::cost;
@@ -122,9 +125,9 @@ impl WidthShape {
 
 /// The search space: one choice per axis of the paper's exploration
 /// chapter — hidden width/depth, width schedule (rectangle vs pyramid
-/// taper), skip-connection count, per-layer fan-in γ, activation bits β,
-/// sparsity method, and the BRAM-spill threshold used when the winner is
-/// synthesized.
+/// taper), skip-connection count, conv front-end (mode × channels ×
+/// kernel), per-layer fan-in γ, activation bits β, sparsity method, and
+/// the BRAM-spill threshold used when the winner is synthesized.
 #[derive(Debug, Clone)]
 pub struct SearchAxes {
     pub widths: Vec<usize>,
@@ -137,6 +140,14 @@ pub struct SearchAxes {
     pub skips: Vec<usize>,
     /// Hidden-width schedules applied to each (width, depth) pair.
     pub shapes: Vec<WidthShape>,
+    /// Conv front-end modes: `"none"` (pure MLP), `"dense"` (one stride-2
+    /// full-window stage) or `"dw"` (depthwise + pointwise stage pair).
+    pub conv_modes: Vec<String>,
+    /// Conv out-channel counts, swept only for non-`"none"` modes.
+    pub channels: Vec<usize>,
+    /// Conv kernel sides (odd, SAME padding), swept only for non-`"none"`
+    /// modes.
+    pub kernels: Vec<usize>,
 }
 
 impl SearchAxes {
@@ -154,6 +165,9 @@ impl SearchAxes {
             bram_min_bits: vec![13],
             skips: vec![0, 1],
             shapes: vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }],
+            conv_modes: vec!["none".to_string()],
+            channels: vec![4],
+            kernels: vec![3],
         }
     }
 
@@ -168,15 +182,18 @@ impl SearchAxes {
             * self.bram_min_bits.len()
             * self.skips.len()
             * self.shapes.len()
+            * self.conv_modes.len()
+            * self.channels.len()
+            * self.kernels.len()
     }
 
     /// Compact fingerprint of the whole search space.  Stored in the
     /// archive and compared on `--resume`: two runs over different axes
     /// generate different candidate pools, so replaying one against the
     /// other's archive would silently break the zero-retraining contract.
-    /// The skip/shape sections are appended only when non-default, so
-    /// archives written before those axes existed keep their key and stay
-    /// resumable with the defaults.
+    /// The skip/shape/conv sections are appended only when non-default,
+    /// so archives written before those axes existed keep their key and
+    /// stay resumable with the defaults.
     pub fn key(&self) -> String {
         let join = |v: &[usize]| {
             v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("-")
@@ -198,13 +215,35 @@ impl SearchAxes {
             let shapes: Vec<String> = self.shapes.iter().map(|s| s.name()).collect();
             k.push_str(&format!("_y{}", shapes.join("-")));
         }
+        if self.conv_modes != ["none"] {
+            k.push_str(&format!("_c{}", self.conv_modes.join("-")));
+        }
+        if self.channels != [4] {
+            k.push_str(&format!("_n{}", join(&self.channels)));
+        }
+        if self.kernels != [3] {
+            k.push_str(&format!("_k{}", join(&self.kernels)));
+        }
         k
     }
 }
 
+/// Conv front-end of a candidate: one stride-2 stage on the task input
+/// interpreted as a 1-channel square image (`Manifest::conv_image_side`).
+/// `mode` is `"dense"` or `"dw"`; the stage's window fan-in is the
+/// candidate's γ capped at the table-width limit, exactly as
+/// [`Manifest::synthetic_conv_for_task`] builds it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub mode: String,
+    pub channels: usize,
+    pub kernel: usize,
+}
+
 /// One topology candidate: everything needed to build its `Manifest`.
 /// `hidden` carries the realized per-layer widths (so pyramid schedules
-/// need no extra state) and `skips` the newest-first skip-concat count.
+/// need no extra state), `skips` the newest-first skip-concat count, and
+/// `conv` the optional conv front-end (conv manifests are skip-free).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
     pub hidden: Vec<usize>,
@@ -213,13 +252,15 @@ pub struct Candidate {
     pub method: PruneMethod,
     pub bram_min_bits: usize,
     pub skips: usize,
+    pub conv: Option<ConvSpec>,
 }
 
 impl Candidate {
     /// Stable identifier: axes only, so the same point re-identifies
     /// itself across runs (the archive is keyed by this).  Skip-free
-    /// candidates keep their pre-skip-axis names, so old archives
-    /// re-identify the same points.
+    /// candidates keep their pre-skip-axis names, and conv-free
+    /// candidates their pre-conv-axis names, so old archives re-identify
+    /// the same points.
     pub fn name(&self) -> String {
         let hl: Vec<String> = self.hidden.iter().map(|h| h.to_string()).collect();
         let tag = match self.method {
@@ -234,21 +275,40 @@ impl Candidate {
         if self.bram_min_bits != 13 {
             n.push_str(&format!("_r{}", self.bram_min_bits));
         }
+        if let Some(cv) = &self.conv {
+            n.push_str(&format!("_c{}{}k{}", cv.mode, cv.channels, cv.kernel));
+        }
         n
     }
 
-    /// Full manifest for this candidate on the given task shape.
-    pub fn manifest(&self, dataset: &str, in_features: usize, classes: usize) -> Manifest {
-        Manifest::synthetic_topology(
-            &self.name(),
-            dataset,
-            in_features,
-            classes,
-            &self.hidden,
-            self.fanin,
-            self.bw,
-            self.skips,
-        )
+    /// Full manifest for this candidate on the given task shape.  Errs
+    /// only for conv candidates whose geometry is impossible on the task
+    /// (non-square `in_features`, kernel larger than the image side).
+    pub fn manifest(&self, dataset: &str, in_features: usize, classes: usize) -> Result<Manifest> {
+        match &self.conv {
+            Some(cv) => Manifest::synthetic_conv_for_task(
+                &self.name(),
+                dataset,
+                in_features,
+                classes,
+                &self.hidden,
+                self.fanin,
+                self.bw,
+                &cv.mode,
+                cv.channels,
+                cv.kernel,
+            ),
+            None => Ok(Manifest::synthetic_topology(
+                &self.name(),
+                dataset,
+                in_features,
+                classes,
+                &self.hidden,
+                self.fanin,
+                self.bw,
+                self.skips,
+            )),
+        }
     }
 
     /// Analytical LUT cost of the whole model — the gate's fast path.
@@ -257,8 +317,23 @@ impl Candidate {
     /// `tests/dse_search.rs`): sparse hidden layers at eq. 2.3, dense
     /// head at eq. 4.1, every layer priced at its skip-widened `in_f`
     /// (shared with the manifest via `Manifest::skip_in_widths`, so gate
-    /// and exact pricing cannot diverge).
+    /// and exact pricing cannot diverge).  Conv candidates price their
+    /// stages with the exact per-window geometry (`ConvGeom::lut_cost`
+    /// over the same lowered geometries the manifest uses); an
+    /// impossible geometry saturates to `u64::MAX`, which no budget
+    /// admits.
     pub fn analytical_luts(&self, in_features: usize, classes: usize) -> u64 {
+        if let Some(cv) = &self.conv {
+            return match self.conv_prefix_luts(cv, in_features) {
+                Some((prefix, head_in)) => prefix.saturating_add(cost::dense_layer_cost(
+                    classes,
+                    head_in,
+                    self.bw,
+                    cost::DENSE_BW_WT,
+                )),
+                None => u64::MAX,
+            };
+        }
         let in_widths = Manifest::skip_in_widths(in_features, &self.hidden, self.skips);
         self.sparse_prefix_luts_with(&in_widths).saturating_add(cost::dense_layer_cost(
             classes,
@@ -269,13 +344,56 @@ impl Candidate {
     }
 
     /// Analytical cost of the sparse (table-mapped) prefix only — what
-    /// `synthesize` reports as `analytical_luts` for this model.
+    /// `synthesize` reports as `analytical_luts` for this model.  For
+    /// conv candidates the prefix is the conv stages plus the sparse
+    /// hidden stack (all table-mapped); `u64::MAX` when the geometry is
+    /// impossible on this task.
     pub fn sparse_prefix_luts(&self, in_features: usize) -> u64 {
+        if let Some(cv) = &self.conv {
+            return self
+                .conv_prefix_luts(cv, in_features)
+                .map(|(prefix, _)| prefix)
+                .unwrap_or(u64::MAX);
+        }
         self.sparse_prefix_luts_with(&Manifest::skip_in_widths(
             in_features,
             &self.hidden,
             self.skips,
         ))
+    }
+
+    /// Conv-candidate prefix price and the head's input width: the conv
+    /// stages at their exact per-window cost followed by the sparse
+    /// hidden stack, over the same geometries
+    /// [`Manifest::synthetic_conv_for_task`] lowers (same γ cap, same
+    /// subsample seeds), so gate and exact pricing cannot diverge.
+    /// `None` when `in_features` is not a square image or the kernel
+    /// does not fit it.
+    fn conv_prefix_luts(&self, cv: &ConvSpec, in_features: usize) -> Option<(u64, usize)> {
+        let hw = Manifest::conv_image_side(in_features)?;
+        let cap = (crate::luts::MAX_IN_BITS / self.bw.max(1)).max(1);
+        let f = self.fanin.min(cap);
+        let geoms = Manifest::conv_stage_geoms(
+            hw,
+            1,
+            &[cv.channels],
+            cv.kernel,
+            &cv.mode,
+            Some(f),
+            Some(f),
+        )
+        .ok()?;
+        let mut total = 0u64;
+        for g in &geoms {
+            total = total.saturating_add(g.lut_cost(self.bw, self.bw));
+        }
+        let mut width = geoms.last().map(|g| g.out_f()).unwrap_or(in_features);
+        for &h in &self.hidden {
+            total = total
+                .saturating_add(cost::sparse_layer_cost(h, self.fanin.min(width), self.bw, self.bw));
+            width = h;
+        }
+        Some((total, width))
     }
 
     /// Prefix pricing over precomputed skip-widened input widths, so the
@@ -292,10 +410,12 @@ impl Candidate {
 
 /// Deterministic candidate generator: the full axis cross product in a
 /// fixed order, duplicate topologies dropped (rectangle and taper
-/// schedules coincide at depth 1, and `skips` clamps at the depth — a
-/// skips-2 single-hidden-layer model IS the skips-1 model), seed-shuffled,
-/// truncated to `max`.  Same (axes, seed, max) → same candidate list,
-/// which is what makes whole searches replayable.
+/// schedules coincide at depth 1; `skips` clamps at the depth — a
+/// skips-2 single-hidden-layer model IS the skips-1 model; the `"none"`
+/// conv mode collapses the channel/kernel axes, and conv candidates
+/// canonicalize to skip-free), seed-shuffled, truncated to `max`.  Same
+/// (axes, seed, max) → same candidate list, which is what makes whole
+/// searches replayable.
 pub fn generate(axes: &SearchAxes, seed: u64, max: usize) -> Vec<Candidate> {
     let mut out = Vec::with_capacity(axes.num_candidates());
     let mut seen = std::collections::BTreeSet::new();
@@ -307,20 +427,40 @@ pub fn generate(axes: &SearchAxes, seed: u64, max: usize) -> Vec<Candidate> {
                         for &m in &axes.methods {
                             for &bram in &axes.bram_min_bits {
                                 for &s in &axes.skips {
-                                    let c = Candidate {
-                                        hidden: shape.widths(w, d),
-                                        fanin: f,
-                                        bw,
-                                        method: m,
-                                        bram_min_bits: bram,
-                                        // Every layer clamps its history at
-                                        // min(skips, i), so skips > depth
-                                        // duplicates the clamped topology;
-                                        // canonicalize so dedup catches it.
-                                        skips: s.min(d),
-                                    };
-                                    if seen.insert(c.name()) {
-                                        out.push(c);
+                                    for cm in &axes.conv_modes {
+                                        for &cc in &axes.channels {
+                                            for &ck in &axes.kernels {
+                                                let conv =
+                                                    (cm.as_str() != "none").then(|| ConvSpec {
+                                                        mode: cm.clone(),
+                                                        channels: cc,
+                                                        kernel: ck,
+                                                    });
+                                                let c = Candidate {
+                                                    hidden: shape.widths(w, d),
+                                                    fanin: f,
+                                                    bw,
+                                                    method: m,
+                                                    bram_min_bits: bram,
+                                                    // Every layer clamps its
+                                                    // history at min(skips, i),
+                                                    // so skips > depth duplicates
+                                                    // the clamped topology; conv
+                                                    // manifests are skip-free by
+                                                    // contract.  Canonicalize so
+                                                    // dedup catches both.
+                                                    skips: if conv.is_some() {
+                                                        0
+                                                    } else {
+                                                        s.min(d)
+                                                    },
+                                                    conv,
+                                                };
+                                                if seen.insert(c.name()) {
+                                                    out.push(c);
+                                                }
+                                            }
+                                        }
                                     }
                                 }
                             }
@@ -487,6 +627,12 @@ pub struct ArchiveEntry {
     /// Newest-first skip-concat count (0 = plain feed-forward; archives
     /// written before this axis existed load as 0).
     pub skips: usize,
+    /// Conv front-end mode (`None` = pure MLP; archives written before
+    /// the conv axes existed load as `None`, as do their JSON files —
+    /// the keys are only emitted for conv candidates).
+    pub conv_mode: Option<String>,
+    pub conv_channels: Option<usize>,
+    pub conv_kernel: Option<usize>,
     /// Analytical whole-model LUT cost (the frontier's cost axis).
     pub luts: u64,
     /// "gated" (rejected before training) or "trained".
@@ -512,6 +658,9 @@ impl ArchiveEntry {
             method: c.method.name().to_string(),
             bram_min_bits: c.bram_min_bits,
             skips: c.skips,
+            conv_mode: c.conv.as_ref().map(|cv| cv.mode.clone()),
+            conv_channels: c.conv.as_ref().map(|cv| cv.channels),
+            conv_kernel: c.conv.as_ref().map(|cv| cv.kernel),
             luts,
             status: status.to_string(),
             qualities: Vec::new(),
@@ -562,32 +711,40 @@ impl Archive {
     /// A resumed archive must have been produced by the same search
     /// parameters — including the axes and the candidate cap, which
     /// determine the candidate pool and every promotion cut — otherwise
-    /// replayed selections would silently diverge.
+    /// replayed selections would silently diverge.  Each refusal names
+    /// the exact parameter (or axis) that differs.
     pub fn check_compatible(
         &self,
         task: &SearchTask,
         axes: &SearchAxes,
         opts: &SearchOpts,
     ) -> Result<()> {
+        let params = [
+            ("dataset", self.dataset.clone(), task.dataset.clone()),
+            ("budget (--budget-luts)", self.budget_luts.to_string(), opts.budget_luts.to_string()),
+            ("seed (--seed)", self.seed.to_string(), opts.seed.to_string()),
+            ("rung count (--rungs)", self.rungs.to_string(), opts.rungs.to_string()),
+            ("base steps (--steps)", self.base_steps.to_string(), opts.base_steps.to_string()),
+            ("promotion divisor (--eta)", self.eta.to_string(), opts.eta.to_string()),
+            (
+                "candidate cap (--max-candidates)",
+                self.max_candidates.to_string(),
+                opts.max_candidates.to_string(),
+            ),
+        ];
+        for (what, archived, requested) in params {
+            ensure!(
+                archived == requested,
+                "archive was produced with {what} {archived} but this run asks for \
+                 {requested}; rerun without --resume or delete the archive"
+            );
+        }
+        let key = axes.key();
         ensure!(
-            self.dataset == task.dataset
-                && self.budget_luts == opts.budget_luts
-                && self.seed == opts.seed
-                && self.rungs == opts.rungs
-                && self.base_steps == opts.base_steps
-                && self.eta == opts.eta
-                && self.max_candidates == opts.max_candidates
-                && self.axes_key == axes.key(),
-            "archive was produced with different search parameters \
-             (dataset {} budget {} seed {} rungs {} steps {} eta {} cap {} axes {}); \
-             rerun without --resume or delete it",
-            self.dataset,
-            self.budget_luts,
-            self.seed,
-            self.rungs,
-            self.base_steps,
-            self.eta,
-            self.max_candidates,
+            self.axes_key == key,
+            "archive axes differ on the {} axis (archived key {}, requested key {key}); \
+             rerun without --resume or delete the archive",
+            first_axis_mismatch(&self.axes_key, &key),
             self.axes_key
         );
         Ok(())
@@ -599,7 +756,7 @@ impl Archive {
             .values()
             .map(|e| {
                 let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
-                Json::obj(vec![
+                let mut fields = vec![
                     ("name", Json::str(&e.name)),
                     (
                         "hidden",
@@ -619,7 +776,18 @@ impl Archive {
                     ("trained_steps", Json::num(e.trained_steps as f64)),
                     ("mapped_luts", opt_num(e.mapped_luts.map(|v| v as f64))),
                     ("netlist_accuracy", opt_num(e.netlist_accuracy)),
-                ])
+                ];
+                // Conv keys only for conv candidates, so pre-conv readers
+                // (and diff-friendly archives) see byte-identical entries
+                // for the MLP family.
+                if let (Some(m), Some(cc), Some(ck)) =
+                    (&e.conv_mode, e.conv_channels, e.conv_kernel)
+                {
+                    fields.push(("conv_mode", Json::str(m)));
+                    fields.push(("conv_channels", Json::num(cc as f64)));
+                    fields.push(("conv_kernel", Json::num(ck as f64)));
+                }
+                Json::obj(fields)
             })
             .collect();
         Json::obj(vec![
@@ -676,6 +844,10 @@ impl Archive {
                 // Absent in archives written before the skip axis existed:
                 // those points were all skip-free.
                 skips: e.opt_usize("skips").unwrap_or(0),
+                // Absent for the MLP family and in pre-conv archives.
+                conv_mode: e.get("conv_mode").and_then(|v| v.as_str()).map(str::to_string),
+                conv_channels: e.opt_usize("conv_channels"),
+                conv_kernel: e.opt_usize("conv_kernel"),
                 luts: e
                     .req_str("luts")?
                     .parse::<u64>()
@@ -748,6 +920,42 @@ struct Runner {
     accuracy: f64,
 }
 
+/// Name the first axis on which two [`SearchAxes::key`] fingerprints
+/// disagree, so a `--resume` refusal tells the user which CLI axis to
+/// fix.  Keys are `_`-separated sections, each tagged by its leading
+/// character; a section present on only one side is a default-vs-explicit
+/// mismatch on that same axis.
+fn first_axis_mismatch(archived: &str, requested: &str) -> &'static str {
+    fn sections(key: &str) -> BTreeMap<char, &str> {
+        key.split('_')
+            .filter_map(|s| {
+                let mut ch = s.chars();
+                ch.next().map(|tag| (tag, ch.as_str()))
+            })
+            .collect()
+    }
+    let (a, b) = (sections(archived), sections(requested));
+    for tag in "wdfbmrsynck".chars() {
+        if a.get(&tag) != b.get(&tag) {
+            return match tag {
+                'w' => "hidden-width (--widths)",
+                'd' => "depth (--depths)",
+                'f' => "fan-in (--fanins)",
+                'b' => "bit-width (--bws)",
+                'm' => "sparsity-method (--methods)",
+                'r' => "bram-threshold (--bram-min-bits)",
+                's' => "skip-count (--skips)",
+                'y' => "width-shape (--shapes)",
+                'c' => "conv-mode (--conv-mode)",
+                'n' => "conv-channels (--channels)",
+                'k' => "conv-kernel (--kernel)",
+                _ => unreachable!(),
+            };
+        }
+    }
+    "axes-key"
+}
+
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
@@ -789,7 +997,13 @@ fn enforce_target_fanin(man: &Manifest, method: PruneMethod, st: &mut ModelState
     if !matches!(method, PruneMethod::Iterative { .. }) {
         return;
     }
-    for (i, l) in man.layers.iter().enumerate() {
+    // Conv layers (the manifest prefix) keep their structured
+    // receptive-field mask: magnitude-pruning them would break the
+    // shared-window invariant `lint_conv_model` enforces.  A manifest
+    // that reached training has already validated its conv extras, so
+    // the error fallback only covers the already-rejected case.
+    let n_conv = man.conv_geoms().map(|g| g.len()).unwrap_or(0);
+    for (i, l) in man.layers.iter().enumerate().skip(n_conv) {
         if let Some(f) = l.fanin {
             crate::sparsity::prune::magnitude_prune(&st.ws[i], &mut st.masks[i], f);
             st.apply_mask(i);
@@ -920,7 +1134,23 @@ pub fn run_search(
     };
 
     // ---- generate + gate --------------------------------------------------
-    let candidates = generate(axes, opts.seed, opts.max_candidates);
+    let mut candidates = generate(axes, opts.seed, opts.max_candidates);
+    // Conv candidates need the task input to read as a square image with
+    // the kernel fitting it; drop impossible geometries up front (the
+    // check is deterministic, so resumed runs replay the same pool) with
+    // a line naming the reason instead of failing mid-search.
+    candidates.retain(|c| {
+        if c.conv.is_none() {
+            return true;
+        }
+        match c.manifest(&task.dataset, task.in_features, task.classes) {
+            Ok(_) => true,
+            Err(err) => {
+                println!("[dse] dropped conv candidate {}: {err:#}", c.name());
+                false
+            }
+        }
+    });
     let generated = candidates.len();
     let gate = CostGate { budget_luts: opts.budget_luts };
     let mut admitted: Vec<(Candidate, u64)> = Vec::new();
@@ -953,32 +1183,34 @@ pub fn run_search(
     obs::add("dse.candidates.admitted.count", admitted.len() as u64);
 
     // ---- successive halving ----------------------------------------------
-    let mut survivors: Vec<Runner> = admitted
-        .iter()
-        .map(|(c, luts)| {
-            let name = c.name();
-            let man = c.manifest(&task.dataset, task.in_features, task.classes);
-            let (aq, aa) = archive
-                .entries
-                .get(&name)
-                .filter(|e| e.status == "trained")
-                .map(|e| (e.qualities.clone(), e.accuracy))
-                .unwrap_or_default();
-            Runner {
-                seed: opts.seed ^ fnv1a(name.as_bytes()),
-                cand: c.clone(),
-                name,
-                man,
-                luts: *luts,
-                archived_qualities: aq,
-                archived_accuracy: aa,
-                state: None,
-                completed: 0,
-                quality: 0.0,
-                accuracy: 0.0,
-            }
-        })
-        .collect();
+    let mut survivors: Vec<Runner> = Vec::with_capacity(admitted.len());
+    for (c, luts) in &admitted {
+        let name = c.name();
+        // Admitted candidates have already built a probe manifest above
+        // (conv) or cannot fail (MLP); the context covers future axes.
+        let man = c
+            .manifest(&task.dataset, task.in_features, task.classes)
+            .with_context(|| format!("building manifest for candidate {name}"))?;
+        let (aq, aa) = archive
+            .entries
+            .get(&name)
+            .filter(|e| e.status == "trained")
+            .map(|e| (e.qualities.clone(), e.accuracy))
+            .unwrap_or_default();
+        survivors.push(Runner {
+            seed: opts.seed ^ fnv1a(name.as_bytes()),
+            cand: c.clone(),
+            name,
+            man,
+            luts: *luts,
+            archived_qualities: aq,
+            archived_accuracy: aa,
+            state: None,
+            completed: 0,
+            quality: 0.0,
+            accuracy: 0.0,
+        });
+    }
 
     let mut steps_trained = 0usize;
     for rung in 0..opts.rungs {
@@ -1144,6 +1376,9 @@ fn build_zoo(
             fanin: e.fanin,
             bw: e.bw,
             skips: e.skips,
+            conv_mode: e.conv_mode.clone(),
+            conv_channels: e.conv_channels,
+            conv_kernel: e.conv_kernel,
             checkpoint,
             luts: res.mapped_luts as u64,
             brams: res.brams,
@@ -1195,6 +1430,12 @@ fn emit_model(
     entry: &ArchiveEntry,
     state: Option<ModelState>,
 ) -> Result<(EmitResult, NetlistEngine)> {
+    let conv = match (&entry.conv_mode, entry.conv_channels, entry.conv_kernel) {
+        (Some(m), Some(cc), Some(ck)) => {
+            Some(ConvSpec { mode: m.clone(), channels: cc, kernel: ck })
+        }
+        _ => None,
+    };
     let cand = Candidate {
         hidden: entry.hidden.clone(),
         fanin: entry.fanin,
@@ -1202,8 +1443,9 @@ fn emit_model(
         method: method_from_name(&entry.method),
         bram_min_bits: entry.bram_min_bits,
         skips: entry.skips,
+        conv,
     };
-    let man = cand.manifest(&task.dataset, task.in_features, task.classes);
+    let man = cand.manifest(&task.dataset, task.in_features, task.classes)?;
     let state = match state {
         Some(st) => st,
         None => {
@@ -1245,6 +1487,16 @@ fn emit_model(
         "frontier model {} fails design-rule lint:\n{}",
         entry.name,
         lint_report.render()
+    );
+    // Conv candidates additionally prove the receptive-field contract:
+    // every exported neuron reads exactly its shared per-channel window
+    // (trivially clean for the MLP family).
+    let conv_report = crate::synth::lint_conv_model(&man, &ex)?;
+    ensure!(
+        conv_report.is_clean(),
+        "frontier model {} fails conv receptive-field lint:\n{}",
+        entry.name,
+        conv_report.render()
     );
     let engine = NetlistEngine::from_netlist(&ex, &tables, netlist)?;
     let acc = batch_accuracy(&engine, &task.test.x, &task.test.y);
@@ -1335,6 +1587,36 @@ mod tests {
         // both appear.
         assert!(full.iter().any(|c| c.skips > 0));
         assert!(full.iter().any(|c| c.hidden.windows(2).any(|w| w[0] != w[1])));
+        // Default conv axes ("none") leave the pool conv-free.
+        assert!(full.iter().all(|c| c.conv.is_none()));
+    }
+
+    #[test]
+    fn generator_sweeps_conv_axes_and_canonicalizes() {
+        let mut axes = SearchAxes::jets_default();
+        axes.conv_modes = vec!["none".into(), "dense".into(), "dw".into()];
+        axes.channels = vec![2, 4];
+        axes.kernels = vec![3];
+        let full = generate(&axes, 7, usize::MAX);
+        // Both conv modes appear, MLP candidates survive alongside, and
+        // every conv candidate is skip-free (the manifest contract).
+        assert!(full.iter().any(|c| matches!(&c.conv, Some(cv) if cv.mode == "dense")));
+        assert!(full.iter().any(|c| matches!(&c.conv, Some(cv) if cv.mode == "dw")));
+        assert!(full.iter().any(|c| c.conv.is_none()));
+        assert!(full.iter().filter(|c| c.conv.is_some()).all(|c| c.skips == 0));
+        // Names stay unique: the conv suffix separates the new points.
+        let names: std::collections::BTreeSet<String> =
+            full.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), full.len());
+        // "none" collapses the channel/kernel axes — the conv-free subset
+        // is exactly the pool the default axes generate.
+        let mut defaults = SearchAxes::jets_default();
+        defaults.conv_modes = vec!["none".into()];
+        let base: std::collections::BTreeSet<String> =
+            generate(&defaults, 7, usize::MAX).iter().map(|c| c.name()).collect();
+        let mlp: std::collections::BTreeSet<String> =
+            full.iter().filter(|c| c.conv.is_none()).map(|c| c.name()).collect();
+        assert_eq!(mlp, base);
     }
 
     #[test]
@@ -1365,16 +1647,78 @@ mod tests {
         assert!(axes.key().ends_with("_s0-1"));
         axes.shapes = vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }];
         assert!(axes.key().ends_with("_s0-1_yrect-taper50"));
+        // Conv axes extend the key only when swept away from their
+        // defaults, in a fixed section order.
+        axes.conv_modes = vec!["none".into(), "dense".into()];
+        assert!(axes.key().ends_with("_cnone-dense"));
+        axes.channels = vec![4, 8];
+        axes.kernels = vec![3, 5];
+        assert!(axes.key().ends_with("_cnone-dense_n4-8_k3-5"));
+    }
+
+    #[test]
+    fn resume_refusals_name_the_offending_axis() {
+        let task = SearchTask::jets_small(200, 11);
+        let opts = SearchOpts::default();
+        let axes = SearchAxes::jets_default();
+        let archive = Archive::new(&task, &axes, &opts);
+        let mut conv_axes = axes.clone();
+        conv_axes.conv_modes = vec!["none".into(), "dense".into()];
+        let err = archive.check_compatible(&task, &conv_axes, &opts).unwrap_err();
+        assert!(err.to_string().contains("conv-mode"), "got: {err}");
+        let mut width_axes = axes.clone();
+        width_axes.widths.push(128);
+        let err = archive.check_compatible(&task, &width_axes, &opts).unwrap_err();
+        assert!(err.to_string().contains("hidden-width"), "got: {err}");
+        let mut kernel_axes = axes.clone();
+        kernel_axes.kernels = vec![3, 5];
+        let err = archive.check_compatible(&task, &kernel_axes, &opts).unwrap_err();
+        assert!(err.to_string().contains("conv-kernel"), "got: {err}");
+        // Parameter mismatches name the parameter, not the axes.
+        let other = SearchOpts { eta: opts.eta + 1, ..opts.clone() };
+        let err = archive.check_compatible(&task, &axes, &other).unwrap_err();
+        assert!(err.to_string().contains("--eta"), "got: {err}");
     }
 
     #[test]
     fn gate_pricing_matches_manifest_cost() {
-        let axes = SearchAxes::jets_default();
-        for c in generate(&axes, 3, usize::MAX) {
-            let man = c.manifest("jets", 16, 5);
+        let mut axes = SearchAxes::jets_default();
+        // Sweep the conv axes too: 16 features = a 4x4 image, so both
+        // conv modes lower to real geometries here.
+        axes.conv_modes = vec!["none".into(), "dense".into(), "dw".into()];
+        axes.channels = vec![2, 4];
+        let cands = generate(&axes, 3, usize::MAX);
+        assert!(cands.iter().any(|c| c.conv.is_some()), "conv candidates in the pool");
+        for c in cands {
+            let man = c.manifest("jets", 16, 5).unwrap();
             let exact = cost::total_luts(&cost::manifest_cost(&man));
             assert_eq!(c.analytical_luts(16, 5), exact, "{}", c.name());
         }
+    }
+
+    #[test]
+    fn conv_pricing_saturates_on_impossible_geometry() {
+        let cv = Candidate {
+            hidden: vec![16],
+            fanin: 3,
+            bw: 2,
+            method: PruneMethod::APriori,
+            bram_min_bits: 13,
+            skips: 0,
+            conv: Some(ConvSpec { mode: "dense".into(), channels: 4, kernel: 3 }),
+        };
+        // 17 features is not a square image: never admissible.
+        assert_eq!(cv.analytical_luts(17, 5), u64::MAX);
+        assert!(cv.manifest("jets", 17, 5).is_err());
+        // Kernel larger than the image side likewise.
+        let big = Candidate {
+            conv: Some(ConvSpec { mode: "dense".into(), channels: 4, kernel: 5 }),
+            ..cv.clone()
+        };
+        assert_eq!(big.analytical_luts(16, 5), u64::MAX);
+        assert!(big.manifest("jets", 16, 5).is_err());
+        // A valid geometry prices strictly under saturation.
+        assert!(cv.analytical_luts(16, 5) < u64::MAX);
     }
 
     #[test]
@@ -1390,6 +1734,7 @@ mod tests {
             method: PruneMethod::APriori,
             bram_min_bits: 13,
             skips: 1,
+            conv: None,
         };
         let mut e = ArchiveEntry::from_candidate(&c, 1234, "trained");
         e.qualities = vec![55.5, 60.25];
@@ -1400,12 +1745,19 @@ mod tests {
         a.entries.insert(e.name.clone(), e);
         let g = Candidate { hidden: vec![64], bw: 3, ..c.clone() };
         a.entries.insert(g.name(), ArchiveEntry::from_candidate(&g, 99_999, "gated"));
+        let cv = Candidate {
+            hidden: vec![16],
+            skips: 0,
+            conv: Some(ConvSpec { mode: "dw".into(), channels: 4, kernel: 3 }),
+            ..c.clone()
+        };
+        a.entries.insert(cv.name(), ArchiveEntry::from_candidate(&cv, 2_345, "trained"));
         let dir = std::env::temp_dir().join("lnck_dse_archive_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("archive.json");
         a.save(&path).unwrap();
         let back = Archive::load(&path).unwrap();
-        assert_eq!(back.entries.len(), 2);
+        assert_eq!(back.entries.len(), 3);
         let be = &back.entries[&c.name()];
         assert_eq!(be.hidden, vec![32, 16]);
         assert_eq!(be.skips, 1, "skip axis must round-trip");
@@ -1413,9 +1765,17 @@ mod tests {
         assert_eq!(be.luts, 1234);
         assert_eq!(be.mapped_luts, Some(321));
         assert_eq!(be.status, "trained");
+        // MLP entries round-trip conv-free (their JSON carries no conv
+        // keys at all).
+        assert_eq!(be.conv_mode, None);
         let bg = &back.entries[&g.name()];
         assert_eq!(bg.status, "gated");
         assert_eq!(bg.mapped_luts, None);
+        // Conv axes must round-trip on conv entries.
+        let bc = &back.entries[&cv.name()];
+        assert_eq!(bc.conv_mode.as_deref(), Some("dw"));
+        assert_eq!(bc.conv_channels, Some(4));
+        assert_eq!(bc.conv_kernel, Some(3));
         assert_eq!(back.budget_luts, a.budget_luts);
         assert_eq!(back.axes_key, axes.key());
         // Compatibility check trips on a parameter, axes, or cap change.
@@ -1452,6 +1812,7 @@ mod tests {
             method: PruneMethod::APriori,
             bram_min_bits: 13,
             skips: 0,
+            conv: None,
         };
         a.entries
             .insert(c.name(), ArchiveEntry::from_candidate(&c, u64::MAX, "gated"));

@@ -181,6 +181,11 @@ fn print_help() {
     println!("          [--emit-zoo]   calibrate emitted netlists + write zoo.json for serve --zoo");
     println!("          [--widths 16,32,64] [--depths 1,2] [--fanins 2,3,4] [--bws 1,2,3]");
     println!("          [--skips 0,1] [--shapes rect,taper50]   skip-concat + pyramid axes");
+    println!("          [--conv-mode none,dense,dw] [--channels 4] [--kernel 3]");
+    println!("          conv front-end axes (defaults none / 4 / 3): non-none modes add");
+    println!("          stride-2 conv candidates on square task inputs; conv entries");
+    println!("          carry their axes into archive.json/zoo.json and serve --zoo");
+    println!("          rebuilds them bit-exactly (pre-conv archives stay resumable)");
     println!("          [--methods a-priori,iterative] [--out reports/dse]");
     println!("tables : {}", experiments::ALL_TABLES.join(" "));
     println!("figures: {}", experiments::ALL_FIGURES.join(" "));
@@ -775,6 +780,30 @@ fn cmd_explore(args: &Args) -> Result<()> {
     axis(args, "bws", &mut axes.bws);
     axis(args, "bram-min-bits", &mut axes.bram_min_bits);
     axis(args, "skips", &mut axes.skips);
+    axis(args, "channels", &mut axes.channels);
+    axis(args, "kernel", &mut axes.kernels);
+    for &k in &axes.kernels {
+        anyhow::ensure!(
+            k >= 1 && k % 2 == 1,
+            "--kernel sides must be odd (SAME padding), got {k}"
+        );
+    }
+    if let Some(s) = args.get("conv-mode") {
+        let mut modes = Vec::new();
+        for t in s.split(',') {
+            let t = t.trim();
+            match t {
+                "none" | "dense" | "dw" => modes.push(t.to_string()),
+                other => bail!(
+                    "unknown conv mode {other:?} (expected none, dense or dw; \
+                     conv candidates view the task input as a square image)"
+                ),
+            }
+        }
+        if !modes.is_empty() {
+            axes.conv_modes = modes;
+        }
+    }
     if let Some(s) = args.get("shapes") {
         let mut shapes = Vec::new();
         for t in s.split(',') {

@@ -1,12 +1,192 @@
-//! Model manifest: the contract between `python/compile/aot.py` and the Rust
-//! coordinator.  Parsed from `artifacts/<model>/manifest.json`.
+//! Model manifest: the topology contract shared by every producer — the
+//! HLO artifact path (`python/compile/aot.py`, parsed from
+//! `artifacts/<model>/manifest.json`), the synthetic constructors the DSE
+//! generates, and the zoo's rebuild path.
 //!
-//! The manifest pins the *flattened* input/output ordering of the HLO
-//! entry points (see the module docstring of python/compile/model.py) plus
-//! every quantizer constant the export path (truth tables) must reproduce.
+//! The manifest pins the *flattened* input/output ordering of the entry
+//! points (see the module docstring of python/compile/model.py) plus every
+//! quantizer constant the export path (truth tables) must reproduce.  Two
+//! layer families are first-class:
+//!
+//! * `kind = "mlp"` — sparse/dense linear layers with optional
+//!   newest-first skip concatenation ([`Manifest::skip_in_widths`]).
+//! * `kind = "cnv"` — convolutional stages lowered to per-output-pixel
+//!   boolean neurons: each conv layer is *unrolled* in `layers` (one
+//!   `LayerSpec` whose `in_f`/`out_f` are the flattened pixel×channel
+//!   widths), and its weight sharing + local connectivity become a
+//!   deterministic structured-sparsity mask ([`ConvGeom::neuron_windows`])
+//!   feeding the exact same per-neuron truth-table enumeration as MLP
+//!   layers.  The CNN extras (`conv_mode`, `image_hw`, `channels`,
+//!   `kernel_size`, `fanin_dw`/`fanin_pw`) are validated at parse time and
+//!   drive training, costing, synthesis and serving natively — they are no
+//!   longer an HLO-artifact-only annotation.
 
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// Seed base for the deterministic conv window subsampling: every
+/// reconstruction of the same manifest (trainer, cost model, DSE gate,
+/// synth check, zoo rebuild) derives the identical kept-tap subsets.
+const CONV_SUBSAMPLE_SEED: u64 = 0xC0_4Af0_1D;
+
+/// Exact per-neuron geometry of one lowered convolutional layer.  A conv
+/// stage is *unrolled*: every output pixel × channel becomes one boolean
+/// neuron whose fan-in is the kept subset of its receptive-field window
+/// (SAME padding, border taps truncated — equivalent to zero padding since
+/// quantizer code 0 decodes to value 0).  Activations are pixel-major:
+/// `idx = (y * h + x) * c + channel`.
+///
+/// Every reconstruction of this struct from the same manifest produces
+/// byte-identical windows (seeded subsampling, deterministic slot order),
+/// which is what the `CONV_WINDOW_INCONSISTENT` lint rule checks and what
+/// lets the DSE's analytical pricing match `synthesize` exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvGeom {
+    /// Input image side (square images only).
+    pub h_in: usize,
+    /// Output image side: SAME padding, `(h_in - 1) / stride + 1`.
+    pub h_out: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    /// Kernel side (odd, `<= h_in`).
+    pub k: usize,
+    pub stride: usize,
+    /// Depthwise: each output channel reads only its own input channel.
+    pub depthwise: bool,
+    /// Kept taps per neuron after seeded subsampling (`<=` full window).
+    pub window_fanin: usize,
+    /// Seed of the per-output-channel tap subsets.
+    pub seed: u64,
+}
+
+impl ConvGeom {
+    /// Flattened input width of the lowered layer.
+    pub fn in_f(&self) -> usize {
+        self.h_in * self.h_in * self.c_in
+    }
+
+    /// Flattened output width (neuron count) of the lowered layer.
+    pub fn out_f(&self) -> usize {
+        self.h_out * self.h_out * self.c_out
+    }
+
+    /// Full receptive-field window size before subsampling.
+    pub fn window(&self) -> usize {
+        if self.depthwise {
+            self.k * self.k
+        } else {
+            self.k * self.k * self.c_in
+        }
+    }
+
+    /// Window slot -> (dy, dx, input channel).  Slots enumerate the window
+    /// in (dy, dx, ci) lexicographic order, which maps monotonically onto
+    /// pixel-major input indices — per-neuron rows come out sorted, the
+    /// invariant `sparsity::Mask` requires.
+    fn slot_coords(&self, slot: usize, oc: usize) -> (usize, usize, usize) {
+        if self.depthwise {
+            (slot / self.k, slot % self.k, oc)
+        } else {
+            let ci = slot % self.c_in;
+            let pix = slot / self.c_in;
+            (pix / self.k, pix % self.k, ci)
+        }
+    }
+
+    /// Sorted kept slot indices (into the full window) for output channel
+    /// `oc`.  Shared across every output pixel of that channel — this
+    /// sharing *is* the weight-sharing invariant the conv lint rule checks.
+    pub fn kept_slots(&self, oc: usize) -> Vec<usize> {
+        let w = self.window();
+        if self.window_fanin >= w {
+            return (0..w).collect();
+        }
+        Rng::new(self.seed).fork(oc as u64).choose_k(w, self.window_fanin)
+    }
+
+    /// Per-neuron `(slot, input index)` pairs, neurons in pixel-major
+    /// output order.  Border neurons have fewer taps (truncated window);
+    /// interior neurons have exactly `window_fanin`.
+    pub fn neuron_windows(&self) -> Vec<Vec<(usize, usize)>> {
+        let pad = self.k / 2;
+        let kept: Vec<Vec<usize>> = (0..self.c_out).map(|oc| self.kept_slots(oc)).collect();
+        let mut rows = Vec::with_capacity(self.out_f());
+        for oy in 0..self.h_out {
+            for ox in 0..self.h_out {
+                for (oc, slots) in kept.iter().enumerate() {
+                    let mut row = Vec::with_capacity(slots.len());
+                    for &slot in slots {
+                        let (dy, dx, ci) = self.slot_coords(slot, oc);
+                        let iy = (oy * self.stride + dy) as isize - pad as isize;
+                        let ix = (ox * self.stride + dx) as isize - pad as isize;
+                        if iy < 0 || ix < 0 || iy >= self.h_in as isize || ix >= self.h_in as isize
+                        {
+                            continue;
+                        }
+                        row.push((slot, (iy as usize * self.h_in + ix as usize) * self.c_in + ci));
+                    }
+                    rows.push(row);
+                }
+            }
+        }
+        rows
+    }
+
+    /// The structured sparsity mask rows (sorted input indices per neuron)
+    /// — what `ModelState::init` installs in place of a random mask.
+    pub fn mask_rows(&self) -> Vec<Vec<usize>> {
+        self.neuron_windows()
+            .into_iter()
+            .map(|w| w.into_iter().map(|(_, idx)| idx).collect())
+            .collect()
+    }
+
+    /// Exact analytical LUT cost of the lowered layer: the per-neuron sum
+    /// of `cost::lut_cost(kept_in_bounds_taps * bw_in, bw_out)`.  By
+    /// construction equal to what `synth::synthesize` reports for the
+    /// generated tables (same truncated windows), saturating like
+    /// `cost::lut_cost` itself.
+    pub fn lut_cost(&self, bw_in: usize, bw_out: usize) -> u64 {
+        let pad = self.k / 2;
+        let mut total = 0u64;
+        for oc in 0..self.c_out {
+            let kept = self.kept_slots(oc);
+            for oy in 0..self.h_out {
+                for ox in 0..self.h_out {
+                    let taps = kept
+                        .iter()
+                        .filter(|&&slot| {
+                            let (dy, dx, _) = self.slot_coords(slot, oc);
+                            let iy = (oy * self.stride + dy) as isize - pad as isize;
+                            let ix = (ox * self.stride + dx) as isize - pad as isize;
+                            iy >= 0
+                                && ix >= 0
+                                && (iy as usize) < self.h_in
+                                && (ix as usize) < self.h_in
+                        })
+                        .count();
+                    total = total.saturating_add(crate::cost::lut_cost(taps * bw_in, bw_out));
+                }
+            }
+        }
+        total
+    }
+}
+
+/// Heterogeneous layer classification — the single width/pricing/mask
+/// accounting shared by `cost::manifest_cost`, the DSE cost gate,
+/// `train::state` and `synth`, so gate and exact pricing cannot diverge
+/// (the PR 5 invariant, extended to conv).
+#[derive(Debug, Clone)]
+pub enum LayerKind {
+    /// Random-mask sparse layer with a uniform per-neuron fan-in.
+    Sparse { fanin: usize },
+    /// Dense (unsparsified) layer — the classifier head.
+    Dense,
+    /// Lowered convolutional layer with a structured receptive-field mask.
+    Conv(ConvGeom),
+}
 
 /// One linear (or conv stage) layer as seen by the HLO artifact.
 #[derive(Debug, Clone)]
@@ -81,7 +261,7 @@ impl Manifest {
                 .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
                 .unwrap_or_default()
         };
-        Ok(Manifest {
+        let man = Manifest {
             name: j.req_str("name")?.to_string(),
             kind: j.req_str("kind")?.to_string(),
             in_features: j.req_usize("in_features")?,
@@ -111,7 +291,11 @@ impl Manifest {
             kernel_size: j.opt_usize("kernel_size").unwrap_or(3),
             fanin_dw: j.get("fanin_dw").and_then(|v| v.as_usize()),
             fanin_pw: j.get("fanin_pw").and_then(|v| v.as_usize()),
-        })
+        };
+        if man.kind == "cnv" {
+            man.validate_conv().context("conv manifest validation")?;
+        }
+        Ok(man)
     }
 
     pub fn load(path: &std::path::Path) -> Result<Manifest> {
@@ -230,6 +414,347 @@ impl Manifest {
         }
     }
 
+    /// The lowered conv-stage geometries for each stage listed in
+    /// `channels` (empty for non-conv manifests).  `conv_mode = "dense"`
+    /// lowers each stage to one stride-2 layer whose window is the full
+    /// `k*k*c_in` receptive field (subsampled to `fanin_dw` taps);
+    /// `"dw"` lowers to a depthwise stride-2 layer (`k*k` window, capped
+    /// by `fanin_dw`) followed by a pointwise stride-1 layer (`c_in`
+    /// window, capped by `fanin_pw`).
+    pub fn conv_stage_geoms(
+        image_hw: usize,
+        in_c: usize,
+        channels: &[usize],
+        kernel: usize,
+        conv_mode: &str,
+        fanin_dw: Option<usize>,
+        fanin_pw: Option<usize>,
+    ) -> Result<Vec<ConvGeom>> {
+        ensure!(
+            !channels.is_empty(),
+            "conv manifest needs a non-empty `channels` list (one out-channel count per stage)"
+        );
+        ensure!(kernel >= 1, "`kernel_size` must be >= 1, got {kernel}");
+        ensure!(kernel % 2 == 1, "`kernel_size` must be odd for SAME padding, got {kernel}");
+        let mut geoms: Vec<ConvGeom> = Vec::new();
+        let (mut hw, mut c) = (image_hw, in_c);
+        for (si, &c_out) in channels.iter().enumerate() {
+            ensure!(c_out >= 1, "`channels[{si}]` must be >= 1, got 0");
+            ensure!(
+                kernel <= hw,
+                "`kernel_size` {kernel} exceeds the stage-{si} image side {hw} \
+                 (image_hw {image_hw} halves at each stride-2 stage)"
+            );
+            let h_mid = (hw - 1) / 2 + 1;
+            match conv_mode {
+                "dense" => {
+                    let window = kernel * kernel * c;
+                    geoms.push(ConvGeom {
+                        h_in: hw,
+                        h_out: h_mid,
+                        c_in: c,
+                        c_out,
+                        k: kernel,
+                        stride: 2,
+                        depthwise: false,
+                        window_fanin: fanin_dw.unwrap_or(window).min(window),
+                        seed: CONV_SUBSAMPLE_SEED ^ geoms.len() as u64,
+                    });
+                }
+                "dw" => {
+                    let dw_window = kernel * kernel;
+                    geoms.push(ConvGeom {
+                        h_in: hw,
+                        h_out: h_mid,
+                        c_in: c,
+                        c_out: c,
+                        k: kernel,
+                        stride: 2,
+                        depthwise: true,
+                        window_fanin: fanin_dw.unwrap_or(dw_window).min(dw_window),
+                        seed: CONV_SUBSAMPLE_SEED ^ geoms.len() as u64,
+                    });
+                    geoms.push(ConvGeom {
+                        h_in: h_mid,
+                        h_out: h_mid,
+                        c_in: c,
+                        c_out,
+                        k: 1,
+                        stride: 1,
+                        depthwise: false,
+                        window_fanin: fanin_pw.unwrap_or(c).min(c),
+                        seed: CONV_SUBSAMPLE_SEED ^ geoms.len() as u64,
+                    });
+                }
+                other => bail!(
+                    "unsupported `conv_mode` \"{other}\": expected \"dense\" \
+                     (stride-2 full-window stage) or \"dw\" (depthwise + pointwise)"
+                ),
+            }
+            hw = h_mid;
+            c = c_out;
+        }
+        Ok(geoms)
+    }
+
+    /// The lowered conv geometries of this manifest — empty unless
+    /// `kind == "cnv"`.
+    pub fn conv_geoms(&self) -> Result<Vec<ConvGeom>> {
+        if self.kind != "cnv" {
+            return Ok(Vec::new());
+        }
+        let mode = self.conv_mode.as_deref().ok_or_else(|| {
+            anyhow!("manifest kind \"cnv\" requires `conv_mode` (\"dense\" or \"dw\")")
+        })?;
+        ensure!(self.image_hw >= 1, "`image_hw` must be >= 1, got {}", self.image_hw);
+        let hw2 = self.image_hw * self.image_hw;
+        ensure!(
+            self.in_features % hw2 == 0,
+            "`in_features` {} is not divisible by image_hw^2 = {} — cannot infer input channels",
+            self.in_features,
+            hw2
+        );
+        Self::conv_stage_geoms(
+            self.image_hw,
+            self.in_features / hw2,
+            &self.channels,
+            self.kernel_size,
+            mode,
+            self.fanin_dw,
+            self.fanin_pw,
+        )
+    }
+
+    /// Classify every layer ([`LayerKind`]) — the shared accounting used
+    /// by the cost model, the DSE gate, training and synthesis.  For conv
+    /// manifests the leading layers are the lowered conv stages (validated
+    /// against the declared dims); the rest are post-flatten MLP layers.
+    pub fn layer_kinds(&self) -> Result<Vec<LayerKind>> {
+        let geoms = self.conv_geoms()?;
+        let mut kinds = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            if let Some(g) = geoms.get(i) {
+                ensure!(
+                    l.in_f == g.in_f() && l.out_f == g.out_f(),
+                    "conv layer {i}: declared {}x{} disagrees with geometry {}x{} \
+                     (image_hw={}, kernel_size={}, channels={:?}, conv_mode={:?})",
+                    l.in_f,
+                    l.out_f,
+                    g.in_f(),
+                    g.out_f(),
+                    self.image_hw,
+                    self.kernel_size,
+                    self.channels,
+                    self.conv_mode
+                );
+                kinds.push(LayerKind::Conv(g.clone()));
+            } else {
+                kinds.push(match l.fanin {
+                    Some(f) => LayerKind::Sparse { fanin: f.min(l.in_f) },
+                    None => LayerKind::Dense,
+                });
+            }
+        }
+        Ok(kinds)
+    }
+
+    /// Parse-time validation of the CNN extras: every inconsistency fails
+    /// here with an actionable message instead of deep inside synth.
+    fn validate_conv(&self) -> Result<()> {
+        let geoms = self.conv_geoms()?;
+        ensure!(
+            self.skips == 0,
+            "conv manifests do not support skip connections (got skips={})",
+            self.skips
+        );
+        let expect = geoms.len() + self.hidden.len() + 1;
+        ensure!(
+            self.layers.len() == expect,
+            "conv manifest layer count mismatch: {} layers declared, but channels={:?} \
+             (conv_mode {:?}) lowers to {} conv layers + {} hidden + 1 head = {}",
+            self.layers.len(),
+            self.channels,
+            self.conv_mode,
+            geoms.len(),
+            self.hidden.len(),
+            expect
+        );
+        for (i, g) in geoms.iter().enumerate() {
+            let l = &self.layers[i];
+            ensure!(
+                l.in_f == g.in_f() && l.out_f == g.out_f(),
+                "conv layer {i}: declared {}x{} but the geometry gives {}x{} \
+                 (image_hw={}, kernel_size={}, channels={:?})",
+                l.in_f,
+                l.out_f,
+                g.in_f(),
+                g.out_f(),
+                self.image_hw,
+                self.kernel_size,
+                self.channels
+            );
+            ensure!(
+                l.fanin == Some(g.window_fanin),
+                "conv layer {i}: `fanin` must equal the kept window fan-in {} (got {:?}) \
+                 so the export path table-maps it",
+                g.window_fanin,
+                l.fanin
+            );
+            let in_bits = g.window_fanin * l.bw_in;
+            ensure!(
+                in_bits <= crate::luts::MAX_IN_BITS,
+                "conv layer {i}: window fan-in {} x bw_in {} = {in_bits} table input bits \
+                 exceeds the {}-bit enumeration cap — lower `fanin_dw`/`fanin_pw` or the \
+                 bit-width",
+                g.window_fanin,
+                l.bw_in,
+                crate::luts::MAX_IN_BITS
+            );
+        }
+        Ok(())
+    }
+
+    /// Build an in-memory conv manifest (`kind = "cnv"`): `channels` conv
+    /// stages lowered per [`ConvGeom`], then `hidden` sparse MLP layers on
+    /// the flattened feature map, then a dense classifier head.  Conv
+    /// `LayerSpec`s carry `fanin = Some(window_fanin)` so the export path
+    /// table-maps them like any sparse layer; the *structured* mask itself
+    /// is installed from [`ConvGeom::mask_rows`] at training time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic_conv(
+        name: &str,
+        dataset: &str,
+        image_hw: usize,
+        in_c: usize,
+        classes: usize,
+        channels: &[usize],
+        kernel: usize,
+        conv_mode: &str,
+        fanin_dw: Option<usize>,
+        fanin_pw: Option<usize>,
+        hidden: &[usize],
+        fanin: usize,
+        bw: usize,
+    ) -> Result<Manifest> {
+        let geoms =
+            Self::conv_stage_geoms(image_hw, in_c, channels, kernel, conv_mode, fanin_dw, fanin_pw)?;
+        let mut layers = Vec::with_capacity(geoms.len() + hidden.len() + 1);
+        for (i, g) in geoms.iter().enumerate() {
+            layers.push(LayerSpec {
+                in_f: g.in_f(),
+                out_f: g.out_f(),
+                fanin: Some(g.window_fanin),
+                bw_in: bw,
+                maxv_in: if i == 0 { 1.0 } else { 2.0 },
+            });
+        }
+        let mut width = geoms.last().map(|g| g.out_f()).unwrap_or(image_hw * image_hw * in_c);
+        for &h in hidden {
+            layers.push(LayerSpec {
+                in_f: width,
+                out_f: h,
+                fanin: Some(fanin.min(width)),
+                bw_in: bw,
+                maxv_in: 2.0,
+            });
+            width = h;
+        }
+        layers.push(LayerSpec {
+            in_f: width,
+            out_f: classes,
+            fanin: None,
+            bw_in: bw,
+            maxv_in: 2.0,
+        });
+        let man = Manifest {
+            name: name.to_string(),
+            kind: "cnv".to_string(),
+            in_features: image_hw * image_hw * in_c,
+            classes,
+            hidden: hidden.to_vec(),
+            bw,
+            bw_in: bw,
+            bw_out: bw,
+            fanin,
+            fanin_fc: None,
+            skips: 0,
+            batch: 64,
+            eval_batch: 256,
+            maxv_in: 1.0,
+            maxv_hidden: 2.0,
+            maxv_out: 4.0,
+            momentum: 0.9,
+            bn_eps: 1e-5,
+            dataset: dataset.to_string(),
+            train_softmax: true,
+            steps: 300,
+            lr: 0.03,
+            layers,
+            conv_mode: Some(conv_mode.to_string()),
+            image_hw,
+            channels: channels.to_vec(),
+            kernel_size: kernel,
+            fanin_dw,
+            fanin_pw,
+        };
+        man.validate_conv()?;
+        Ok(man)
+    }
+
+    /// Side length if `in_features` is a perfect square — conv stages
+    /// interpret flat task inputs as a 1-channel `s x s` image.
+    pub fn conv_image_side(in_features: usize) -> Option<usize> {
+        let mut s = 0usize;
+        while (s + 1) * (s + 1) <= in_features {
+            s += 1;
+        }
+        (s >= 1 && s * s == in_features).then_some(s)
+    }
+
+    /// [`Manifest::synthetic_conv`] for a flat task input: interprets
+    /// `in_features` as a 1-channel square image (errors when it is not a
+    /// perfect square or the kernel does not fit) and caps the conv
+    /// fan-in to what the table-width limit admits.  The single
+    /// constructor shared by DSE conv candidates and zoo rebuilds, so a
+    /// zoo entry always reproduces the candidate's manifest bit-exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic_conv_for_task(
+        name: &str,
+        dataset: &str,
+        in_features: usize,
+        classes: usize,
+        hidden: &[usize],
+        fanin: usize,
+        bw: usize,
+        conv_mode: &str,
+        channels: usize,
+        kernel: usize,
+    ) -> Result<Manifest> {
+        let hw = Self::conv_image_side(in_features).ok_or_else(|| {
+            anyhow!(
+                "conv topology needs a square input: in_features {in_features} is not a \
+                 perfect square"
+            )
+        })?;
+        let cap = (crate::luts::MAX_IN_BITS / bw.max(1)).max(1);
+        let f = fanin.min(cap);
+        Self::synthetic_conv(
+            name,
+            dataset,
+            hw,
+            1,
+            classes,
+            &[channels],
+            kernel,
+            conv_mode,
+            Some(f),
+            Some(f),
+            hidden,
+            fanin,
+            bw,
+        )
+    }
+
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
@@ -309,5 +834,134 @@ mod tests {
         assert_eq!(m.layers[1].in_f, 32);
         assert_eq!(m.fanin_fc, None);
         assert!((m.bn_eps - 1e-5).abs() < 1e-12);
+    }
+
+    const CNV_SAMPLE: &str = r#"{
+      "name":"c","kind":"cnv","in_features":16,"classes":3,"hidden":[],
+      "bw":2,"bw_in":2,"bw_out":2,"fanin":4,"skips":0,
+      "batch":8,"eval_batch":8,"dataset":"jets",
+      "layers":[{"in":16,"out":8,"fanin":4,"bw_in":2,"maxv_in":1.0},
+                {"in":8,"out":3,"fanin":null,"bw_in":2,"maxv_in":2.0}],
+      "conv_mode":"dense","image_hw":4,"channels":[2],"kernel_size":3,
+      "fanin_dw":4,"fanin_pw":4
+    }"#;
+
+    #[test]
+    fn parses_and_validates_cnv_sample() {
+        let m = Manifest::parse(CNV_SAMPLE).unwrap();
+        assert_eq!(m.kind, "cnv");
+        let kinds = m.layer_kinds().unwrap();
+        assert!(matches!(kinds[0], LayerKind::Conv(_)));
+        assert!(matches!(kinds[1], LayerKind::Dense));
+        let geoms = m.conv_geoms().unwrap();
+        assert_eq!(geoms.len(), 1);
+        assert_eq!((geoms[0].in_f(), geoms[0].out_f()), (16, 8));
+    }
+
+    #[test]
+    fn cnv_parse_rejects_bad_extras_with_named_fields() {
+        // Each broken field must fail at parse time with a message that
+        // names it (satellite: no more silent load + deep-synth failure).
+        for (needle, patch) in [
+            ("kernel_size", (r#""kernel_size":3"#, r#""kernel_size":0"#)),
+            ("odd", (r#""kernel_size":3"#, r#""kernel_size":4"#)),
+            ("conv_mode", (r#""conv_mode":"dense""#, r#""conv_mode":"winograd""#)),
+            ("channels", (r#""channels":[2]"#, r#""channels":[]"#)),
+            ("layer count", (r#""hidden":[]"#, r#""hidden":[7]"#)),
+            ("divisible", (r#""image_hw":4"#, r#""image_hw":3"#)),
+            ("skip", (r#""skips":0"#, r#""skips":1"#)),
+            ("fanin", (r#""in":16,"out":8,"fanin":4"#, r#""in":16,"out":8,"fanin":3"#)),
+        ] {
+            let text = CNV_SAMPLE.replace(patch.0, patch.1);
+            let err = Manifest::parse(&text).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "patch {patch:?} -> {msg}");
+        }
+    }
+
+    #[test]
+    fn conv_geom_windows_shared_sorted_in_range() {
+        let g = ConvGeom {
+            h_in: 6,
+            h_out: 3,
+            c_in: 2,
+            c_out: 3,
+            k: 3,
+            stride: 2,
+            depthwise: false,
+            window_fanin: 5,
+            seed: 99,
+        };
+        assert_eq!(g.window(), 18);
+        let rows = g.neuron_windows();
+        assert_eq!(rows.len(), g.out_f());
+        for (o, row) in rows.iter().enumerate() {
+            let oc = o % g.c_out;
+            let kept = g.kept_slots(oc);
+            assert_eq!(kept, g.kept_slots(oc), "kept slots deterministic");
+            assert!(row.len() <= g.window_fanin);
+            // strictly increasing input indices (Mask invariant) in range
+            assert!(row.windows(2).all(|w| w[0].1 < w[1].1), "neuron {o}");
+            assert!(row.iter().all(|&(s, i)| kept.contains(&s) && i < g.in_f()));
+        }
+        // interior neuron (oy=1, ox=1) keeps the full subsampled window
+        let interior = &rows[(g.h_out + 1) * g.c_out];
+        assert_eq!(interior.len(), g.window_fanin);
+        // pricing matches the explicit per-row sum
+        let by_rows: u64 = rows
+            .iter()
+            .map(|r| crate::cost::lut_cost(r.len() * 2, 2))
+            .fold(0, |a, c| a.saturating_add(c));
+        assert_eq!(g.lut_cost(2, 2), by_rows);
+    }
+
+    #[test]
+    fn conv_stage_geoms_dense_and_dw() {
+        let dense = Manifest::conv_stage_geoms(8, 1, &[4, 6], 3, "dense", Some(5), None).unwrap();
+        assert_eq!(dense.len(), 2);
+        assert_eq!((dense[0].h_in, dense[0].h_out, dense[0].c_out), (8, 4, 4));
+        assert_eq!((dense[1].h_in, dense[1].h_out, dense[1].c_in), (4, 2, 4));
+        assert_eq!(dense[0].window_fanin, 5);
+        let dw = Manifest::conv_stage_geoms(8, 1, &[4], 3, "dw", Some(6), Some(2)).unwrap();
+        assert_eq!(dw.len(), 2, "dw lowers to depthwise + pointwise");
+        assert!(dw[0].depthwise && !dw[1].depthwise);
+        assert_eq!((dw[0].stride, dw[1].stride), (2, 1));
+        assert_eq!((dw[0].c_out, dw[1].c_out), (1, 4));
+        assert_eq!(dw[1].k, 1);
+        assert!(Manifest::conv_stage_geoms(8, 1, &[4], 9, "dense", None, None).is_err());
+    }
+
+    #[test]
+    fn synthetic_conv_wiring_and_task_entry() {
+        let m = Manifest::synthetic_conv(
+            "c", "jets", 4, 1, 5, &[3], 3, "dense", Some(4), None, &[8], 3, 2,
+        )
+        .unwrap();
+        assert_eq!(m.kind, "cnv");
+        assert_eq!(m.in_features, 16);
+        assert_eq!(m.num_layers(), 3);
+        assert_eq!((m.layers[0].in_f, m.layers[0].out_f), (16, 2 * 2 * 3));
+        assert_eq!(m.layers[0].fanin, Some(4));
+        assert_eq!((m.layers[1].in_f, m.layers[1].out_f), (12, 8));
+        assert_eq!((m.layers[2].in_f, m.layers[2].out_f, m.layers[2].fanin), (8, 5, None));
+        // task entry infers a 4x4 1-channel image from 16 flat features
+        let t = Manifest::synthetic_conv_for_task("t", "jets", 16, 5, &[8], 3, 2, "dense", 3, 3)
+            .unwrap();
+        assert_eq!(t.image_hw, 4);
+        assert_eq!(t.layers[0].out_f, 12);
+        assert!(Manifest::synthetic_conv_for_task("t", "jets", 15, 5, &[8], 3, 2, "dense", 3, 3)
+            .is_err());
+        // conv fan-in is capped so tables stay enumerable
+        let wide = Manifest::synthetic_conv_for_task("w", "jets", 16, 5, &[], 9, 4, "dense", 2, 3)
+            .unwrap();
+        assert!(wide.layers[0].fanin.unwrap() * wide.bw <= crate::luts::MAX_IN_BITS);
+    }
+
+    #[test]
+    fn conv_image_side_exact_squares_only() {
+        assert_eq!(Manifest::conv_image_side(16), Some(4));
+        assert_eq!(Manifest::conv_image_side(784), Some(28));
+        assert_eq!(Manifest::conv_image_side(15), None);
+        assert_eq!(Manifest::conv_image_side(0), None);
     }
 }

@@ -12,7 +12,7 @@ pub mod manifest;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
-pub use manifest::{LayerSpec, Manifest};
+pub use manifest::{ConvGeom, LayerKind, LayerSpec, Manifest};
 
 /// A PJRT client wrapper; create once, share everywhere.
 pub struct Runtime {

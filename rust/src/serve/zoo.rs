@@ -26,7 +26,7 @@ use crate::synth::{
 };
 use crate::train::checkpoint;
 use crate::util::json::Json;
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -42,15 +42,22 @@ pub struct ZooEntry {
     pub in_features: usize,
     pub classes: usize,
     /// Topology axes, enough to rebuild the `Manifest`
-    /// (`Manifest::synthetic_topology`): per-layer hidden widths (pyramid
-    /// schedules included), fan-in, activation bits, and the newest-first
-    /// skip-concat count.
+    /// (`Manifest::synthetic_topology`, or
+    /// `Manifest::synthetic_conv_for_task` for conv entries): per-layer
+    /// hidden widths (pyramid schedules included), fan-in, activation
+    /// bits, and the newest-first skip-concat count.
     pub hidden: Vec<usize>,
     pub fanin: usize,
     pub bw: usize,
     /// Skip-connection count (manifests written before this axis existed
     /// load as 0).
     pub skips: usize,
+    /// Conv front-end axes (`None` = pure MLP).  Present together or not
+    /// at all; manifests written before the conv axes existed load as
+    /// `None` and rebuild through the MLP path unchanged.
+    pub conv_mode: Option<String>,
+    pub conv_channels: Option<usize>,
+    pub conv_kernel: Option<usize>,
     /// Trained-state checkpoint, relative to the manifest's directory.
     pub checkpoint: String,
     /// Mapped (synthesized, `OptLevel::Full`) LUT count — the routing
@@ -93,7 +100,7 @@ impl ZooEntry {
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("dataset", Json::str(&self.dataset)),
             ("in_features", Json::num(self.in_features as f64)),
@@ -114,7 +121,17 @@ impl ZooEntry {
             ("netlist_accuracy", Json::num(self.netlist_accuracy)),
             ("p50_us", Json::num(self.p50_us)),
             ("p99_us", Json::num(self.p99_us)),
-        ])
+        ];
+        // Conv keys only for conv entries, so MLP manifests stay
+        // byte-compatible with pre-conv readers.
+        if let (Some(m), Some(cc), Some(ck)) =
+            (&self.conv_mode, self.conv_channels, self.conv_kernel)
+        {
+            fields.push(("conv_mode", Json::str(m)));
+            fields.push(("conv_channels", Json::num(cc as f64)));
+            fields.push(("conv_kernel", Json::num(ck as f64)));
+        }
+        Json::obj(fields)
     }
 
     fn from_json(j: &Json) -> Result<ZooEntry> {
@@ -141,6 +158,10 @@ impl ZooEntry {
             fanin: j.req_usize("fanin")?,
             bw: j.req_usize("bw")?,
             skips: j.opt_usize("skips").unwrap_or(0),
+            // Absent for MLP entries and in pre-conv manifests.
+            conv_mode: j.get("conv_mode").and_then(|v| v.as_str()).map(str::to_string),
+            conv_channels: j.opt_usize("conv_channels"),
+            conv_kernel: j.opt_usize("conv_kernel"),
             checkpoint: j.req_str("checkpoint")?.to_string(),
             luts: j
                 .req_str("luts")?
@@ -230,16 +251,42 @@ pub fn rebuild_netlist(
     entry: &ZooEntry,
     zoo_dir: &Path,
 ) -> Result<(ExportedModel, ModelTables, Netlist)> {
-    let man = Manifest::synthetic_topology(
-        &entry.name,
-        &entry.dataset,
-        entry.in_features,
-        entry.classes,
-        &entry.hidden,
-        entry.fanin,
-        entry.bw,
-        entry.skips,
-    );
+    // Conv entries rebuild through the same constructor the DSE candidate
+    // used (`Manifest::synthetic_conv_for_task`), so the served circuit is
+    // bit-exactly the searched one.
+    let man = match (&entry.conv_mode, entry.conv_channels, entry.conv_kernel) {
+        (Some(mode), Some(channels), Some(kernel)) => Manifest::synthetic_conv_for_task(
+            &entry.name,
+            &entry.dataset,
+            entry.in_features,
+            entry.classes,
+            &entry.hidden,
+            entry.fanin,
+            entry.bw,
+            mode,
+            channels,
+            kernel,
+        )
+        .with_context(|| format!("zoo model {}: conv manifest", entry.name))?,
+        (None, None, None) => Manifest::synthetic_topology(
+            &entry.name,
+            &entry.dataset,
+            entry.in_features,
+            entry.classes,
+            &entry.hidden,
+            entry.fanin,
+            entry.bw,
+            entry.skips,
+        ),
+        _ => bail!(
+            "zoo model {}: conv fields must be present together or not at all \
+             (conv_mode {:?}, conv_channels {:?}, conv_kernel {:?})",
+            entry.name,
+            entry.conv_mode,
+            entry.conv_channels,
+            entry.conv_kernel
+        ),
+    };
     let ck = zoo_dir.join(&entry.checkpoint);
     let state = checkpoint::load(&ck)
         .with_context(|| format!("zoo model {}: checkpoint {}", entry.name, ck.display()))?;
@@ -249,6 +296,16 @@ pub fn rebuild_netlist(
         entry.name
     );
     let ex = ExportedModel::from_state(&man, &state);
+    // Conv entries prove the receptive-field contract before synthesis:
+    // a checkpoint whose masks drifted from the shared per-channel
+    // windows must fail here with pixel coordinates, not serve silently.
+    let conv_report = crate::synth::lint_conv_model(&man, &ex)?;
+    ensure!(
+        conv_report.is_clean(),
+        "zoo model {}: checkpoint violates the conv receptive-field contract:\n{}",
+        entry.name,
+        conv_report.render()
+    );
     let tables = ModelTables::generate(&ex)?;
     let (netlist, _) = synthesize(
         &ex,
@@ -343,6 +400,9 @@ mod tests {
             fanin: 3,
             bw: 2,
             skips: 0,
+            conv_mode: None,
+            conv_channels: None,
+            conv_kernel: None,
             checkpoint: format!("ckpt/{name}.r2.bin"),
             luts,
             brams: 0,
@@ -371,15 +431,47 @@ mod tests {
         // u64 LUT counts survive beyond f64 precision (string-encoded).
         assert_eq!(back.entries[1].luts, u64::MAX - 1);
         assert_eq!(back.entries[1].skips, 1);
-        // A manifest written before the skip axis existed (no "skips"
-        // field) loads as skip-free.
+        // MLP entries carry no conv keys at all, so pre-conv readers see
+        // byte-identical records...
         let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("conv_mode"), "MLP entries must stay conv-key-free");
+        // ...and a manifest written before the skip axis existed (no
+        // "skips" field) loads as skip-free.
         let legacy = text.replace(",\"skips\":1", "").replace(",\"skips\":0", "");
         assert!(!legacy.contains("skips"), "field must be stripped: {legacy}");
         let lpath = dir.join("zoo_legacy.json");
         std::fs::write(&lpath, legacy).unwrap();
         let old = ZooManifest::load(&lpath).unwrap();
         assert!(old.entries.iter().all(|e| e.skips == 0));
+        assert!(old.entries.iter().all(|e| e.conv_mode.is_none()));
+    }
+
+    #[test]
+    fn conv_entries_roundtrip_and_partial_fields_refuse_rebuild() {
+        let mut zoo =
+            ZooManifest { dataset: "jets".into(), entries: vec![entry("cv", 200, 70.0, 55.0)] };
+        zoo.entries[0].conv_mode = Some("dense".into());
+        zoo.entries[0].conv_channels = Some(4);
+        zoo.entries[0].conv_kernel = Some(3);
+        zoo.entries[0].skips = 0;
+        let dir = std::env::temp_dir().join("lnck_zoo_conv_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zoo.json");
+        zoo.save(&path).unwrap();
+        let back = ZooManifest::load(&path).unwrap();
+        assert_eq!(back, zoo);
+        assert_eq!(back.entries[0].conv_mode.as_deref(), Some("dense"));
+        assert_eq!(back.entries[0].conv_channels, Some(4));
+        assert_eq!(back.entries[0].conv_kernel, Some(3));
+        // An entry with only some conv fields is corrupt: rebuilding must
+        // refuse it with a message naming the fields, never guess.
+        let mut partial = back.entries[0].clone();
+        partial.conv_kernel = None;
+        let err = rebuild_netlist(&partial, &dir).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("conv fields"),
+            "unexpected error: {err:#}"
+        );
     }
 
     #[test]

@@ -164,6 +164,16 @@ pub const BRAM_PORTS: Rule = Rule {
     severity: Severity::Info,
     desc: "netlist carries BRAM-mapped neurons and is not simulator-evaluable",
 };
+pub const CONV_RF_OUT_OF_RANGE: Rule = Rule {
+    id: "conv-rf-out-of-range",
+    severity: Severity::Error,
+    desc: "a conv neuron reads an input outside its receptive-field window (or the layer)",
+};
+pub const CONV_WINDOW_INCONSISTENT: Rule = Rule {
+    id: "conv-window-inconsistent",
+    severity: Severity::Error,
+    desc: "a conv neuron's kept taps differ from the shared per-channel window subset",
+};
 
 /// The complete rule catalogue, in severity-then-pipeline order.
 pub const RULES: &[Rule] = &[
@@ -173,6 +183,8 @@ pub const RULES: &[Rule] = &[
     FANIN_TOO_WIDE,
     EMPTY_OUTPUTS,
     BRAM_SHAPE,
+    CONV_RF_OUT_OF_RANGE,
+    CONV_WINDOW_INCONSISTENT,
     TT_GARBAGE,
     STALE_LEVEL,
     DUPLICATE_INPUT,
@@ -190,6 +202,8 @@ pub enum Span {
     Node(usize),
     Output(usize),
     Bram(usize),
+    /// (layer, neuron) in the pre-mapping model view ([`lint_conv_model`]).
+    Neuron(usize, usize),
     Netlist,
 }
 
@@ -199,6 +213,7 @@ impl Span {
             Span::Node(i) => format!("node {i}"),
             Span::Output(i) => format!("output {i}"),
             Span::Bram(i) => format!("bram {i}"),
+            Span::Neuron(l, i) => format!("layer {l} neuron {i}"),
             Span::Netlist => "netlist".to_string(),
         }
     }
@@ -262,11 +277,12 @@ impl LintReport {
             .findings
             .iter()
             .map(|f| {
-                let (kind, idx) = match f.span {
-                    Span::Node(i) => ("node", Some(i)),
-                    Span::Output(i) => ("output", Some(i)),
-                    Span::Bram(i) => ("bram", Some(i)),
-                    Span::Netlist => ("netlist", None),
+                let (kind, idx, layer) = match f.span {
+                    Span::Node(i) => ("node", Some(i), None),
+                    Span::Output(i) => ("output", Some(i), None),
+                    Span::Bram(i) => ("bram", Some(i), None),
+                    Span::Neuron(l, i) => ("neuron", Some(i), Some(l)),
+                    Span::Netlist => ("netlist", None, None),
                 };
                 let mut pairs = vec![
                     ("rule", Json::str(f.rule.id)),
@@ -276,6 +292,9 @@ impl LintReport {
                 ];
                 if let Some(i) = idx {
                     pairs.push(("index", Json::num(i as f64)));
+                }
+                if let Some(l) = layer {
+                    pairs.push(("layer", Json::num(l as f64)));
                 }
                 Json::obj(pairs)
             })
@@ -516,6 +535,100 @@ pub fn lint_netlist(nl: &Netlist, opts: &LintOptions) -> LintReport {
     report
 }
 
+/// Model-level conv design rules, run on the pre-mapping exported view
+/// (where per-neuron receptive fields are still visible; the lowered
+/// netlist has lost the layer/window structure).  Checks every conv
+/// neuron's fan-in against the deterministic geometry
+/// ([`crate::runtime::ConvGeom::neuron_windows`]):
+///
+/// - [`CONV_RF_OUT_OF_RANGE`]: an input index outside the neuron's
+///   receptive-field window (or the layer's input width entirely),
+/// - [`CONV_WINDOW_INCONSISTENT`]: inputs inside the window but differing
+///   from the kept subset shared by every pixel of the output channel —
+///   i.e. the weight-sharing structure was corrupted.
+///
+/// Errs only when the manifest's conv extras themselves are inconsistent
+/// (the parse-time validation conditions); structural deviations in the
+/// model are reported as findings so producers gate on `errors()` like
+/// they do for [`lint_netlist`].
+pub fn lint_conv_model(
+    man: &crate::runtime::Manifest,
+    model: &crate::nn::ExportedModel,
+) -> anyhow::Result<LintReport> {
+    let geoms = man.conv_geoms()?;
+    let mut findings = Vec::new();
+    for (li, g) in geoms.iter().enumerate() {
+        let Some(layer) = model.layers.get(li) else {
+            findings.push(finding(
+                CONV_WINDOW_INCONSISTENT,
+                Span::Netlist,
+                format!("conv layer {li} missing: model has {} layers", model.layers.len()),
+            ));
+            continue;
+        };
+        let expect = g.mask_rows();
+        if layer.neurons.len() != expect.len() || layer.in_f != g.in_f() {
+            findings.push(finding(
+                CONV_WINDOW_INCONSISTENT,
+                Span::Netlist,
+                format!(
+                    "conv layer {li} shape {}x{} but geometry lowers to {}x{}",
+                    layer.in_f,
+                    layer.neurons.len(),
+                    g.in_f(),
+                    expect.len()
+                ),
+            ));
+            continue;
+        }
+        // Full (un-subsampled) in-bounds window per neuron, for classifying
+        // a bad tap as out-of-window vs. wrong-subset.
+        let full = {
+            let mut gg = g.clone();
+            gg.window_fanin = gg.window();
+            gg.mask_rows()
+        };
+        for (o, nr) in layer.neurons.iter().enumerate() {
+            let win = &full[o];
+            let mut bad_rf = false;
+            for &j in &nr.inputs {
+                if j >= g.in_f() || !win.contains(&j) {
+                    findings.push(finding(
+                        CONV_RF_OUT_OF_RANGE,
+                        Span::Neuron(li, o),
+                        format!(
+                            "input {j} is outside the receptive field of output pixel \
+                             ({}, {}) channel {}",
+                            o / g.c_out / g.h_out,
+                            (o / g.c_out) % g.h_out,
+                            o % g.c_out
+                        ),
+                    ));
+                    bad_rf = true;
+                }
+            }
+            if !bad_rf && nr.inputs != expect[o] {
+                findings.push(finding(
+                    CONV_WINDOW_INCONSISTENT,
+                    Span::Neuron(li, o),
+                    format!(
+                        "kept taps {:?} differ from the channel-{}-shared subset {:?}",
+                        nr.inputs,
+                        o % g.c_out,
+                        expect[o]
+                    ),
+                ));
+            }
+        }
+    }
+    let report = LintReport { findings };
+    if crate::obs::enabled() {
+        crate::obs::add("synth.lint.errors.count", report.errors() as u64);
+        crate::obs::add("synth.lint.warns.count", report.warnings() as u64);
+    }
+    Ok(report)
+}
+
 fn first_duplicate(inputs: &[Net]) -> Option<(usize, usize)> {
     for (a, &na) in inputs.iter().enumerate() {
         for (boff, &nb) in inputs[a + 1..].iter().enumerate() {
@@ -552,7 +665,7 @@ mod tests {
 
     #[test]
     fn registry_is_consistent() {
-        assert_eq!(RULES.len(), 15);
+        assert_eq!(RULES.len(), 17);
         for (i, r) in RULES.iter().enumerate() {
             assert!(!r.id.is_empty() && !r.desc.is_empty(), "rule {i}");
             assert!(r.id.chars().all(|c| c.is_ascii_lowercase() || c == '-'), "{}", r.id);
@@ -676,6 +789,56 @@ mod tests {
         assert!(!ids(&report).contains(&"bram-shape"), "{}", report.render());
         assert_eq!(report.errors(), 0);
         assert_eq!(report.infos(), 1);
+    }
+
+    #[test]
+    fn conv_model_rules_fire_and_clean_passes() {
+        use crate::runtime::Manifest;
+        use crate::sparsity::prune::PruneMethod;
+        use crate::train::ModelState;
+
+        let man = Manifest::synthetic_conv(
+            "lint_c", "jets", 4, 1, 5, &[3], 3, "dense", Some(4), None, &[8], 3, 2,
+        )
+        .unwrap();
+        let st = ModelState::init(&man, 3, PruneMethod::APriori);
+        let model = crate::nn::ExportedModel::from_state(&man, &st);
+        let clean = lint_conv_model(&man, &model).unwrap();
+        assert!(clean.is_clean(), "{}", clean.render());
+
+        // Corrupt one tap to a different *in-window* index not in the kept
+        // subset: shared-window consistency violated.
+        let g = &man.conv_geoms().unwrap()[0];
+        let full = {
+            let mut gg = g.clone();
+            gg.window_fanin = gg.window();
+            gg.mask_rows()
+        };
+        let mut tampered = model.clone();
+        // interior neuron: full window in-bounds, kept subset is proper
+        let o = (g.h_out + 1) * g.c_out;
+        let kept: &Vec<usize> = &tampered.layers[0].neurons[o].inputs;
+        let substitute = *full[o].iter().find(|j| !kept.contains(j)).expect("spare tap");
+        tampered.layers[0].neurons[o].inputs[0] = substitute;
+        tampered.layers[0].neurons[o].inputs.sort_unstable();
+        let report = lint_conv_model(&man, &tampered).unwrap();
+        assert_eq!(report.errors(), 1, "{}", report.render());
+        assert_eq!(report.findings[0].rule.id, "conv-window-inconsistent");
+        assert!(matches!(report.findings[0].span, Span::Neuron(0, n) if n == o));
+
+        // An index outside the receptive field entirely: RF range error.
+        let mut out_of_rf = model.clone();
+        out_of_rf.layers[0].neurons[0].inputs[0] = g.in_f() - 1; // corner RF can't reach it
+        out_of_rf.layers[0].neurons[0].inputs.sort_unstable();
+        let report = lint_conv_model(&man, &out_of_rf).unwrap();
+        assert!(report.errors() >= 1, "{}", report.render());
+        assert!(report.findings.iter().any(|f| f.rule.id == "conv-rf-out-of-range"));
+
+        // MLP manifests trivially lint clean (no conv layers to check).
+        let mlp = Manifest::synthetic_mlp("m", "jets", 16, 5, &[8], 3, 2);
+        let mst = ModelState::init(&mlp, 1, PruneMethod::APriori);
+        let mmodel = crate::nn::ExportedModel::from_state(&mlp, &mst);
+        assert!(lint_conv_model(&mlp, &mmodel).unwrap().is_clean());
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::nn::ExportedModel;
 use crate::obs;
 use anyhow::{ensure, Result};
 pub use boolfn::BoolFn;
-pub use lint::{lint_netlist, LintOptions, LintReport};
+pub use lint::{lint_conv_model, lint_netlist, LintOptions, LintReport};
 pub use mapper::Mapper;
 pub use netlist::{BramNeuron, LutNode, Net, Netlist, period_for_depth};
 pub use opt::OptLevel;

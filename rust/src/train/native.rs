@@ -17,6 +17,11 @@
 //!   backward pass routes the concatenated input gradient back into every
 //!   segment, so one activation accumulates gradient from every layer
 //!   that consumes it before its own quantizer STE fires,
+//! * **conv stages** (`kind = "cnv"`): the lowered per-pixel layers run
+//!   through the same generic masked matmul (im2col in disguise), with
+//!   shared-kernel weights kept exactly tied by gradient-sum accumulation
+//!   over each tap's pixel group, and the receptive-field masks exempt
+//!   from every pruning schedule,
 //! * softmax cross-entropy on the *quantized* logits (the manifests'
 //!   `train_softmax` convention),
 //! * SGD with classical momentum and the same linear learning-rate decay
@@ -99,9 +104,14 @@ struct LayerGrads {
 
 /// Run `opts.steps` native optimizer steps of the manifest's model on
 /// `train_set`.  Same contract as [`super::train`]: mutates `state` in
-/// place and returns the log.  Supports the whole MLP layer-graph family —
-/// any per-layer width schedule and newest-first skip concatenation
-/// (`skips >= 0`); conv manifests must go through the HLO path.
+/// place and returns the log.  Supports the whole heterogeneous layer
+/// family — any per-layer MLP width schedule, newest-first skip
+/// concatenation (`skips >= 0`), and conv manifests (`kind = "cnv"`):
+/// the lowered conv layers run through the same generic matmul (the
+/// structured mask makes it an im2col product), with kernel weight
+/// sharing enforced by summing each tap's gradient over its pixel group
+/// ([`crate::runtime::ConvGeom::neuron_windows`]) so tied weights receive
+/// identical updates and velocities stay tied for the whole run.
 pub fn train_native(
     man: &Manifest,
     state: &mut ModelState,
@@ -110,9 +120,20 @@ pub fn train_native(
 ) -> Result<TrainLog> {
     ensure!(train_set.d == man.in_features, "dataset width mismatch");
     ensure!(train_set.classes == man.classes, "dataset class mismatch");
-    ensure!(man.kind == "mlp", "native trainer supports kind=mlp only (got {})", man.kind);
+    ensure!(
+        man.kind == "mlp" || man.kind == "cnv",
+        "native trainer supports kind=mlp and kind=cnv (got {})",
+        man.kind
+    );
     let n = man.num_layers();
     ensure!(state.num_layers() == n, "state/manifest layer count mismatch");
+    // Conv weight-tying plan: per conv layer (always a manifest prefix),
+    // the per-neuron (slot, input index) windows plus kernel shape.
+    let conv_ties: Vec<(Vec<Vec<(usize, usize)>>, usize, usize)> = man
+        .conv_geoms()?
+        .iter()
+        .map(|g| (g.neuron_windows(), g.c_out, g.window()))
+        .collect();
     // Activation widths `[in_features, hidden...]` for skip concatenation
     // (act_0 = quantized input, act_{i+1} = layer i's quantized output),
     // validated against the canonical skip-widened rule
@@ -343,6 +364,25 @@ pub fn train_native(
                     *gv = 0.0;
                 }
             }
+            // Conv weight sharing: sum each kernel tap's gradient over its
+            // pixel group and scatter the sum back, so every tied weight
+            // sees the identical gradient (and therefore identical velocity
+            // and update — the group stays exactly tied all run).
+            if let Some((wins, c_out, window)) = conv_ties.get(i) {
+                let mut kg = vec![0f32; c_out * window];
+                for (o, win) in wins.iter().enumerate() {
+                    let oc = o % c_out;
+                    for &(slot, j) in win {
+                        kg[oc * window + slot] += dw[o * in_f + j];
+                    }
+                }
+                for (o, win) in wins.iter().enumerate() {
+                    let oc = o % c_out;
+                    for &(slot, j) in win {
+                        dw[o * in_f + j] = kg[oc * window + slot];
+                    }
+                }
+            }
             clip_grad(&mut dw);
             clip_grad(&mut db);
             clip_grad(&mut dgamma);
@@ -416,8 +456,10 @@ pub fn train_native(
         }
 
         // ---------------- pruning schedules --------------------------------
+        // Conv layers (indices < conv_ties.len()) are never pruned: their
+        // structured receptive-field mask is the architecture itself.
         if !matches!(opts.method, PruneMethod::APriori) {
-            for i in 0..n {
+            for i in conv_ties.len()..n {
                 let event = match opts.method {
                     PruneMethod::Iterative { every } | PruneMethod::Momentum { every, .. } => {
                         prune_event(step, every)
@@ -599,6 +641,79 @@ mod tests {
         let mut st = ModelState::init(&man, 3, PruneMethod::APriori);
         let opts = TrainOpts::from_manifest(&man);
         assert!(train_native(&man, &mut st, &ds, &opts).is_err());
+    }
+
+    fn man_conv() -> Manifest {
+        // jets' 16 features read as a 4x4 1-channel image: one dense-mode
+        // conv stage (4 channels, 3x3 window subsampled to 4 taps), one
+        // sparse hidden layer on the flattened map, dense head.
+        Manifest::synthetic_conv(
+            "native_c", "jets", 4, 1, 5, &[4], 3, "dense", Some(4), None, &[16], 3, 2,
+        )
+        .unwrap()
+    }
+
+    /// Assert layer 0's weights are exactly tied per (out-channel, slot)
+    /// across all output pixels.
+    fn assert_kernel_tied(man: &Manifest, st: &ModelState) {
+        let g = &man.conv_geoms().unwrap()[0];
+        let in_f = g.in_f();
+        let mut by_slot = std::collections::HashMap::new();
+        for (o, win) in g.neuron_windows().iter().enumerate() {
+            let oc = o % g.c_out;
+            for &(slot, j) in win {
+                let w = st.ws[0][o * in_f + j];
+                if let Some(p) = by_slot.insert((oc, slot), w) {
+                    assert_eq!(p, w, "kernel untied after training (oc {oc} slot {slot})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_training_learns_and_stays_tied() {
+        let man = man_conv();
+        let ds = crate::hep::jets(2_000, 31);
+        let mut st = ModelState::init(&man, 31, PruneMethod::APriori);
+        let mut opts = TrainOpts::from_manifest(&man);
+        opts.steps = 120;
+        opts.log_every = 10;
+        let log = train_native(&man, &mut st, &ds, &opts).unwrap();
+        let first = log.losses.first().unwrap().1;
+        assert!(log.final_loss < first, "conv loss should drop: {first} -> {}", log.final_loss);
+        assert!(log.final_loss.is_finite());
+        // Weight sharing held exactly through every update.
+        assert_kernel_tied(&man, &st);
+        // The structured mask never moved and off-mask weights stayed zero.
+        let g = &man.conv_geoms().unwrap()[0];
+        assert_eq!(st.masks[0].rows, g.mask_rows());
+        let logits = evaluate_native(&man, &st, &ds);
+        let acc = metrics::accuracy(&logits, &ds.y, man.classes);
+        assert!(acc > 0.30, "conv-trained accuracy {acc} is not above chance");
+    }
+
+    #[test]
+    fn conv_training_deterministic_and_never_pruned() {
+        let man = man_conv();
+        let ds = crate::hep::jets(400, 19);
+        let run = |seed: u64, method: PruneMethod| {
+            let mut st = ModelState::init(&man, seed, method);
+            let mut opts = TrainOpts::from_manifest(&man);
+            opts.steps = 25;
+            opts.seed = seed;
+            opts.method = method;
+            train_native(&man, &mut st, &ds, &opts).unwrap();
+            st
+        };
+        let a = run(6, PruneMethod::APriori);
+        assert_eq!(a.ws, run(6, PruneMethod::APriori).ws);
+        assert_ne!(a.ws, run(7, PruneMethod::APriori).ws);
+        // Iterative pruning must leave the conv layer's structured mask
+        // alone while still pruning the MLP layers toward target fan-in.
+        let it = run(6, PruneMethod::Iterative { every: 5 });
+        let g = &man.conv_geoms().unwrap()[0];
+        assert_eq!(it.masks[0].rows, g.mask_rows(), "conv mask pruned");
+        assert_kernel_tied(&man, &it);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! single source of truth between train steps; the HLO executables are pure
 //! functions over it.
 
-use crate::runtime::Manifest;
+use crate::runtime::{ConvGeom, LayerKind, Manifest};
 use crate::sparsity::prune::PruneMethod;
 use crate::sparsity::Mask;
 use crate::util::rng::Rng;
@@ -30,10 +30,30 @@ impl ModelState {
     /// Initialize parameters (He-style, scaled by effective fan-in) and the
     /// connectivity masks for the chosen pruning method:
     /// * `APriori` / `Momentum` — random expander masks at target fan-in,
-    /// * `Iterative` — dense masks (pruned down during training).
+    /// * `Iterative` — dense masks (pruned down during training),
+    /// * conv layers (any method) — the *structured* receptive-field mask
+    ///   from [`ConvGeom::mask_rows`] with weight-tied kernel init: every
+    ///   output pixel of a channel starts from the same shared kernel, and
+    ///   `train::native` keeps the group tied by summing its gradients.
     pub fn init(man: &Manifest, seed: u64, method: PruneMethod) -> ModelState {
         let mut rng = Rng::new(seed ^ 0x6c6f676e); // "logn"
         let n = man.num_layers();
+        // Conv geometries per layer index (empty map for MLPs).  A manifest
+        // that reaches init has already passed parse/construction-time conv
+        // validation, so the unwrap-to-empty fallback only hides the
+        // already-rejected case.
+        let geoms: Vec<ConvGeom> = man
+            .layer_kinds()
+            .map(|kinds| {
+                kinds
+                    .into_iter()
+                    .filter_map(|k| match k {
+                        LayerKind::Conv(g) => Some(g),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         let mut st = ModelState {
             layer_dims: man.layers.iter().map(|l| (l.out_f, l.in_f)).collect(),
             ws: Vec::new(),
@@ -52,19 +72,40 @@ impl ModelState {
         for i in 0..n {
             let l = &man.layers[i];
             let (out_f, in_f) = (l.out_f, l.in_f);
-            let mask = match (l.fanin, method) {
-                (None, _) => Mask::dense(out_f, in_f),
-                (Some(_), PruneMethod::Iterative { .. }) => Mask::dense(out_f, in_f),
-                (Some(f), _) => Mask::random(out_f, in_f, f, &mut rng.fork(i as u64)),
+            // Conv layers (a manifest prefix) always get their structured
+            // mask — the receptive field is the architecture, never pruned.
+            let conv = geoms.get(i);
+            let mask = match (conv, l.fanin, method) {
+                (Some(g), _, _) => Mask { out_f, in_f, rows: g.mask_rows() },
+                (None, None, _) => Mask::dense(out_f, in_f),
+                (None, Some(_), PruneMethod::Iterative { .. }) => Mask::dense(out_f, in_f),
+                (None, Some(f), _) => Mask::random(out_f, in_f, f, &mut rng.fork(i as u64)),
             };
             let eff_fanin = mask.rows.iter().map(|r| r.len()).max().unwrap_or(in_f);
-            let std = (2.0 / eff_fanin as f32).sqrt();
+            let std = (2.0 / eff_fanin.max(1) as f32).sqrt();
             let mut w = vec![0f32; out_f * in_f];
             // Initialize only on-mask entries; off-mask weights stay zero so
             // iterative pruning restarts cleanly from any mask.
-            for (o, row) in mask.rows.iter().enumerate() {
-                for &j in row {
-                    w[o * in_f + j] = rng.normal_f32(0.0, std);
+            if let Some(g) = conv {
+                // Weight tying: one shared kernel per output channel, drawn
+                // once and written into every pixel of that channel (via the
+                // slot -> input-index map, so truncated border rows reuse
+                // the same taps' values).
+                let mut lrng = rng.fork(i as u64);
+                let kern: Vec<f32> = (0..g.c_out * g.window())
+                    .map(|_| lrng.normal_f32(0.0, std))
+                    .collect();
+                for (o, win) in g.neuron_windows().iter().enumerate() {
+                    let oc = o % g.c_out;
+                    for &(slot, j) in win {
+                        w[o * in_f + j] = kern[oc * g.window() + slot];
+                    }
+                }
+            } else {
+                for (o, row) in mask.rows.iter().enumerate() {
+                    for &j in row {
+                        w[o * in_f + j] = rng.normal_f32(0.0, std);
+                    }
                 }
             }
             st.ws.push(w);
@@ -182,5 +223,38 @@ mod tests {
         let st = ModelState::init(&man(), 3, PruneMethod::APriori);
         assert_eq!(st.shape(0, 32 * 16), vec![32, 16]);
         assert_eq!(st.shape(0, 32), vec![32]);
+    }
+
+    #[test]
+    fn conv_init_structured_mask_and_tied_kernels() {
+        let cman = Manifest::synthetic_conv(
+            "c", "jets", 6, 1, 5, &[3], 3, "dense", Some(4), None, &[8], 3, 2,
+        )
+        .unwrap();
+        // The structured mask is installed for every prune method — the
+        // receptive field is the architecture, not a prunable choice.
+        for method in [PruneMethod::APriori, PruneMethod::Iterative { every: 10 }] {
+            let st = ModelState::init(&cman, 7, method);
+            let g = &cman.conv_geoms().unwrap()[0];
+            assert_eq!(st.masks[0].rows, g.mask_rows());
+            // Tied init: every output pixel of a channel shares the kernel —
+            // same slot => same initial weight, across all pixels.
+            let in_f = g.in_f();
+            let wins = g.neuron_windows();
+            let mut by_slot = std::collections::HashMap::new();
+            for (o, win) in wins.iter().enumerate() {
+                let oc = o % g.c_out;
+                for &(slot, j) in win {
+                    let w = st.ws[0][o * in_f + j];
+                    assert!(w != 0.0, "on-mask conv weight initialized");
+                    let prev = by_slot.insert((oc, slot), w);
+                    if let Some(p) = prev {
+                        assert_eq!(p, w, "kernel tied across pixels (oc {oc} slot {slot})");
+                    }
+                }
+            }
+            // Post-conv MLP layers keep their usual init.
+            assert!(st.masks[1].rows.iter().all(|r| r.len() == 3));
+        }
     }
 }

@@ -1,0 +1,260 @@
+//! Cross-stack conv-topology equivalence suite (PR 9 satellite).
+//!
+//! For random conv manifests (dense and depthwise+pointwise stages on a
+//! 4x4 single-channel view of the jets inputs), the native trainer's
+//! quantized eval-mode forward (the exported arithmetic mirror) must
+//! bit-match every downstream inference surface: the truth-table path
+//! (`luts::ModelTables`), the flattened serving engine (`LutEngine`) and
+//! the synthesized-netlist engine (`NetlistEngine`).  This pins the
+//! train/serve boundary against the conv-specific failure modes —
+//! receptive-field indices drifting off the pixel-major layout, untied
+//! per-pixel kernels, and quantizer-domain (maxv 1.0 input vs 2.0
+//! hidden) mismatches — and checks that pre-conv `archive.json` /
+//! `zoo.json` files still load and resume unchanged.
+
+use logicnets::dse::search::{run_search, Archive, SearchOpts, SearchTask, SearchAxes, WidthShape};
+use logicnets::luts::ModelTables;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::Manifest;
+use logicnets::serve::zoo::{build_engine, ZooManifest};
+use logicnets::serve::{LutEngine, NetlistEngine};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{lint_conv_model, synthesize, verify_netlist, OptLevel, SynthOpts};
+use logicnets::train::{native, ModelState, TrainOpts};
+use logicnets::util::prop::forall;
+use logicnets::util::rng::Rng;
+
+/// Random conv topology on the jets shape (16 features = 4x4 image, 5
+/// classes): one conv stage in either mode, odd kernel, optional hidden
+/// MLP layer on the flattened map.
+fn random_conv_topology(rng: &mut Rng) -> Manifest {
+    let mode = if rng.below(2) == 0 { "dense" } else { "dw" };
+    let channels = [1 + rng.below(3)];
+    let kernel = if rng.below(2) == 0 { 1 } else { 3 };
+    let hidden = if rng.below(2) == 0 { vec![] } else { vec![4 + rng.below(5)] };
+    let fanin = 2 + rng.below(2);
+    let bw = 1 + rng.below(2);
+    // Conv window subsample cap: small enough that table enumeration
+    // stays cheap at either bit-width.
+    let f = Some(2 + rng.below(3));
+    Manifest::synthetic_conv(
+        "conv_prop", "jets", 4, 1, 5, &channels, kernel, mode, f, f, &hidden, fanin, bw,
+    )
+    .expect("4x4 conv geometry is valid")
+}
+
+#[test]
+fn prop_trained_conv_forward_matches_tables_and_engines() {
+    forall("conv-forward-equivalence", 0xC0_4F, 10, |rng: &mut Rng| {
+        let man = random_conv_topology(rng);
+        let seed = rng.next_u64();
+        let ds = logicnets::hep::jets(300, seed ^ 1);
+        let mut st = ModelState::init(&man, seed, PruneMethod::APriori);
+        let mut opts = TrainOpts::from_manifest(&man);
+        // A few real steps so BN running stats, the tied kernels and the
+        // head all move off their init values before equivalence checks.
+        opts.steps = 6;
+        opts.seed = seed;
+        native::train_native(&man, &mut st, &ds, &opts).unwrap();
+
+        // The trainer's eval-mode forward IS the exported mirror.
+        let ex = ExportedModel::from_state(&man, &st);
+        let logits = native::evaluate_native(&man, &st, &ds);
+        assert_eq!(logits, ex.forward_batch(&ds.x), "eval-mode forward != mirror");
+
+        // The trained export honors the receptive-field contract: every
+        // conv tap in range, shared windows consistent across pixels.
+        let report = lint_conv_model(&man, &ex).unwrap();
+        assert!(report.is_clean(), "conv lint on trained export:\n{}", report.render());
+
+        // Mirror == truth tables on every sample (bit-exact codes).
+        let tables = ModelTables::generate(&ex).unwrap();
+        assert_eq!(tables.verify(&ex, &ds.x), 0, "tables diverge from mirror");
+        let lut = LutEngine::build(&ex, &tables).unwrap();
+
+        // Synthesized netlist == truth tables, and the netlist-backed
+        // server returns the same predictions as the table engine.
+        let (netlist, _) = synthesize(
+            &ex,
+            &tables,
+            SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            verify_netlist(&ex, &tables, &netlist, 256, seed).unwrap(),
+            0,
+            "netlist diverges from tables"
+        );
+        let net = NetlistEngine::from_netlist(&ex, &tables, netlist).unwrap();
+        assert_eq!(
+            net.infer_batch(&ds.x),
+            lut.infer_batch(&ds.x),
+            "netlist engine diverges from table engine"
+        );
+    });
+}
+
+#[test]
+fn prop_optimized_conv_netlists_stay_equivalent() {
+    // The optimization pipeline (CSE + sweeps) over conv netlists: the
+    // machine check inside `synthesize` must pass and the served circuit
+    // must stay bit-identical to the table engine.
+    forall("conv-opt-equivalence", 0xC0_5F, 6, |rng: &mut Rng| {
+        let man = random_conv_topology(rng);
+        let seed = rng.next_u64();
+        let st = ModelState::init(&man, seed, PruneMethod::APriori);
+        let ex = ExportedModel::from_state(&man, &st);
+        let tables = ModelTables::generate(&ex).unwrap();
+        let lut = LutEngine::build(&ex, &tables).unwrap();
+        let net = NetlistEngine::build_opt(&ex, &tables, OptLevel::Full).unwrap();
+        let xs: Vec<f32> = (0..16 * 80).map(|_| rng.f32()).collect();
+        assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs));
+    });
+}
+
+#[test]
+fn pre_conv_archive_and_zoo_still_load_and_resume() {
+    // Fixtures written before the conv axes existed: no conv_* keys
+    // anywhere.  The archive must load with conv-free defaults and replay
+    // under the new code with zero retraining; the zoo manifest must load
+    // with `None` conv fields.  Asking for conv axes on the old archive
+    // must refuse and name the offending axis.
+    let out_dir = std::env::temp_dir().join("lnck_conv_legacy_fixtures");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let entry = |name: &str, h: usize, bw: usize, luts: u64, q0: f64, q1: f64| {
+        format!(
+            "{{\"name\":\"{name}\",\"hidden\":[{h}],\"fanin\":2,\"bw\":{bw},\
+             \"method\":\"a-priori\",\"bram_min_bits\":13,\"luts\":\"{luts}\",\
+             \"status\":\"trained\",\"qualities\":[{q0},{q1}],\"accuracy\":0.5,\
+             \"trained_steps\":18}}"
+        )
+    };
+    let json = format!(
+        "{{\"version\":1,\"dataset\":\"jets\",\"budget_luts\":\"5000\",\"seed\":\"4\",\
+         \"rungs\":2,\"base_steps\":6,\"eta\":2,\"max_candidates\":4,\
+         \"axes_key\":\"w8-12_d1_f2_b1-2_ma-priori_r13\",\"entries\":[{},{},{},{}]}}",
+        entry("dse_h8_f2_b1_ap", 8, 1, 66, 51.0, 52.0),
+        entry("dse_h8_f2_b2_ap", 8, 2, 93, 55.0, 56.5),
+        entry("dse_h12_f2_b1_ap", 12, 1, 86, 53.0, 54.0),
+        entry("dse_h12_f2_b2_ap", 12, 2, 121, 57.0, 58.25),
+    );
+    let archive_path = out_dir.join("archive.json");
+    std::fs::write(&archive_path, json).unwrap();
+    let archive = Archive::load(&archive_path).unwrap();
+    assert_eq!(archive.entries.len(), 4);
+    assert!(
+        archive.entries.values().all(|e| e.conv_mode.is_none()
+            && e.conv_channels.is_none()
+            && e.conv_kernel.is_none()),
+        "legacy entries default to conv-free"
+    );
+    let axes = SearchAxes {
+        widths: vec![8, 12],
+        depths: vec![1],
+        fanins: vec![2],
+        bws: vec![1, 2],
+        methods: vec![PruneMethod::APriori],
+        bram_min_bits: vec![13],
+        skips: vec![0],
+        shapes: vec![WidthShape::Rect],
+        conv_modes: vec!["none".into()],
+        channels: vec![4],
+        kernels: vec![3],
+    };
+    // Default conv axes add no key sections: the pre-conv key matches.
+    assert_eq!(axes.key(), "w8-12_d1_f2_b1-2_ma-priori_r13");
+    let task = SearchTask::jets_small(600, 7);
+    let opts = SearchOpts {
+        budget_luts: 5_000,
+        rungs: 2,
+        base_steps: 6,
+        eta: 2,
+        seed: 4,
+        max_candidates: 4,
+        out_dir: out_dir.clone(),
+        resume: true,
+        emit: 0,
+        emit_zoo: false,
+    };
+    let resumed = run_search(&task, &axes, &opts.clone()).unwrap();
+    assert_eq!(resumed.steps_trained, 0, "pre-conv archive must replay without retraining");
+    assert!(!resumed.frontier.is_empty());
+    // Sweeping the conv-mode axis changes the pool: the refusal names it.
+    let mut conv_axes = axes.clone();
+    conv_axes.conv_modes = vec!["none".into(), "dense".into()];
+    let err = run_search(&task, &conv_axes, &opts).expect_err("conv axes on pre-conv archive");
+    assert!(format!("{err:#}").contains("conv-mode"), "{err:#}");
+
+    // A pre-conv zoo.json: entries without conv keys load as conv-free.
+    let zoo_json = "{\"version\":1,\"dataset\":\"jets\",\"entries\":[\
+        {\"name\":\"old\",\"dataset\":\"jets\",\"in_features\":16,\"classes\":5,\
+         \"hidden\":[8],\"fanin\":2,\"bw\":1,\"skips\":0,\"checkpoint\":\"ckpt/old.bin\",\
+         \"luts\":\"100\",\"brams\":0,\"quality\":55.0,\"netlist_accuracy\":0.5,\
+         \"p50_us\":10.0,\"p99_us\":20.0}]}";
+    let zoo_path = out_dir.join("zoo.json");
+    std::fs::write(&zoo_path, zoo_json).unwrap();
+    let zoo = ZooManifest::load(&zoo_path).unwrap();
+    assert_eq!(zoo.entries.len(), 1);
+    assert!(zoo.entries[0].conv_mode.is_none() && zoo.entries[0].conv_kernel.is_none());
+}
+
+#[test]
+fn conv_candidates_reach_frontier_and_serve_bit_exactly() {
+    // End to end on the acceptance path: a conv-swept tiny search trains
+    // real conv candidates, puts them on the frontier, emits lint-clean
+    // machine-verified checkpoints, and the zoo rebuild (the exact
+    // `serve --zoo` path) reproduces the recorded accuracy bit for bit.
+    let out_dir = std::env::temp_dir().join("lnck_conv_e2e_search");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let task = SearchTask::jets_small(600, 33);
+    let axes = SearchAxes {
+        widths: vec![8],
+        depths: vec![1],
+        fanins: vec![2],
+        bws: vec![1],
+        methods: vec![PruneMethod::APriori],
+        bram_min_bits: vec![13],
+        skips: vec![0],
+        shapes: vec![WidthShape::Rect],
+        conv_modes: vec!["dense".into()],
+        channels: vec![2, 4],
+        kernels: vec![3],
+    };
+    let opts = SearchOpts {
+        budget_luts: 5_000,
+        rungs: 2,
+        base_steps: 6,
+        eta: 2,
+        seed: 33,
+        max_candidates: 2,
+        out_dir: out_dir.clone(),
+        resume: false,
+        emit: 2,
+        emit_zoo: true,
+    };
+    let out = run_search(&task, &axes, &opts).unwrap();
+    assert!(!out.frontier.is_empty());
+    assert!(
+        out.frontier.iter().all(|p| p.name.contains("_cdense")),
+        "conv-only pool must yield a conv frontier: {:?}",
+        out.frontier
+    );
+    let zoo = ZooManifest::load(&out.zoo_path.expect("zoo.json written")).unwrap();
+    assert!(!zoo.entries.is_empty());
+    for e in &zoo.entries {
+        assert_eq!(e.conv_mode.as_deref(), Some("dense"), "{}", e.name);
+        assert_eq!(e.conv_kernel, Some(3), "{}", e.name);
+        assert!(e.conv_channels == Some(2) || e.conv_channels == Some(4), "{}", e.name);
+        // Rebuild through the shared conv constructor + receptive-field
+        // lint — the served circuit is the searched circuit.
+        let engine = build_engine(e, &out_dir).unwrap();
+        let acc = logicnets::serve::batch_accuracy(&engine, &task.test.x, &task.test.y);
+        assert!(
+            (acc - e.netlist_accuracy).abs() < 1e-12,
+            "{}: rebuilt accuracy {acc} != recorded {}",
+            e.name,
+            e.netlist_accuracy
+        );
+    }
+}

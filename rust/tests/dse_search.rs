@@ -90,9 +90,10 @@ fn prop_frontier_monotone_under_insertion() {
 
 #[test]
 fn gate_agrees_with_exact_synthesize_pricing() {
-    // Small but full axis product — including the skip and pyramid-taper
-    // axes; every candidate is cross-checked against the real Manifest
-    // pricing and a real synthesis run.
+    // Small but full axis product — including the skip, pyramid-taper
+    // and conv axes (16 features = a 4x4 image, so both conv lowerings
+    // are real geometries here); every candidate is cross-checked against
+    // the real Manifest pricing and a real synthesis run.
     let axes = SearchAxes {
         widths: vec![8, 12],
         depths: vec![1, 2],
@@ -102,6 +103,9 @@ fn gate_agrees_with_exact_synthesize_pricing() {
         bram_min_bits: vec![13],
         skips: vec![0, 1, 2],
         shapes: vec![WidthShape::Rect, WidthShape::Taper { pct: 50 }],
+        conv_modes: vec!["none".into(), "dense".into(), "dw".into()],
+        channels: vec![2, 4],
+        kernels: vec![3],
     };
     let budget = 2_000u64;
     let gate = CostGate { budget_luts: budget };
@@ -111,8 +115,9 @@ fn gate_agrees_with_exact_synthesize_pricing() {
         cands.iter().any(|c| c.hidden.windows(2).any(|w| w[0] != w[1])),
         "pyramid candidates in the pool"
     );
+    assert!(cands.iter().any(|c| c.conv.is_some()), "conv candidates in the pool");
     for c in cands {
-        let man = c.manifest("jets", 16, 5);
+        let man = c.manifest("jets", 16, 5).unwrap();
         let exact_total = cost::total_luts(&cost::manifest_cost(&man));
         // The gate's fast-path price IS the exact analytical price...
         assert_eq!(gate.price(&c, 16, 5), exact_total, "{}", c.name());
@@ -144,6 +149,9 @@ fn tiny_axes() -> SearchAxes {
         bram_min_bits: vec![13],
         skips: vec![0],
         shapes: vec![WidthShape::Rect],
+        conv_modes: vec!["none".into()],
+        channels: vec![4],
+        kernels: vec![3],
     }
 }
 

@@ -101,6 +101,9 @@ fn zoo_engine_rebuild_requires_checkpoint() {
         fanin: 2,
         bw: 1,
         skips: 0,
+        conv_mode: None,
+        conv_channels: None,
+        conv_kernel: None,
         checkpoint: "ckpt/ghost.r2.bin".into(),
         luts: 100,
         brams: 0,
@@ -133,6 +136,9 @@ fn explore_emits_budget_servable_zoo() {
         bram_min_bits: vec![13],
         skips: vec![1],
         shapes: vec![WidthShape::Rect],
+        conv_modes: vec!["none".into()],
+        channels: vec![4],
+        kernels: vec![3],
     };
     let opts = SearchOpts {
         budget_luts: 5_000,
