@@ -15,7 +15,7 @@ use logicnets::luts::ModelTables;
 use logicnets::nn::ExportedModel;
 use logicnets::runtime::Manifest;
 use logicnets::serve::NetlistEngine;
-use logicnets::sim::{eval_netlist_64, eval_plan, BitMatrix, EvalPlan, SimScratch};
+use logicnets::sim::{eval_netlist_64, eval_plan, BitMatrix, EvalPlan, SimScratch, SimdTier};
 use logicnets::sparsity::prune::PruneMethod;
 use logicnets::synth::{synthesize, Netlist, SynthOpts};
 use logicnets::train::ModelState;
@@ -29,6 +29,7 @@ fn synthesized(
     hidden: &[usize],
     fanin: usize,
     bw: usize,
+    bram_min_bits: usize,
 ) -> (ExportedModel, ModelTables, Netlist) {
     let man = Manifest::synthetic_topology(name, "jets", in_f, classes, hidden, fanin, bw, 0);
     let st = ModelState::init(&man, 7, PruneMethod::APriori);
@@ -37,7 +38,7 @@ fn synthesized(
     let (netlist, _) = synthesize(
         &model,
         &tables,
-        SynthOpts { registers: false, bram_min_bits: 0, ..SynthOpts::default() },
+        SynthOpts { registers: false, bram_min_bits, ..SynthOpts::default() },
     )
     .unwrap();
     (model, tables, netlist)
@@ -133,7 +134,7 @@ fn main() {
 
     // Primary: the jets-default config (acceptance gate subject).
     let (model, tables, netlist) =
-        synthesized("bench_jets_default", 16, 5, &[64, 32], 3, 2);
+        synthesized("bench_jets_default", 16, 5, &[64, 32], 3, 2, 0);
     println!(
         "jets-default: {} LUTs over {} inputs, depth {} (batch {batch})",
         netlist.num_luts(),
@@ -165,7 +166,7 @@ fn main() {
     );
 
     // Stress shape: deeper/wider hep_e-like circuit, no scalar pass.
-    let (_, _, hep) = synthesized("bench_hep_e_like", 16, 5, &[64, 64, 64], 4, 2);
+    let (_, _, hep) = synthesized("bench_hep_e_like", 16, 5, &[64, 64, 64], 4, 2, 0);
     println!(
         "hep_e-like: {} LUTs over {} inputs, depth {} (batch {batch})",
         hep.num_luts(),
@@ -173,6 +174,137 @@ fn main() {
         hep.depth()
     );
     sim_scenarios(&mut report, "hep_e-like", &hep, batch, iters, false);
+
+    // SIMD dispatch tiers on the jets-default subject: every tier the
+    // host can run, against the same plan and inputs.  Portable is the
+    // oracle; the acceptance gate wants the dispatched tier >= portable.
+    let (tplanes, _) = random_planes(&netlist, batch, 11);
+    let tb = batch as f64;
+    let mut tier_rates: Vec<(&'static str, f64)> = Vec::new();
+    for tier in SimdTier::supported() {
+        let plan_t = EvalPlan::compile_with_tier(&netlist, tier);
+        let mut scratch_t = SimScratch::default();
+        let t = bench_n(&format!("sim256-tier-{}/jets-default", tier.name()), iters, || {
+            std::hint::black_box(eval_plan(&plan_t, &tplanes, &mut scratch_t));
+        });
+        t.report_throughput(tb, "inf");
+        report.add(&t, tb, "inf");
+        tier_rates.push((tier.name(), t.median_ns));
+    }
+    if let Some(&(_, portable_ns)) = tier_rates.first() {
+        let (best, best_ns) =
+            tier_rates.iter().fold(("portable", portable_ns), |acc, &(n, ns)| {
+                if ns < acc.1 {
+                    (n, ns)
+                } else {
+                    acc
+                }
+            });
+        println!(
+            "{:<44} dispatched tier {} over portable: {:.2}x (detected: {})\n",
+            "",
+            best,
+            portable_ns / best_ns,
+            SimdTier::detect().name()
+        );
+    }
+
+    // Single-sample level-parallel splitting: a wide single-level circuit
+    // (one 2048-neuron hidden layer -> 4096 records in one level) at
+    // batch 1, where chunk-level parallelism cannot help, with the
+    // per-level split off vs on.  This pair calibrates the
+    // LOGICNETS_LEVEL_PAR width threshold.
+    let (_, _, wide) = synthesized("bench_wide_level", 16, 5, &[2048], 3, 2, 0);
+    println!(
+        "wide-level: {} LUTs over {} inputs, depth {} (batch 1)",
+        wide.num_luts(),
+        wide.num_inputs,
+        wide.depth()
+    );
+    let (wplanes, _) = random_planes(&wide, 1, 13);
+    let mut wplan = EvalPlan::compile(&wide);
+    let single_iters = (iters * 20).max(100);
+    wplan.set_level_parallel(false);
+    let mut ws_off = SimScratch::default();
+    let lp_off = bench_n("sim256-levelpar-off/wide-1s", single_iters, || {
+        std::hint::black_box(eval_plan(&wplan, &wplanes, &mut ws_off));
+    });
+    lp_off.report_throughput(1.0, "inf");
+    report.add(&lp_off, 1.0, "inf");
+    wplan.set_level_parallel(true);
+    let mut ws_on = SimScratch::default();
+    let lp_on = bench_n("sim256-levelpar-on/wide-1s", single_iters, || {
+        std::hint::black_box(eval_plan(&wplan, &wplanes, &mut ws_on));
+    });
+    lp_on.report_throughput(1.0, "inf");
+    report.add(&lp_on, 1.0, "inf");
+    println!(
+        "{:<44} level-parallel single-sample speedup: {:.2}x (heuristic verdict: {})\n",
+        "",
+        lp_off.median_ns / lp_on.median_ns,
+        wplan.level_parallel()
+    );
+
+    // BRAM-threshold design through the wide path (no scalar fallback):
+    // fanin 3 x 2-bit codes = 6 address bits, so bram_min_bits 6 spills
+    // every neuron to a content-bearing BRAM record.
+    let (bmodel, btables, bram_nl) =
+        synthesized("bench_bram_threshold", 16, 5, &[64, 32], 3, 2, 6);
+    println!(
+        "bram-threshold: {} LUTs + {} BRAM records over {} inputs (batch {})",
+        bram_nl.num_luts(),
+        bram_nl.num_brams(),
+        bram_nl.num_inputs,
+        batch.min(1024)
+    );
+    let (bplanes, brows) = random_planes(&bram_nl, batch.min(1024), 17);
+    let bplan = EvalPlan::compile(&bram_nl);
+    let mut bscratch = SimScratch::default();
+    // Bit-exactness spot check before timing: wide plan vs scalar eval.
+    let bout = eval_plan(&bplan, &bplanes, &mut bscratch);
+    for (s, row) in brows.iter().take(64).enumerate() {
+        assert_eq!(bout.column(s), bram_nl.eval(row), "bram wide/scalar mismatch at sample {s}");
+    }
+    let bb = bplanes.samples() as f64;
+    let bwide = bench_n("sim256-bram/jets-default", iters, || {
+        std::hint::black_box(eval_plan(&bplan, &bplanes, &mut bscratch));
+    });
+    bwide.report_throughput(bb, "inf");
+    report.add(&bwide, bb, "inf");
+    let b64 = bench_n("sim64-bram/jets-default", iters, || {
+        std::hint::black_box(eval_netlist_64(&bram_nl, &bplanes));
+    });
+    b64.report_throughput(bb, "inf");
+    report.add(&b64, bb, "inf");
+    let bscalar = bench_n("scalar-bram/jets-default", 3.max(iters / 10), || {
+        for row in brows.iter().take(256) {
+            std::hint::black_box(bram_nl.eval(row));
+        }
+    });
+    bscalar.report_throughput(256.0, "inf");
+    report.add(&bscalar, 256.0, "inf");
+    // And the fused serving pass over the same BRAM circuit.
+    let bengine = NetlistEngine::from_netlist(&bmodel, &btables, bram_nl).unwrap();
+    let bxs: Vec<f32> = {
+        let mut rng = Rng::new(19);
+        (0..batch.min(1024) * 16).map(|_| rng.f32()).collect()
+    };
+    assert_eq!(
+        bengine.infer_batch(&bxs),
+        bengine.infer_batch_unfused(&bxs),
+        "bram fused/unfused mismatch"
+    );
+    let bfused = bench_n("netlist-fused-bram/jets-default", iters, || {
+        std::hint::black_box(bengine.infer_batch(&bxs));
+    });
+    bfused.report_throughput(bb, "inf");
+    report.add(&bfused, bb, "inf");
+    println!(
+        "{:<44} bram wide-plane speedup over 64-way: {:.2}x, over scalar: {:.2}x\n",
+        "",
+        b64.median_ns / bwide.median_ns,
+        (bscalar.median_ns / 256.0) / (bwide.median_ns / bb)
+    );
 
     report.finish();
 }

@@ -302,15 +302,16 @@ fn cmd_synth(args: &Args) -> Result<()> {
     println!("  netlist: {} nodes over {} inputs", netlist.num_luts(), netlist.num_inputs);
     if args.has_flag("score") {
         // Score the mapped netlist on the full test set through the
-        // bitsliced simulator.  The reported netlist is reused as-is when
-        // it is end-to-end evaluable; with BRAM-mapped neurons a BRAM-free
-        // remap must be scored instead (and is labeled as such).
+        // bitsliced simulator.  Content-bearing BRAM records evaluate in
+        // place (the wide plan fires them like any other record), so the
+        // reported netlist is reused as-is; only an opaque-port netlist
+        // (no captured contents) still needs the BRAM-free remap.
         let (_, test) = ctx.dataset(&tr.man.dataset);
         let test = test.clone();
-        let built = if netlist.brams.is_empty() {
+        let built = if netlist.brams_evaluable() {
             NetlistEngine::from_netlist(&ex, &tables, netlist)
         } else {
-            println!("  (BRAM-mapped neurons present: scoring a BRAM-free remap)");
+            println!("  (opaque BRAM ports present: scoring a BRAM-free remap)");
             NetlistEngine::build_opt(&ex, &tables, opts.opt)
         };
         match built {

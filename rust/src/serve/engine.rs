@@ -348,8 +348,9 @@ struct FusedWorker {
 
 impl NetlistEngine {
     /// Synthesize the model's table-mapped prefix into a netlist and build
-    /// the engine.  BRAM spill is disabled: serving needs an end-to-end
-    /// evaluable circuit.
+    /// the engine.  Wide neurons spill to content-bearing BRAM records at
+    /// the default threshold; the simulator fires them in place, so the
+    /// circuit stays end-to-end evaluable.
     pub fn build(model: &ExportedModel, tables: &ModelTables) -> Result<NetlistEngine> {
         Self::build_opt(model, tables, OptLevel::None)
     }
@@ -367,7 +368,7 @@ impl NetlistEngine {
         let (netlist, _) = synthesize(
             model,
             tables,
-            SynthOpts { registers: false, bram_min_bits: 0, opt, ..SynthOpts::default() },
+            SynthOpts { registers: false, opt, ..SynthOpts::default() },
         )?;
         Self::from_netlist(model, tables, netlist)
     }
@@ -381,11 +382,12 @@ impl NetlistEngine {
         tables: &ModelTables,
         netlist: Netlist,
     ) -> Result<NetlistEngine> {
-        // Shared executable-netlist preconditions (no BRAM, emitted layers
-        // present, uniform-width contiguous prefix for skip wiring) live in
-        // synth::verify_plan; serving additionally needs the prefix to
-        // start at layer 0 so the netlist's input bus is the model input
-        // bus.
+        // Shared executable-netlist preconditions (no opaque BRAM, emitted
+        // layers present, uniform-width contiguous prefix for skip wiring)
+        // live in synth::verify_plan; serving additionally needs the
+        // prefix to start at layer 0 so the netlist's input bus is the
+        // model input bus (plus any BRAM pseudo inputs, which the
+        // simulator overwrites in place).
         let (emitted, lt_first, out_bw) = crate::synth::verify_plan(model, tables, &netlist)?;
         ensure!(
             emitted.iter().enumerate().all(|(k, &li)| k == li),
@@ -393,9 +395,10 @@ impl NetlistEngine {
         );
         let last = *emitted.last().unwrap();
         let bw_in = lt_first.quant_in.bw;
+        let pseudo_bits: usize = netlist.brams.iter().map(|b| b.out_bits).sum();
         ensure!(
-            netlist.num_inputs == model.layers[0].in_f * bw_in,
-            "netlist input bus {} != in_f {} * bw {bw_in}",
+            netlist.num_inputs == model.layers[0].in_f * bw_in + pseudo_bits,
+            "netlist input bus {} != in_f {} * bw {bw_in} + {pseudo_bits} BRAM pseudo bits",
             netlist.num_inputs,
             model.layers[0].in_f
         );
@@ -509,13 +512,17 @@ impl NetlistEngine {
     /// output codes out of the wide value array, run the dense tail and
     /// argmax — the netlist outputs never leave cache as a whole-batch
     /// `BitMatrix`.  `start` (the global index of `preds[0]`) must be a
-    /// multiple of `CHUNK_SAMPLES`.
+    /// multiple of `CHUNK_SAMPLES`.  `auto` lets each chunk split its
+    /// levels across the pool ([`EvalPlan::eval_chunk_auto`]) — only the
+    /// single-range inline caller passes true, so a batch that is already
+    /// range-parallel never oversubscribes.
     fn fused_range(
         &self,
         inputs: &BitMatrix,
         start: usize,
         preds: &mut [usize],
         ws: &mut FusedWorker,
+        auto: bool,
     ) {
         debug_assert_eq!(start % CHUNK_SAMPLES, 0);
         ws.vals.resize(self.plan.vals_len(), [0u64; LANES]);
@@ -523,7 +530,11 @@ impl NetlistEngine {
         let mut done = 0usize;
         while done < preds.len() {
             let w0 = (start + done) / 64;
-            self.plan.eval_chunk(inputs, w0, &mut ws.vals);
+            if auto {
+                self.plan.eval_chunk_auto(inputs, w0, &mut ws.vals);
+            } else {
+                self.plan.eval_chunk(inputs, w0, &mut ws.vals);
+            }
             let in_chunk = CHUNK_SAMPLES.min(preds.len() - done);
             for k in 0..in_chunk {
                 let (lane, bit) = (k / 64, k % 64);
@@ -594,12 +605,12 @@ impl NetlistEngine {
         // Destructure so the threads borrow disjoint fields.
         let FusedScratch { inputs, workers: wss } = &mut fs;
         if nranges == 1 {
-            self.fused_range(inputs, 0, &mut preds, &mut wss[0]);
+            self.fused_range(inputs, 0, &mut preds, &mut wss[0], true);
         } else {
             std::thread::scope(|s| {
                 for (r, (chunk, ws)) in preds.chunks_mut(per).zip(wss.iter_mut()).enumerate() {
                     let inputs = &*inputs;
-                    s.spawn(move || self.fused_range(inputs, r * per, chunk, ws));
+                    s.spawn(move || self.fused_range(inputs, r * per, chunk, ws, false));
                 }
             });
         }
@@ -866,6 +877,35 @@ mod tests {
                 let xs: Vec<f32> = (0..8 * n).map(|_| rng.f32()).collect();
                 assert_eq!(net.infer_batch(&xs), lut.infer_batch(&xs), "{opt:?} n={n}");
             }
+        }
+    }
+
+    #[test]
+    fn netlist_engine_serves_bram_threshold_designs() {
+        // Spill every table-mapped neuron to a content-bearing BRAM record
+        // (fanin 3 x 2-bit codes = 6 address bits): the fused wide path
+        // must fire BRAM->BRAM chains (layer-1 addresses read layer-0
+        // pseudo outputs) bit-identically to the table engine, with no
+        // scalar fallback or BRAM-free remap.
+        let model = random_model(11);
+        let tables = ModelTables::generate(&model).unwrap();
+        let (netlist, report) = synthesize(
+            &model,
+            &tables,
+            SynthOpts { registers: false, bram_min_bits: 6, ..SynthOpts::default() },
+        )
+        .unwrap();
+        assert!(report.brams > 0, "threshold must spill");
+        assert!(netlist.brams_evaluable());
+        let lut = LutEngine::build(&model, &tables).unwrap();
+        let net = NetlistEngine::from_netlist(&model, &tables, netlist).unwrap();
+        assert!(net.plan.num_bram_records() > 0, "wide plan must carry BRAM records");
+        let mut rng = Rng::new(23);
+        for n in [1usize, 63, 64, 65, 200, 257] {
+            let xs: Vec<f32> = (0..12 * n).map(|_| rng.f32()).collect();
+            let expect = lut.infer_batch(&xs);
+            assert_eq!(net.infer_batch(&xs), expect, "fused n={n}");
+            assert_eq!(net.infer_batch_unfused(&xs), expect, "unfused n={n}");
         }
     }
 

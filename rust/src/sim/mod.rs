@@ -39,6 +39,87 @@ use crate::synth::netlist::{Net, Netlist};
 use crate::util::bits::var_word;
 use crate::util::pool;
 
+/// Runtime-dispatched SIMD tier for the chunk kernels.  Each
+/// [`EvalPlan`] compile picks one via [`SimdTier::detect`] and routes
+/// every LUT record through [`lut_chunk_at`]; the portable tier stays the
+/// byte-exact oracle the intrinsic tiers are property-tested against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable `[u64; LANES]` lane loops (autovectorized; the oracle).
+    Portable,
+    /// 256-bit AVX2 intrinsics: `vpand`/`vpandn`/`vpor` mask-select muxes.
+    Avx2,
+    /// AVX-512VL ternary-logic muxes on 256-bit registers (`vpternlogq`
+    /// imm 0xCA — one instruction per mux instead of three).
+    Avx512,
+}
+
+impl SimdTier {
+    fn rank(self) -> u8 {
+        match self {
+            SimdTier::Portable => 0,
+            SimdTier::Avx2 => 1,
+            SimdTier::Avx512 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Portable => "portable",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Avx512 => "avx512",
+        }
+    }
+
+    /// Widest tier the CPU reports at runtime (compile-time features play
+    /// no part: a `-C target-cpu=x86-64` baseline build still dispatches
+    /// to AVX2 when the host has it).
+    fn hardware() -> SimdTier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512vl")
+            {
+                return SimdTier::Avx512;
+            }
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return SimdTier::Avx2;
+            }
+        }
+        SimdTier::Portable
+    }
+
+    /// The tier dispatch uses: the widest the hardware supports, unless
+    /// `LOGICNETS_SIMD=portable|avx2|avx512` requests a different one.
+    /// The request is clamped to what the hardware reports, so a forced
+    /// tier can lower the dispatch but never make it unsound.
+    pub fn detect() -> SimdTier {
+        let hw = SimdTier::hardware();
+        let req = match std::env::var("LOGICNETS_SIMD").ok().as_deref() {
+            Some("portable") => Some(SimdTier::Portable),
+            Some("avx2") => Some(SimdTier::Avx2),
+            Some("avx512") => Some(SimdTier::Avx512),
+            _ => None,
+        };
+        match req {
+            Some(r) if r.rank() <= hw.rank() => r,
+            _ => hw,
+        }
+    }
+
+    /// Every tier eligible for dispatch on this host under the current
+    /// config, lowest first (always contains `Portable`).  Test suites
+    /// sweep this to pin each dispatched kernel against the portable
+    /// oracle; `bench_sim` uses it for the tier-comparison scenarios.
+    pub fn supported() -> Vec<SimdTier> {
+        let top = SimdTier::detect();
+        [SimdTier::Portable, SimdTier::Avx2, SimdTier::Avx512]
+            .into_iter()
+            .filter(|t| t.rank() <= top.rank())
+            .collect()
+    }
+}
+
 /// `u64` lanes per chunk in the wide path: 4 lanes = 256 samples evaluated
 /// per LUT record.  Chosen to match one 256-bit vector register (AVX2 /
 /// NEON pairs) while keeping the per-worker value array small enough to
@@ -334,6 +415,127 @@ pub fn lut_chunk(tt: u64, xs: &[Chunk]) -> Chunk {
     }
 }
 
+/// [`lut_chunk`] at an explicit dispatch tier — semantics are identical on
+/// every tier, bit for bit.  The intrinsic arms run `unsafe`
+/// `#[target_feature]` kernels, which is sound because `tier` values other
+/// than `Portable` only come from [`SimdTier::detect`] (hardware-clamped);
+/// constructing one by hand and calling this on a CPU without the feature
+/// is the caller's UB to avoid.
+#[inline]
+pub fn lut_chunk_at(tier: SimdTier, tt: u64, xs: &[Chunk]) -> Chunk {
+    match tier {
+        SimdTier::Portable => lut_chunk(tt, xs),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the tier was hardware-clamped by `SimdTier::detect`.
+        SimdTier::Avx2 => unsafe { x86::lut_chunk_avx2(tt, xs) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        SimdTier::Avx512 => unsafe { x86::lut_chunk_avx512(tt, xs) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Avx2 | SimdTier::Avx512 => lut_chunk(tt, xs),
+    }
+}
+
+/// Explicit-intrinsic variants of the chunk kernels.  A [`Chunk`]
+/// (`[u64; 4]`) is exactly one 256-bit register, moved with unaligned
+/// loads/stores (the arena gives no alignment guarantee).  Every fn here
+/// is `unsafe` + `#[target_feature]`: callers must have verified the
+/// feature at runtime (`SimdTier::detect` does).
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{Chunk, LANES};
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load(c: &Chunk) -> __m256i {
+        _mm256_loadu_si256(c.as_ptr().cast())
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn store(r: __m256i) -> Chunk {
+        let mut out = [0u64; LANES];
+        _mm256_storeu_si256(out.as_mut_ptr().cast(), r);
+        out
+    }
+
+    /// 1-input LUT over a register (the two low tt bits), constant arms
+    /// splatted: 00 → 0, 11 → 1, 10 → x, 01 → !x.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn pair_mux(tt: u64, x: __m256i) -> __m256i {
+        match tt & 0b11 {
+            0b00 => _mm256_setzero_si256(),
+            0b11 => _mm256_set1_epi64x(-1),
+            0b10 => x,
+            _ => _mm256_xor_si256(x, _mm256_set1_epi64x(-1)),
+        }
+    }
+
+    /// `x ? a1 : a0` per bit: and + andnot + or (three AVX2 ops).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mux_avx2(x: __m256i, a1: __m256i, a0: __m256i) -> __m256i {
+        _mm256_or_si256(_mm256_and_si256(x, a1), _mm256_andnot_si256(x, a0))
+    }
+
+    /// `x ? a1 : a0` per bit in ONE `vpternlogq`: imm 0xCA reads the
+    /// operand bits as (x, a1, a0) and selects a1 where x=1, a0 where x=0.
+    #[inline]
+    #[target_feature(enable = "avx512f,avx512vl")]
+    unsafe fn mux_avx512(x: __m256i, a1: __m256i, a0: __m256i) -> __m256i {
+        _mm256_ternarylogic_epi64::<0xCA>(x, a1, a0)
+    }
+
+    // One macro stamps both kernels: identical Shannon fold (seed the
+    // 1-input cofactors from tt bit pairs over xs[0], then halve with the
+    // tier's mux), differing only in the mux instruction.
+    macro_rules! lut_chunk_kernel {
+        ($name:ident, $feature:literal, $mux:ident) => {
+            /// # Safety
+            /// The CPU must support the `#[target_feature]` set of this
+            /// fn, verified at runtime (`SimdTier::detect`).
+            #[target_feature(enable = $feature)]
+            pub unsafe fn $name(tt: u64, xs: &[Chunk]) -> Chunk {
+                let k = xs.len();
+                debug_assert!(k <= 6, "LUT arity {k} > 6");
+                let mask = if k >= 6 { u64::MAX } else { (1u64 << (1usize << k)) - 1 };
+                let tt = tt & mask;
+                if tt == 0 {
+                    return [0u64; LANES];
+                }
+                if tt == mask {
+                    return [u64::MAX; LANES];
+                }
+                // Non-constant => k >= 1 here; half = 1 folds nothing and
+                // returns the seeded pair_mux, matching `lut_chunk`'s k=1
+                // arm.
+                let x0 = load(&xs[0]);
+                let half = 1usize << (k - 1);
+                let mut cof = [_mm256_setzero_si256(); 32];
+                for i in 0..half {
+                    cof[i] = pair_mux(tt >> (2 * i), x0);
+                }
+                let mut width = half;
+                let mut v = 1;
+                while width > 1 {
+                    width /= 2;
+                    let x = load(&xs[v]);
+                    for i in 0..width {
+                        cof[i] = $mux(x, cof[2 * i + 1], cof[2 * i]);
+                    }
+                    v += 1;
+                }
+                store(cof[0])
+            }
+        };
+    }
+
+    lut_chunk_kernel!(lut_chunk_avx2, "avx2", mux_avx2);
+    lut_chunk_kernel!(lut_chunk_avx512, "avx512f,avx512vl", mux_avx512);
+}
+
 #[inline]
 fn read_net(inputs: &BitMatrix, vals: &[u64], net: Net, w: usize) -> u64 {
     match net {
@@ -369,6 +571,80 @@ fn eval_block(netlist: &Netlist, inputs: &BitMatrix, range: std::ops::Range<usiz
     block
 }
 
+/// [`eval_block`] for netlists carrying content-bearing BRAM records: the
+/// input planes of each word are staged into a mutable overlay so a fired
+/// BRAM can overwrite its pseudo-input words, and BRAMs fire at their
+/// [`Netlist::bram_triggers`] index exactly as in the scalar evaluator.
+/// The memory lookup itself is inherently per-sample (64 address packs +
+/// table reads per word); the LUT sweep around it stays word-parallel.
+fn eval_block_bram(
+    netlist: &Netlist,
+    inputs: &BitMatrix,
+    range: std::ops::Range<usize>,
+) -> Vec<u64> {
+    let len = range.len();
+    let triggers = netlist.bram_triggers();
+    let mut vals = vec![0u64; netlist.nodes.len()];
+    let mut inw = vec![0u64; netlist.num_inputs];
+    let mut block = vec![0u64; netlist.outputs.len() * len];
+    let mut xs = [0u64; 6];
+    let read = |inw: &[u64], vals: &[u64], net: Net| -> u64 {
+        match net {
+            Net::Const0 => 0,
+            Net::Const1 => u64::MAX,
+            Net::Input(i) => inw[i as usize],
+            Net::Node(i) => vals[i as usize],
+        }
+    };
+    let mut fired = vec![false; netlist.brams.len()];
+    for (k, w) in range.enumerate() {
+        for i in 0..netlist.num_inputs {
+            inw[i] = inputs.plane(i)[w];
+        }
+        fired.iter_mut().for_each(|f| *f = false);
+        for i in 0..=netlist.nodes.len() {
+            for (bi, b) in netlist.brams.iter().enumerate() {
+                if fired[bi] || triggers[bi] > i {
+                    continue;
+                }
+                debug_assert!(b.is_evaluable());
+                // Pack each sample's address from the gathered word bits,
+                // look it up, and scatter the code into the pseudo words.
+                let addr: Vec<u64> = b.inputs.iter().map(|&n| read(&inw, &vals, n)).collect();
+                let mut outw = vec![0u64; b.out_bits];
+                for s in 0..64usize {
+                    let mut idx = 0usize;
+                    for (j, aw) in addr.iter().enumerate() {
+                        idx |= (((aw >> s) & 1) as usize) << j;
+                    }
+                    let code = b.content[idx] as u64;
+                    for (ob, o) in outw.iter_mut().enumerate() {
+                        *o |= ((code >> ob) & 1) << s;
+                    }
+                }
+                for (ob, &o) in outw.iter().enumerate() {
+                    inw[b.out_base as usize + ob] = o;
+                }
+                fired[bi] = true;
+            }
+            if i == netlist.nodes.len() {
+                break;
+            }
+            let node = &netlist.nodes[i];
+            let arity = node.inputs.len();
+            debug_assert!(arity <= 6);
+            for (j, &inp) in node.inputs.iter().enumerate() {
+                xs[j] = read(&inw, &vals, inp);
+            }
+            vals[i] = lut_word(node.tt, &xs[..arity]);
+        }
+        for (oi, &o) in netlist.outputs.iter().enumerate() {
+            block[oi * len + k] = read(&inw, &vals, o);
+        }
+    }
+    block
+}
+
 /// Bitsliced batch evaluation of a netlist: `inputs` holds one plane per
 /// primary input, the result one plane per output net.  Runs the wide
 /// 256-way path by compiling an [`EvalPlan`] on the fly — the convenience
@@ -376,7 +652,10 @@ fn eval_block(netlist: &Netlist, inputs: &BitMatrix, range: std::ops::Range<usiz
 /// sweeps).  Hot paths should compile the plan once and call
 /// [`eval_plan`] with a reused [`SimScratch`].
 pub fn eval_netlist(netlist: &Netlist, inputs: &BitMatrix) -> BitMatrix {
-    assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+    assert!(
+        netlist.brams_evaluable(),
+        "netlist with opaque (content-less) BRAM ports is not evaluable"
+    );
     let plan = EvalPlan::compile(netlist);
     eval_plan(&plan, inputs, &mut SimScratch::default())
 }
@@ -386,7 +665,10 @@ pub fn eval_netlist(netlist: &Netlist, inputs: &BitMatrix) -> BitMatrix {
 /// construction, checked by a debug assertion).  Kept as the bit-exact
 /// oracle for the wide path and as the `bench_sim` speedup baseline.
 pub fn eval_netlist_64(netlist: &Netlist, inputs: &BitMatrix) -> BitMatrix {
-    assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+    assert!(
+        netlist.brams_evaluable(),
+        "netlist with opaque (content-less) BRAM ports is not evaluable"
+    );
     assert_eq!(inputs.planes(), netlist.num_inputs, "input plane count");
     #[cfg(debug_assertions)]
     for (i, node) in netlist.nodes.iter().enumerate() {
@@ -405,8 +687,11 @@ pub fn eval_netlist_64(netlist: &Netlist, inputs: &BitMatrix) -> BitMatrix {
     let per = wpp.div_ceil(pool::num_threads()).max(1);
     let ranges: Vec<std::ops::Range<usize>> =
         (0..wpp).step_by(per).map(|lo| lo..(lo + per).min(wpp)).collect();
-    let blocks: Vec<Vec<u64>> =
-        pool::par_map(&ranges, |_, r| eval_block(netlist, inputs, r.clone()));
+    let blocks: Vec<Vec<u64>> = if netlist.brams.is_empty() {
+        pool::par_map(&ranges, |_, r| eval_block(netlist, inputs, r.clone()))
+    } else {
+        pool::par_map(&ranges, |_, r| eval_block_bram(netlist, inputs, r.clone()))
+    };
     let tail = out.tail_mask();
     for (range, block) in ranges.iter().zip(blocks) {
         let len = range.len();
@@ -632,6 +917,45 @@ mod tests {
         assert_eq!(out.planes(), 0);
         let out = eval_netlist_64(&no_out, &BitMatrix::new(3, 100));
         assert_eq!(out.planes(), 0);
+    }
+
+    /// Every dispatched tier must match the portable kernel bit for bit
+    /// on random truth tables at every arity (the cross-stack property
+    /// sweep lives in `tests/simd_dispatch.rs`; this is the in-crate
+    /// smoke version).
+    #[test]
+    fn dispatched_tiers_match_portable_kernel() {
+        let mut rng = Rng::new(17);
+        for tier in SimdTier::supported() {
+            for k in 0..=6usize {
+                for _ in 0..25 {
+                    let tt = rng.next_u64();
+                    let xs: Vec<Chunk> = (0..k)
+                        .map(|_| {
+                            let mut c = [0u64; LANES];
+                            for l in &mut c {
+                                *l = rng.next_u64();
+                            }
+                            c
+                        })
+                        .collect();
+                    assert_eq!(
+                        lut_chunk_at(tier, tt, &xs),
+                        lut_chunk(tt, &xs),
+                        "tier={} k={k} tt={tt:#x}",
+                        tier.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_tier_detection_is_clamped_and_ordered() {
+        let tiers = SimdTier::supported();
+        assert_eq!(tiers[0], SimdTier::Portable, "portable is always eligible");
+        assert!(tiers.contains(&SimdTier::detect()), "detected tier must be eligible");
+        assert_eq!(SimdTier::Portable.name(), "portable");
     }
 
     /// Wide path vs 64-way oracle: whole-`BitMatrix` equality (the tail

@@ -15,16 +15,36 @@
 //! optimization pass left stale `LutNode::level` fields), which groups
 //! same-depth LUTs contiguously for cache locality.
 //!
+//! Three capabilities added on top of the arena (DESIGN.md §11):
+//!
+//! - **SIMD dispatch**: each compile picks a [`SimdTier`] once
+//!   ([`SimdTier::detect`], overridable via `LOGICNETS_SIMD`) and the
+//!   record sweep routes through [`super::lut_chunk_at`], so AVX2 /
+//!   AVX-512VL hosts run the intrinsic kernels while the portable fold
+//!   stays the oracle.
+//! - **BRAM records**: content-bearing `BramNeuron`s compile to
+//!   [`BramRecord`]s (gather address slots → per-sample table lookup →
+//!   scatter output bits into the pseudo-input slots), scheduled at level
+//!   `1 + max(address levels)` before that level's LUT records — so
+//!   BRAM-threshold designs run the wide path end to end instead of
+//!   falling back to scalar.
+//! - **Level-parallel splitting**: when one chunk carries enough
+//!   independent records per level (width heuristic, default 4096,
+//!   `LOGICNETS_LEVEL_PAR` overrides; 0 disables), a single-chunk batch —
+//!   the serve single-sample latency case — partitions each level across
+//!   a spawn-once worker scope with a barrier per level instead of
+//!   running inline on one core.
+//!
 //! Evaluation is chunk-at-a-time: one [`super::Chunk`] (`LANES` × `u64` =
 //! 256 samples) per net, with all scratch owned by a caller-passed
 //! [`SimScratch`] so repeated evaluations (serving, verification sweeps)
 //! allocate nothing after warmup.
 
-use super::{lut_chunk, BitMatrix, Chunk, LANES};
+use super::{lut_chunk_at, BitMatrix, Chunk, SimdTier, LANES};
 use crate::obs;
 use crate::synth::netlist::{Net, Netlist};
 use crate::util::pool;
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Barrier, OnceLock};
 
 /// Chunks-evaluated counter handle, cached so the per-chunk hot path is
 /// one relaxed atomic add (no registry lookup).  One chunk = 256 samples
@@ -32,6 +52,47 @@ use std::sync::{Arc, OnceLock};
 fn chunks_counter() -> &'static Arc<obs::Counter> {
     static CHUNKS: OnceLock<Arc<obs::Counter>> = OnceLock::new();
     CHUNKS.get_or_init(|| obs::counter("sim.chunks_evaluated.count"))
+}
+
+/// Scratch-pool reuse counters ([`eval_plan`]'s worker scratch): a hit
+/// means the passed [`SimScratch`] already held enough warmed-up workers,
+/// a miss that it had to grow.  Counted once per call *before* the
+/// inline/scoped split so the accounting is identical on both paths.
+fn scratch_hits_counter() -> &'static Arc<obs::Counter> {
+    static HITS: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    HITS.get_or_init(|| obs::counter("sim.scratch_pool.hits.count"))
+}
+
+fn scratch_misses_counter() -> &'static Arc<obs::Counter> {
+    static MISSES: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    MISSES.get_or_init(|| obs::counter("sim.scratch_pool.misses.count"))
+}
+
+/// Records-per-level width at which a single chunk is worth splitting
+/// across the pool.  `LOGICNETS_LEVEL_PAR=<n>` overrides (0 disables);
+/// the default is calibrated by `bench_sim`'s `sim256-levelpar` scenarios
+/// — below a few thousand records the per-level barrier costs more than
+/// the split saves.
+fn level_par_threshold() -> usize {
+    std::env::var("LOGICNETS_LEVEL_PAR")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(4096)
+}
+
+/// One BRAM neuron in the arena schedule: gather the address chunks,
+/// look up each sample's code, scatter the code bits into the pseudo-input
+/// slots.  Scheduled before the LUT records of its level.
+#[derive(Debug, Clone)]
+struct BramRecord {
+    /// Value-array slots of the address bits, LSB-first.
+    addr_slots: Vec<u32>,
+    /// First value-array slot of the pseudo-input output bits
+    /// (`2 + out_base`).
+    out_slot: u32,
+    out_bits: u32,
+    /// Output codes indexed by packed address (`1 << addr_slots.len()`).
+    content: Vec<u32>,
 }
 
 /// A `Netlist` compiled to a level-ordered arena schedule.
@@ -48,18 +109,41 @@ pub struct EvalPlan {
     /// Exclusive record end index of each topological level (level `l`'s
     /// records are `level_ends[l-1]..level_ends[l]`, `level_ends[-1]` = 0).
     level_ends: Vec<u32>,
+    /// BRAM records grouped by execution level; level `l` fires
+    /// `brams[bram_ends[l-1]..bram_ends[l]]` before its LUT records.
+    brams: Vec<BramRecord>,
+    bram_ends: Vec<u32>,
+    /// SIMD dispatch tier chosen at compile time.
+    tier: SimdTier,
+    /// Width heuristic verdict: worth splitting single chunks per level.
+    level_par: bool,
 }
 
 impl EvalPlan {
-    /// Compile a netlist into the arena schedule.  The structural
-    /// preconditions (topological node order, in-range references, K<=6
-    /// fan-in) are checked via `synth::lint::evaluability_errors` — the
-    /// same rule set every `synthesize`/`opt` gate enforces — so a violation
-    /// panics here with the full finding list instead of an ad-hoc assert.
-    /// BRAM ports are rejected at evaluation time, as before.
+    /// Compile a netlist into the arena schedule, dispatching to the
+    /// widest SIMD tier the host supports ([`SimdTier::detect`]).  The
+    /// structural preconditions (topological node order, in-range
+    /// references, K<=6 fan-in, BRAM trigger ordering) are checked via
+    /// `synth::lint::evaluability_errors` — the same rule set every
+    /// `synthesize`/`opt` gate enforces — so a violation panics here with
+    /// the full finding list instead of an ad-hoc assert.  Content-bearing
+    /// BRAM records compile into the schedule; only opaque (content-less)
+    /// BRAM ports are rejected.
     pub fn compile(netlist: &Netlist) -> EvalPlan {
+        EvalPlan::compile_with_tier(netlist, SimdTier::detect())
+    }
+
+    /// [`Self::compile`] at an explicit dispatch tier — tests pin every
+    /// supported tier against the portable oracle with this, and
+    /// `bench_sim` uses it for the tier-comparison scenarios.  `tier`
+    /// must be [`SimdTier::Portable`] or come from [`SimdTier::detect`] /
+    /// [`SimdTier::supported`] on this host.
+    pub fn compile_with_tier(netlist: &Netlist, tier: SimdTier) -> EvalPlan {
         obs::inc("sim.plan_compiles.count");
-        assert!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+        assert!(
+            netlist.brams_evaluable(),
+            "netlist with opaque (content-less) BRAM ports is not evaluable"
+        );
         let errs = crate::synth::lint::evaluability_errors(netlist);
         assert!(
             errs.is_empty(),
@@ -69,15 +153,49 @@ impl EvalPlan {
         let nn = netlist.nodes.len();
         let base = (2 + netlist.num_inputs) as u32;
         // Levels recomputed from the wiring (stored `LutNode::level` fields
-        // may be stale); topo order was validated above.
+        // may be stale); topo order was validated above.  BRAMs are walked
+        // at their trigger index: a BRAM's level is 1 + max over its
+        // address levels, its pseudo inputs inherit that level, and any
+        // consumer therefore lands at least one level later — which is
+        // what lets eval fire each BRAM right before its level's records.
+        let triggers = netlist.bram_triggers();
+        let mut bram_level = vec![0u32; netlist.brams.len()];
+        let mut input_level = vec![0u32; netlist.num_inputs];
+        let mut placed = vec![false; netlist.brams.len()];
         let mut level = vec![0u32; nn];
         let mut max_level = 0u32;
-        for (i, node) in netlist.nodes.iter().enumerate() {
+        for i in 0..=nn {
+            for (bi, b) in netlist.brams.iter().enumerate() {
+                if placed[bi] || triggers[bi] > i {
+                    continue;
+                }
+                let mut lv = 1u32;
+                for &net in &b.inputs {
+                    match net {
+                        Net::Node(j) => lv = lv.max(level[j as usize] + 1),
+                        Net::Input(p) => lv = lv.max(input_level[p as usize] + 1),
+                        Net::Const0 | Net::Const1 => {}
+                    }
+                }
+                bram_level[bi] = lv;
+                for ob in 0..b.out_bits {
+                    input_level[b.out_base as usize + ob] = lv;
+                }
+                max_level = max_level.max(lv);
+                placed[bi] = true;
+            }
+            if i == nn {
+                break;
+            }
             let mut lv = 1u32;
-            for &inp in &node.inputs {
-                if let Net::Node(j) = inp {
-                    debug_assert!((j as usize) < i);
-                    lv = lv.max(level[j as usize] + 1);
+            for &inp in &netlist.nodes[i].inputs {
+                match inp {
+                    Net::Node(j) => {
+                        debug_assert!((j as usize) < i);
+                        lv = lv.max(level[j as usize] + 1);
+                    }
+                    Net::Input(p) => lv = lv.max(input_level[p as usize] + 1),
+                    Net::Const0 | Net::Const1 => {}
                 }
             }
             level[i] = lv;
@@ -130,7 +248,50 @@ impl EvalPlan {
             }
         }
         let out_slots = netlist.outputs.iter().map(|&o| slot_of(o)).collect();
-        EvalPlan { num_inputs: netlist.num_inputs, tts, slots, off, out_slots, level_ends }
+        // BRAM records grouped by execution level (stable within a level).
+        let mut order: Vec<usize> = (0..netlist.brams.len()).collect();
+        order.sort_by_key(|&bi| bram_level[bi]);
+        let brams: Vec<BramRecord> = order
+            .iter()
+            .map(|&bi| {
+                let b = &netlist.brams[bi];
+                BramRecord {
+                    addr_slots: b.inputs.iter().map(|&n| slot_of(n)).collect(),
+                    out_slot: 2 + b.out_base,
+                    out_bits: b.out_bits as u32,
+                    content: b.content.clone(),
+                }
+            })
+            .collect();
+        let mut bram_ends = Vec::with_capacity(max_level as usize);
+        let mut bi = 0usize;
+        for lv in 1..=max_level {
+            while bi < order.len() && bram_level[order[bi]] == lv {
+                bi += 1;
+            }
+            bram_ends.push(bi as u32);
+        }
+        // Width heuristic for level-parallel single-chunk splitting.
+        let mut max_width = 0u32;
+        let mut prev = 0u32;
+        for &e in &level_ends {
+            max_width = max_width.max(e - prev);
+            prev = e;
+        }
+        let threshold = level_par_threshold();
+        let level_par = threshold != 0 && max_width as usize >= threshold;
+        EvalPlan {
+            num_inputs: netlist.num_inputs,
+            tts,
+            slots,
+            off,
+            out_slots,
+            level_ends,
+            brams,
+            bram_ends,
+            tier,
+            level_par,
+        }
     }
 
     pub fn num_inputs(&self) -> usize {
@@ -143,6 +304,28 @@ impl EvalPlan {
 
     pub fn num_luts(&self) -> usize {
         self.tts.len()
+    }
+
+    /// Number of BRAM records in the schedule.
+    pub fn num_bram_records(&self) -> usize {
+        self.brams.len()
+    }
+
+    /// The SIMD dispatch tier this plan was compiled for.
+    pub fn tier(&self) -> SimdTier {
+        self.tier
+    }
+
+    /// Whether the width heuristic enabled level-parallel single-chunk
+    /// splitting ([`Self::eval_chunk_auto`]).
+    pub fn level_parallel(&self) -> bool {
+        self.level_par
+    }
+
+    /// Force the level-parallel verdict (tests and `bench_sim` calibrate
+    /// both settings on the same plan).
+    pub fn set_level_parallel(&mut self, on: bool) {
+        self.level_par = on;
     }
 
     /// Topological depth of the schedule (number of levels).
@@ -167,15 +350,9 @@ impl EvalPlan {
         2 + self.num_inputs + self.tts.len()
     }
 
-    /// Evaluate every net over the words `w0 .. min(w0+LANES, wpp)` of the
-    /// input planes.  On return `vals[slot]` holds each net's chunk —
-    /// constants, hoisted primary-input reads, and all node records.  Lanes
-    /// at or beyond the plane end read as zero and produce don't-care
-    /// values (callers mask via `BitMatrix` tail handling).
-    pub fn eval_chunk(&self, inputs: &BitMatrix, w0: usize, vals: &mut [Chunk]) {
-        if obs::enabled() {
-            chunks_counter().inc();
-        }
+    /// Constants + hoisted primary-input plane reads — the value-array
+    /// prelude shared by the serial and level-parallel chunk paths.
+    fn load_chunk_inputs(&self, inputs: &BitMatrix, w0: usize, vals: &mut [Chunk]) {
         debug_assert_eq!(inputs.planes(), self.num_inputs, "input plane count");
         debug_assert_eq!(vals.len(), self.vals_len(), "value array length");
         let wpp = inputs.words_per_plane();
@@ -188,26 +365,192 @@ impl EvalPlan {
             c[..n].copy_from_slice(&plane[w0..w0 + n]);
             vals[2 + i] = c;
         }
-        let base = 2 + self.num_inputs;
-        let mut xs = [[0u64; LANES]; 6];
-        for r in 0..self.tts.len() {
-            let (s, e) = (self.off[r] as usize, self.off[r + 1] as usize);
-            for (j, &sl) in self.slots[s..e].iter().enumerate() {
-                xs[j] = vals[sl as usize];
+    }
+
+    /// Fire one BRAM record: the address chunks are gathered, each of the
+    /// 256 samples' packed address is looked up, and the code bits are
+    /// scattered into the pseudo-input slots.  The memory lookup is
+    /// inherently per-sample; everything around it stays chunk-wide.
+    fn eval_bram(&self, rec: &BramRecord, vals: &mut [Chunk]) {
+        let k = rec.addr_slots.len();
+        debug_assert!(k < 32 && rec.out_bits <= 32);
+        let mut addr = [[0u64; LANES]; 32];
+        for (j, &sl) in rec.addr_slots.iter().enumerate() {
+            addr[j] = vals[sl as usize];
+        }
+        let ob = rec.out_bits as usize;
+        let base = rec.out_slot as usize;
+        for c in vals[base..base + ob].iter_mut() {
+            *c = [0u64; LANES];
+        }
+        for l in 0..LANES {
+            for s in 0..64usize {
+                let mut idx = 0usize;
+                for (j, a) in addr[..k].iter().enumerate() {
+                    idx |= (((a[l] >> s) & 1) as usize) << j;
+                }
+                let code = rec.content[idx] as u64;
+                for b in 0..ob {
+                    vals[base + b][l] |= ((code >> b) & 1) << s;
+                }
             }
-            vals[base + r] = lut_chunk(self.tts[r], &xs[..e - s]);
         }
     }
 
+    /// Evaluate every net over the words `w0 .. min(w0+LANES, wpp)` of the
+    /// input planes.  On return `vals[slot]` holds each net's chunk —
+    /// constants, hoisted primary-input reads, all node records, and every
+    /// BRAM record's pseudo-input slots.  Lanes at or beyond the plane end
+    /// read as zero and produce don't-care values (callers mask via
+    /// `BitMatrix` tail handling).
+    pub fn eval_chunk(&self, inputs: &BitMatrix, w0: usize, vals: &mut [Chunk]) {
+        if obs::enabled() {
+            chunks_counter().inc();
+        }
+        self.load_chunk_inputs(inputs, w0, vals);
+        let base = 2 + self.num_inputs;
+        let mut xs = [[0u64; LANES]; 6];
+        if self.brams.is_empty() {
+            // Flat fast path: one branch-free sweep over the whole arena.
+            for r in 0..self.tts.len() {
+                let (s, e) = (self.off[r] as usize, self.off[r + 1] as usize);
+                for (j, &sl) in self.slots[s..e].iter().enumerate() {
+                    xs[j] = vals[sl as usize];
+                }
+                vals[base + r] = lut_chunk_at(self.tier, self.tts[r], &xs[..e - s]);
+            }
+        } else {
+            // Level walk: fire each level's BRAM records before its LUT
+            // records (a BRAM's address operands sit at least one level
+            // below it, its consumers at least one above).
+            let (mut r0, mut b0) = (0usize, 0usize);
+            for l in 0..self.level_ends.len() {
+                let b1 = self.bram_ends[l] as usize;
+                for rec in &self.brams[b0..b1] {
+                    self.eval_bram(rec, vals);
+                }
+                b0 = b1;
+                let r1 = self.level_ends[l] as usize;
+                for r in r0..r1 {
+                    let (s, e) = (self.off[r] as usize, self.off[r + 1] as usize);
+                    for (j, &sl) in self.slots[s..e].iter().enumerate() {
+                        xs[j] = vals[sl as usize];
+                    }
+                    vals[base + r] = lut_chunk_at(self.tier, self.tts[r], &xs[..e - s]);
+                }
+                r0 = r1;
+            }
+        }
+    }
+
+    /// [`Self::eval_chunk`], splitting wide levels across the pool when
+    /// the compile-time width heuristic said it pays off and more than one
+    /// thread is available.  This is the single-sample serve path's way to
+    /// use the machine: a one-chunk batch has no chunk-level parallelism
+    /// to exploit, but a wide netlist has thousands of independent records
+    /// per level.
+    pub fn eval_chunk_auto(&self, inputs: &BitMatrix, w0: usize, vals: &mut [Chunk]) {
+        if self.level_par && pool::num_threads() > 1 {
+            self.eval_chunk_level_par(inputs, w0, vals);
+        } else {
+            self.eval_chunk(inputs, w0, vals);
+        }
+    }
+
+    /// Level-parallel chunk evaluation: the worker scope is spawned ONCE
+    /// per chunk and a [`Barrier`] separates levels, so the per-level cost
+    /// is a barrier round, not a spawn/join.  Workers write disjoint
+    /// record slots within a level and only read slots written at earlier
+    /// levels (or in the pre-spawn prelude); the barrier provides the
+    /// happens-before edge between a level's writes and the next level's
+    /// reads.  BRAM records are fired by worker 0 in an exclusive window
+    /// (all other workers are between barriers doing nothing).
+    fn eval_chunk_level_par(&self, inputs: &BitMatrix, w0: usize, vals: &mut [Chunk]) {
+        if obs::enabled() {
+            chunks_counter().inc();
+        }
+        self.load_chunk_inputs(inputs, w0, vals);
+        let base = 2 + self.num_inputs;
+        let nw = pool::num_threads().clamp(2, 16);
+        let barrier = Barrier::new(nw);
+        let sv = SharedVals(vals.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for wid in 0..nw {
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut xs = [[0u64; LANES]; 6];
+                    let (mut r0, mut b0) = (0usize, 0usize);
+                    for l in 0..self.level_ends.len() {
+                        let b1 = self.bram_ends.get(l).map_or(b0, |&e| e as usize);
+                        if b1 > b0 {
+                            if wid == 0 {
+                                // SAFETY: every other worker is parked
+                                // between the previous level's barrier and
+                                // the one below, touching nothing, so
+                                // worker 0 has exclusive access to `vals`.
+                                let all = unsafe {
+                                    std::slice::from_raw_parts_mut(sv.0, self.vals_len())
+                                };
+                                for rec in &self.brams[b0..b1] {
+                                    self.eval_bram(rec, all);
+                                }
+                            }
+                            barrier.wait();
+                        }
+                        b0 = b1;
+                        let r1 = self.level_ends[l] as usize;
+                        let n = r1 - r0;
+                        if n > 0 {
+                            let per = n.div_ceil(nw);
+                            let lo = r0 + (wid * per).min(n);
+                            let hi = (lo + per).min(r1);
+                            for r in lo..hi {
+                                let (s, e) = (self.off[r] as usize, self.off[r + 1] as usize);
+                                for (j, &sl) in self.slots[s..e].iter().enumerate() {
+                                    // SAFETY: slot `sl` was written at an
+                                    // earlier level (or pre-spawn) and no
+                                    // one writes it during this level; the
+                                    // barriers order those writes before
+                                    // this read.
+                                    xs[j] = unsafe { *sv.0.add(sl as usize) };
+                                }
+                                let out = lut_chunk_at(self.tier, self.tts[r], &xs[..e - s]);
+                                // SAFETY: record `r` belongs to exactly one
+                                // worker's sub-range, so slot `base + r` has
+                                // a single writer and no reader this level.
+                                unsafe { *sv.0.add(base + r) = out };
+                            }
+                        }
+                        barrier.wait();
+                        r0 = r1;
+                    }
+                });
+            }
+        });
+    }
+
     /// Serial sweep over one chunk-aligned word range, writing the output
-    /// planes into `ws.block` laid out `[output][word_in_range]`.
-    fn eval_range(&self, inputs: &BitMatrix, range: std::ops::Range<usize>, ws: &mut WorkerScratch) {
+    /// planes into `ws.block` laid out `[output][word_in_range]`.  `auto`
+    /// routes each chunk through [`Self::eval_chunk_auto`] — only the
+    /// single-range inline path passes true (nested level-parallelism
+    /// under an already-parallel range split would oversubscribe).
+    fn eval_range(
+        &self,
+        inputs: &BitMatrix,
+        range: std::ops::Range<usize>,
+        ws: &mut WorkerScratch,
+        auto: bool,
+    ) {
         let len = range.len();
         ws.vals.resize(self.vals_len(), [0u64; LANES]);
         ws.block.resize(self.num_outputs() * len, 0);
         let mut w0 = range.start;
         while w0 < range.end {
-            self.eval_chunk(inputs, w0, &mut ws.vals);
+            if auto {
+                self.eval_chunk_auto(inputs, w0, &mut ws.vals);
+            } else {
+                self.eval_chunk(inputs, w0, &mut ws.vals);
+            }
             let n = LANES.min(range.end - w0);
             for (o, &sl) in self.out_slots.iter().enumerate() {
                 let v = &ws.vals[sl as usize];
@@ -218,6 +561,19 @@ impl EvalPlan {
         }
     }
 }
+
+/// Raw shared handle to the chunk value array for the level-parallel path.
+/// Soundness rests on the schedule, not the type: within a level every
+/// record slot has exactly one writer, and reads only target slots written
+/// at earlier levels, with a `Barrier` round between levels establishing
+/// the happens-before edges.
+#[derive(Clone, Copy)]
+struct SharedVals(*mut Chunk);
+
+// SAFETY: see the struct docs — disjoint writes per level, barrier-ordered
+// reads across levels.
+unsafe impl Send for SharedVals {}
+unsafe impl Sync for SharedVals {}
 
 /// Reusable evaluation scratch: per-worker value buffers and output
 /// blocks, grown on demand and reused across [`eval_plan`] calls (the
@@ -237,8 +593,9 @@ struct WorkerScratch {
 /// Wide-plane bitsliced evaluation of a compiled plan: 256 samples per
 /// chunk per record, chunk-aligned word ranges distributed over the worker
 /// pool (a single-range batch runs inline — no thread spawn for
-/// router-sized batches).  All buffers live in `scratch` and are reused
-/// across calls.
+/// router-sized batches — but may still split each chunk's levels across
+/// the pool via [`EvalPlan::eval_chunk_auto`]).  All buffers live in
+/// `scratch` and are reused across calls.
 pub fn eval_plan(plan: &EvalPlan, inputs: &BitMatrix, scratch: &mut SimScratch) -> BitMatrix {
     assert_eq!(inputs.planes(), plan.num_inputs(), "input plane count");
     let samples = inputs.samples();
@@ -252,16 +609,25 @@ pub fn eval_plan(plan: &EvalPlan, inputs: &BitMatrix, scratch: &mut SimScratch) 
     let per = nchunks.div_ceil(workers) * LANES;
     let ranges: Vec<std::ops::Range<usize>> =
         (0..wpp).step_by(per).map(|lo| lo..(lo + per).min(wpp)).collect();
+    // Scratch-pool accounting happens before the inline/scoped split so a
+    // single-range call is counted exactly like a scoped one.
+    if obs::enabled() {
+        if scratch.workers.len() < ranges.len() {
+            scratch_misses_counter().inc();
+        } else {
+            scratch_hits_counter().inc();
+        }
+    }
     if scratch.workers.len() < ranges.len() {
         scratch.workers.resize_with(ranges.len(), WorkerScratch::default);
     }
     if ranges.len() == 1 {
-        plan.eval_range(inputs, ranges[0].clone(), &mut scratch.workers[0]);
+        plan.eval_range(inputs, ranges[0].clone(), &mut scratch.workers[0], true);
     } else {
         std::thread::scope(|s| {
             for (range, ws) in ranges.iter().zip(scratch.workers.iter_mut()) {
                 let range = range.clone();
-                s.spawn(move || plan.eval_range(inputs, range, ws));
+                s.spawn(move || plan.eval_range(inputs, range, ws, false));
             }
         });
     }
@@ -285,7 +651,7 @@ pub fn eval_plan(plan: &EvalPlan, inputs: &BitMatrix, scratch: &mut SimScratch) 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::synth::netlist::LutNode;
+    use crate::synth::netlist::{BramNeuron, LutNode};
     use crate::util::rng::Rng;
 
     fn and_or_netlist() -> Netlist {
@@ -313,6 +679,9 @@ mod tests {
         // Slots: const0=0, const1=1, inputs 2..5, records 5..7.
         assert_eq!(plan.output_slots(), &[6, 1, 0, 4, 5]);
         assert_eq!(plan.vals_len(), 2 + 3 + 2);
+        assert_eq!(plan.num_bram_records(), 0);
+        // The compile-time tier is one the host is allowed to dispatch.
+        assert!(SimdTier::supported().contains(&plan.tier()));
     }
 
     #[test]
@@ -370,6 +739,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "not evaluable")]
+    fn compile_rejects_opaque_brams() {
+        let mut nl = and_or_netlist();
+        nl.brams.push(BramNeuron::opaque(14, 2, 2));
+        let _ = EvalPlan::compile(&nl);
+    }
+
+    #[test]
     fn empty_batch_and_empty_outputs() {
         let nl = and_or_netlist();
         let plan = EvalPlan::compile(&nl);
@@ -381,5 +758,110 @@ mod tests {
         let out = eval_plan(&plan, &BitMatrix::new(3, 300), &mut SimScratch::default());
         assert_eq!(out.planes(), 0);
         assert_eq!(out.samples(), 300);
+    }
+
+    /// A netlist whose middle stage is a content-bearing BRAM (LUT level
+    /// feeds the address, LUTs consume the pseudo outputs): the wide plan
+    /// must bit-match the scalar evaluator on every pattern, at every
+    /// supported tier, with and without level-parallel splitting.
+    #[test]
+    fn bram_records_match_scalar_eval() {
+        // Inputs 0..4 primary, inputs 4..6 pseudo (BRAM out_base 4).
+        // n0 = XOR(in0, in1), n1 = AND(in2, in3) feed the BRAM address;
+        // BRAM computes (a0 + 2*a1 + 1) mod 4; n2/n3 consume the pseudos.
+        let content: Vec<u32> = (0..4u32).map(|a| (a + 1) % 4).collect();
+        let nl = Netlist {
+            num_inputs: 6,
+            nodes: vec![
+                LutNode { inputs: vec![Net::Input(0), Net::Input(1)], tt: 0b0110, level: 1 },
+                LutNode { inputs: vec![Net::Input(2), Net::Input(3)], tt: 0b1000, level: 1 },
+                LutNode { inputs: vec![Net::Input(4), Net::Input(5)], tt: 0b0110, level: 3 },
+                LutNode { inputs: vec![Net::Node(2), Net::Input(4)], tt: 0b1000, level: 4 },
+            ],
+            outputs: vec![Net::Node(3), Net::Input(4), Net::Input(5), Net::Node(0)],
+            brams: vec![BramNeuron {
+                in_bits: 2,
+                out_bits: 2,
+                blocks: 1,
+                inputs: vec![Net::Node(0), Net::Node(1)],
+                out_base: 4,
+                content,
+            }],
+            layer_depths: vec![4],
+        };
+        // Scalar reference over the 16 primary patterns (pseudo bits held
+        // zero in the caller-provided vector; eval overwrites them).
+        let mut inputs = BitMatrix::new(6, 16);
+        let mut expect: Vec<Vec<bool>> = Vec::new();
+        for s in 0..16usize {
+            let mut bits = vec![false; 6];
+            for v in 0..4 {
+                bits[v] = (s >> v) & 1 == 1;
+            }
+            inputs.set_column(s, &bits);
+            expect.push(nl.eval(&bits));
+        }
+        for tier in SimdTier::supported() {
+            for level_par in [false, true] {
+                let mut plan = EvalPlan::compile_with_tier(&nl, tier);
+                assert_eq!(plan.num_bram_records(), 1);
+                plan.set_level_parallel(level_par);
+                let out = eval_plan(&plan, &inputs, &mut SimScratch::default());
+                for (s, want) in expect.iter().enumerate() {
+                    assert_eq!(
+                        &out.column(s),
+                        want,
+                        "tier={} level_par={level_par} s={s}",
+                        tier.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Level-parallel splitting must be bit-exact against the serial chunk
+    /// path on a netlist wide enough to actually split, at every tier.
+    #[test]
+    fn level_parallel_matches_serial() {
+        // Two levels, 600 records each: level 1 mixes input pairs, level 2
+        // mixes neighboring level-1 records.
+        let mut rng = Rng::new(99);
+        let mut nodes = Vec::new();
+        for i in 0..600u32 {
+            nodes.push(LutNode {
+                inputs: vec![Net::Input(i % 24), Net::Input((i * 7 + 1) % 24)],
+                tt: rng.next_u64(),
+                level: 1,
+            });
+        }
+        for i in 0..600u32 {
+            nodes.push(LutNode {
+                inputs: vec![Net::Node(i), Net::Node((i + 13) % 600), Net::Input(i % 24)],
+                tt: rng.next_u64(),
+                level: 2,
+            });
+        }
+        let outputs: Vec<Net> = (0..40u32).map(|i| Net::Node(600 + i * 14)).collect();
+        let nl = Netlist { num_inputs: 24, nodes, outputs, brams: vec![], layer_depths: vec![2] };
+        // Single-chunk batches (<= 256 samples) are the ones that actually
+        // route through the level-parallel splitter ([`eval_plan`]'s
+        // multi-range scoped path passes `auto = false`); 257 rides along
+        // to cover the chunk-boundary serial path under the same plan.
+        for samples in [1usize, 64, 255, 256, 257] {
+            let mut inputs = BitMatrix::new(24, samples);
+            for s in 0..samples {
+                for p in 0..24 {
+                    inputs.set(p, s, rng.f64() < 0.5);
+                }
+            }
+            for tier in SimdTier::supported() {
+                let mut plan = EvalPlan::compile_with_tier(&nl, tier);
+                plan.set_level_parallel(false);
+                let serial = eval_plan(&plan, &inputs, &mut SimScratch::default());
+                plan.set_level_parallel(true);
+                let par = eval_plan(&plan, &inputs, &mut SimScratch::default());
+                assert_eq!(serial, par, "tier={} samples={samples}", tier.name());
+            }
+        }
     }
 }

@@ -162,7 +162,7 @@ pub const DEAD_LUT: Rule = Rule {
 pub const BRAM_PORTS: Rule = Rule {
     id: "bram-ports",
     severity: Severity::Info,
-    desc: "netlist carries BRAM-mapped neurons and is not simulator-evaluable",
+    desc: "netlist carries BRAM-mapped neurons (opaque ports are not simulator-evaluable)",
 };
 pub const CONV_RF_OUT_OF_RANGE: Rule = Rule {
     id: "conv-rf-out-of-range",
@@ -392,7 +392,91 @@ pub fn evaluability_errors(nl: &Netlist) -> Vec<Finding> {
     for (o, &net) in nl.outputs.iter().enumerate() {
         check_net(nl, net, Span::Output(o), None, &mut out);
     }
+    // Content-bearing BRAM records must be schedulable: coherent
+    // nets/content shape, pseudo outputs inside the input bus, addresses
+    // drawing only on earlier-listed BRAMs, and every pseudo consumer at
+    // or after the BRAM's trigger index.  Opaque ports (no nets, no
+    // content) skip all of this — their pseudo inputs are caller-provided.
+    for (bi, b) in nl.brams.iter().enumerate() {
+        if b.inputs.is_empty() && b.content.is_empty() {
+            continue;
+        }
+        if !b.is_evaluable() {
+            out.push(finding(
+                BRAM_SHAPE,
+                Span::Bram(bi),
+                format!(
+                    "content-bearing BRAM needs in_bits address nets and 2^in_bits codes \
+                     (got {} nets, {} codes for a {}x{} port)",
+                    b.inputs.len(),
+                    b.content.len(),
+                    b.in_bits,
+                    b.out_bits
+                ),
+            ));
+            continue;
+        }
+        if b.out_base as usize + b.out_bits > nl.num_inputs {
+            out.push(finding(
+                BRAM_SHAPE,
+                Span::Bram(bi),
+                format!(
+                    "pseudo outputs {}..{} exceed the {}-bit input bus",
+                    b.out_base,
+                    b.out_base as usize + b.out_bits,
+                    nl.num_inputs
+                ),
+            ));
+        }
+        for &net in &b.inputs {
+            check_net(nl, net, Span::Bram(bi), None, &mut out);
+            if let Net::Input(p) = net {
+                for (ci, c) in nl.brams.iter().enumerate().skip(bi) {
+                    if is_pseudo_of(c, p) {
+                        out.push(finding(
+                            FORWARD_REFERENCE,
+                            Span::Bram(bi),
+                            format!(
+                                "address reads Input({p}), a pseudo output of BRAM {ci} \
+                                 which does not fire earlier"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    if nl.brams_evaluable() && !nl.brams.is_empty() && out.is_empty() {
+        // Trigger ordering needs valid references, so it only runs once
+        // everything above passed.
+        let triggers = nl.bram_triggers();
+        for (i, node) in nl.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                if let Net::Input(p) = inp {
+                    for (bi, b) in nl.brams.iter().enumerate() {
+                        if is_pseudo_of(b, p) && i < triggers[bi] {
+                            out.push(finding(
+                                FORWARD_REFERENCE,
+                                Span::Node(i),
+                                format!(
+                                    "node {i} reads Input({p}), a pseudo output of BRAM {bi} \
+                                     whose address is only ready at node {}",
+                                    triggers[bi]
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
     out
+}
+
+/// Whether primary-input id `p` is one of `b`'s pseudo output bits
+/// (content-bearing BRAMs only; opaque `out_base` is meaningless).
+fn is_pseudo_of(b: &crate::synth::netlist::BramNeuron, p: u32) -> bool {
+    !b.content.is_empty() && p >= b.out_base && (p - b.out_base) < b.out_bits as u32
 }
 
 /// Run the full rule catalogue.  Never panics: rules that must chase node
@@ -476,11 +560,18 @@ pub fn lint_netlist(nl: &Netlist, opts: &LintOptions) -> LintReport {
         }
     }
     if !nl.brams.is_empty() {
-        findings.push(finding(
-            BRAM_PORTS,
-            Span::Netlist,
-            format!("{} BRAM-mapped neurons; logic simulation unavailable", nl.brams.len()),
-        ));
+        let msg = if nl.brams_evaluable() {
+            format!(
+                "{} BRAM-mapped neurons with captured contents; simulated via pseudo inputs",
+                nl.brams.len()
+            )
+        } else {
+            format!(
+                "{} BRAM-mapped neurons with opaque ports; logic simulation unavailable",
+                nl.brams.len()
+            )
+        };
+        findings.push(finding(BRAM_PORTS, Span::Netlist, msg));
     }
 
     // Reference-chasing rules only run on reference-valid netlists.
@@ -776,7 +867,7 @@ mod tests {
     fn bram_rules_fire() {
         let mut nl = clean_netlist();
         // 14x2 bits = 32768 bits = 2 blocks of 18Kb, not 1.
-        nl.brams.push(BramNeuron { in_bits: 14, out_bits: 2, blocks: 1 });
+        nl.brams.push(BramNeuron::opaque(14, 2, 1));
         let report = lint_netlist(&nl, &LintOptions::default());
         let got = ids(&report);
         assert!(got.contains(&"bram-shape"), "{got:?}");
@@ -784,11 +875,65 @@ mod tests {
         assert_eq!(report.infos(), 1);
 
         let mut nl = clean_netlist();
-        nl.brams.push(BramNeuron { in_bits: 14, out_bits: 2, blocks: 2 });
+        nl.brams.push(BramNeuron::opaque(14, 2, 2));
         let report = lint_netlist(&nl, &LintOptions::default());
         assert!(!ids(&report).contains(&"bram-shape"), "{}", report.render());
         assert_eq!(report.errors(), 0);
         assert_eq!(report.infos(), 1);
+        // Opaque ports stay out of the evaluability subset entirely.
+        assert!(evaluability_errors(&nl).is_empty());
+    }
+
+    /// A coherent content-bearing BRAM between LUT levels: 2-bit address
+    /// from Node(0)/Input(2), pseudo outputs Input(3)/Input(4).
+    fn bram_netlist() -> Netlist {
+        let mut nl = clean_netlist();
+        nl.num_inputs = 5;
+        nl.nodes[1].inputs = vec![Net::Input(3), Net::Input(4)];
+        nl.brams.push(BramNeuron {
+            in_bits: 2,
+            out_bits: 2,
+            blocks: 1,
+            inputs: vec![Net::Node(0), Net::Input(2)],
+            out_base: 3,
+            content: vec![0, 3, 1, 2],
+        });
+        nl
+    }
+
+    #[test]
+    fn bram_evaluability_rules_fire() {
+        let nl = bram_netlist();
+        assert!(nl.brams_evaluable());
+        assert!(evaluability_errors(&nl).is_empty(), "clean bram netlist");
+        let report = lint_netlist(&nl, &LintOptions::at(OptLevel::None));
+        assert_eq!(report.errors(), 0, "{}", report.render());
+        assert_eq!(report.infos(), 1);
+
+        // Content length disagreeing with in_bits: shape error.
+        let mut nl = bram_netlist();
+        nl.brams[0].content.pop();
+        let errs = evaluability_errors(&nl);
+        assert!(errs.iter().any(|f| f.rule.id == "bram-shape"), "{errs:?}");
+
+        // Pseudo outputs spilling past the input bus: shape error.
+        let mut nl = bram_netlist();
+        nl.brams[0].out_base = 4;
+        let errs = evaluability_errors(&nl);
+        assert!(errs.iter().any(|f| f.rule.id == "bram-shape"), "{errs:?}");
+
+        // Address reading its own pseudo output: forward reference.
+        let mut nl = bram_netlist();
+        nl.brams[0].inputs[1] = Net::Input(3);
+        let errs = evaluability_errors(&nl);
+        assert!(errs.iter().any(|f| f.rule.id == "forward-reference"), "{errs:?}");
+
+        // A node consuming the pseudo before the BRAM's trigger (the
+        // address needs Node(0), so node 0 itself must not read it).
+        let mut nl = bram_netlist();
+        nl.nodes[0].inputs[1] = Net::Input(3);
+        let errs = evaluability_errors(&nl);
+        assert!(errs.iter().any(|f| f.rule.id == "forward-reference"), "{errs:?}");
     }
 
     #[test]

@@ -116,10 +116,11 @@ pub fn synthesize(
     // `acts_masks` parallels `acts_nets`: one producible-code bitmask per
     // neuron/feature of each activation, or `None` when tracking is off
     // for that activation (wide codes).  Gated to skip-free models whose
-    // tables all stay under the BRAM threshold: a spilled neuron would
-    // make the netlist unevaluable and silently ship an unverified
-    // rewrite, while a merely *enabled* threshold that nothing reaches
-    // (the CLI default) must not downgrade the requested level.
+    // tables all stay under the BRAM threshold: BRAM-carrying netlists
+    // skip the optimization pipeline (and its equivalence re-check), so a
+    // don't-care rewrite would ship unverified, while a merely *enabled*
+    // threshold that nothing reaches (the CLI default) must not downgrade
+    // the requested level.
     let will_spill = opts.bram_min_bits > 0
         && emitted.iter().any(|&li| {
             let lt = tables.layers[li].as_ref().unwrap();
@@ -175,18 +176,32 @@ pub fn synthesize(
         for (nj, table) in lt.tables.iter().enumerate() {
             let nr = &layer.neurons[nj];
             analytical += crate::cost::lut_cost(table.in_bits, table.out_bits);
+            // Gather the neuron's input nets in pack_index order.
+            let nets: Vec<Net> = nr
+                .inputs
+                .iter()
+                .flat_map(|&j| (0..bw).map(move |b| (j, b)))
+                .map(|(j, b)| inp_nets[j * bw + b])
+                .collect();
             if opts.bram_min_bits > 0 && table.in_bits >= opts.bram_min_bits {
-                // Spill to BRAM: 18Kb blocks.
+                // Spill to BRAM: 18Kb blocks.  The record keeps its address
+                // wiring and full table content, so simulators fire it in
+                // place (scalar eval, the 64-way oracle and the wide
+                // `EvalPlan` all schedule it by `Netlist::bram_triggers`).
                 let bits = (1u64 << table.in_bits) * table.out_bits as u64;
                 let blocks = bits.div_ceil(18 * 1024) as usize;
+                let out_base = mapper.netlist.num_inputs as u32;
                 mapper.netlist.brams.push(BramNeuron {
                     in_bits: table.in_bits,
                     out_bits: table.out_bits,
                     blocks,
+                    inputs: nets,
+                    out_base,
+                    content: (0..table.num_entries()).map(|e| table.lookup(e)).collect(),
                 });
                 // BRAM outputs behave like registered ports: fresh pseudo
-                // inputs (the netlist is no longer end-to-end evaluable;
-                // callers check `brams.is_empty()` before eval).
+                // inputs, overwritten by the evaluators once the address
+                // operands are available.
                 for _ in 0..table.out_bits {
                     let id = mapper.netlist.num_inputs as u32;
                     mapper.netlist.num_inputs += 1;
@@ -198,13 +213,6 @@ pub fn synthesize(
                 }
                 continue;
             }
-            // Gather the neuron's input nets in pack_index order.
-            let nets: Vec<Net> = nr
-                .inputs
-                .iter()
-                .flat_map(|&j| (0..bw).map(move |b| (j, b)))
-                .map(|(j, b)| inp_nets[j * bw + b])
-                .collect();
             // Reachable-code don't-cares: truth-table entries whose input
             // codes the previous layer can never produce.  `None` when the
             // whole entry space is reachable (e.g. the first layer).
@@ -317,8 +325,9 @@ pub fn synthesize(
         );
         (optimized, stats)
     } else {
-        // Optimization off (or BRAM pseudo-ports present, which the
-        // simulator cannot re-verify): the mapped netlist ships as-is.
+        // Optimization off (or BRAM records present — the structural
+        // optimizer rewrites LUT cones only and would not preserve BRAM
+        // address wiring): the mapped netlist ships as-is.
         let stats = opt::OptStats {
             pre_luts: pre_opt_luts,
             post_luts: pre_opt_luts,
@@ -399,17 +408,21 @@ pub(crate) fn output_bus_acts(model: &ExportedModel, emitted: &[usize]) -> Vec<u
 
 /// Indices of the table-mapped (sparse) layers, plus the shared
 /// preconditions every netlist-executing surface needs (equivalence
-/// checkers here, `serve::NetlistEngine` for serving): no BRAM ports, at
-/// least one emitted layer, and — for skip wiring — a contiguous prefix
-/// from layer 0 with one uniform code width (the bus the skip concat
-/// interleaves).  Returns the emitted layer indices, the first emitted
-/// layer's tables, and the output code width.
+/// checkers here, `serve::NetlistEngine` for serving): every BRAM record
+/// content-bearing (opaque ports are not evaluable), at least one emitted
+/// layer, and — for skip wiring — a contiguous prefix from layer 0 with
+/// one uniform code width (the bus the skip concat interleaves).  Returns
+/// the emitted layer indices, the first emitted layer's tables, and the
+/// output code width.
 pub(crate) fn verify_plan<'a>(
     model: &ExportedModel,
     tables: &'a ModelTables,
     netlist: &Netlist,
 ) -> Result<(Vec<usize>, &'a crate::luts::LayerTables, usize)> {
-    ensure!(netlist.brams.is_empty(), "netlist with BRAM ports is not evaluable");
+    ensure!(
+        netlist.brams_evaluable(),
+        "netlist carries opaque (content-less) BRAM ports and is not evaluable"
+    );
     let emitted: Vec<usize> = tables
         .layers
         .iter()
@@ -492,7 +505,8 @@ fn table_forward_codes(
 /// The netlist side is one bitsliced pass over the whole batch (64 samples
 /// per word, `crate::sim`); [`verify_netlist_scalar`] keeps the original
 /// one-sample-at-a-time path for cross-checking the simulator itself.
-/// Only valid when no neuron was spilled to BRAM.
+/// Neurons spilled to BRAM are fine — their records carry content and the
+/// simulators fire them in place; only opaque BRAM ports are rejected.
 pub fn verify_netlist(
     model: &ExportedModel,
     tables: &ModelTables,
@@ -609,9 +623,21 @@ pub fn verify_netlist_exhaustive(
     let bw_in = lt_first.quant_in.bw;
     let in_f = model.layers[emitted[0]].in_f;
     let in_bits = in_f * bw_in;
-    ensure!(in_bits == netlist.num_inputs, "input bus width mismatch");
+    let pseudo_bits: usize = netlist.brams.iter().map(|b| b.out_bits).sum();
+    ensure!(in_bits + pseudo_bits == netlist.num_inputs, "input bus width mismatch");
     ensure!(in_bits <= 22, "exhaustive space 2^{in_bits} too large");
-    let inputs = crate::sim::BitMatrix::all_patterns(in_bits);
+    let pats = crate::sim::BitMatrix::all_patterns(in_bits);
+    let inputs = if pseudo_bits == 0 {
+        pats
+    } else {
+        // BRAM pseudo planes ride along zeroed; the evaluators overwrite
+        // them before anything reads them.
+        let mut m = crate::sim::BitMatrix::new(netlist.num_inputs, pats.samples());
+        for p in 0..in_bits {
+            m.plane_mut(p).copy_from_slice(pats.plane(p));
+        }
+        m
+    };
     let out = crate::sim::eval_netlist(netlist, &inputs);
     let mut in_codes = vec![0u32; in_f];
     let (mut acts, mut concat, mut gathered, mut expect) =
@@ -790,6 +816,13 @@ mod tests {
         assert!(report.brams > 0, "wide neurons must spill to BRAM");
         assert_eq!(report.luts, 0);
         assert!(!netlist.brams.is_empty());
+        // Spilled records carry their wiring and content, so the netlist
+        // stays evaluable end to end and must match the table forward.
+        assert!(netlist.brams_evaluable());
+        let mism = verify_netlist_scalar(&model, &tables, &netlist, 64, 7).unwrap();
+        assert_eq!(mism, 0, "BRAM netlist diverged from the truth tables");
+        let mism = verify_netlist(&model, &tables, &netlist, 300, 7).unwrap();
+        assert_eq!(mism, 0, "bitsliced BRAM eval diverged from the truth tables");
     }
 
     #[test]

@@ -61,12 +61,49 @@ pub struct LutNode {
 }
 
 /// A neuron kept as a memory block instead of logic.
+///
+/// Content-bearing BRAMs (what `synth::synthesize` emits at the
+/// `bram_min_bits` threshold) carry their address wiring and full lookup
+/// table, so they are simulator-evaluable: the neuron's `out_bits` output
+/// bits surface as pseudo primary inputs
+/// `Input(out_base .. out_base + out_bits)` that every evaluator
+/// overwrites once the address nets are available.  [`BramNeuron::opaque`]
+/// builds the legacy content-less form (area accounting only, not
+/// evaluable).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BramNeuron {
     pub in_bits: usize,
     pub out_bits: usize,
     /// 18Kb BRAM blocks consumed.
     pub blocks: usize,
+    /// Address nets, LSB-first (`inputs[j]` drives address bit j).  Empty
+    /// for opaque BRAMs.
+    pub inputs: Vec<Net>,
+    /// First pseudo primary-input id carrying this neuron's output bits.
+    pub out_base: u32,
+    /// Output codes indexed by packed address: `1 << in_bits` entries when
+    /// evaluable, empty for opaque BRAMs.
+    pub content: Vec<u32>,
+}
+
+impl BramNeuron {
+    /// Legacy content-less BRAM record: shape/area accounting only.  A
+    /// netlist carrying one cannot be evaluated directly — its pseudo
+    /// inputs stay caller-provided.
+    pub fn opaque(in_bits: usize, out_bits: usize, blocks: usize) -> Self {
+        BramNeuron { in_bits, out_bits, blocks, inputs: Vec::new(), out_base: 0, content: Vec::new() }
+    }
+
+    /// True when the record carries enough to evaluate: full address
+    /// wiring and a `1 << in_bits` lookup table.
+    pub fn is_evaluable(&self) -> bool {
+        self.in_bits > 0
+            && self.in_bits < 32
+            && self.out_bits > 0
+            && self.out_bits <= 32
+            && self.inputs.len() == self.in_bits
+            && self.content.len() == 1usize << self.in_bits
+    }
 }
 
 /// Structural equality (`PartialEq`) compares node lists, outputs, BRAMs
@@ -139,6 +176,46 @@ impl Netlist {
         self.outputs.iter().map(|&o| self.level_of(o)).max().unwrap_or(0)
     }
 
+    /// True when every BRAM record is content-bearing, i.e. the netlist
+    /// can be evaluated (scalar, 64-way, or wide plan) without a
+    /// BRAM-free remap.  Vacuously true for BRAM-free netlists.
+    pub fn brams_evaluable(&self) -> bool {
+        self.brams.iter().all(|b| b.is_evaluable())
+    }
+
+    /// Earliest node index each BRAM can fire at: its address operands
+    /// (`Node` fan-ins, plus pseudo inputs of list-earlier BRAMs) are all
+    /// available once `triggers[b]` nodes have been computed.  Evaluators
+    /// fire BRAM b before computing node `triggers[b]`; `synth::lint`
+    /// checks that every consumer of b's pseudo inputs sits at a node
+    /// index >= the trigger.  Opaque (content-less) BRAMs report 0 and
+    /// are never fired.
+    pub fn bram_triggers(&self) -> Vec<usize> {
+        let mut triggers: Vec<usize> = Vec::with_capacity(self.brams.len());
+        for (bi, b) in self.brams.iter().enumerate() {
+            let mut at = 0usize;
+            for &net in &b.inputs {
+                match net {
+                    Net::Node(i) => at = at.max(i as usize + 1),
+                    Net::Input(p) => {
+                        // An address tapping an earlier BRAM's pseudo
+                        // range chains the triggers: b cannot fire before
+                        // that BRAM has.
+                        for (ci, c) in self.brams[..bi].iter().enumerate() {
+                            let lo = c.out_base as usize;
+                            if (lo..lo + c.out_bits).contains(&(p as usize)) {
+                                at = at.max(triggers[ci]);
+                            }
+                        }
+                    }
+                    Net::Const0 | Net::Const1 => {}
+                }
+            }
+            triggers.push(at);
+        }
+        triggers
+    }
+
     /// Compile this netlist into a level-ordered arena evaluation plan for
     /// the wide-plane simulator (`crate::sim::plan`).  Hot callers compile
     /// once and reuse the plan (plus a `SimScratch`) across batches.
@@ -159,7 +236,7 @@ impl Netlist {
         // `false`: a forward `Node` reference used to read the not-yet-
         // computed default and corrupt results without failing.  The same
         // rules are statically checkable via `lint::evaluability_errors`.
-        let get = |values: &[bool], net: Net, site: usize| -> bool {
+        let read = |ins: &[bool], values: &[bool], net: Net, site: usize| -> bool {
             match net {
                 Net::Const0 => false,
                 Net::Const1 => true,
@@ -168,7 +245,7 @@ impl Netlist {
                         (i as usize) < self.num_inputs,
                         "net at node/output {site} reads out-of-range Input({i})"
                     );
-                    inputs[i as usize]
+                    ins[i as usize]
                 }
                 Net::Node(i) => {
                     assert!(
@@ -180,17 +257,44 @@ impl Netlist {
                 }
             }
         };
-        let mut values = Vec::with_capacity(self.nodes.len());
-        for (i, node) in self.nodes.iter().enumerate() {
+        // Content-bearing BRAMs overwrite their pseudo-input positions the
+        // moment their address operands are available; opaque BRAMs are
+        // skipped (their pseudo inputs stay caller-provided, the legacy
+        // behavior).
+        let mut ins = inputs.to_vec();
+        let triggers = self.bram_triggers();
+        let mut fired = vec![false; self.brams.len()];
+        let mut values: Vec<bool> = Vec::with_capacity(self.nodes.len());
+        for i in 0..=self.nodes.len() {
+            for (bi, b) in self.brams.iter().enumerate() {
+                if fired[bi] || !b.is_evaluable() || triggers[bi] > i {
+                    continue;
+                }
+                let mut idx = 0usize;
+                for (j, &net) in b.inputs.iter().enumerate() {
+                    if read(&ins, &values, net, i) {
+                        idx |= 1 << j;
+                    }
+                }
+                let code = b.content[idx];
+                for ob in 0..b.out_bits {
+                    ins[b.out_base as usize + ob] = (code >> ob) & 1 == 1;
+                }
+                fired[bi] = true;
+            }
+            if i == self.nodes.len() {
+                break;
+            }
+            let node = &self.nodes[i];
             let mut idx = 0usize;
             for (j, &inp) in node.inputs.iter().enumerate() {
-                if get(&values, inp, i) {
+                if read(&ins, &values, inp, i) {
                     idx |= 1 << j;
                 }
             }
             values.push((node.tt >> idx) & 1 == 1);
         }
-        self.outputs.iter().enumerate().map(|(o, &net)| get(&values, net, o)).collect()
+        self.outputs.iter().enumerate().map(|(o, &net)| read(&ins, &values, net, o)).collect()
     }
 }
 
@@ -283,6 +387,35 @@ mod tests {
         let err = std::panic::catch_unwind(move || netlist.eval(&[true])).unwrap_err();
         let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
         assert!(msg.contains("Node(1)"), "{msg}");
+    }
+
+    #[test]
+    fn eval_fires_content_bearing_brams() {
+        // Input 2 is the pseudo output of a BRAM computing XOR of inputs
+        // 0 and 1; node 0 inverts it.  The caller-provided value at the
+        // pseudo position must be overwritten before node 0 reads it.
+        let netlist = Netlist {
+            num_inputs: 3,
+            nodes: vec![LutNode { inputs: vec![Net::Input(2)], tt: 0b01, level: 1 }],
+            outputs: vec![Net::Node(0), Net::Input(2)],
+            brams: vec![BramNeuron {
+                in_bits: 2,
+                out_bits: 1,
+                blocks: 1,
+                inputs: vec![Net::Input(0), Net::Input(1)],
+                out_base: 2,
+                content: vec![0, 1, 1, 0],
+            }],
+            layer_depths: vec![1],
+        };
+        assert!(netlist.brams_evaluable());
+        assert_eq!(netlist.bram_triggers(), vec![0]);
+        for (a, b) in [(false, false), (true, false), (false, true), (true, true)] {
+            // The stale `true` at the pseudo slot must not leak through.
+            let out = netlist.eval(&[a, b, true]);
+            assert_eq!(out, vec![!(a ^ b), a ^ b], "a={a} b={b}");
+        }
+        assert!(!BramNeuron::opaque(14, 2, 2).is_evaluable());
     }
 
     #[test]

@@ -216,6 +216,7 @@ pub fn provenance_meta() -> Json {
         ("lanes", Json::num(crate::sim::LANES as f64)),
         ("chunk_samples", Json::num((crate::sim::LANES * 64) as f64)),
         ("threads", Json::num(crate::util::pool::num_threads() as f64)),
+        ("simd_tier", Json::str(crate::sim::SimdTier::detect().name())),
         ("quick", Json::Bool(std::env::var("BENCH_QUICK").is_ok())),
     ])
 }
@@ -321,6 +322,10 @@ mod tests {
         assert!(m.get("git_sha").and_then(|v| v.as_str()).is_some());
         assert_eq!(m.get("lanes").and_then(|v| v.as_f64()), Some(crate::sim::LANES as f64));
         assert!(m.get("threads").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0);
+        // The dispatch tier is stamped so artifacts from AVX-512 and
+        // portable hosts stop being silently comparable.
+        let tier = m.get("simd_tier").and_then(|v| v.as_str()).unwrap();
+        assert!(["portable", "avx2", "avx512"].contains(&tier), "{tier}");
         assert!(m.get("quick").and_then(|v| v.as_bool()).is_some());
         // The gate must keep reading reports that carry a meta block.
         let mut rep = BenchReport::new("meta-shape");

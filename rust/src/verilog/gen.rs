@@ -322,7 +322,7 @@ pub(crate) mod tests {
         assert!(text.ends_with("endmodule\n"));
         // BRAM-mapped netlists are rejected.
         let mut with_bram = netlist.clone();
-        with_bram.brams.push(crate::synth::BramNeuron { in_bits: 14, out_bits: 2, blocks: 2 });
+        with_bram.brams.push(crate::synth::BramNeuron::opaque(14, 2, 2));
         assert!(netlist_module("X", &with_bram).is_err());
     }
 

@@ -176,7 +176,7 @@ fn mutation_corpus_is_caught() {
 
     // BRAM block accounting: 2^14 x 2 bits needs 2 x 18Kb blocks, not 1.
     let mut nl = clean.clone();
-    nl.brams.push(BramNeuron { in_bits: 14, out_bits: 2, blocks: 1 });
+    nl.brams.push(BramNeuron::opaque(14, 2, 1));
     assert!(has_rule(&lint(&nl), "bram-shape"), "{}", lint(&nl).render());
 }
 

@@ -1,0 +1,252 @@
+//! SIMD dispatch + BRAM-capable plan equivalence suite (ISSUE 10).
+//!
+//! Pins the runtime-dispatched kernels against the portable oracle at
+//! every level of the stack: the chunk kernel itself (`lut_chunk_at` vs
+//! `lut_chunk` vs the 64-way `lut_word`, random truth tables at every
+//! arity k <= 6), whole plans compiled at each supported [`SimdTier`]
+//! (vs `eval_netlist_64` and scalar `Netlist::eval`), level-parallel
+//! splitting vs the serial sweep, and BRAM-threshold designs — where a
+//! *trained* manifest synthesized past the spill threshold must evaluate
+//! bit-exactly through the wide plan, the 64-way path, and the fused
+//! `NetlistEngine` serving pass.
+
+use logicnets::luts::ModelTables;
+use logicnets::nn::ExportedModel;
+use logicnets::runtime::Manifest;
+use logicnets::serve::{LutEngine, NetlistEngine};
+use logicnets::sim::{
+    eval_netlist_64, eval_plan, lut_chunk, lut_chunk_at, lut_word, BitMatrix, Chunk, EvalPlan,
+    SimScratch, SimdTier, LANES,
+};
+use logicnets::sparsity::prune::PruneMethod;
+use logicnets::synth::{synthesize, Netlist, SynthOpts};
+use logicnets::train::{native, ModelState, TrainOpts};
+use logicnets::util::prop::forall;
+use logicnets::util::rng::Rng;
+
+fn random_chunk(rng: &mut Rng) -> Chunk {
+    let mut c = [0u64; LANES];
+    for w in c.iter_mut() {
+        *w = rng.next_u64();
+    }
+    c
+}
+
+/// Every supported tier's chunk kernel ≡ the portable fold ≡ the 64-way
+/// word kernel lane by lane, on random truth tables at every arity.
+#[test]
+fn prop_tier_kernels_match_portable_and_word_oracle() {
+    let tiers = SimdTier::supported();
+    assert!(tiers.contains(&SimdTier::Portable));
+    forall("tier-kernel-equivalence", 0xd15a, 48, |rng: &mut Rng| {
+        for k in 1..=6usize {
+            // Random tables plus the constant corners (all-zeros /
+            // all-ones short-circuit arms).
+            let tts = [rng.next_u64(), 0, u64::MAX];
+            let xs: Vec<Chunk> = (0..k).map(|_| random_chunk(rng)).collect();
+            for tt in tts {
+                let oracle = lut_chunk(tt, &xs);
+                for &tier in &tiers {
+                    assert_eq!(
+                        lut_chunk_at(tier, tt, &xs),
+                        oracle,
+                        "{} != portable at k={k} tt={tt:#x}",
+                        tier.name()
+                    );
+                }
+                for l in 0..LANES {
+                    let ws: Vec<u64> = xs.iter().map(|c| c[l]).collect();
+                    assert_eq!(oracle[l], lut_word(tt, &ws), "lane {l} != word at k={k}");
+                }
+            }
+        }
+    });
+}
+
+fn trained_netlist(
+    name: &str,
+    hidden: &[usize],
+    seed: u64,
+    bram_min_bits: usize,
+) -> (ExportedModel, ModelTables, Netlist) {
+    let man = Manifest::synthetic_topology(name, "jets", 16, 5, hidden, 3, 2, 1);
+    let mut st = ModelState::init(&man, seed, PruneMethod::APriori);
+    let ds = logicnets::hep::jets(300, seed ^ 1);
+    let mut opts = TrainOpts::from_manifest(&man);
+    opts.steps = 6;
+    opts.seed = seed;
+    native::train_native(&man, &mut st, &ds, &opts).unwrap();
+    let ex = ExportedModel::from_state(&man, &st);
+    let tables = ModelTables::generate(&ex).unwrap();
+    let (netlist, _) = synthesize(
+        &ex,
+        &tables,
+        SynthOpts { registers: false, bram_min_bits, ..SynthOpts::default() },
+    )
+    .unwrap();
+    (ex, tables, netlist)
+}
+
+fn random_inputs(netlist: &Netlist, samples: usize, seed: u64) -> (BitMatrix, Vec<Vec<bool>>) {
+    let mut rng = Rng::new(seed);
+    let mut inputs = BitMatrix::new(netlist.num_inputs, samples);
+    let rows: Vec<Vec<bool>> = (0..samples)
+        .map(|s| {
+            let bits: Vec<bool> = (0..netlist.num_inputs).map(|_| rng.f64() < 0.5).collect();
+            inputs.set_column(s, &bits);
+            bits
+        })
+        .collect();
+    (inputs, rows)
+}
+
+/// Plans compiled at every supported tier ≡ the 64-way path ≡ scalar on a
+/// trained LUT-only netlist, across chunk-boundary batch sizes, with
+/// level-parallel splitting both off and forced on.
+#[test]
+fn tiered_plans_match_64way_and_scalar_on_trained_manifest() {
+    let (_, _, netlist) = trained_netlist("simd_tier_train", &[12, 6], 0x5eed, 0);
+    for tier in SimdTier::supported() {
+        let mut plan = EvalPlan::compile_with_tier(&netlist, tier);
+        assert_eq!(plan.tier(), tier);
+        for &level_par in &[false, true] {
+            plan.set_level_parallel(level_par);
+            let mut scratch = SimScratch::default();
+            for samples in [1usize, 63, 64, 255, 256, 257] {
+                let (inputs, rows) = random_inputs(&netlist, samples, samples as u64 ^ 0xabc);
+                let wide = eval_plan(&plan, &inputs, &mut scratch);
+                assert_eq!(
+                    wide,
+                    eval_netlist_64(&netlist, &inputs),
+                    "{} lp={level_par} != 64-way at samples={samples}",
+                    tier.name()
+                );
+                for (s, bits) in rows.iter().enumerate() {
+                    assert_eq!(
+                        wide.column(s),
+                        netlist.eval(bits),
+                        "{} lp={level_par} != scalar at sample {s}",
+                        tier.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// BRAM-threshold designs through the wide path: a trained manifest
+/// synthesized at `bram_min_bits` 6 spills every neuron (fan-in 3 x 2-bit
+/// codes = 6 address bits) into content-bearing BRAM records, and the
+/// plan — at every tier, level-parallel on and off — must agree with
+/// scalar `Netlist::eval` (which fires BRAMs in trigger order) and the
+/// 64-way path bit for bit.
+#[test]
+fn bram_plans_match_scalar_eval_on_trained_manifest() {
+    let (_, _, netlist) = trained_netlist("simd_bram_train", &[12, 6], 0xb4a3, 6);
+    assert!(netlist.num_brams() > 0, "spill threshold did not trigger");
+    assert!(netlist.brams_evaluable());
+    for tier in SimdTier::supported() {
+        let mut plan = EvalPlan::compile_with_tier(&netlist, tier);
+        assert!(plan.num_bram_records() > 0);
+        for &level_par in &[false, true] {
+            plan.set_level_parallel(level_par);
+            let mut scratch = SimScratch::default();
+            for samples in [1usize, 64, 256, 300] {
+                let (inputs, rows) = random_inputs(&netlist, samples, samples as u64 ^ 0xb5a);
+                let wide = eval_plan(&plan, &inputs, &mut scratch);
+                assert_eq!(
+                    wide,
+                    eval_netlist_64(&netlist, &inputs),
+                    "{} lp={level_par} != 64-way at samples={samples}",
+                    tier.name()
+                );
+                for (s, bits) in rows.iter().enumerate() {
+                    assert_eq!(
+                        wide.column(s),
+                        netlist.eval(bits),
+                        "{} lp={level_par} != scalar at sample {s}",
+                        tier.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Fused serving over a trained BRAM-threshold design ≡ the unfused
+/// oracle ≡ `LutEngine` — the end-to-end un-gating the BRAM records buy.
+#[test]
+fn fused_engine_serves_trained_bram_design() {
+    let (ex, tables, netlist) = trained_netlist("simd_bram_serve", &[12, 6], 0xcafe, 6);
+    assert!(netlist.num_brams() > 0, "spill threshold did not trigger");
+    let lut = LutEngine::build(&ex, &tables).unwrap();
+    let net = NetlistEngine::from_netlist(&ex, &tables, netlist).unwrap();
+    let mut rng = Rng::new(0x77);
+    for n in [1usize, 63, 64, 257, 600] {
+        let xs: Vec<f32> = (0..16 * n).map(|_| rng.f32()).collect();
+        let expect = lut.infer_batch(&xs);
+        assert_eq!(net.infer_batch(&xs), expect, "fused != tables at n={n}");
+        assert_eq!(net.infer_batch_unfused(&xs), expect, "unfused != tables at n={n}");
+    }
+}
+
+/// Property: random untrained skip topologies, random spill thresholds —
+/// whatever mix of LUT records and BRAM records falls out, the wide plan
+/// at the detected tier agrees with scalar eval.
+#[test]
+fn prop_mixed_bram_netlists_match_scalar() {
+    forall("mixed-bram-wide-vs-scalar", 0x3c, 6, |rng: &mut Rng| {
+        let hidden = [6 + rng.below(8), 4 + rng.below(4)];
+        let man = Manifest::synthetic_topology(
+            "simd_bram_prop",
+            "jets",
+            16,
+            5,
+            &hidden,
+            3,
+            2,
+            rng.below(2),
+        );
+        let st = ModelState::init(&man, rng.next_u64(), PruneMethod::APriori);
+        let ex = ExportedModel::from_state(&man, &st);
+        let tables = ModelTables::generate(&ex).unwrap();
+        // 6 address bits per neuron: 6 spills everything, 7 nothing.
+        let bram_min_bits = [6usize, 7][rng.below(2)];
+        let (netlist, _) = synthesize(
+            &ex,
+            &tables,
+            SynthOpts { registers: false, bram_min_bits, ..SynthOpts::default() },
+        )
+        .unwrap();
+        let plan = EvalPlan::compile(&netlist);
+        let mut scratch = SimScratch::default();
+        let samples = [1usize, 65, 256, 300][rng.below(4)];
+        let (inputs, rows) = random_inputs(&netlist, samples, rng.next_u64());
+        let wide = eval_plan(&plan, &inputs, &mut scratch);
+        for (s, bits) in rows.iter().enumerate() {
+            assert_eq!(wide.column(s), netlist.eval(bits), "sample {s} (spill>={bram_min_bits})");
+        }
+    });
+}
+
+/// `LOGICNETS_SIMD` clamps the dispatch tier downward but can never raise
+/// it past the hardware.  (Env mutation: other tests in this binary only
+/// *read* the override, and every tier they might land on is bit-exact,
+/// so the brief window is harmless.)
+#[test]
+fn env_override_only_lowers_dispatch() {
+    let prev = std::env::var("LOGICNETS_SIMD").ok();
+    std::env::set_var("LOGICNETS_SIMD", "portable");
+    assert_eq!(SimdTier::detect(), SimdTier::Portable);
+    assert_eq!(SimdTier::supported(), vec![SimdTier::Portable]);
+    // A request for the widest tier is clamped to the hardware: with the
+    // override removed, the forced tier must be one the host really has.
+    std::env::set_var("LOGICNETS_SIMD", "avx512");
+    let forced = SimdTier::detect();
+    std::env::remove_var("LOGICNETS_SIMD");
+    assert!(SimdTier::supported().contains(&forced));
+    match prev {
+        Some(v) => std::env::set_var("LOGICNETS_SIMD", v),
+        None => std::env::remove_var("LOGICNETS_SIMD"),
+    }
+}
